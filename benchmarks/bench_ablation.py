@@ -1,0 +1,35 @@
+"""Paper Table 5: ablations — Mod-1 similarity function, Mod-2 momentum
+on/off, Mod-3 feedback on/off, for both FedQS modes."""
+from repro.core import FedQSHyperParams
+
+from .common import emit, run_safl, us_per_round
+
+ROUNDS = 60
+
+
+def _case(tag, hp, algo):
+    _, res = run_safl("rwd", algo, rounds=ROUNDS, hp=hp, seed=4, sigma=1.3)
+    target = 0.95 * res.final_accuracy()
+    conv = res.rounds_to_accuracy(target)
+    emit(f"table5.{tag}.{algo}", us_per_round(res, ROUNDS),
+         best_acc=round(res.best_accuracy(), 4),
+         conv_rounds=conv if conv is not None else -1,
+         oscillations=res.oscillations(0.05))
+
+
+def run():
+    K = 4
+    for algo in ("fedqs-avg", "fedqs-sgd"):
+        # Mod-1: similarity function
+        for sim in ("cosine", "euclidean", "manhattan"):
+            _case(f"mod1_{sim}", FedQSHyperParams(buffer_k=K, similarity=sim), algo)
+        # Mod-2: momentum
+        _case("mod2_no_momentum", FedQSHyperParams(buffer_k=K, use_momentum=False), algo)
+        _case("mod2_with_momentum", FedQSHyperParams(buffer_k=K), algo)
+        # Mod-3: feedback
+        _case("mod3_no_feedback", FedQSHyperParams(buffer_k=K, use_feedback=False), algo)
+        _case("mod3_with_feedback", FedQSHyperParams(buffer_k=K), algo)
+
+
+if __name__ == "__main__":
+    run()

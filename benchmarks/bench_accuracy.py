@@ -1,0 +1,30 @@
+"""Paper Table 2: accuracy + convergence speed of FedQS vs all baselines
+across the three task families (synthetic stand-ins, DESIGN §4)."""
+from .common import emit, run_safl, us_per_round
+
+ALGOS = ("fedavg", "safa", "fedat", "m-step", "fedqs-avg",
+         "fedsgd", "fedbuff", "wkafl", "fedac", "defedavg", "fadas",
+         "ca2fl", "fedqs-sgd")
+
+TASKS = (
+    ("cv_x0.5", "cv", dict(alpha=0.5), 60),
+    ("nlp_r2", "nlp", dict(roles_per_client=2), 30),
+    ("rwd_gender", "rwd", dict(sigma=1.0), 120),
+)
+
+
+def run():
+    for tname, task, kw, rounds in TASKS:
+        for algo in ALGOS:
+            _, res = run_safl(task, algo, rounds=rounds, seed=2, **kw)
+            target = 0.95 * res.final_accuracy()
+            conv = res.rounds_to_accuracy(target)
+            emit(f"table2.{tname}.{algo}", us_per_round(res, rounds),
+                 best_acc=round(res.best_accuracy(), 4),
+                 final_acc=round(res.final_accuracy(), 4),
+                 conv_rounds=conv if conv is not None else -1,
+                 oscillations=res.oscillations(0.05))
+
+
+if __name__ == "__main__":
+    run()

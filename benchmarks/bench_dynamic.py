@@ -1,0 +1,41 @@
+"""Paper Tables 4 & 6: robustness — system-setting variations (N clients,
+resource ratio) and the three dynamic scenarios."""
+from repro.core.safl import (
+    scenario_dropout,
+    scenario_resource_scale,
+    scenario_unstable_resources,
+)
+
+from .common import emit, run_safl, us_per_round
+
+ROUNDS = 50
+
+
+def run():
+    # Table 4: N × resource-ratio grid (reduced)
+    for N, ratio in ((10, 20.0), (30, 100.0)):
+        for algo in ("fedavg", "fedqs-avg", "fedsgd", "fedqs-sgd"):
+            _, res = run_safl("rwd", algo, rounds=ROUNDS, n_clients=N,
+                              resource_ratio=ratio, seed=5)
+            emit(f"table4.N{N}_r{int(ratio)}.{algo}", us_per_round(res, ROUNDS),
+                 best_acc=round(res.best_accuracy(), 4),
+                 oscillations=res.oscillations(0.05))
+
+    # Table 6: dynamic scenarios
+    scenarios = (
+        ("scen1_scale", scenario_resource_scale(ROUNDS // 3, 100.0)),
+        ("scen2_jitter", scenario_unstable_resources()),
+        ("scen3_dropout", scenario_dropout(ROUNDS // 3, 0.5)),
+    )
+    for sname, dyn in scenarios:
+        for algo in ("fedsgd", "fedqs-sgd", "fedavg", "fedqs-avg"):
+            _, res = run_safl("rwd", algo, rounds=ROUNDS, seed=5, dynamics=dyn)
+            target = 0.95 * res.final_accuracy()
+            conv = res.rounds_to_accuracy(target)
+            emit(f"table6.{sname}.{algo}", us_per_round(res, ROUNDS),
+                 best_acc=round(res.best_accuracy(), 4),
+                 conv_rounds=conv if conv is not None else -1)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Paper Figure 5 / Tables 11–14: hyper-parameter sensitivity of FedQS
+(η0, a, m0, k)."""
+from repro.core import FedQSHyperParams
+
+from .common import emit, run_safl, us_per_round
+
+ROUNDS = 40
+
+
+def run():
+    grids = (
+        ("eta0", [0.01, 0.1, 0.2], lambda v: FedQSHyperParams(buffer_k=4, eta0=v)),
+        ("a", [0.002, 0.01], lambda v: FedQSHyperParams(buffer_k=4, a=v)),
+        ("m0", [0.1, 0.4], lambda v: FedQSHyperParams(buffer_k=4, m0=v)),
+        ("k", [0.2, 0.4], lambda v: FedQSHyperParams(buffer_k=4, k=v)),
+    )
+    for pname, values, mk in grids:
+        for v in values:
+            for algo in ("fedqs-sgd", "fedqs-avg"):
+                _, res = run_safl("rwd", algo, rounds=ROUNDS, hp=mk(v), seed=6)
+                emit(f"tables11_14.{pname}_{v}.{algo}", us_per_round(res, ROUNDS),
+                     best_acc=round(res.best_accuracy(), 4),
+                     oscillations=res.oscillations(0.05))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks: Pallas (interpret=True on CPU — correctness
+path) vs the pure-jnp oracle, per DESIGN §7 shape grid.
+
+On this CPU container the interpret numbers measure the emulation, not
+TPU performance; the derived column carries bytes-touched so the §Roofline
+report can place each kernel on the memory roof analytically.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.similarity import fused_similarity_stats
+from repro.kernels.weighted_agg import weighted_agg
+from repro.kernels.window_attention import window_decode_attention
+
+from .common import emit
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    # weighted_agg: K=10 buffer over a ~1M-param model vector
+    for K, D in ((10, 1 << 20), (16, 1 << 18)):
+        x = jax.random.normal(key, (K, D))
+        w = jnp.full((K,), 1.0 / K)
+        t_k = _time(lambda a, b: weighted_agg(a, b, interpret=True), x, w)
+        t_r = _time(jax.jit(ref.weighted_agg_ref), x, w)
+        emit(f"kernel.weighted_agg.K{K}_D{D}", t_k,
+             ref_us=round(t_r, 1), hbm_bytes=K * D * 4,
+             roofline_us_tpu=round(K * D * 4 / 819e9 * 1e6, 2))
+
+    # fused similarity on a 4M-element parameter vector
+    for D in (1 << 22,):
+        a = jax.random.normal(key, (D,))
+        b = jax.random.normal(jax.random.PRNGKey(1), (D,))
+        t_k = _time(lambda x, y: fused_similarity_stats(x, y, interpret=True), a, b)
+        t_r = _time(jax.jit(ref.fused_similarity_stats_ref), a, b)
+        emit(f"kernel.similarity.D{D}", t_k, ref_us=round(t_r, 1),
+             hbm_bytes=2 * D * 4,
+             roofline_us_tpu=round(2 * D * 4 / 819e9 * 1e6, 2))
+
+    # window decode attention at gemma3-like dims
+    B, H, KV, W, dh = 4, 4, 1, 512, 256
+    q = jax.random.normal(key, (B, H, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, W, KV, dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, W, KV, dh))
+    vl = jnp.asarray(W)
+    t_k = _time(lambda *xs: window_decode_attention(*xs, interpret=True), q, k, v, vl)
+    t_r = _time(jax.jit(ref.window_decode_attention_ref), q, k, v, vl)
+    bytes_ = 2 * B * W * KV * dh * 4
+    emit(f"kernel.window_attn.B{B}_W{W}", t_k, ref_us=round(t_r, 1),
+         hbm_bytes=bytes_, roofline_us_tpu=round(bytes_ / 819e9 * 1e6, 2))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Shared helpers for the benchmark harness.
+
+Every benchmark prints CSV rows ``name,us_per_call,derived`` where
+``us_per_call`` is wall-microseconds per simulated global round (or per
+kernel call) and ``derived`` carries the paper-table metric
+(accuracy / gap / rounds-to-target / ...) as ``key=value|key=value``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, Optional
+
+from repro.core import FedQSHyperParams, SAFLEngine, make_algorithm
+from repro.data import make_federated_data
+from repro.models import make_cnn_spec, make_lstm_spec, make_mlp_spec
+
+_SPEC_CACHE: Dict[str, object] = {}
+
+
+def get_spec(task: str):
+    if task not in _SPEC_CACHE:
+        _SPEC_CACHE[task] = {
+            "cv": lambda: make_cnn_spec(width=10, batch_size=32),
+            "nlp": lambda: make_lstm_spec(embed=16, hidden=32, batch_size=32),
+            "rwd": lambda: make_mlp_spec(),
+        }[task]()
+    return _SPEC_CACHE[task]
+
+
+_DATA_CACHE: Dict[tuple, object] = {}
+
+
+def get_data(task: str, n_clients: int, **kw):
+    key = (task, n_clients, tuple(sorted(kw.items())))
+    if key not in _DATA_CACHE:
+        _DATA_CACHE[key] = make_federated_data(task, n_clients, **kw)
+    return _DATA_CACHE[key]
+
+
+def run_safl(task: str, algo: str, *, rounds: int = 40, n_clients: int = 20,
+             hp: Optional[FedQSHyperParams] = None, seed: int = 0,
+             sync_mode: bool = False, resource_ratio: float = 50.0,
+             dynamics=None, eval_every: int = 2, **data_kw):
+    hp = hp or FedQSHyperParams(buffer_k=max(3, n_clients // 5))
+    data = get_data(task, n_clients, seed=seed, n_total=4000, **data_kw)
+    eng = SAFLEngine(data, get_spec(task), make_algorithm(algo, hp), hp,
+                     seed=seed, eval_every=eval_every, sync_mode=sync_mode,
+                     resource_ratio=resource_ratio, dynamics=dynamics)
+    res = eng.run(rounds)
+    return eng, res
+
+
+def emit(name: str, us_per_call: float, **derived):
+    d = "|".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us_per_call:.1f},{d}")
+    sys.stdout.flush()
+
+
+def us_per_round(res, rounds: int) -> float:
+    return res.wall_seconds / max(rounds, 1) * 1e6

@@ -1,0 +1,46 @@
+"""Benchmark harness entry point — one module per paper table/figure
+(DESIGN §8).  Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2,kernels] [--fast]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SUITES = ("factors", "accuracy", "runtime", "ablation", "dynamic",
+          "hparams", "kernels", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help=f"comma list from {SUITES}")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(SUITES)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    if "factors" in only:
+        from . import bench_factors; bench_factors.run()
+    if "accuracy" in only:
+        from . import bench_accuracy; bench_accuracy.run()
+    if "runtime" in only:
+        from . import bench_runtime; bench_runtime.run()
+    if "ablation" in only:
+        from . import bench_ablation; bench_ablation.run()
+    if "dynamic" in only:
+        from . import bench_dynamic; bench_dynamic.run()
+    if "hparams" in only:
+        from . import bench_hparams; bench_hparams.run()
+    if "kernels" in only:
+        from . import bench_kernels; bench_kernels.run()
+    if "roofline" in only:
+        from . import roofline; roofline.run()
+    print(f"# total_bench_wall_s={time.time()-t0:.1f}", file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

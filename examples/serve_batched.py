@@ -1,0 +1,65 @@
+"""Batched serving example (deliverable b): serve a reduced gemma3-style
+model with mixed-length batched requests through prefill + decode,
+exercising the ring-buffer KV caches and the window-attention path.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch gemma3-1b
+"""
+import argparse
+import sys, os, time
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=24)
+    args = ap.parse_args()
+
+    from repro.configs import get_reduced
+    from repro.models import transformer as T
+
+    cfg = get_reduced(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+
+    # mixed-length requests, left-padded into one batch
+    rng = np.random.default_rng(0)
+    lens = rng.integers(4, 14, args.requests)
+    max_len = int(lens.max())
+    max_seq = max_len + args.max_new + 1
+    prompts = np.zeros((args.requests, max_len), np.int32)
+    for i, L in enumerate(lens):
+        prompts[i, max_len - L:] = rng.integers(1, cfg.vocab, L)
+
+    me = None
+    if cfg.frontend != "none":
+        me = jax.random.normal(key, (args.requests, cfg.n_frontend_tokens, cfg.d_model))
+
+    prefill = jax.jit(lambda p, t: T.prefill(cfg, p, t, me, max_seq=max_seq))
+    decode = jax.jit(lambda p, c, t: T.decode_step(cfg, p, c, t, me))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, jnp.asarray(prompts))
+    toks = jnp.argmax(logits, -1)
+    outs = [np.asarray(toks)]
+    for _ in range(args.max_new):
+        logits, cache = decode(params, cache, toks)
+        toks = jnp.argmax(logits, -1)
+        outs.append(np.asarray(toks))
+    jax.block_until_ready(toks)
+    dt = time.perf_counter() - t0
+    gen = np.stack(outs, 1)
+    print(f"served {args.requests} reqs (len {lens.min()}–{lens.max()}), "
+          f"{args.max_new} new tokens each, in {dt*1e3:.0f} ms "
+          f"({args.requests*args.max_new/dt:.1f} tok/s on CPU, reduced cfg)")
+    for i in range(min(3, args.requests)):
+        print(f"  req[{i}] len={lens[i]:2d} → {gen[i, :10].tolist()} ...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Generate the §Dry-run / §Roofline tables of EXPERIMENTS.md from the
+recorded dry-run JSONs.
+
+    PYTHONPATH=src python experiments/make_report.py > experiments/report.md
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from repro.launch.analysis import HBM_BW, ICI_BW, PEAK_FLOPS  # noqa: E402
+
+DIR = os.path.join(os.path.dirname(__file__), "dryrun")
+
+
+def load(mesh, tagged=False):
+    recs = {}
+    for f in sorted(glob.glob(os.path.join(DIR, f"*__{mesh}*.json"))):
+        base = os.path.basename(f)[:-5]
+        is_tagged = not base.endswith(mesh)
+        if is_tagged != tagged:
+            continue
+        recs[base] = json.load(open(f))
+    return recs
+
+
+def fmt_bytes(b):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024 or unit == "TB":
+            return f"{b:.1f}{unit}" if unit != "B" else f"{int(b)}B"
+        b /= 1024
+
+
+def dryrun_table(mesh):
+    print(f"\n### Mesh {mesh}\n")
+    print("| arch | shape | status | compile (s) | per-chip HLO FLOPs | "
+          "per-chip HBM est | collective bytes/chip | args (GB) | temps (GB) |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for name, r in load(mesh).items():
+        if r.get("status") == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | skip ({r['reason'][:48]}…) "
+                  f"| — | — | — | — | — | — |")
+            continue
+        m = r["memory"]
+        print(f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']} | "
+              f"{r['hlo_struct']['flops']:.2e} | "
+              f"{r['hlo_struct']['hbm_bytes_est']:.2e} | "
+              f"{r['collectives']['total']:.2e} | "
+              f"{m.get('argument_size_in_bytes', 0)/1e9:.1f} | "
+              f"{m.get('temp_size_in_bytes', 0)/1e9:.1f} |")
+
+
+def roofline_table(mesh="16x16"):
+    print("\n| arch | shape | compute (s) | memory (s) | collective (s) | "
+          "dominant | MODEL_FLOPS | useful ratio† | next lever |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    from benchmarks.roofline import advice
+    for name, r in load(mesh).items():
+        if r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        ur = r["useful_flops_ratio"]
+        print(f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.2e} | "
+              f"{rf['memory_s']:.2e} | {rf['collective_s']:.2e} | "
+              f"**{rf['dominant']}** | {r['model_flops']:.2e} | "
+              f"{ur:.3f} | {advice(r)[:70]}… |")
+
+
+def perf_table():
+    print("\n| run | variant | compute (s) | memory (s) | collective (s) | "
+          "dominant | temps (GB) |")
+    print("|---|---|---|---|---|---|---|")
+    rows = {}
+    rows.update(load("16x16"))
+    rows.update(load("16x16", tagged=True))
+    interesting = ("kimi-k2-1t-a32b__train_4k", "deepseek-v3-671b__decode_32k",
+                   "gemma3-1b__train_4k", "seamless-m4t-medium__decode_32k")
+    for name, r in rows.items():
+        if r.get("status") != "ok":
+            continue
+        if not any(name.startswith(i) for i in interesting):
+            continue
+        rf = r["roofline"]
+        var = r.get("variant", "") or (f"g={r.get('client_group_size')}"
+                                       if r.get("client_group_size", 1) > 1 else "baseline")
+        if r.get("client_group_size", 1) > 1 and r.get("variant"):
+            var = f"g={r['client_group_size']},{r['variant']}"
+        print(f"| {name.split('__16x16')[0]} | {var} | {rf['compute_s']:.2e} | "
+              f"{rf['memory_s']:.2e} | {rf['collective_s']:.2e} | "
+              f"{rf['dominant']} | "
+              f"{r['memory'].get('temp_size_in_bytes', 0)/1e9:.1f} |")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("## §Dry-run")
+        dryrun_table("16x16")
+        dryrun_table("2x16x16")
+    if which in ("all", "roofline"):
+        print("\n## §Roofline (single-pod 16×16)")
+        roofline_table()
+    if which in ("all", "perf"):
+        print("\n## §Perf variants")
+        perf_table()

@@ -1,0 +1,3 @@
+from .ckpt import load_params, save_params, save_server_state, load_server_state
+
+__all__ = ["load_params", "save_params", "save_server_state", "load_server_state"]

@@ -1,0 +1,83 @@
+"""Checkpointing: pytree ↔ .npz with stable key paths, plus SAFL server
+state (global model, status table, round counter, per-client lr/momentum).
+
+Restore is sharding-aware: ``load_params(..., like=params_spec)`` places
+leaves with ``jax.device_put`` against the template's shardings when given.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_params(path: str, params) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten_with_paths(params)
+    np.savez(path, **flat)
+
+
+def load_params(path: str, like, device_put: bool = False):
+    """Load into the structure of ``like`` (a pytree template)."""
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_, template in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_)
+        arr = flat[key]
+        if arr.shape != tuple(template.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {template.shape}")
+        leaf = jnp.asarray(arr, dtype=template.dtype)
+        if device_put and hasattr(template, "sharding"):
+            leaf = jax.device_put(leaf, template.sharding)
+        leaves.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_server_state(path: str, engine) -> None:
+    """Persist a ``SAFLEngine`` so a run can resume mid-training."""
+    os.makedirs(path, exist_ok=True)
+    save_params(os.path.join(path, "global.npz"), engine.global_params)
+    meta = {
+        "round": engine.round,
+        "counts": np.asarray(engine.table.counts).tolist(),
+        "sims": np.asarray(engine.table.sims).tolist(),
+        "clients": [
+            {"lr": c.lr, "momentum": c.momentum, "similarity": c.last_similarity,
+             "quadrant": c.quadrant, "speed": c.speed}
+            for c in engine.clients
+        ],
+    }
+    with open(os.path.join(path, "server.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def load_server_state(path: str, engine) -> None:
+    from repro.core.types import ServerTable
+
+    engine.global_params = load_params(os.path.join(path, "global.npz"), engine.global_params)
+    with open(os.path.join(path, "server.json")) as f:
+        meta = json.load(f)
+    engine.round = meta["round"]
+    engine.table = ServerTable(
+        counts=jnp.asarray(meta["counts"], jnp.int32),
+        sims=jnp.asarray(meta["sims"], jnp.float32),
+    )
+    for c, m in zip(engine.clients, meta["clients"]):
+        c.lr, c.momentum = m["lr"], m["momentum"]
+        c.last_similarity, c.quadrant, c.speed = m["similarity"], m["quadrant"], m["speed"]

@@ -1,0 +1,83 @@
+"""Architecture config registry (``--arch <id>``) + input-shape table.
+
+Every config cites its source in ``source``.  ``supports_shape`` encodes
+the DESIGN §5 skip rules (long_500k only for sub-quadratic archs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+from repro.models.transformer import ArchConfig
+
+from . import (
+    kimi_k2_1t_a32b,
+    seamless_m4t_medium,
+    phi4_mini_3_8b,
+    deepseek_v3_671b,
+    minicpm_2b,
+    jamba_v0_1_52b,
+    rwkv6_3b,
+    llama_3_2_vision_90b,
+    gemma3_1b,
+    qwen1_5_110b,
+)
+
+_MODULES = {
+    "kimi-k2-1t-a32b": kimi_k2_1t_a32b,
+    "seamless-m4t-medium": seamless_m4t_medium,
+    "phi4-mini-3.8b": phi4_mini_3_8b,
+    "deepseek-v3-671b": deepseek_v3_671b,
+    "minicpm-2b": minicpm_2b,
+    "jamba-v0.1-52b": jamba_v0_1_52b,
+    "rwkv6-3b": rwkv6_3b,
+    "llama-3.2-vision-90b": llama_3_2_vision_90b,
+    "gemma3-1b": gemma3_1b,
+    "qwen1.5-110b": qwen1_5_110b,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+# archs allowed to run the 500k decode shape (DESIGN §5): SSM / hybrid /
+# native-sliding-window only.
+_LONG_OK = {"rwkv6-3b", "jamba-v0.1-52b", "gemma3-1b"}
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    try:
+        return _MODULES[arch_id].CONFIG
+    except KeyError:
+        raise ValueError(f"unknown arch {arch_id!r}; choose from {sorted(_MODULES)}") from None
+
+
+def get_reduced(arch_id: str) -> ArchConfig:
+    return _MODULES[arch_id].REDUCED
+
+
+def supports_shape(arch_id: str, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return arch_id in _LONG_OK
+    return True
+
+
+def skip_reason(arch_id: str, shape_name: str) -> str:
+    if shape_name == "long_500k" and arch_id not in _LONG_OK:
+        return ("pure full-attention arch: 500k decode skipped per DESIGN §5 "
+                "(no sliding-window variant claimed; trained context ≪ 500k)")
+    return ""

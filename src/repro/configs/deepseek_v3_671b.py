@@ -1,0 +1,59 @@
+"""DeepSeek-V3 671B [arXiv:2412.19437].
+
+61L d_model=7168, MLA (q_lora 1536, kv_lora 512, rope 64, nope 128, v 128),
+first 3 layers dense (d_ff 18432), 58 MoE layers: 1 shared + 256 routed
+top-8 experts (expert_d_ff=2048), vocab=129280, MTP head."""
+from repro.models.transformer import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="deepseek-v3-671b",
+    family="moe",
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    d_head=128,               # MLA supersedes GQA dims; kept for layout
+    d_ff=18432,               # dense FFN width of the first 3 layers
+    vocab=129280,
+    prefix=(("mla", "dense"),) * 3,
+    pattern=(("mla", "moe"),),
+    n_repeats=58,
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_rope_dim=64,
+    qk_nope_dim=128,
+    v_head_dim=128,
+    n_experts=256,
+    top_k=8,
+    n_shared_experts=1,
+    expert_d_ff=2048,
+    mtp=True,
+    rope_theta=1e4,
+    fl_mode="fsdp",
+    source="[arXiv:2412.19437] DeepSeek-V3 technical report",
+)
+
+REDUCED = ArchConfig(
+    arch_id="deepseek-v3-671b/reduced",
+    family="moe",
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=4,
+    d_head=32,
+    d_ff=256,
+    vocab=512,
+    prefix=(("mla", "dense"),),
+    pattern=(("mla", "moe"),),
+    n_repeats=1,
+    q_lora_rank=32,
+    kv_lora_rank=32,
+    qk_rope_dim=16,
+    qk_nope_dim=16,
+    v_head_dim=32,
+    n_experts=4,
+    top_k=2,
+    n_shared_experts=1,
+    expert_d_ff=64,
+    mtp=True,
+    fl_mode="fsdp",
+    source="reduced smoke variant",
+)

@@ -1,0 +1,47 @@
+"""Gemma-3 1B [hf:google/gemma-3-1b-pt] — 5:1 local:global interleave.
+
+26L d_model=1152 4H (GQA kv=1) d_ff=6912 vocab=262144, head_dim 256,
+sliding window 512.  Layout: 4 super-blocks of (5 local + 1 global) + 2
+trailing locals = 22 local / 4 global ≈ 5.5:1 (noted in DESIGN §5 — an
+exact 5:1 does not divide 26 layers).  ``global_cache_cap``
+bounds the global layers' decode cache at the 32k trained context, which
+is what makes long_500k a bounded-memory decode."""
+from repro.models.transformer import ArchConfig
+
+_PATTERN = (("local", "dense"),) * 5 + (("attn", "dense"),)
+
+CONFIG = ArchConfig(
+    arch_id="gemma3-1b",
+    family="dense",
+    d_model=1152,
+    n_heads=4,
+    n_kv_heads=1,
+    d_head=256,
+    d_ff=6912,
+    vocab=262144,
+    pattern=_PATTERN,
+    n_repeats=4,
+    suffix=(("local", "dense"),) * 2,
+    window=512,
+    global_cache_cap=32768,
+    rope_theta=1e6,
+    fl_mode="stacked",
+    source="[hf:google/gemma-3-1b-pt]",
+)
+
+REDUCED = ArchConfig(
+    arch_id="gemma3-1b/reduced",
+    family="dense",
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=1,
+    d_head=32,
+    d_ff=256,
+    vocab=512,
+    pattern=(("local", "dense"), ("attn", "dense")),
+    n_repeats=1,
+    window=16,
+    global_cache_cap=64,
+    fl_mode="stacked",
+    source="reduced smoke variant",
+)

@@ -1,0 +1,54 @@
+"""Jamba v0.1 52B [arXiv:2403.19887] — hybrid Mamba+attention 1:7, MoE.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536, MoE 16e top-2.
+Super-block of 8 layers: attention at index 4, MoE on every other layer."""
+from repro.models.transformer import ArchConfig
+
+_PATTERN = (
+    ("mamba", "moe"), ("mamba", "dense"), ("mamba", "moe"), ("mamba", "dense"),
+    ("attn", "moe"), ("mamba", "dense"), ("mamba", "moe"), ("mamba", "dense"),
+)
+
+CONFIG = ArchConfig(
+    arch_id="jamba-v0.1-52b",
+    family="hybrid",
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=14336,
+    vocab=65536,
+    pattern=_PATTERN,
+    n_repeats=4,
+    n_experts=16,
+    top_k=2,
+    expert_d_ff=14336,
+    ssm_state=16,
+    ssm_conv=4,
+    ssm_expand=2,
+    window=4096,              # its attn layers decode long_500k windowed
+    global_cache_cap=32768,   # bounded cache for the 1-in-8 attn layers
+    fl_mode="stacked",
+    source="[arXiv:2403.19887] Jamba v0.1",
+)
+
+REDUCED = ArchConfig(
+    arch_id="jamba-v0.1-52b/reduced",
+    family="hybrid",
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=2,
+    d_head=32,
+    d_ff=256,
+    vocab=512,
+    pattern=(("mamba", "moe"), ("attn", "dense")),
+    n_repeats=1,
+    n_experts=4,
+    top_k=2,
+    expert_d_ff=64,
+    ssm_state=8,
+    ssm_conv=4,
+    ssm_expand=2,
+    fl_mode="stacked",
+    source="reduced smoke variant",
+)

@@ -1,0 +1,46 @@
+"""Kimi K2 — trillion-param MoE [arXiv:2501.kimi2].
+
+61L d_model=7168 64H (GQA kv=8) expert_d_ff=2048 vocab=163840,
+MoE 384 experts top-8 + 1 shared; first layer dense (DeepSeek-V3-style)."""
+from repro.models.transformer import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="kimi-k2-1t-a32b",
+    family="moe",
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=16384,               # dense FFN width of the first layer
+    vocab=163840,
+    prefix=(("attn", "dense"),),
+    pattern=(("attn", "moe"),),
+    n_repeats=60,
+    n_experts=384,
+    top_k=8,
+    n_shared_experts=1,
+    expert_d_ff=2048,
+    rope_theta=5e4,
+    fl_mode="fsdp",           # ~1T params: shared-weights scan-clients mode
+    source="[arXiv:2501.kimi2] Kimi K2 paper-table config",
+)
+
+REDUCED = ArchConfig(
+    arch_id="kimi-k2-1t-a32b/reduced",
+    family="moe",
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=2,
+    d_head=32,
+    d_ff=256,
+    vocab=512,
+    prefix=(("attn", "dense"),),
+    pattern=(("attn", "moe"),),
+    n_repeats=1,
+    n_experts=4,
+    top_k=2,
+    n_shared_experts=1,
+    expert_d_ff=64,
+    fl_mode="fsdp",
+    source="reduced smoke variant",
+)

@@ -1,0 +1,44 @@
+"""Llama-3.2-Vision 90B backbone [hf:meta-llama/Llama-3.2-11B-Vision].
+
+100L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256; every 5th layer
+is a cross-attention image layer (20 of 100).  The ViT/SigLIP vision
+encoder + projector is the allowed stub: ``input_specs`` supplies
+precomputed patch embeddings [B, n_patches, d_model]."""
+from repro.models.transformer import ArchConfig
+
+_PATTERN = (("attn", "dense"),) * 4 + (("cross", "dense"),)
+
+CONFIG = ArchConfig(
+    arch_id="llama-3.2-vision-90b",
+    family="vlm",
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=28672,
+    vocab=128256,
+    pattern=_PATTERN,
+    n_repeats=20,
+    rope_theta=5e5,
+    frontend="vision",
+    n_frontend_tokens=256,    # precomputed patch embeddings (stub)
+    fl_mode="fsdp",
+    source="[hf:meta-llama/Llama-3.2-11B-Vision] scaled to 90B table entry",
+)
+
+REDUCED = ArchConfig(
+    arch_id="llama-3.2-vision-90b/reduced",
+    family="vlm",
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=2,
+    d_head=32,
+    d_ff=256,
+    vocab=512,
+    pattern=(("attn", "dense"), ("cross", "dense")),
+    n_repeats=1,
+    frontend="vision",
+    n_frontend_tokens=8,
+    fl_mode="fsdp",
+    source="reduced smoke variant",
+)

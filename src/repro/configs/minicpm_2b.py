@@ -1,0 +1,35 @@
+"""MiniCPM-2B [arXiv:2404.06395] — llama-like dense, WSD schedule.
+
+40L d_model=2304 36H (MHA kv=36) d_ff=5760 vocab=122753."""
+from repro.models.transformer import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="minicpm-2b",
+    family="dense",
+    d_model=2304,
+    n_heads=36,
+    n_kv_heads=36,
+    d_head=64,
+    d_ff=5760,
+    vocab=122753,
+    pattern=(("attn", "dense"),),
+    n_repeats=40,
+    rope_theta=1e4,
+    fl_mode="stacked",
+    source="[arXiv:2404.06395] MiniCPM (WSD schedule in repro.optim.schedule)",
+)
+
+REDUCED = ArchConfig(
+    arch_id="minicpm-2b/reduced",
+    family="dense",
+    d_model=144,
+    n_heads=4,
+    n_kv_heads=4,
+    d_head=36,
+    d_ff=288,
+    vocab=512,
+    pattern=(("attn", "dense"),),
+    n_repeats=2,
+    fl_mode="stacked",
+    source="reduced smoke variant",
+)

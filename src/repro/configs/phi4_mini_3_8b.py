@@ -1,0 +1,35 @@
+"""Phi-4-mini 3.8B [arXiv:2412.08905].
+
+32L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=200064 — RoPE SwiGLU GQA."""
+from repro.models.transformer import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="phi4-mini-3.8b",
+    family="dense",
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=8192,
+    vocab=200064,
+    pattern=(("attn", "dense"),),
+    n_repeats=32,
+    rope_theta=1e4,
+    fl_mode="stacked",
+    source="[arXiv:2412.08905] Phi-4 technical report (mini)",
+)
+
+REDUCED = ArchConfig(
+    arch_id="phi4-mini-3.8b/reduced",
+    family="dense",
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=2,
+    d_head=32,
+    d_ff=256,
+    vocab=512,
+    pattern=(("attn", "dense"),),
+    n_repeats=2,
+    fl_mode="stacked",
+    source="reduced smoke variant",
+)

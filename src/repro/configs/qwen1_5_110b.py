@@ -1,0 +1,37 @@
+"""Qwen1.5-110B [hf:Qwen/Qwen1.5-0.5B family, 110B table entry].
+
+80L d_model=8192 64H (GQA kv=8) d_ff=49152 vocab=152064 — QKV bias."""
+from repro.models.transformer import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="qwen1.5-110b",
+    family="dense",
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=49152,
+    vocab=152064,
+    pattern=(("attn", "dense"),),
+    n_repeats=80,
+    qkv_bias=True,
+    rope_theta=1e6,
+    fl_mode="fsdp",
+    source="[hf:Qwen/Qwen1.5] 110B table entry (QKV bias)",
+)
+
+REDUCED = ArchConfig(
+    arch_id="qwen1.5-110b/reduced",
+    family="dense",
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=2,
+    d_head=32,
+    d_ff=256,
+    vocab=512,
+    pattern=(("attn", "dense"),),
+    n_repeats=2,
+    qkv_bias=True,
+    fl_mode="stacked",
+    source="reduced smoke variant",
+)

@@ -1,0 +1,33 @@
+"""RWKV-6 "Finch" 3B [arXiv:2404.05892] — attention-free, data-dependent
+decay.  32L d_model=2560 d_ff=8960 vocab=65536; 40 heads of dim 64."""
+from repro.models.transformer import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="rwkv6-3b",
+    family="ssm",
+    d_model=2560,
+    n_heads=40,
+    n_kv_heads=40,
+    d_head=64,
+    d_ff=8960,
+    vocab=65536,
+    pattern=(("rwkv", "dense"),),
+    n_repeats=32,
+    fl_mode="stacked",
+    source="[arXiv:2404.05892] RWKV-6 Finch",
+)
+
+REDUCED = ArchConfig(
+    arch_id="rwkv6-3b/reduced",
+    family="ssm",
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=4,
+    d_head=32,
+    d_ff=256,
+    vocab=512,
+    pattern=(("rwkv", "dense"),),
+    n_repeats=2,
+    fl_mode="stacked",
+    source="reduced smoke variant",
+)

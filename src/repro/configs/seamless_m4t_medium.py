@@ -1,0 +1,43 @@
+"""SeamlessM4T-medium backbone [arXiv:2308.11596].
+
+Enc-dec: 12 encoder + 12 decoder layers, d_model=1024 16H (kv=16)
+d_ff=4096 vocab=256206.  The speech frontend (mel-spectrogram + conv
+feature extractor) is the allowed stub: ``input_specs`` supplies
+precomputed frame embeddings [B, n_frames, d_model]."""
+from repro.models.transformer import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="seamless-m4t-medium",
+    family="audio",
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_head=64,
+    d_ff=4096,
+    vocab=256206,
+    pattern=(("attn_cross", "dense"),),
+    n_repeats=12,
+    n_encoder_layers=12,
+    frontend="audio",
+    n_frontend_tokens=512,    # precomputed speech-frame embeddings (stub)
+    fl_mode="stacked",
+    source="[arXiv:2308.11596] SeamlessM4T medium",
+)
+
+REDUCED = ArchConfig(
+    arch_id="seamless-m4t-medium/reduced",
+    family="audio",
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=4,
+    d_head=32,
+    d_ff=256,
+    vocab=512,
+    pattern=(("attn_cross", "dense"),),
+    n_repeats=2,
+    n_encoder_layers=2,
+    frontend="audio",
+    n_frontend_tokens=16,
+    fl_mode="stacked",
+    source="reduced smoke variant",
+)

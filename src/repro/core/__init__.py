@@ -1,0 +1,35 @@
+"""FedQS core: Mod-1 (similarity), Mod-2 (adaptation), Mod-3 (aggregation),
+the SAFL engine, and the baseline algorithm zoo."""
+from .types import (
+    AggregationStrategy,
+    ClientState,
+    FedQSHyperParams,
+    Quadrant,
+    RoundMetrics,
+    ServerTable,
+    SSBCSituation,
+    Update,
+)
+from .similarity import (
+    cosine_similarity,
+    euclidean_similarity,
+    get_similarity_fn,
+    local_global_similarity,
+    manhattan_similarity,
+    pseudo_global_gradient,
+)
+from .classify import adapt, classify_quadrant, momentum_rate, ssbc_situation
+from .aggregation import aggregation_weights, feedback_weight, server_aggregate, update_table
+from .safl import EngineResult, ModelSpec, SAFLEngine
+from .algorithms import ALGORITHMS, Algorithm, FedQS, make_algorithm
+
+__all__ = [
+    "AggregationStrategy", "ClientState", "FedQSHyperParams", "Quadrant",
+    "RoundMetrics", "ServerTable", "SSBCSituation", "Update",
+    "cosine_similarity", "euclidean_similarity", "get_similarity_fn",
+    "local_global_similarity", "manhattan_similarity", "pseudo_global_gradient",
+    "adapt", "classify_quadrant", "momentum_rate", "ssbc_situation",
+    "aggregation_weights", "feedback_weight", "server_aggregate", "update_table",
+    "EngineResult", "ModelSpec", "SAFLEngine",
+    "ALGORITHMS", "Algorithm", "FedQS", "make_algorithm",
+]

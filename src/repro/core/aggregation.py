@@ -1,0 +1,128 @@
+"""Mod-3: global model aggregation (server side).
+
+Implements paper §3.4:
+
+* buffered trigger — the server aggregates once K updates are available;
+* the aggregation status table update (Eq. 1/2);
+* initial weights p_i = n_i/n, feedback re-weighting
+  ``p_i = exp(φ−F)/2^(φ−F) · (1+G)²/K`` with φ = K/N, then normalization;
+* FedQS-SGD:  w_g^t = w_g^{t−1} − η_g Σ p_i · δ_i   where δ_i = η_i Σ_e ΔF_{i,e}
+  (δ is uploaded as the model difference w_start − w_end, cf. Remark B.1);
+* FedQS-Avg:  w_g^t = Σ p_i · w_i^{τ_i}.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import (
+    AggregationStrategy,
+    FedQSHyperParams,
+    Params,
+    ServerTable,
+    Update,
+    tree_scale,
+    tree_sub,
+    tree_weighted_sum,
+)
+
+
+def update_table(table: ServerTable, cids: jnp.ndarray, sims: jnp.ndarray) -> ServerTable:
+    """Eq. 1: n(i) += 1 and s_g(i) = s_i^t for the participating clients.
+
+    ``cids`` may contain duplicates (SAFL allows repeat uploads within one
+    buffer); each occurrence counts.
+    """
+    counts = table.counts.at[cids].add(1)
+    sims_new = table.sims.at[cids].set(sims)  # duplicate cid: last one wins
+    return ServerTable(counts=counts, sims=sims_new)
+
+
+def staleness_weight(F: jnp.ndarray, phi: jnp.ndarray) -> jnp.ndarray:
+    """exp(φ−F)/2^(φ−F) — the stale-update attenuation term (§3.4).
+
+    Equals (e/2)^(φ−F): >1 when the client is *slower* than the buffer
+    average would suggest is fine (φ>F), shrinking as F grows.
+    """
+    x = phi - F
+    return jnp.exp(x) / jnp.exp2(x)
+
+
+def feedback_weight(F, G, K: int, N: int) -> jnp.ndarray:
+    """Full feedback weight: exp(φ−F)/2^(φ−F) · (1+G)²/K, φ = K/N."""
+    phi = jnp.asarray(K / N, jnp.float32)
+    return staleness_weight(F, phi) * (1.0 + G) ** 2 / K
+
+
+def aggregation_weights(
+    n_samples: jnp.ndarray,   # i32[K] — n_i of each buffered update
+    feedback: jnp.ndarray,    # bool[K]
+    F: jnp.ndarray,           # f32[K] — f̄/f_i
+    G: jnp.ndarray,           # f32[K] — s̄/s_i
+    K: int,
+    N: int,
+) -> jnp.ndarray:
+    """Normalized p over the buffer (vector form usable inside jit)."""
+    n = jnp.maximum(jnp.sum(n_samples), 1)
+    p = n_samples.astype(jnp.float32) / n
+    p = jnp.where(feedback, feedback_weight(F, G, K, N), p)
+    return p / jnp.maximum(jnp.sum(p), 1e-12)
+
+
+def aggregate_gradients(
+    w_global: Params,
+    deltas: Sequence[Params],
+    weights: jnp.ndarray,
+    eta_g: float = 1.0,
+) -> Params:
+    """FedQS-SGD server step.  δ_i is the uploaded model-difference."""
+    step = tree_weighted_sum(list(deltas), weights)
+    return jax.tree_util.tree_map(lambda w, s: w - eta_g * s, w_global, step)
+
+
+def aggregate_models(models: Sequence[Params], weights: jnp.ndarray) -> Params:
+    """FedQS-Avg server step: convex combination of buffered local models."""
+    return tree_weighted_sum(list(models), weights)
+
+
+def server_aggregate(
+    strategy: AggregationStrategy,
+    w_global: Params,
+    buffer: List[Update],
+    table: ServerTable,
+    hp: FedQSHyperParams,
+    n_clients: int,
+) -> Tuple[Params, ServerTable, jnp.ndarray]:
+    """Full Mod-3 pass over one K-buffer.
+
+    Returns (new global model, updated table, weights used).
+    """
+    K = len(buffer)
+    cids = jnp.asarray([u.cid for u in buffer], jnp.int32)
+    sims = jnp.asarray([u.similarity for u in buffer], jnp.float32)
+    table = update_table(table, cids, sims)
+
+    # F/G are recomputed against the *current* table (the server "first
+    # calculates the average speed f̄, average similarity s̄" §3.4).
+    total = jnp.maximum(jnp.sum(table.counts), 1)
+    f = table.counts.astype(jnp.float32) / total
+    f_bar = jnp.mean(f)
+    s_bar = jnp.mean(table.sims)
+    f_i = f[cids]
+    F = jnp.clip(f_bar / jnp.maximum(f_i, 1e-12), 1.0 / hp.ratio_clip, hp.ratio_clip)
+    s_i = jnp.maximum(sims, 1e-6)
+    G = jnp.clip(jnp.maximum(s_bar, 1e-6) / s_i, 1.0 / hp.ratio_clip, hp.ratio_clip)
+
+    n_samples = jnp.asarray([u.n_samples for u in buffer], jnp.int32)
+    fb = jnp.asarray([bool(u.feedback) and hp.use_feedback for u in buffer])
+    p = aggregation_weights(n_samples, fb, F, G, K, n_clients)
+
+    if strategy is AggregationStrategy.GRADIENT:
+        new_global = aggregate_gradients(
+            w_global, [u.delta for u in buffer], p, hp.eta_g
+        )
+    else:
+        new_global = aggregate_models([u.params for u in buffer], p)
+    return new_global, table, p

@@ -1,0 +1,400 @@
+"""FedQS and the 11 baseline algorithms (paper §5.2, Appendix D.4).
+
+Each algorithm implements two hooks used by ``SAFLEngine``:
+
+* ``client_adapt``    → (lr, momentum, feedback_bit, quadrant) at fetch time;
+* ``server_aggregate``→ (new_global, new_table) over one K-buffer.
+
+Baselines follow Appendix D.4's descriptions, mapped to this engine's
+buffered-trigger SAFL loop.  All operate on pytrees, so they run unchanged
+for every model family in the zoo.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .aggregation import (
+    aggregate_gradients,
+    aggregate_models,
+    aggregation_weights,
+    server_aggregate as fedqs_server_aggregate,
+    update_table,
+)
+from .classify import adapt as mod2_adapt, ssbc_situation
+from .similarity import tree_flat_vector
+from .types import (
+    AggregationStrategy,
+    FedQSHyperParams,
+    Params,
+    Quadrant,
+    ServerTable,
+    SSBCSituation,
+    Update,
+    tree_add,
+    tree_scale,
+    tree_sub,
+    tree_weighted_sum,
+    tree_zeros_like,
+)
+
+
+class Algorithm:
+    name = "base"
+    strategy = AggregationStrategy.MODEL
+
+    def __init__(self, hp: FedQSHyperParams):
+        self.hp = hp
+
+    # -------- client side: constant lr, no momentum, no feedback ---------
+    def client_adapt(self, engine, cid, f_i, f_bar, s_i, s_bar):
+        return (self.hp.eta0, 0.0, False, int(Quadrant.SWBC))
+
+    # -------- server side: sample-count weighting -------------------------
+    def _base_weights(self, buffer: List[Update]) -> jnp.ndarray:
+        n = np.asarray([u.n_samples for u in buffer], np.float32)
+        return jnp.asarray(n / n.sum())
+
+    def _table(self, engine, buffer) -> ServerTable:
+        cids = jnp.asarray([u.cid for u in buffer], jnp.int32)
+        sims = jnp.asarray([u.similarity for u in buffer], jnp.float32)
+        return update_table(engine.table, cids, sims)
+
+    def server_aggregate(self, engine, buffer: List[Update]):
+        table = self._table(engine, buffer)
+        p = self._base_weights(buffer)
+        if self.strategy is AggregationStrategy.GRADIENT:
+            new = aggregate_gradients(engine.global_params, [u.delta for u in buffer], p, self.hp.eta_g)
+        else:
+            new = aggregate_models([u.params for u in buffer], p)
+        return new, table
+
+
+# ===========================================================================
+# FedQS (the paper)
+# ===========================================================================
+class FedQS(Algorithm):
+    """FedQS-SGD / FedQS-Avg depending on ``strategy``."""
+
+    def __init__(self, hp: FedQSHyperParams, strategy=AggregationStrategy.GRADIENT):
+        super().__init__(hp)
+        self.strategy = strategy
+        self.name = f"fedqs-{strategy.value}"
+
+    def client_adapt(self, engine, cid, f_i, f_bar, s_i, s_bar):
+        c = engine.clients[cid]
+        sit = SSBCSituation.STRAGGLER
+        # SSBC pre-check: only bother with the validation pass if the client
+        # would land in SSBC (slow & biased).
+        if f_i <= f_bar and s_i < s_bar:
+            ds = engine.data.clients[cid]
+            per_label = ds.per_label_val_accuracy(
+                lambda x: engine.spec.predict_fn(engine.global_params, x),
+                engine.data.n_labels,
+            )
+            sit = int(ssbc_situation(jnp.asarray(per_label), self.hp.ssbc_cv_threshold))
+        d = mod2_adapt(f_i, f_bar, s_i, s_bar, c.lr, self.hp, ssbc_sit=sit)
+        return (float(d.lr), float(d.momentum), bool(d.feedback), int(d.quadrant))
+
+    def server_aggregate(self, engine, buffer):
+        new, table, _ = fedqs_server_aggregate(
+            self.strategy, engine.global_params, buffer, engine.table,
+            self.hp, engine.data.n_clients,
+        )
+        return new, table
+
+
+# ===========================================================================
+# foundational baselines
+# ===========================================================================
+class FedAvg(Algorithm):
+    name = "fedavg"
+    strategy = AggregationStrategy.MODEL
+
+
+class FedSGD(Algorithm):
+    name = "fedsgd"
+    strategy = AggregationStrategy.GRADIENT
+
+
+# ===========================================================================
+# model-aggregation baselines
+# ===========================================================================
+class SAFA(Algorithm):
+    """SAFA [31]: server-side model cache per client; each trigger
+    aggregates *all* cached models (lag-bounded), refreshing the cache with
+    the newest uploads first."""
+
+    name = "safa"
+    strategy = AggregationStrategy.MODEL
+
+    def __init__(self, hp, lag_tolerance: int = 5):
+        super().__init__(hp)
+        self.cache: dict[int, Tuple[Params, int, int]] = {}  # cid -> (w, round, n)
+        self.lag = lag_tolerance
+
+    def server_aggregate(self, engine, buffer):
+        table = self._table(engine, buffer)
+        for u in buffer:
+            self.cache[u.cid] = (u.params, engine.round, u.n_samples)
+        # deprecate entries older than the lag tolerance
+        live = {c: v for c, v in self.cache.items() if engine.round - v[1] <= self.lag}
+        self.cache = live
+        models = [v[0] for v in live.values()]
+        n = np.asarray([v[2] for v in live.values()], np.float32)
+        p = jnp.asarray(n / n.sum())
+        return aggregate_models(models, p), table
+
+
+class FedAT(Algorithm):
+    """FedAT [18]: speed-tiered aggregation; tiers that update less often
+    get *larger* weight to rebalance (their weighted heuristic)."""
+
+    name = "fedat"
+    strategy = AggregationStrategy.MODEL
+    n_tiers = 5
+
+    def __init__(self, hp):
+        super().__init__(hp)
+        self.tier_of: Optional[np.ndarray] = None
+        self.tier_updates = np.zeros(self.n_tiers)
+
+    def _ensure_tiers(self, engine):
+        if self.tier_of is None:
+            # cluster by observed speed (no prior knowledge claim is FedQS's
+            # advantage; FedAT does use it — Appendix D.4)
+            q = np.quantile(engine.speeds, np.linspace(0, 1, self.n_tiers + 1)[1:-1])
+            self.tier_of = np.digitize(engine.speeds, q)
+
+    def server_aggregate(self, engine, buffer):
+        self._ensure_tiers(engine)
+        table = self._table(engine, buffer)
+        for u in buffer:
+            self.tier_updates[self.tier_of[u.cid]] += 1
+        tot = self.tier_updates.sum()
+        # cross-tier weight ∝ (1 + total − own) → rarely-updating tiers favored
+        tier_w = (1.0 + tot - self.tier_updates) / max(tot, 1.0)
+        n = np.asarray([u.n_samples for u in buffer], np.float32)
+        w = n * np.asarray([tier_w[self.tier_of[u.cid]] for u in buffer])
+        p = jnp.asarray(w / w.sum())
+        return aggregate_models([u.params for u in buffer], p), table
+
+
+class MStep(Algorithm):
+    """M-step-FedAsync [37]: weights from model-deviation degree (inner
+    product of local vs global parameters) × update frequency."""
+
+    name = "m-step"
+    strategy = AggregationStrategy.MODEL
+
+    def server_aggregate(self, engine, buffer):
+        table = self._table(engine, buffer)
+        g = tree_flat_vector(engine.global_params)
+        gn = jnp.linalg.norm(g) + 1e-12
+        counts = np.asarray(table.counts, np.float32)
+        ws = []
+        for u in buffer:
+            v = tree_flat_vector(u.params)
+            dev = jnp.vdot(v, g) / (jnp.linalg.norm(v) * gn + 1e-12)
+            freq = counts[u.cid] / max(counts.sum(), 1.0)
+            ws.append(float((1.0 + dev) * u.n_samples / (1.0 + freq)))
+        w = np.maximum(np.asarray(ws, np.float32), 1e-6)
+        p = jnp.asarray(w / w.sum())
+        return aggregate_models([u.params for u in buffer], p), table
+
+
+class DeFedAvg(Algorithm):
+    """DeFedAvg [42]: uniform weights; the server accepts delayed updates
+    as-is (linear-speedup analysis assumes unweighted averaging)."""
+
+    name = "defedavg"
+    strategy = AggregationStrategy.MODEL
+
+    def _base_weights(self, buffer):
+        return jnp.full((len(buffer),), 1.0 / len(buffer))
+
+
+# ===========================================================================
+# gradient-aggregation baselines
+# ===========================================================================
+class FedBuff(Algorithm):
+    """FedBuff [16]: buffered async aggregation with staleness discount
+    s(τ) = 1/sqrt(1+τ) on each pseudo-gradient."""
+
+    name = "fedbuff"
+    strategy = AggregationStrategy.GRADIENT
+
+    def server_aggregate(self, engine, buffer):
+        table = self._table(engine, buffer)
+        stale = np.asarray([engine.round - u.stale_round for u in buffer], np.float32)
+        n = np.asarray([u.n_samples for u in buffer], np.float32)
+        w = n / n.sum() / np.sqrt(1.0 + stale)
+        p = jnp.asarray(w / w.sum())
+        new = aggregate_gradients(engine.global_params, [u.delta for u in buffer], p, self.hp.eta_g)
+        return new, table
+
+
+class WKAFL(Algorithm):
+    """WKAFL [15]: two-stage — estimate an unbiased global gradient from an
+    EMA of past aggregates, then weight each local update by its cosine to
+    the estimate (negative-aligned updates are dropped); clipped."""
+
+    name = "wkafl"
+    strategy = AggregationStrategy.GRADIENT
+
+    def __init__(self, hp, ema: float = 0.5):
+        super().__init__(hp)
+        self.est: Optional[Params] = None
+        self.ema = ema
+
+    def server_aggregate(self, engine, buffer):
+        table = self._table(engine, buffer)
+        n = np.asarray([u.n_samples for u in buffer], np.float32)
+        if self.est is None:
+            w = n / n.sum()
+        else:
+            e = tree_flat_vector(self.est)
+            en = jnp.linalg.norm(e) + 1e-12
+            cos = []
+            for u in buffer:
+                d = tree_flat_vector(u.delta)
+                cos.append(float(jnp.vdot(d, e) / (jnp.linalg.norm(d) * en + 1e-12)))
+            w = n * np.maximum(np.asarray(cos, np.float32), 0.05)
+            w = w / w.sum()
+        p = jnp.asarray(w)
+        agg = tree_weighted_sum([u.delta for u in buffer], p)
+        self.est = agg if self.est is None else jax.tree_util.tree_map(
+            lambda a, b: self.ema * a + (1 - self.ema) * b, self.est, agg
+        )
+        new = jax.tree_util.tree_map(lambda wg, s: wg - self.hp.eta_g * s, engine.global_params, agg)
+        return new, table
+
+
+class FedAC(Algorithm):
+    """FedAC [20]: prospective momentum aggregation + temporal (staleness)
+    gradient evaluation + SCAFFOLD-style fine-grained correction (server
+    keeps a control variate approximated by the running mean update)."""
+
+    name = "fedac"
+    strategy = AggregationStrategy.GRADIENT
+
+    def __init__(self, hp, server_momentum: float = 0.5):
+        super().__init__(hp)
+        self.u: Optional[Params] = None
+        self.c_global: Optional[Params] = None
+        self.gamma = server_momentum
+
+    def server_aggregate(self, engine, buffer):
+        table = self._table(engine, buffer)
+        stale = np.asarray([engine.round - u.stale_round for u in buffer], np.float32)
+        n = np.asarray([u.n_samples for u in buffer], np.float32)
+        w = (n / n.sum()) * np.exp(-0.5 * stale)
+        w = w / max(w.sum(), 1e-12)
+        agg = tree_weighted_sum([u.delta for u in buffer], jnp.asarray(w))
+        if self.c_global is not None:  # drift correction toward running mean
+            agg = jax.tree_util.tree_map(lambda a, c: 0.9 * a + 0.1 * c, agg, self.c_global)
+        self.c_global = agg if self.c_global is None else jax.tree_util.tree_map(
+            lambda c, a: 0.9 * c + 0.1 * a, self.c_global, agg
+        )
+        self.u = agg if self.u is None else jax.tree_util.tree_map(
+            lambda u_, a: self.gamma * u_ + a, self.u, agg
+        )
+        new = jax.tree_util.tree_map(lambda wg, s: wg - self.hp.eta_g * s, engine.global_params, self.u)
+        return new, table
+
+
+class FADAS(Algorithm):
+    """FADAS [43]: FedBuff-style buffering + Adam-like server update over
+    the aggregated pseudo-gradient (delay-adaptive η)."""
+
+    name = "fadas"
+    strategy = AggregationStrategy.GRADIENT
+
+    def __init__(self, hp, b1=0.9, b2=0.99, eps=1e-8, server_lr=0.05):
+        super().__init__(hp)
+        self.b1, self.b2, self.eps, self.server_lr = b1, b2, eps, server_lr
+        self.m: Optional[Params] = None
+        self.v: Optional[Params] = None
+        self.t = 0
+
+    def server_aggregate(self, engine, buffer):
+        table = self._table(engine, buffer)
+        stale = np.asarray([engine.round - u.stale_round for u in buffer], np.float32)
+        p = self._base_weights(buffer)
+        agg = tree_weighted_sum([u.delta for u in buffer], p)
+        self.t += 1
+        if self.m is None:
+            self.m, self.v = tree_zeros_like(agg), tree_zeros_like(agg)
+        self.m = jax.tree_util.tree_map(lambda m, g: self.b1 * m + (1 - self.b1) * g, self.m, agg)
+        self.v = jax.tree_util.tree_map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g, self.v, agg)
+        mh = tree_scale(self.m, 1.0 / (1 - self.b1**self.t))
+        vh = tree_scale(self.v, 1.0 / (1 - self.b2**self.t))
+        # delay-adaptive step: shrink with max staleness in the buffer
+        lr = self.server_lr / np.sqrt(1.0 + stale.max())
+        new = jax.tree_util.tree_map(
+            lambda w, m, v: w - lr * m / (jnp.sqrt(v) + self.eps),
+            engine.global_params, mh, vh,
+        )
+        return new, table
+
+
+class CA2FL(Algorithm):
+    """CA²FL [44]: cached update calibration — the server keeps the latest
+    update h_i per client and calibrates each aggregation with the cache
+    mean: v = mean_i(h_i) + Σ_{i∈S} p_i (δ_i − h_i)."""
+
+    name = "ca2fl"
+    strategy = AggregationStrategy.GRADIENT
+
+    def __init__(self, hp):
+        super().__init__(hp)
+        self.cache: dict[int, Params] = {}
+
+    def server_aggregate(self, engine, buffer):
+        table = self._table(engine, buffer)
+        p = self._base_weights(buffer)
+        deltas = [u.delta for u in buffer]
+        cached = [self.cache.get(u.cid) for u in buffer]
+        corr = [
+            tree_sub(d, h) if h is not None else d for d, h in zip(deltas, cached)
+        ]
+        v = tree_weighted_sum(corr, p)
+        if self.cache:
+            hbar = tree_scale(
+                jax.tree_util.tree_map(
+                    lambda *xs: sum(xs), *list(self.cache.values())
+                ),
+                1.0 / len(self.cache),
+            )
+            v = tree_add(v, hbar)
+        for u in buffer:
+            self.cache[u.cid] = u.delta
+        new = jax.tree_util.tree_map(lambda w, s: w - self.hp.eta_g * s, engine.global_params, v)
+        return new, table
+
+
+ALGORITHMS = {
+    "fedqs-sgd": lambda hp: FedQS(hp, AggregationStrategy.GRADIENT),
+    "fedqs-avg": lambda hp: FedQS(hp, AggregationStrategy.MODEL),
+    "fedavg": FedAvg,
+    "fedsgd": FedSGD,
+    "safa": SAFA,
+    "fedat": FedAT,
+    "m-step": MStep,
+    "defedavg": DeFedAvg,
+    "fedbuff": FedBuff,
+    "wkafl": WKAFL,
+    "fedac": FedAC,
+    "fadas": FADAS,
+    "ca2fl": CA2FL,
+}
+
+
+def make_algorithm(name: str, hp: FedQSHyperParams) -> Algorithm:
+    try:
+        return ALGORITHMS[name](hp)
+    except KeyError:
+        raise ValueError(f"unknown algorithm {name!r}; choose from {sorted(ALGORITHMS)}") from None

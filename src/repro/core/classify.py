@@ -1,0 +1,156 @@
+"""Mod-2: local training adaptation (divide-and-conquer over clients).
+
+Implements the paper's §3.3:
+
+* quadrant classification from (f_i vs f̄, s_i vs s̄);
+* per-quadrant learning-rate adaptation  η_i ← η_i ∓ a·F, F = f̄/f_i;
+* momentum assignment m_i = m0 + k(1/G − 1), G = s̄/s_i, applied only to
+  the well-aligned quadrants (FWBC, SWBC) and to SSBC in Situation 1;
+* the SSBC situation detector (per-label validation performance spread);
+* the 1-bit feedback flag raised by FSBC and SSBC-Situation-2 clients.
+
+Everything is expressed as branch-free jnp algebra so the same code also
+runs vectorized over the client axis inside the distributed shard_map step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import FedQSHyperParams, Quadrant, SSBCSituation
+
+
+def update_speed(counts: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Paper Eq. 2: f_i = n(i)/Σn(i), f̄ = mean_i f_i = 1/N.
+
+    Returns (f[N], f̄).  With the paper's definition f̄ is identically 1/N;
+    we keep the explicit mean so alternative speed estimators slot in.
+    """
+    total = jnp.maximum(jnp.sum(counts), 1)
+    f = counts.astype(jnp.float32) / total
+    return f, jnp.mean(f)
+
+
+def mean_similarity(sims: jnp.ndarray) -> jnp.ndarray:
+    """Paper Eq. 2: s̄ = (Σ_i s_g(i)) / N over the server table."""
+    return jnp.mean(sims)
+
+
+def classify_quadrant(f_i, f_bar, s_i, s_bar) -> jnp.ndarray:
+    """Vectorizable quadrant id (Figure 3). Ties break toward 'weakly biased'
+    / 'straggling' which matches the paper's >/< strict inequalities."""
+    fast = f_i > f_bar
+    weak = s_i >= s_bar
+    # FSBC=0 fast&biased, FWBC=1 fast&weak, SWBC=2 slow&weak, SSBC=3 slow&biased
+    return jnp.where(
+        fast,
+        jnp.where(weak, Quadrant.FWBC, Quadrant.FSBC),
+        jnp.where(weak, Quadrant.SWBC, Quadrant.SSBC),
+    ).astype(jnp.int32)
+
+
+def speed_ratio(f_i, f_bar, clip: float = 1e3) -> jnp.ndarray:
+    """F = f̄ / f_i, clamped (DESIGN §9: near-idle clients make F explode)."""
+    return jnp.clip(f_bar / jnp.maximum(f_i, 1e-12), 1.0 / clip, clip)
+
+
+def similarity_ratio(s_i, s_bar, clip: float = 1e3) -> jnp.ndarray:
+    """G = s̄ / s_i, clamped. Negative cosine similarities are floored so G
+    stays meaningful (strongly-anti-aligned ⇒ tiny momentum anyway)."""
+    s_i = jnp.maximum(s_i, 1e-6)
+    s_bar = jnp.maximum(s_bar, 1e-6)
+    return jnp.clip(s_bar / s_i, 1.0 / clip, clip)
+
+
+def adapt_learning_rate(
+    lr: jnp.ndarray,
+    quadrant: jnp.ndarray,
+    F: jnp.ndarray,
+    hp: FedQSHyperParams,
+) -> jnp.ndarray:
+    """Per-quadrant lr update (§3.3):
+
+    FSBC: unchanged.  FWBC: η ← η − a·F.  SWBC/SSBC: η ← η + a·F.
+    Bounded to [lr_min, lr_max] = [α, β] per Appendix D.3.
+    """
+    delta = jnp.where(
+        quadrant == Quadrant.FWBC,
+        -hp.a * F,
+        jnp.where(
+            (quadrant == Quadrant.SWBC) | (quadrant == Quadrant.SSBC),
+            hp.a * F,
+            0.0,
+        ),
+    )
+    return jnp.clip(lr + delta, hp.lr_min, hp.lr_max)
+
+
+def momentum_rate(G: jnp.ndarray, hp: FedQSHyperParams) -> jnp.ndarray:
+    """m_i = m0 + k(1/G − 1), clipped to [0, θ] (θ=momentum_max)."""
+    m = hp.m0 + hp.k * (1.0 / G - 1.0)
+    return jnp.clip(m, 0.0, hp.momentum_max)
+
+
+def ssbc_situation(per_label_acc: jnp.ndarray, cv_threshold: float) -> jnp.ndarray:
+    """SSBC diagnosis from the local validation set (§3.3).
+
+    If the global model performs *similarly on each label* → Situation 1
+    (plain straggler, momentum path).  Large per-label spread → Situation 2
+    (dispersed distribution, feedback path).  Spread is measured by the
+    coefficient of variation of per-label accuracy; labels absent from the
+    validation set must be passed as NaN and are ignored.
+    """
+    valid = ~jnp.isnan(per_label_acc)
+    n = jnp.maximum(jnp.sum(valid), 1)
+    masked = jnp.where(valid, per_label_acc, 0.0)
+    mean = jnp.sum(masked) / n
+    var = jnp.sum(jnp.where(valid, (per_label_acc - mean) ** 2, 0.0)) / n
+    cv = jnp.sqrt(var) / jnp.maximum(mean, 1e-6)
+    return jnp.where(
+        cv > cv_threshold, SSBCSituation.DISPERSED, SSBCSituation.STRAGGLER
+    ).astype(jnp.int32)
+
+
+class AdaptationDecision(NamedTuple):
+    """Everything Mod-2 hands to local training + the 1-bit uplink."""
+
+    quadrant: jnp.ndarray      # i32
+    lr: jnp.ndarray            # f32 — adapted local learning rate
+    momentum: jnp.ndarray      # f32 — Eq-3 momentum rate (0 disables)
+    feedback: jnp.ndarray      # bool — raise Mod-3 feedback weighting
+    F: jnp.ndarray             # f̄/f_i (server needs it for the weight formula)
+    G: jnp.ndarray             # s̄/s_i
+
+
+def adapt(
+    f_i,
+    f_bar,
+    s_i,
+    s_bar,
+    lr,
+    hp: FedQSHyperParams,
+    ssbc_sit: jnp.ndarray | int = SSBCSituation.STRAGGLER,
+) -> AdaptationDecision:
+    """Full Mod-2 decision for one client (vectorizes with vmap over clients).
+
+    ``ssbc_sit`` is the validation-set diagnosis; it only matters when the
+    client lands in SSBC.
+    """
+    q = classify_quadrant(f_i, f_bar, s_i, s_bar)
+    F = speed_ratio(f_i, f_bar, hp.ratio_clip)
+    G = similarity_ratio(s_i, s_bar, hp.ratio_clip)
+    new_lr = adapt_learning_rate(jnp.asarray(lr, jnp.float32), q, F, hp)
+
+    sit = jnp.asarray(ssbc_sit, jnp.int32)
+    ssbc_dispersed = (q == Quadrant.SSBC) & (sit == SSBCSituation.DISPERSED)
+    # momentum for FWBC, SWBC, SSBC-Sit1; never for FSBC / SSBC-Sit2
+    momentum_on = (
+        (q == Quadrant.FWBC)
+        | (q == Quadrant.SWBC)
+        | ((q == Quadrant.SSBC) & (sit == SSBCSituation.STRAGGLER))
+    )
+    m = jnp.where(momentum_on & hp.use_momentum, momentum_rate(G, hp), 0.0)
+    feedback = ((q == Quadrant.FSBC) | ssbc_dispersed) & hp.use_feedback
+    return AdaptationDecision(q, new_lr, m, feedback, F, G)

@@ -1,0 +1,331 @@
+"""Event-driven semi-asynchronous FL engine (virtual clock).
+
+This is the paper-faithful runtime (DESIGN §2 layer 1): N autonomous
+clients with heterogeneous speeds train on possibly-stale global models and
+push updates; the server buffers K updates and then aggregates (SAFL
+conditional trigger).  FedQS and all 11 baselines plug in through the
+``Algorithm`` interface (``repro.core.algorithms``).
+
+Fidelity notes:
+* staleness τ_i arises naturally: a client trains on the global round it
+  last fetched; fast clients re-fetch often, stragglers lag;
+* Mod-1 runs client-side on the last two global models the client has seen
+  (not the server's — the paper is explicit that Mod-1 is client-local);
+* the server's status table, averages f̄/s̄ and the 3-float downlink are
+  modeled exactly;
+* dynamic environments (paper §5.3 scenarios 1–3) are supported via a
+  ``dynamics`` callback mutating speeds / dropping clients per round.
+"""
+from __future__ import annotations
+
+import heapq
+import time as _time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import FederatedData
+from repro.optim.sgd import local_train_epochs
+from .aggregation import server_aggregate
+from .similarity import local_global_similarity, pseudo_global_gradient
+from .types import (
+    AggregationStrategy,
+    ClientState,
+    FedQSHyperParams,
+    Params,
+    RoundMetrics,
+    ServerTable,
+    Update,
+    tree_sub,
+)
+
+
+@dataclass
+class ModelSpec:
+    """Task model plugged into the engine (see ``repro.models.small``)."""
+
+    init: Callable[[jax.Array], Params]
+    grad_fn: Callable[[Params, dict], Params]          # jitted ∇F(w; batch)
+    eval_fn: Callable[[Params, np.ndarray, np.ndarray], Tuple[float, float]]
+    predict_fn: Callable[[Params, np.ndarray], np.ndarray]
+    batch_size: int = 32
+
+
+@dataclass
+class EngineResult:
+    metrics: List[RoundMetrics]
+    wall_seconds: float
+    final_params: Params
+
+    def best_accuracy(self) -> float:
+        return max(m.accuracy for m in self.metrics) if self.metrics else 0.0
+
+    def final_accuracy(self, last: int = 20) -> float:
+        tail = self.metrics[-last:]
+        return float(np.mean([m.accuracy for m in tail])) if tail else 0.0
+
+    def rounds_to_accuracy(self, target: float) -> Optional[int]:
+        for m in self.metrics:
+            if m.accuracy >= target:
+                return m.round
+        return None
+
+    def oscillations(self, threshold: float = 0.15) -> int:
+        acc = [m.accuracy for m in self.metrics]
+        return sum(1 for a, b in zip(acc, acc[1:]) if a - b > threshold)
+
+    def virtual_time(self) -> float:
+        return self.metrics[-1].virtual_time if self.metrics else 0.0
+
+
+class SAFLEngine:
+    """Semi-asynchronous driver.  ``algo`` decides client adaptation and
+    server weighting; the engine owns time, staleness and the K-buffer."""
+
+    def __init__(
+        self,
+        data: FederatedData,
+        spec: ModelSpec,
+        algo: "Algorithm",
+        hp: FedQSHyperParams,
+        *,
+        resource_ratio: float = 50.0,
+        seed: int = 0,
+        dynamics: Optional[Callable[[int, np.ndarray, np.random.Generator], np.ndarray]] = None,
+        eval_every: int = 1,
+        sync_mode: bool = False,
+    ):
+        self.data = data
+        self.spec = spec
+        self.algo = algo
+        self.hp = hp
+        self.rng = np.random.default_rng(seed)
+        self.dynamics = dynamics
+        self.eval_every = eval_every
+        self.sync_mode = sync_mode
+
+        n = data.n_clients
+        # uniformly distributed compute resources, fastest:slowest = 1:ratio
+        self.speeds = self.rng.uniform(1.0, resource_ratio, n)
+        key = jax.random.PRNGKey(seed)
+        self.global_params = spec.init(key)
+        self.prev_global: Dict[int, Params] = {}
+        self.clients = [
+            ClientState(
+                cid=i,
+                n_samples=data.clients[i].n,
+                speed=float(self.speeds[i]),
+                lr=hp.eta0,
+                momentum=hp.m0,
+            )
+            for i in range(n)
+        ]
+        self.table = ServerTable.init(n)
+        self.round = 0
+        self.alive = np.ones(n, bool)
+
+        # client-side Mod-1 storage: the last two global models seen
+        self._client_globals: Dict[int, Tuple[int, Params, Optional[Params]]] = {}
+
+    # ---------------------------------------------------------- client side
+    def _client_fetch(self, cid: int):
+        """Client synchronizes to the current global model (keeps previous
+        for pseudo-global-gradient computation)."""
+        prev = self._client_globals.get(cid)
+        prev_params = prev[1] if prev is not None else None
+        self._client_globals[cid] = (self.round, self.global_params, prev_params)
+
+    def _server_view(self):
+        """The 3-float downlink: (f̄, s̄, f_i broadcast as table)."""
+        counts = np.asarray(self.table.counts)
+        total = max(counts.sum(), 1)
+        f = counts / total
+        return f, float(f.mean()), float(np.asarray(self.table.sims).mean())
+
+    def _client_train(self, cid: int) -> Update:
+        """One autonomous local-training burst → an Update for the buffer."""
+        fetched_round, w_start, w_prev = self._client_globals[cid]
+        c = self.clients[cid]
+        ds = self.data.clients[cid]
+
+        f_all, f_bar, s_bar = self._server_view()
+        decision = self.algo.client_adapt(
+            self, cid, float(f_all[cid]), f_bar, c.last_similarity, s_bar
+        )
+        c.lr, c.momentum = float(decision[0]), float(decision[1])
+        feedback = bool(decision[2])
+        c.quadrant = int(decision[3])
+
+        batches = ds.batches(
+            self.spec.batch_size,
+            epoch_seed=self.rng.integers(2**31),
+            n_batches=self.hp.local_epochs,
+        )
+        w_end, _ = local_train_epochs(
+            w_start,
+            self.spec.grad_fn,
+            batches,
+            c.lr,
+            c.momentum,
+            grad_clip=self.hp.grad_clip,
+        )
+
+        delta = tree_sub(w_start, w_end)  # η Σ_e ΔF_{i,e}  (Remark B.1)
+
+        # Mod-1: similarity vs. pseudo-global gradient (client-local)
+        if w_prev is not None:
+            pg = pseudo_global_gradient(w_start, w_prev)
+            # both vectors in *step* space: −delta is the local step taken
+            sim = float(
+                local_global_similarity(
+                    jax.tree_util.tree_map(jnp.negative, delta), pg, self.hp.similarity
+                )
+            )
+        else:
+            sim = 0.0
+        c.last_similarity = sim
+        c.feedback = feedback
+        c.stale_round = fetched_round
+
+        return Update(
+            cid=cid,
+            n_samples=c.n_samples,
+            stale_round=fetched_round,
+            lr=c.lr,
+            similarity=sim,
+            feedback=feedback,
+            speed_f=float(f_all[cid]),
+            delta=delta,
+            params=w_end,
+        )
+
+    # ---------------------------------------------------------- server side
+    def _aggregate(self, buffer: List[Update]):
+        new_global, self.table = self.algo.server_aggregate(self, buffer)
+        self.global_params = new_global
+        self.round += 1
+
+    def _metrics(self, vt: float, buffer: List[Update]) -> RoundMetrics:
+        loss, acc = self.spec.eval_fn(self.global_params, self.data.test_x, self.data.test_y)
+        stale = [self.round - 1 - u.stale_round for u in buffer]
+        qc: Dict[str, int] = {}
+        for c in self.clients:
+            qc[str(c.quadrant)] = qc.get(str(c.quadrant), 0) + 1
+        return RoundMetrics(
+            round=self.round,
+            virtual_time=vt,
+            loss=float(loss),
+            accuracy=float(acc),
+            n_stale=sum(1 for s in stale if s > 0),
+            mean_staleness=float(np.mean(stale)) if stale else 0.0,
+            quadrant_counts=qc,
+        )
+
+    # ---------------------------------------------------------------- driver
+    def run(self, n_rounds: int) -> EngineResult:
+        t0 = _time.perf_counter()
+        if self.sync_mode:
+            result = self._run_sync(n_rounds)
+        else:
+            result = self._run_async(n_rounds)
+        return EngineResult(result, _time.perf_counter() - t0, self.global_params)
+
+    def _run_async(self, n_rounds: int) -> List[RoundMetrics]:
+        n = self.data.n_clients
+        heap: List[Tuple[float, int, int]] = []  # (finish_time, seq, cid)
+        seq = 0
+        for cid in range(n):
+            self._client_fetch(cid)
+            jitter = self.rng.uniform(0.5, 1.5)
+            heapq.heappush(heap, (self.clients[cid].speed * jitter, seq, cid))
+            seq += 1
+
+        buffer: List[Update] = []
+        metrics: List[RoundMetrics] = []
+        vt = 0.0
+        while self.round < n_rounds and heap:
+            vt, _, cid = heapq.heappop(heap)
+            if not self.alive[cid]:
+                continue
+            buffer.append(self._client_train(cid))
+            # client immediately checks for a fresh global model, then keeps going
+            self._client_fetch(cid)
+            jitter = self.rng.uniform(0.9, 1.1)
+            heapq.heappush(heap, (vt + self.clients[cid].speed * jitter, seq, cid))
+            seq += 1
+
+            if len(buffer) >= self.hp.buffer_k:
+                self._aggregate(buffer)
+                if self.round % self.eval_every == 0:
+                    metrics.append(self._metrics(vt, buffer))
+                buffer = []
+                if self.dynamics is not None:
+                    new_speeds = self.dynamics(self.round, self.speeds, self.rng)
+                    if new_speeds is not None:
+                        self.speeds = new_speeds
+                        for i, c in enumerate(self.clients):
+                            if np.isfinite(new_speeds[i]):
+                                c.speed = float(new_speeds[i])
+                            else:
+                                self.alive[i] = False
+        return metrics
+
+    def _run_sync(self, n_rounds: int) -> List[RoundMetrics]:
+        """Synchronous FL reference (paper Table 3 shadowed columns):
+        the server activates K clients per round and waits for the slowest."""
+        metrics: List[RoundMetrics] = []
+        vt = 0.0
+        n = self.data.n_clients
+        while self.round < n_rounds:
+            live = np.flatnonzero(self.alive)
+            sel = self.rng.choice(live, size=min(self.hp.buffer_k, len(live)), replace=False)
+            buffer = []
+            for cid in sel:
+                self._client_fetch(cid)
+                buffer.append(self._client_train(cid))
+            vt += max(self.clients[c].speed for c in sel)  # idle until slowest
+            self._aggregate(buffer)
+            if self.round % self.eval_every == 0:
+                metrics.append(self._metrics(vt, buffer))
+        return metrics
+
+
+# --------------------------------------------------------------------------
+# dynamic-environment callbacks (paper §5.3)
+# --------------------------------------------------------------------------
+def scenario_resource_scale(at_round: int, new_ratio: float):
+    """Scenario 1: speed ratio shifts (1:50 → 1:new_ratio) at ``at_round``."""
+
+    def fn(rnd, speeds, rng):
+        if rnd == at_round:
+            lo = speeds.min()
+            return lo + (speeds - lo) * (new_ratio - 1) / max(speeds.max() / lo - 1, 1e-9)
+        return None
+
+    return fn
+
+
+def scenario_unstable_resources(lo: float = 1.0, hi: float = 50.0, unit: float = 10.0):
+    """Scenario 2: each client's resource fluctuates within ±unit per round."""
+
+    def fn(rnd, speeds, rng):
+        return np.clip(speeds + rng.uniform(-unit, unit, speeds.shape), lo, hi)
+
+    return fn
+
+
+def scenario_dropout(at_round: int, frac: float = 0.5):
+    """Scenario 3: ``frac`` of clients churn at ``at_round`` (NaN = dead)."""
+
+    def fn(rnd, speeds, rng):
+        if rnd == at_round:
+            out = speeds.copy()
+            dead = rng.choice(len(speeds), int(len(speeds) * frac), replace=False)
+            out[dead] = np.nan
+            return out
+        return None
+
+    return fn

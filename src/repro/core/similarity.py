@@ -1,0 +1,91 @@
+"""Mod-1: global aggregation estimation.
+
+Clients store the two most recent global models and derive the
+pseudo-global gradient ``L_g(w_g^t) = w_g^t - w_g^{t-1}`` (paper §3.2,
+following FedBuff/FedAC).  The local-global update similarity s_i^t is
+computed between the client's latest local update direction and that
+pseudo-global gradient.
+
+All three similarity functions from the paper's Mod-1 ablation (Table 5)
+are provided.  Each maps to [-1, 1]-ish scores where larger = more aligned:
+
+* cosine     — ⟨a,b⟩ / (‖a‖‖b‖)                      (default)
+* euclidean  — 1 / (1 + ‖a−b‖)   ∈ (0, 1]
+* manhattan  — 1 / (1 + ‖a−b‖₁)  ∈ (0, 1]
+
+The distance-based scores are squashed so that "larger is more similar"
+holds for every metric, which the quadrant logic (Mod-2) relies on.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .types import Params, tree_flat_vector, tree_sub
+
+
+def pseudo_global_gradient(w_curr: Params, w_prev: Params) -> Params:
+    """L_g(w_g^t) = w_g^t − w_g^{t−1} (paper Eq. in §3.2)."""
+    return tree_sub(w_curr, w_prev)
+
+
+def cosine_similarity(a: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-12) -> jnp.ndarray:
+    dot = jnp.vdot(a, b)
+    na = jnp.linalg.norm(a)
+    nb = jnp.linalg.norm(b)
+    return dot / jnp.maximum(na * nb, eps)
+
+
+def euclidean_similarity(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return 1.0 / (1.0 + jnp.linalg.norm(a - b))
+
+
+def manhattan_similarity(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return 1.0 / (1.0 + jnp.sum(jnp.abs(a - b)))
+
+
+_SIMILARITY_FNS: dict[str, Callable] = {
+    "cosine": cosine_similarity,
+    "euclidean": euclidean_similarity,
+    "manhattan": manhattan_similarity,
+}
+
+
+def get_similarity_fn(name: str) -> Callable:
+    try:
+        return _SIMILARITY_FNS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown similarity {name!r}; choose from {sorted(_SIMILARITY_FNS)}"
+        ) from None
+
+
+def local_global_similarity(
+    local_update: Params,
+    pseudo_global: Params,
+    kind: str = "cosine",
+) -> jnp.ndarray:
+    """s_i^t — similarity between a local update and the pseudo-global gradient.
+
+    Note on sign conventions: the pseudo-global gradient ``w^t − w^{t−1}``
+    points along the *descent step* the server took, while a raw local
+    gradient points uphill.  Callers must pass the local update in *step*
+    space (i.e. ``−η·Σ∇F`` or ``w_i − w_g``), which is what both FedQS
+    uploads already are.
+    """
+    fn = get_similarity_fn(kind)
+    a = tree_flat_vector(local_update)
+    b = tree_flat_vector(pseudo_global)
+    return fn(a, b)
+
+
+# Fused one-pass statistics used by the distributed runtime & Pallas kernel.
+def fused_dot_norms(a: jnp.ndarray, b: jnp.ndarray):
+    """Return (⟨a,b⟩, ‖a‖², ‖b‖²) — the reduction triple behind cosine.
+
+    Reference semantics for ``repro.kernels.similarity``; the kernel computes
+    the same triple in one HBM pass.
+    """
+    return jnp.vdot(a, b), jnp.vdot(a, a), jnp.vdot(b, b)

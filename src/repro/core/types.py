@@ -1,0 +1,176 @@
+"""Core datatypes for the FedQS SAFL framework.
+
+Everything here is deliberately jax-friendly: state that participates in
+jitted computation is arrays / pytrees; host-side bookkeeping (the SAFL
+event queue) lives in plain dataclasses.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # pytree of arrays
+
+
+class Quadrant(enum.IntEnum):
+    """Mod-2 client categories (Figure 3 of the paper).
+
+    Quadrants are determined by (speed f_i vs mean f̄, similarity s_i vs
+    mean s̄).  Encoded as ints so the classification can run branch-free
+    inside jit.
+    """
+
+    FSBC = 0  # fast (f>f̄),       strongly biased (s<s̄)
+    FWBC = 1  # fast (f>f̄),       weakly biased   (s≥s̄)
+    SWBC = 2  # straggling (f≤f̄), weakly biased   (s≥s̄)
+    SSBC = 3  # straggling (f≤f̄), strongly biased (s<s̄)
+
+
+class AggregationStrategy(enum.Enum):
+    GRADIENT = "sgd"  # FedQS-SGD  (gradient / model-difference aggregation)
+    MODEL = "avg"     # FedQS-Avg  (parameter averaging)
+
+
+class SSBCSituation(enum.IntEnum):
+    """SSBC sub-diagnosis from the local validation set (paper §3.3)."""
+
+    STRAGGLER = 1   # per-label val accuracy roughly uniform -> momentum path
+    DISPERSED = 2   # per-label val accuracy highly uneven  -> feedback path
+
+
+@dataclass
+class FedQSHyperParams:
+    """Default hyper-parameters from paper Appendix D.3."""
+
+    eta0: float = 0.1          # initial local learning rate η0
+    lr_min: float = 0.001      # α — lower lr bound
+    lr_max: float = 0.2        # β — upper lr bound
+    a: float = 0.002           # learning-rate change rate
+    m0: float = 0.1            # initial momentum
+    k: float = 0.2             # momentum change speed
+    momentum_max: float = 0.9  # θ — momentum clipping threshold
+    grad_clip: float = 20.0    # G_c — gradient clipping threshold
+    local_epochs: int = 2      # E
+    buffer_k: int = 10         # K — updates needed to trigger aggregation
+    eta_g: float = 1.0         # global lr for gradient aggregation
+    similarity: str = "cosine"  # Mod-1 similarity function
+    # Situation-2 detector: coefficient-of-variation threshold on per-label
+    # validation accuracy above which SSBC is declared "dispersed".
+    ssbc_cv_threshold: float = 0.5
+    use_momentum: bool = True   # Mod-2 ablation switch
+    use_feedback: bool = True   # Mod-3 ablation switch
+    ratio_clip: float = 1e3     # clamp on F=f̄/f_i and G=s̄/s_i
+
+
+@dataclass
+class ClientState:
+    """Host-side per-client state (Mod-2 lives here in the simulator)."""
+
+    cid: int
+    n_samples: int
+    speed: float                      # wall-seconds of virtual time per local round
+    lr: float = 0.1
+    momentum: float = 0.1
+    quadrant: int = int(Quadrant.SWBC)
+    feedback: bool = False            # 1-bit uplink flag (FSBC / SSBC-Sit2)
+    last_similarity: float = 0.0
+    stale_round: int = 0              # τ_i — global round of the model it trained on
+    params: Params = None             # local model (model aggregation uploads this)
+
+
+@dataclass
+class ServerTable:
+    """Mod-3 aggregation status table — two dense arrays (paper Eq. 1/2).
+
+    ``counts[i]`` = n(i), number of times client i participated;
+    ``sims[i]``   = s_g(i), the latest similarity client i shared.
+    """
+
+    counts: jnp.ndarray  # i32[N]
+    sims: jnp.ndarray    # f32[N]
+
+    @staticmethod
+    def init(n_clients: int) -> "ServerTable":
+        return ServerTable(
+            counts=jnp.zeros((n_clients,), jnp.int32),
+            sims=jnp.zeros((n_clients,), jnp.float32),
+        )
+
+
+@dataclass
+class Update:
+    """One buffered client upload sitting in the server's K-buffer."""
+
+    cid: int
+    n_samples: int
+    stale_round: int                  # τ_i
+    lr: float
+    similarity: float
+    feedback: bool
+    speed_f: float                    # f_i at upload time
+    delta: Params = None              # Σ_e ΔF (momentum-augmented pseudo-gradient)
+    params: Params = None             # w_i (model aggregation payload)
+
+
+@dataclass
+class RoundMetrics:
+    round: int
+    virtual_time: float
+    loss: float
+    accuracy: float
+    n_stale: int
+    mean_staleness: float
+    quadrant_counts: Dict[str, int] = field(default_factory=dict)
+
+
+def tree_flat_vector(tree: Params) -> jnp.ndarray:
+    """Concatenate a pytree into one flat f32 vector (Mod-1 similarity space)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((0,), jnp.float32)
+    return jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
+
+
+def tree_zeros_like(tree: Params) -> Params:
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_add(a: Params, b: Params) -> Params:
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a: Params, b: Params) -> Params:
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(tree: Params, c) -> Params:
+    return jax.tree_util.tree_map(lambda x: x * c, tree)
+
+
+def tree_weighted_sum(trees: List[Params], weights) -> Params:
+    """Σ_i w_i · tree_i — the Mod-3 aggregation primitive (host/list form).
+
+    The mesh form lives in ``repro.core.distributed``; the Pallas kernel in
+    ``repro.kernels.weighted_agg``.
+    """
+    w = jnp.asarray(weights)
+    out = tree_scale(trees[0], w[0])
+    for i, t in enumerate(trees[1:], start=1):
+        out = tree_add(out, tree_scale(t, w[i]))
+    return out
+
+
+def tree_global_norm(tree: Params) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def tree_clip_by_global_norm(tree: Params, max_norm: float) -> Params:
+    """Gradient clipping — justification of Assumption A.2 (G_c)."""
+    norm = tree_global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return tree_scale(tree, scale)

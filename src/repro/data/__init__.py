@@ -1,0 +1,19 @@
+from .synthetic import (
+    dirichlet_partition,
+    lognormal_partition,
+    synth_adult,
+    synth_cifar10,
+    synth_shakespeare,
+)
+from .pipeline import ClientDataset, FederatedData, make_federated_data
+
+__all__ = [
+    "dirichlet_partition",
+    "lognormal_partition",
+    "synth_adult",
+    "synth_cifar10",
+    "synth_shakespeare",
+    "ClientDataset",
+    "FederatedData",
+    "make_federated_data",
+]

@@ -1,0 +1,137 @@
+"""Federated data pipeline: client-local datasets with deterministic
+batch iteration, validation split, and per-label validation accuracy
+(needed by Mod-2's SSBC situation detector).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import synthetic as syn
+
+
+@dataclass
+class ClientDataset:
+    x: np.ndarray
+    y: np.ndarray
+    val_x: np.ndarray
+    val_y: np.ndarray
+
+    @property
+    def n(self) -> int:
+        return len(self.x)
+
+    def batches(self, batch_size: int, epoch_seed: int, n_batches: int):
+        """Yield ``n_batches`` minibatches (one per local epoch, paper E)."""
+        rng = np.random.default_rng(epoch_seed)
+        for _ in range(n_batches):
+            idx = rng.integers(0, len(self.x), min(batch_size, len(self.x)))
+            yield {"x": self.x[idx], "y": self.y[idx]}
+
+    def per_label_val_accuracy(self, predict_fn, n_labels: int) -> np.ndarray:
+        """Per-label accuracy of ``predict_fn`` on the local validation set.
+        Labels absent locally are returned as NaN (ignored by the detector)."""
+        preds = np.asarray(predict_fn(self.val_x))
+        out = np.full(n_labels, np.nan, np.float32)
+        for c in range(n_labels):
+            mask = self.val_y == c
+            if mask.any():
+                out[c] = float((preds[mask] == c).mean())
+        return out
+
+
+@dataclass
+class FederatedData:
+    clients: List[ClientDataset]
+    test_x: np.ndarray
+    test_y: np.ndarray
+    n_labels: int
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.clients)
+
+
+def _split_val(x, y, frac: float, seed: int):
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(len(x))
+    n_val = max(1, int(len(x) * frac))
+    v, t = idx[:n_val], idx[n_val:]
+    if len(t) == 0:
+        t = v
+    return x[t], y[t], x[v], y[v]
+
+
+def make_federated_data(
+    task: str,
+    n_clients: int,
+    *,
+    alpha: float = 0.5,
+    sigma: float = 1.0,
+    roles_per_client: int = 2,
+    seed: int = 0,
+    n_total: int = 4000,
+) -> FederatedData:
+    """Build one of the paper's three task families (DESIGN §4).
+
+    task ∈ {"cv", "nlp", "rwd"}; ``alpha`` is the Dirichlet x for cv,
+    ``sigma`` the log-normal σ for rwd, ``roles_per_client`` for nlp.
+    Validation split: 8:2 (cv/rwd), 9:1 (nlp) per Appendix D.1.
+    """
+    if task == "cv":
+        # one draw for train+test so class templates are shared (the test
+        # set is held-out SAMPLES, not a different distribution)
+        n_test = max(200, n_total // 10)
+        x_all, y_all = syn.synth_cifar10(n=n_total + n_test, seed=seed)
+        x, y = x_all[:n_total], y_all[:n_total]
+        test_x, test_y = x_all[n_total:], y_all[n_total:]
+        parts = syn.dirichlet_partition(y, n_clients, alpha, seed=seed)
+        clients = []
+        for ix in parts:
+            tx, ty, vx, vy = _split_val(x[ix], y[ix], 0.2, seed)
+            clients.append(ClientDataset(tx, ty, vx, vy))
+        return FederatedData(clients, test_x, test_y, 10)
+
+    if task == "nlp":
+        n_roles = n_clients * roles_per_client
+        by_role = syn.synth_shakespeare(n_roles=n_roles, seed=seed)
+        assign = syn.role_partition(n_roles, n_clients, roles_per_client, seed=seed)
+        # test set = held-out windows from every role (same distributions,
+        # unseen text), like the paper's held-out Shakespeare lines
+        rng = np.random.default_rng(seed + 1)
+        test_xs, test_ys = [], []
+        train_pool = {}
+        for r, (xs, ys) in by_role.items():
+            n_hold = max(1, len(xs) // 10)
+            idx = rng.permutation(len(xs))
+            test_xs.append(xs[idx[:n_hold]])
+            test_ys.append(ys[idx[:n_hold]])
+            train_pool[r] = (xs[idx[n_hold:]], ys[idx[n_hold:]])
+        clients = []
+        for role_ids in assign:
+            xs = np.concatenate([train_pool[r][0] for r in role_ids])
+            ys = np.concatenate([train_pool[r][1] for r in role_ids])
+            tx, ty, vx, vy = _split_val(xs, ys, 0.1, seed)
+            clients.append(ClientDataset(tx, ty, vx, vy))
+        test_x = np.concatenate(test_xs)
+        test_y = np.concatenate(test_ys)
+        return FederatedData(clients, test_x, test_y, 80)
+
+    if task == "rwd":
+        n_test = max(200, n_total // 10)
+        x_all, y_all, g_all = syn.synth_adult(n=n_total + n_test, seed=seed)
+        x, y, group = x_all[:n_total], y_all[:n_total], g_all[:n_total]
+        test_x, test_y = x_all[n_total:], y_all[n_total:]
+        # group-keyed log-normal sizes: clients are homogeneous in `group`
+        clients = []
+        for g in (0, 1):
+            gx, gy = x[group == g], y[group == g]
+            parts = syn.lognormal_partition(len(gx), n_clients // 2, sigma, seed=seed + g)
+            for ix in parts:
+                tx, ty, vx, vy = _split_val(gx[ix], gy[ix], 0.2, seed)
+                clients.append(ClientDataset(tx, ty, vx, vy))
+        return FederatedData(clients[:n_clients], test_x, test_y, 2)
+
+    raise ValueError(f"unknown task {task!r}")

@@ -1,0 +1,134 @@
+"""Deterministic synthetic datasets mirroring the paper's three tasks.
+
+The container is offline, so CIFAR-10 / Shakespeare / UCI-Adult are
+replaced with structure-preserving synthetic stand-ins (DESIGN §4).  The
+*partition laws* are the paper's: Hetero-Dirichlet over labels for CV
+(Eq. 13), non-overlapping roles for NLP, Log-N(0,σ²) client sizes for RWD.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# datasets
+# --------------------------------------------------------------------------
+def synth_cifar10(
+    n: int = 6000, n_classes: int = 10, hw: int = 16, seed: int = 0
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Class-conditional Gaussian-blob 'images' (hw×hw×3), 10 classes.
+
+    Each class has a fixed random template; samples are template + noise,
+    so the Bayes classifier is nontrivial but learnable by a small CNN.
+    """
+    rng = np.random.default_rng(seed)
+    templates = rng.normal(0, 1, (n_classes, hw, hw, 3)).astype(np.float32)
+    y = rng.integers(0, n_classes, n).astype(np.int32)
+    x = templates[y] + rng.normal(0, 1.5, (n, hw, hw, 3)).astype(np.float32)
+    return x, y
+
+
+def synth_shakespeare(
+    n_roles: int = 60,
+    chars_per_role: int = 2048,
+    vocab: int = 80,
+    seq_len: int = 32,
+    seed: int = 0,
+) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+    """Per-role Markov-chain char streams → next-char prediction windows.
+
+    Returns {role_id: (x[n_seq, seq_len] int32, y[n_seq] int32)}.  Roles use
+    *distinct* transition matrices, so clients holding different roles are
+    genuinely non-IID (paper: roles never overlap across clients).
+    """
+    rng = np.random.default_rng(seed)
+    out: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+    for role in range(n_roles):
+        # sparse-ish row-stochastic transition matrix per role
+        logits = rng.normal(0, 2.0, (vocab, vocab))
+        probs = np.exp(logits) / np.exp(logits).sum(-1, keepdims=True)
+        stream = np.empty(chars_per_role, np.int32)
+        stream[0] = rng.integers(vocab)
+        for t in range(1, chars_per_role):
+            stream[t] = rng.choice(vocab, p=probs[stream[t - 1]])
+        n_seq = (chars_per_role - 1) // seq_len
+        x = np.stack([stream[i * seq_len : i * seq_len + seq_len] for i in range(n_seq)])
+        y = np.asarray([stream[i * seq_len + seq_len] if i * seq_len + seq_len < chars_per_role else stream[-1] for i in range(n_seq)], np.int32)
+        out[role] = (x.astype(np.int32), y)
+    return out
+
+
+def synth_adult(
+    n: int = 8000, n_features: int = 14, seed: int = 0
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Tabular records with planted logistic ground truth + a binary
+    sensitive attribute (gender/ethnicity analogue) correlated with x.
+
+    Returns (x[n, d] f32, y[n] int32 ∈{0,1}, group[n] int32 ∈{0,1}).
+    """
+    rng = np.random.default_rng(seed)
+    group = rng.integers(0, 2, n).astype(np.int32)
+    x = rng.normal(0, 1, (n, n_features)).astype(np.float32)
+    x[:, 0] += 0.8 * group  # group shifts one covariate → heterogeneity
+    w_true = rng.normal(0, 1, n_features)
+    logit = x @ w_true + 0.5 * group - 0.2
+    p = 1 / (1 + np.exp(-logit))
+    y = (rng.uniform(size=n) < p).astype(np.int32)
+    return x, y, group
+
+
+# --------------------------------------------------------------------------
+# partitioners
+# --------------------------------------------------------------------------
+def dirichlet_partition(
+    labels: np.ndarray, n_clients: int, alpha: float, seed: int = 0, min_size: int = 8
+) -> List[np.ndarray]:
+    """Hetero-Dirichlet label partition (paper Eq. 13): for each class,
+    draw client proportions ~ Dir(alpha) and split that class's indices.
+    Smaller alpha ⇒ more skew (paper uses x ∈ {0.1, 0.5, 1})."""
+    rng = np.random.default_rng(seed)
+    n_classes = int(labels.max()) + 1
+    while True:
+        idx_by_client: List[List[int]] = [[] for _ in range(n_clients)]
+        for c in range(n_classes):
+            idx = np.flatnonzero(labels == c)
+            rng.shuffle(idx)
+            props = rng.dirichlet([alpha] * n_clients)
+            cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+            for cid, part in enumerate(np.split(idx, cuts)):
+                idx_by_client[cid].extend(part.tolist())
+        sizes = [len(ix) for ix in idx_by_client]
+        if min(sizes) >= min_size:
+            return [np.asarray(sorted(ix), np.int64) for ix in idx_by_client]
+        seed += 1
+        rng = np.random.default_rng(seed)
+
+
+def lognormal_partition(
+    n_items: int, n_clients: int, sigma: float, seed: int = 0, min_size: int = 8
+) -> List[np.ndarray]:
+    """Client sizes ~ Log-N(0, σ²), normalized to n_items (RWD task)."""
+    rng = np.random.default_rng(seed)
+    sizes = rng.lognormal(0.0, sigma, n_clients)
+    sizes = np.maximum((sizes / sizes.sum() * n_items).astype(int), min_size)
+    idx = rng.permutation(n_items)
+    out, pos = [], 0
+    for s in sizes:
+        out.append(np.sort(idx[pos : pos + s]).astype(np.int64))
+        pos = min(pos + s, n_items - min_size)
+    return out
+
+
+def role_partition(n_roles: int, n_clients: int, roles_per_client: int, seed: int = 0):
+    """Assign non-overlapping role ids to clients (NLP task; R = N·roles)."""
+    rng = np.random.default_rng(seed)
+    roles = rng.permutation(n_roles)
+    need = n_clients * roles_per_client
+    if need > n_roles:
+        # wrap around deterministically — still disjoint within a client
+        roles = np.concatenate([roles, rng.permutation(n_roles)])[:need]
+    else:
+        roles = roles[:need]
+    return [roles[i * roles_per_client : (i + 1) * roles_per_client].tolist() for i in range(n_clients)]

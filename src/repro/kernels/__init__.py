@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the FedQS hot spots (DESIGN §7):
+
+* ``weighted_agg``      — Mod-3 K-way weighted parameter reduction;
+* ``similarity``        — Mod-1 fused <a,b>/|a|^2/|b|^2 one-pass statistics;
+* ``window_attention``  — sliding-window decode attention (long_500k path).
+
+Validated against ``ref.py`` oracles with ``interpret=True`` on CPU.
+"""
+from .ops import (
+    cosine_op,
+    similarity_stats_op,
+    weighted_agg_op,
+    window_decode_attention_op,
+)
+
+__all__ = [
+    "cosine_op",
+    "similarity_stats_op",
+    "weighted_agg_op",
+    "window_decode_attention_op",
+]

@@ -1,0 +1,46 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On a real TPU these dispatch to the compiled kernels; on CPU (this
+container) they run the kernel bodies under ``interpret=True`` so the
+exact same code path is validated.  Set ``REPRO_KERNEL_MODE=ref`` to force
+the pure-jnp oracles (used by A/B benchmarking).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .similarity import cosine_from_stats, fused_similarity_stats
+from .weighted_agg import weighted_agg
+from .window_attention import window_decode_attention
+
+_ON_TPU = jax.default_backend() == "tpu"
+_FORCE_REF = os.environ.get("REPRO_KERNEL_MODE", "") == "ref"
+_INTERPRET = not _ON_TPU
+
+
+def weighted_agg_op(x, w):
+    if _FORCE_REF:
+        return _ref.weighted_agg_ref(x, w)
+    return weighted_agg(x, w, interpret=_INTERPRET)
+
+
+def similarity_stats_op(a, b):
+    if _FORCE_REF:
+        return _ref.fused_similarity_stats_ref(a, b)
+    return fused_similarity_stats(a, b, interpret=_INTERPRET)
+
+
+def cosine_op(a, b):
+    if _FORCE_REF:
+        return _ref.cosine_from_stats_ref(a, b)
+    return cosine_from_stats(a, b, interpret=_INTERPRET)
+
+
+def window_decode_attention_op(q, k, v, valid_len):
+    if _FORCE_REF:
+        return _ref.window_decode_attention_ref(q, k, v, valid_len)
+    return window_decode_attention(q, k, v, valid_len, interpret=_INTERPRET)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets for tests)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def weighted_agg_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x [K,D], w [K] → Σ_k w[k]·x[k]."""
+    return jnp.einsum("k,kd->d", w.astype(jnp.float32), x.astype(jnp.float32))
+
+
+def fused_similarity_stats_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    return jnp.stack([jnp.vdot(a, b), jnp.vdot(a, a), jnp.vdot(b, b)])
+
+
+def cosine_from_stats_ref(a, b):
+    s = fused_similarity_stats_ref(a, b)
+    return s[0] / jnp.maximum(jnp.sqrt(s[1] * s[2]), 1e-12)
+
+
+def window_decode_attention_ref(q, k, v, valid_len):
+    """q [B,H,dh]; k,v [B,W,KV,dh]; masked softmax over live slots."""
+    B, H, dh = q.shape
+    W, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, dh).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bwkd->bkgw", qg, k.astype(jnp.float32)) / math.sqrt(dh)
+    mask = jnp.arange(W)[None, None, None, :] < valid_len
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, -1)
+    out = jnp.einsum("bkgw,bwkd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, dh).astype(q.dtype)

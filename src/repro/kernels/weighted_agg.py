@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: Mod-3 weighted aggregation  out[d] = Σ_k w[k]·x[k,d].
+
+The server's K-buffer aggregation is a K-way weighted reduction over
+model-dimension vectors — purely memory-bound (arithmetic intensity
+≈ 2·K FLOPs per 4·K bytes read).  The kernel tiles the model dimension D
+into VMEM-resident blocks so every parameter byte is read exactly once and
+the weighted reduction happens on-chip, vs. the naive jnp form which
+XLA may lower as K separate scale+add passes over HBM.
+
+Tiling: grid over D/BLOCK_D; per step the (K, BLOCK_D) tile of stacked
+updates sits in VMEM together with the (K, 1) weight column; the matvec
+w^T·X runs on the MXU (K and BLOCK_D are 8/128-aligned by padding).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_D = 4096  # f32: K×4096×4B ≤ 16·4096·4 = 256 KiB per tile for K=16
+
+
+def _weighted_agg_kernel(w_ref, x_ref, o_ref):
+    # w_ref [K, 1], x_ref [K, BLOCK_D], o_ref [1, BLOCK_D]
+    o_ref[...] = jnp.dot(
+        w_ref[...].T, x_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def weighted_agg(x: jax.Array, w: jax.Array, *, block_d: int = BLOCK_D,
+                 interpret: bool = False) -> jax.Array:
+    """x [K, D] f32, w [K] f32 → [D] f32 = Σ_k w[k]·x[k]."""
+    K, D = x.shape
+    pad = (-D) % block_d
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    Dp = D + pad
+    out = pl.pallas_call(
+        _weighted_agg_kernel,
+        grid=(Dp // block_d,),
+        in_specs=[
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+            pl.BlockSpec((K, block_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, Dp), jnp.float32),
+        interpret=interpret,
+    )(w.astype(jnp.float32)[:, None], x.astype(jnp.float32))
+    return out[0, :D]

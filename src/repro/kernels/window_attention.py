@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: sliding-window decode attention.
+
+The hot op of the ``long_500k`` / gemma3-local decode path: one query token
+per sequence attends to a ring-buffered window of W cached KV positions.
+Memory-bound: per (batch, kv-head) we stream W·dh keys + W·dh values once
+through VMEM, compute the [G, W] score tile (MXU), softmax it in-register,
+and produce [G, dh].  No [S, S] tensor, no HBM round-trip for scores.
+
+Grid: (B, KV).  Blocks: q (1, 1, G, dh); k/v (1, W, 1, dh); an additive
+mask (1, W) carries ring-validity (0 for live slots, −inf for empty) —
+precomputed by the wrapper so the kernel stays scalar-free.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+
+
+def _window_attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref):
+    # q [1,1,G,dh]; k,v [1,W,1,dh]; mask [1,W]; o [1,1,G,dh]
+    q = q_ref[0, 0].astype(jnp.float32)                  # [G, dh]
+    k = k_ref[0, :, 0].astype(jnp.float32)               # [W, dh]
+    v = v_ref[0, :, 0].astype(jnp.float32)               # [W, dh]
+    dh = q.shape[-1]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) / math.sqrt(dh)
+    s = s + mask_ref[...]                                # [G, W] + [1, W]
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(p, v, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def window_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                            valid_len: jax.Array, *, interpret: bool = False):
+    """q [B,H,dh]; k,v [B,W,KV,dh] ring caches; valid_len scalar i32 =
+    number of live slots.  Returns [B,H,dh]."""
+    B, H, dh = q.shape
+    W, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, dh)
+    mask = jnp.where(jnp.arange(W)[None, :] < valid_len, 0.0, NEG_INF)
+    mask = jnp.broadcast_to(mask.astype(jnp.float32), (B, W))
+    out = pl.pallas_call(
+        _window_attn_kernel,
+        grid=(B, KV),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, W, 1, dh), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, W, 1, dh), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, W), lambda b, h: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, dh), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, dh), q.dtype),
+        interpret=interpret,
+    )(qg, k, v, mask)
+    return out.reshape(B, H, dh)

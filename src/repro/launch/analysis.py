@@ -1,0 +1,300 @@
+"""Compiled-artifact analysis: cost, memory, and collective-byte parsing
+for the roofline report (system prompt §ROOFLINE).
+
+Two accounting paths:
+
+* ``cost_summary`` — XLA's HloCostAnalysis numbers, recorded for
+  reference.  CAVEAT (measured, see EXPERIMENTS §Dry-run): XLA counts
+  while-loop *bodies once*, so for scan-based stacks (all ten archs) it
+  undercounts by the layer-scan trip count.
+
+* ``analyze_hlo`` — our structural analyzer: parses the optimized HLO,
+  recovers each while loop's trip count from its condition computation,
+  propagates multipliers through the computation call graph
+  (while bodies ×trip, fusions ×1), and sums
+
+    - dot FLOPs: 2 · |result| · |contracting dims| per dot × multiplier
+      (matmuls dominate every arch here; elementwise flops are ignored),
+    - collective bytes per kind × multiplier,
+    - a dot-traffic HBM estimate (operand+result bytes of dots +
+      collectives + entry I/O) as a *lower bound* on memory traffic.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+# TPU v5e hardware constants (system prompt)
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-gather.1 = bf16[16,448,8192]{...} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s("
+    + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+# ---------------------------------------------------------------------------
+# structural HLO analyzer (trip-count-aware)
+# ---------------------------------------------------------------------------
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_COND_ATTR = re.compile(r"condition=%?([\w\.\-]+)")
+_BODY_ATTR = re.compile(r"body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply|branch_computations)=\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_INSTR_RE = re.compile(r"%([\w\.\-]+)\s*=\s*([a-z0-9]+)\[([0-9,]*)\]")
+_HDR_PARAM_RE = re.compile(r"([\w\.\-]+):\s*([a-z0-9]+)\[([0-9,]*)\]")
+_DOT_LINE = re.compile(r"=\s*([a-z0-9]+)\[([0-9,]*)\][^\n]*?\bdot\(([^)]*)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _dims(s: str) -> List[int]:
+    return [int(d) for d in s.split(",") if d]
+
+
+def _split_computations(hlo: str) -> Tuple[Dict[str, str], Optional[str]]:
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR.match(line.strip())
+        if m and ("{" in line):
+            cur = m.group(1)
+            comps[cur] = [line]  # keep header: it declares parameter shapes
+            if line.strip().startswith("ENTRY"):
+                entry = cur
+        elif cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return {k: "\n".join(v) for k, v in comps.items()}, entry
+
+
+def _trip_count(cond_text: str) -> int:
+    consts = [int(c) for c in _CONST_RE.findall(cond_text)]
+    return max(consts) if consts else 1
+
+
+def analyze_hlo(hlo: str) -> Dict[str, Any]:
+    comps, entry = _split_computations(hlo)
+    if entry is None:  # fall back: treat whole text as one computation
+        comps = {"__entry__": hlo}
+        entry = "__entry__"
+
+    # collect call-graph edges (caller → callee, ×factor), then solve the
+    # multiplier system by fixed-point iteration (the call graph is a DAG,
+    # so this converges in ≤ depth passes)
+    edges: List[Tuple[str, str, float]] = []
+    for name, text in comps.items():
+        for line in text.splitlines():
+            if " while(" in line:
+                cm_ = _COND_ATTR.search(line)
+                bm_ = _BODY_ATTR.search(line)
+                if not (cm_ and bm_):
+                    continue
+                cond, body = cm_.group(1), bm_.group(1)
+                trip = float(_trip_count(comps.get(cond, "")))
+                edges.append((name, body, trip))
+                edges.append((name, cond, trip))
+            else:
+                cm = _CALL_RE.search(line)
+                if cm:
+                    for target in re.split(r",\s*%?", cm.group(1)):
+                        target = target.strip().lstrip("%")
+                        if target and target in comps and target != name:
+                            edges.append((name, target, 1.0))
+
+    mult: Dict[str, float] = {entry: 1.0}
+    for _ in range(64):
+        new: Dict[str, float] = {}
+        for caller, callee, f in edges:
+            base = 1.0 if caller == entry else mult.get(caller, 0.0)
+            new[callee] = new.get(callee, 0.0) + base * f
+        new[entry] = 1.0
+        if all(abs(new.get(k, 0.0) - mult.get(k, 0.0)) < 1e-9
+               for k in set(new) | set(mult)):
+            mult = new
+            break
+        mult = new
+
+    total_flops = 0.0
+    dot_bytes = 0.0
+    per_kind: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for name, text in comps.items():
+        m_cur = mult.get(name, 1.0)
+        if m_cur == 0.0:
+            m_cur = 1.0
+        # local symbol table: instruction/parameter name → (dtype, dims)
+        sym: Dict[str, Tuple[str, List[int]]] = {}
+        lines = text.splitlines()
+        if lines:
+            for pm in _HDR_PARAM_RE.finditer(lines[0]):
+                sym[pm.group(1)] = (pm.group(2), _dims(pm.group(3)))
+        for line in lines:
+            im = _INSTR_RE.search(line)
+            if im:
+                sym[im.group(1)] = (im.group(2), _dims(im.group(3)))
+        for line in lines:
+            dm = _DOT_LINE.search(line)
+            if dm:
+                out_dt, out_dims = dm.group(1), _dims(dm.group(2))
+
+                def operand_info(piece):
+                    # operands print either as "%name" or "f32[dims]{...} %name"
+                    sm = re.search(r"\b([a-z0-9]+)\[([0-9,]*)\]", piece)
+                    if sm:
+                        return sm.group(1), _dims(sm.group(2))
+                    nm = re.search(r"%([\w\.\-]+)", piece)
+                    return sym.get(nm.group(1)) if nm else None
+
+                pieces = dm.group(3).split(",")
+                # tuple-free dot( a , b ) — but inline-typed operands also
+                # contain commas inside [dims]; re-join on shape boundaries
+                ops_txt = dm.group(3)
+                opm = re.findall(
+                    r"(?:[a-z0-9]+\[[0-9,]*\](?:\{[0-9,]*\})?\s*)?%[\w\.\-]+",
+                    ops_txt)
+                infos = [operand_info(p) for p in opm[:2]]
+                lhs = infos[0] if infos else None
+                contract = 1
+                cm = _CONTRACT_RE.search(line)
+                if cm and lhs:
+                    for idx in _dims(cm.group(1)):
+                        if idx < len(lhs[1]):
+                            contract *= lhs[1][idx]
+                flops = 2.0 * math.prod(out_dims or [1]) * contract
+                total_flops += flops * m_cur
+                b = _shape_bytes(out_dt, dm.group(2))
+                for info in infos:
+                    if info:
+                        dt, dd = info
+                        b += _shape_bytes(dt, ",".join(map(str, dd)))
+                dot_bytes += b * m_cur
+            for kind in _COLLECTIVES:
+                marker = f" {kind}("
+                if marker in line and f"{kind}-done" not in line:
+                    left = line.split(marker, 1)[0]
+                    b = sum(_shape_bytes(dt, dd) for dt, dd in
+                            re.findall(r"\b([a-z0-9]+)\[([0-9,]*)\]", left))
+                    per_kind[kind] += b * m_cur
+                    counts[kind] += 1
+                    break
+    # debug visibility: the while-trip table and the heaviest collectives
+    trips = []
+    for caller, callee, f in edges:
+        if f != 1.0:
+            trips.append({"body": callee, "trip": f,
+                          "mult": mult.get(callee, 0.0)})
+    top_coll = []
+    for name, text in comps.items():
+        m_cur = mult.get(name, 1.0) or 1.0
+        for line in text.splitlines():
+            for kind in _COLLECTIVES:
+                if f" {kind}(" in line and f"{kind}-done" not in line:
+                    left = line.split(f" {kind}(", 1)[0]
+                    b = sum(_shape_bytes(dt, dd) for dt, dd in
+                            re.findall(r"\b([a-z0-9]+)\[([0-9,]*)\]", left))
+                    top_coll.append({"kind": kind, "bytes": b, "mult": m_cur,
+                                     "total": b * m_cur, "comp": name,
+                                     "shape": left.strip()[:80]})
+                    break
+    top_coll.sort(key=lambda x: -x["total"])
+    return {
+        "flops": total_flops,
+        "dot_bytes": dot_bytes,
+        "collectives": {"per_kind": per_kind, "counts": counts,
+                        "total": sum(per_kind.values())},
+        "n_computations": len(comps),
+        "while_trips": sorted(trips, key=lambda t: -t["trip"])[:20],
+        "top_collectives": top_coll[:12],
+    }
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum result-shape bytes of every collective in the optimized HLO.
+    (Result size ≈ data moved per participating device for AG/AR; a
+    conservative uniform accounting across collective types.)"""
+    per_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if kind.endswith("-done"):
+            continue
+        per_kind[kind] += _shape_bytes(dtype, dims)
+        counts[kind] += 1
+    total = sum(per_kind.values())
+    return {"per_kind": per_kind, "counts": counts, "total": total}
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+    except Exception:
+        ca = {}
+    ca = ca or {}
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", ca.get("bytes_accessed", 0.0))),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+def memory_summary(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {"available": False}
+    if ma is None:
+        return {"available": False}
+    out = {"available": True}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        try:
+            out[k] = int(getattr(ma, k))
+        except Exception:
+            pass
+    return out
+
+
+def roofline_terms(flops: float, hlo_bytes: float, coll_bytes: float,
+                   n_chips: int) -> Dict[str, float]:
+    """The three roofline terms in seconds.
+
+    cost_analysis and the HLO text both describe the PER-PARTITION program
+    (the SPMD-partitioned module), so flops/bytes/collective-bytes are
+    already per-chip quantities — equivalent to HLO_total/(chips·peak).
+    ``n_chips`` is kept for the record but not divided again.
+    """
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hlo_bytes / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": collective_s, "dominant": dominant}

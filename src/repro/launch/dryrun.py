@@ -1,0 +1,284 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh): build the FedQS round step
+(train shapes) or the prefill/serve step (inference shapes), ``.lower()``
+against ShapeDtypeStruct inputs with production shardings, ``.compile()``,
+and record memory_analysis / cost_analysis / collective bytes into
+``experiments/dryrun/*.json`` for the §Roofline report.
+
+The XLA_FLAGS line above MUST run before any jax import — jax locks the
+device count at first init.  This module is the only place the 512
+placeholder devices exist; tests and benches see the real device count.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, skip_reason, supports_shape
+from repro.core.distributed import (
+    RoundState,
+    input_specs,
+    make_fedqs_round_step,
+    make_prefill_step,
+    make_serve_step,
+)
+from repro.core.types import FedQSHyperParams
+from repro.launch import analysis
+from repro.launch.mesh import (
+    batch_spec,
+    cache_shardings,
+    make_production_mesh,
+    param_shardings,
+    replicated,
+)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def _state_shardings(cfg, mesh, abstract_state: RoundState) -> RoundState:
+    fsdp = cfg.fl_mode == "fsdp"
+    return RoundState(
+        params=param_shardings(cfg, mesh, abstract_state.params, fsdp=fsdp),
+        prev_params=param_shardings(cfg, mesh, abstract_state.prev_params, fsdp=fsdp),
+        lr=replicated(mesh),
+        momentum=replicated(mesh),
+        counts=replicated(mesh),
+        sims=replicated(mesh),
+    )
+
+
+def _batch_shardings(cfg, mesh, batch):
+    spec = batch_spec(mesh, stacked_clients=(cfg.fl_mode == "stacked"))
+    out = {}
+    for k, v in batch.items():
+        s = P(*spec, *([None] * (v.ndim - len(spec))))
+        out[k] = NamedSharding(mesh, s)
+    return out
+
+
+def lower_pair(arch_id: str, shape_name: str, *, multi_pod: bool,
+               n_clients: int = 16, override_cfg=None, donate: bool = True,
+               variant: str = "", client_group_size: int = 1):
+    """Lower + compile one (arch × shape × mesh).  Returns result dict.
+
+    ``variant`` is a comma list of §Perf levers: remat, absorbed,
+    cross_cache (applied as config replacements)."""
+    import dataclasses as _dc
+    cfg = override_cfg or get_config(arch_id)
+    vset = set(v for v in variant.split(",") if v)
+    if "remat" in vset:
+        cfg = _dc.replace(cfg, remat=True)
+    if "absorbed" in vset:
+        cfg = _dc.replace(cfg, mla_absorbed=True)
+    if "cross_cache" in vset:
+        cfg = _dc.replace(cfg, cache_cross_kv=True)
+    if "embshard" in vset:
+        cfg = _dc.replace(cfg, embed_dshard=True)
+    if "rowpar" in vset:
+        cfg = _dc.replace(cfg, row_parallel_out=True)
+    if "moeshard" in vset:
+        cfg = _dc.replace(cfg, moe_data_dispatch=True)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+    hp = FedQSHyperParams()
+    # hierarchical SAFL: each pod contributes a 16-client cohort, so the
+    # stacked client axis doubles on the multi-pod mesh (DESIGN §6)
+    if multi_pod and cfg.fl_mode == "stacked" and shape.mode == "train":
+        n_clients = n_clients * 2
+    specs = input_specs(cfg, shape, n_clients=n_clients)
+
+    t0 = time.perf_counter()
+    if shape.mode == "train":
+        pspecs = None
+        if "pinspec" in vset:  # §Perf: pin grad/velocity/delta shardings
+            pspecs = param_shardings(cfg, mesh, specs["state"].params,
+                                     fsdp=(cfg.fl_mode == "fsdp"))
+        step = make_fedqs_round_step(cfg, hp, strategy="sgd", n_clients=n_clients,
+                                     client_group_size=client_group_size,
+                                     param_pspecs=pspecs)
+        in_sh = (
+            _state_shardings(cfg, mesh, specs["state"]),
+            _batch_shardings(cfg, mesh, specs["batch"]),
+            replicated(mesh),
+            replicated(mesh),
+        )
+        jitted = jax.jit(step, in_shardings=in_sh,
+                         donate_argnums=(0,) if donate else ())
+        with mesh:
+            lowered = jitted.lower(specs["state"], specs["batch"],
+                                   specs["slot_cids"], specs["staleness"])
+    elif shape.mode == "prefill":
+        step = make_prefill_step(cfg, max_seq=shape.seq_len)
+        args = [specs["params"], specs["tokens"]]
+        in_sh = [param_shardings(cfg, mesh, specs["params"], fsdp=False),
+                 NamedSharding(mesh, P("data", None))]
+        if "memory_embeds" in specs:
+            args.append(specs["memory_embeds"])
+            in_sh.append(NamedSharding(mesh, P("data", None, None)))
+        jitted = jax.jit(step, in_shardings=tuple(in_sh))
+        with mesh:
+            lowered = jitted.lower(*args)
+    else:  # decode
+        step = make_serve_step(cfg)
+        tok_spec = P("data") if shape.global_batch % mesh.shape["data"] == 0 else P()
+        args = [specs["params"], specs["cache"], specs["tokens"]]
+        in_sh = [param_shardings(cfg, mesh, specs["params"], fsdp=False),
+                 cache_shardings(cfg, mesh, specs["cache"]),
+                 NamedSharding(mesh, tok_spec)]
+        if "memory_embeds" in specs:
+            args.append(specs["memory_embeds"])
+            mem_spec = (P("data", None, None) if shape.global_batch % mesh.shape["data"] == 0
+                        else P(None, None, None))
+            in_sh.append(NamedSharding(mesh, mem_spec))
+        jitted = jax.jit(step, in_shardings=tuple(in_sh),
+                         donate_argnums=(1,) if donate else ())
+        with mesh:
+            lowered = jitted.lower(*args)
+    t_lower = time.perf_counter() - t0
+    if globals().get("_LOWER_ONLY"):
+        return ({"arch": arch_id, "shape": shape_name, "status": "lowered",
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "lower_s": round(t_lower, 2)}, None, lowered)
+
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    hlo = compiled.as_text()
+    # trip-count-aware structural analysis (XLA's HloCostAnalysis counts
+    # while bodies ONCE — measured; see analysis.py docstring)
+    struct = analysis.analyze_hlo(hlo)
+    cost = analysis.cost_summary(compiled)       # raw XLA numbers, reference
+    mem = analysis.memory_summary(compiled)
+    io_bytes = mem.get("argument_size_in_bytes", 0) + mem.get("output_size_in_bytes", 0)
+    hbm_bytes = struct["dot_bytes"] + struct["collectives"]["total"] + io_bytes
+    terms = analysis.roofline_terms(struct["flops"], hbm_bytes,
+                                    struct["collectives"]["total"], n_chips)
+    n_params = cfg.param_count()
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode" else 1)
+    model_flops = (6 * n_active * tokens if shape.mode == "train"
+                   else 2 * n_active * tokens)
+    flops_per_chip = struct["flops"]
+    result = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": n_chips,
+        "variant": variant, "client_group_size": client_group_size,
+        "mode": shape.mode, "fl_mode": cfg.fl_mode,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "cost": cost, "memory": mem,
+        "hlo_struct": {"flops": struct["flops"], "dot_bytes": struct["dot_bytes"],
+                       "hbm_bytes_est": hbm_bytes,
+                       "n_computations": struct["n_computations"],
+                       "while_trips": struct.get("while_trips", []),
+                       "top_collectives": struct.get("top_collectives", [])},
+        "collectives": struct["collectives"], "roofline": terms,
+        "n_params": n_params, "n_active_params": n_active,
+        "model_flops": model_flops,
+        # MODEL_FLOPS is global; analyzer flops are per-chip
+        "useful_flops_ratio": ((model_flops / n_chips) / flops_per_chip)
+        if flops_per_chip else None,
+        "status": "ok",
+    }
+    return result, compiled, lowered
+
+
+def run_one(arch_id, shape_name, multi_pod, out_dir=OUT_DIR, tag="",
+            skip_existing=False, variant="", client_group_size=1):
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    fname = os.path.join(out_dir, f"{arch_id}__{shape_name}__{mesh_name}{tag}.json")
+    if skip_existing and os.path.exists(fname):
+        with open(fname) as f:
+            rec = json.load(f)
+        if rec.get("status") in ("ok", "skipped"):
+            print(f"[cached] {arch_id} × {shape_name} × {mesh_name}")
+            return rec
+    if not supports_shape(arch_id, shape_name):
+        rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": skip_reason(arch_id, shape_name)}
+        with open(fname, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[skip] {arch_id} × {shape_name}: {rec['reason']}")
+        return rec
+    try:
+        result, compiled, _ = lower_pair(
+            arch_id, shape_name, multi_pod=multi_pod, variant=variant,
+            client_group_size=client_group_size)
+        if result.get("status") == "lowered":
+            print(f"[lowered] {arch_id} × {shape_name} × {mesh_name} "
+                  f"({result['lower_s']}s)")
+            with open(fname + ".lowered", "w") as f:
+                json.dump(result, f)
+            return result
+        print(f"[ok]   {arch_id} × {shape_name} × {mesh_name}: "
+              f"compile={result['compile_s']}s flops={result['cost']['flops']:.3e} "
+              f"coll={result['collectives']['total']:.3e}B "
+              f"dominant={result['roofline']['dominant']}")
+        print("       memory_analysis:", result["memory"])
+        print("       cost_analysis: flops=%.4g bytes=%.4g" %
+              (result["cost"]["flops"], result["cost"]["bytes_accessed"]))
+    except Exception as e:
+        result = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+                  "status": "error", "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-2000:]}
+        print(f"[FAIL] {arch_id} × {shape_name} × {mesh_name}: {result['error']}")
+    with open(fname, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS) + [None])
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2×16×16 512-chip mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--lower-only", action="store_true",
+                    help="stop after .lower() (fast sharding sanity check)")
+    ap.add_argument("--variant", default="",
+                    help="comma list of §Perf levers: remat,absorbed,cross_cache")
+    ap.add_argument("--group-size", type=int, default=1,
+                    help="fsdp client_group_size (§Perf)")
+    ap.add_argument("--tag", default="", help="suffix for output filenames")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+    global _LOWER_ONLY
+    _LOWER_ONLY = args.lower_only
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_one(arch, shape, mp, out_dir=args.out, tag=args.tag,
+                              skip_existing=args.skip_existing,
+                              variant=args.variant,
+                              client_group_size=args.group_size)
+                n_fail += rec.get("status") == "error"
+    print(f"\ndry-run complete; {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

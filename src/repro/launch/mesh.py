@@ -1,0 +1,172 @@
+"""Production mesh + sharding policy (DESIGN §6).
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model).
+
+Axis semantics:
+* data  — the SAFL K-buffer: one buffered client update per data shard
+          (stacked mode) or the FSDP weight shard + microbatch shard
+          (fsdp mode for ≥100B archs);
+* model — tensor parallel (heads / ffn / vocab / expert-ffn);
+* pod   — hierarchical SAFL cohorts; cross-pod aggregation rides this
+          axis once per round (the DCI collective the multi-pod dry-run
+          must prove out).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_data: Optional[int] = None, n_model: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (CPU tests / examples)."""
+    n = len(jax.devices())
+    n_data = n_data or max(1, n // n_model)
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _div(n: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    size = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        size *= _axis_size(mesh, a)
+    return n % size == 0 and n >= size
+
+
+def _fsdp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def param_spec(cfg, mesh: Mesh, path: str, shape, *, fsdp: bool) -> P:
+    """Sharding rule for one parameter leaf.
+
+    - embeddings / lm_head: vocab dim over 'model' (falls back to
+      replication when the vocab doesn't divide);
+    - expert tensors [.., E, d_in, d_out]: expert dim over the fsdp axes
+      (expert parallelism), d_out over 'model';
+    - generic matrices [.., d_in, d_out]: d_out over 'model'; d_in
+      additionally over the fsdp axes in fsdp mode (2-axis FSDP+TP);
+    - vectors / scan-stacked leading dims: replicated.
+    """
+    nd = len(shape)
+    fa = _fsdp_axes(mesh)
+    if "embed" in path and nd == 2:
+        if getattr(cfg, "embed_dshard", False):
+            # §Perf: shard the table on d_model — token gathers become
+            # shard-local (no per-lookup all-gather of the whole table)
+            return P(None, "model" if _div(shape[1], mesh, "model") else None)
+        return P("model" if _div(shape[0], mesh, "model") else None, None)
+    if "lm_head" in path and nd == 2:
+        return P(None, "model" if _div(shape[1], mesh, "model") else None)
+    row_par = getattr(cfg, "row_parallel_out", False) and (
+        path.endswith("wo/w") or path.endswith("/wo"))
+    if cfg.n_experts > 0 and nd >= 3 and cfg.n_experts in shape:
+        e_dim = shape.index(cfg.n_experts)
+        spec: list = [None] * nd
+        if _div(cfg.n_experts, mesh, fa):
+            spec[e_dim] = fa if len(fa) > 1 else fa[0]
+        elif _div(cfg.n_experts, mesh, "data"):
+            spec[e_dim] = "data"
+        if row_par and nd - 2 != e_dim and _div(shape[-2], mesh, "model"):
+            spec[-2] = "model"       # §Perf: row-parallel expert down-proj
+        elif nd - 1 != e_dim and _div(shape[-1], mesh, "model"):
+            spec[-1] = "model"
+        return P(*spec)
+    if nd >= 2 and shape[-1] >= 128:
+        spec = [None] * nd
+        if row_par and shape[-2] >= 128 and _div(shape[-2], mesh, "model"):
+            # §Perf: Megatron pairing — out-projections shard the INPUT dim
+            # so the preceding column-parallel activation is consumed
+            # shard-local and only the [.., d_model] output is all-reduced
+            spec[-2] = "model"
+            return P(*spec)
+        if _div(shape[-1], mesh, "model"):
+            spec[-1] = "model"
+        if fsdp and shape[-2] >= 128:
+            if _div(shape[-2], mesh, fa):
+                spec[-2] = fa if len(fa) > 1 else fa[0]
+            elif _div(shape[-2], mesh, "data"):
+                spec[-2] = "data"
+        return P(*spec)
+    return P()
+
+
+def param_shardings(cfg, mesh: Mesh, abstract, *, fsdp: bool):
+    """NamedSharding pytree for ``abstract_params(cfg)``."""
+
+    def one(path_tuple, leaf):
+        path = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_tuple)
+        return NamedSharding(mesh, param_spec(cfg, mesh, path, tuple(leaf.shape), fsdp=fsdp))
+
+    return jax.tree_util.tree_map_with_path(one, abstract)
+
+
+def stacked_param_shardings(cfg, mesh: Mesh, abstract_stacked):
+    """Client-stacked params/deltas [C, ...]: leading C over the client
+    axes, trailing dims per the (non-fsdp) param policy."""
+    ca = _fsdp_axes(mesh)  # client axis = data (+pod)
+
+    def one(path_tuple, leaf):
+        path = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_tuple)
+        inner = param_spec(cfg, mesh, path, tuple(leaf.shape[1:]), fsdp=False)
+        return NamedSharding(mesh, P(ca if len(ca) > 1 else ca[0], *inner))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_stacked)
+
+
+def batch_spec(mesh: Mesh, stacked_clients: bool) -> P:
+    """tokens [C, b, S] (stacked: C over client axes) or [C, b, S] with b
+    over 'data' (fsdp scan mode)."""
+    ca = _fsdp_axes(mesh)
+    if stacked_clients:
+        return P(ca if len(ca) > 1 else ca[0], None, None)
+    return P(None, "data", None)
+
+
+def cache_shardings(cfg, mesh: Mesh, abstract_cache):
+    """Decode caches: batch dim over 'data' (+'pod'); attention cache
+    sequence dim over 'model' (sequence-sharded KV — flash-decoding style
+    partial-softmax reduction is inserted by GSPMD)."""
+    ba = _fsdp_axes(mesh)
+    b_ax = ba if len(ba) > 1 else ba[0]
+
+    def one(path_tuple, leaf):
+        path = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_tuple)
+        nd = leaf.ndim
+        if "pos" in path or nd == 0:
+            return NamedSharding(mesh, P())
+        scanned = "blocks" in path
+        batch_dim = 1 if scanned else 0
+        spec = [None] * nd
+        if leaf.shape[batch_dim] % (np.prod([mesh.shape[a] for a in ba])) == 0:
+            spec[batch_dim] = b_ax
+        elif leaf.shape[batch_dim] % mesh.shape["data"] == 0:
+            spec[batch_dim] = "data"
+        # ring-buffer seq dim of k/v/latent caches → 'model'
+        if any(k in path for k in ("/k", "/v", "latent")) and nd >= batch_dim + 2:
+            seq_dim = batch_dim + 1
+            if leaf.shape[seq_dim] % mesh.shape["model"] == 0 and leaf.shape[seq_dim] >= mesh.shape["model"]:
+                spec[seq_dim] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_cache)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,126 @@
+"""FedQS training launcher.
+
+Two entry modes:
+
+* ``--simulate`` (default): the full-fidelity SAFL event simulation
+  (repro.core.safl) on one of the paper's task families — this is what
+  reproduces the paper's experiments.
+
+* ``--distributed``: the mesh tensor-program path — runs the jitted
+  FedQS round step (repro.core.distributed) for a reduced architecture on
+  the host devices.  The production 256/512-chip lowering of the same step
+  is exercised by ``repro.launch.dryrun``.
+
+Examples:
+    PYTHONPATH=src python -m repro.launch.train --task rwd --algo fedqs-sgd --rounds 100
+    PYTHONPATH=src python -m repro.launch.train --distributed --arch gemma3-1b --rounds 20
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def run_simulation(args):
+    from repro.checkpoint import save_server_state
+    from repro.core import FedQSHyperParams, SAFLEngine, make_algorithm
+    from repro.data import make_federated_data
+    from repro.models import make_cnn_spec, make_lstm_spec, make_mlp_spec
+
+    hp = FedQSHyperParams(buffer_k=args.buffer_k, eta0=args.lr,
+                          local_epochs=args.local_epochs)
+    data = make_federated_data(args.task, args.clients, alpha=args.alpha,
+                               sigma=args.sigma, seed=args.seed,
+                               n_total=args.n_total)
+    spec = {"cv": make_cnn_spec, "nlp": make_lstm_spec, "rwd": make_mlp_spec}[args.task]()
+    algo = make_algorithm(args.algo, hp)
+    eng = SAFLEngine(data, spec, algo, hp, resource_ratio=args.resource_ratio,
+                     seed=args.seed, eval_every=args.eval_every)
+    print(f"FedQS SAFL simulation: task={args.task} algo={args.algo} "
+          f"N={args.clients} K={hp.buffer_k} ratio=1:{args.resource_ratio:.0f}")
+    res = eng.run(args.rounds)
+    for m in res.metrics[:: max(1, len(res.metrics) // 20)]:
+        print(f"  round {m.round:4d}  t={m.virtual_time:8.1f}  "
+              f"loss={m.loss:.4f}  acc={m.accuracy:.4f}  stale={m.n_stale}")
+    print(f"best_acc={res.best_accuracy():.4f} "
+          f"final_acc={res.final_accuracy():.4f} "
+          f"oscillations={res.oscillations()} wall={res.wall_seconds:.1f}s")
+    if args.ckpt:
+        save_server_state(args.ckpt, eng)
+        print("checkpoint →", args.ckpt)
+    return res
+
+
+def run_distributed(args):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_reduced
+    from repro.core.distributed import RoundState, make_fedqs_round_step
+    from repro.core.types import FedQSHyperParams
+
+    cfg = get_reduced(args.arch)
+    hp = FedQSHyperParams(local_epochs=args.local_epochs)
+    C, b, S = args.dist_clients, 2, 32
+    key = jax.random.PRNGKey(args.seed)
+    from repro.models import transformer as T
+
+    params = T.init_params(cfg, key)
+    state = RoundState(
+        params=params,
+        prev_params=params,
+        lr=jnp.full((C,), hp.eta0 / 10),
+        momentum=jnp.full((C,), hp.m0),
+        counts=jnp.zeros((args.clients,), jnp.int32),
+        sims=jnp.zeros((args.clients,), jnp.float32),
+    )
+    step = jax.jit(make_fedqs_round_step(cfg, hp, strategy=args.strategy,
+                                         n_clients=C, total_clients=args.clients))
+    print(f"distributed FedQS round-step loop: arch={args.arch}(reduced) "
+          f"C={C} strategy={args.strategy}")
+    for r in range(args.rounds):
+        key, k1, k2 = jax.random.split(key, 3)
+        tokens = jax.random.randint(k1, (C, b, S), 0, cfg.vocab)
+        batch = {"tokens": tokens, "targets": tokens}
+        if cfg.frontend != "none":
+            batch["memory_embeds"] = jax.random.normal(
+                k2, (C, b, cfg.n_frontend_tokens, cfg.d_model))
+        cids = jax.random.randint(k2, (C,), 0, args.clients)
+        stale = jax.random.uniform(k1, (C,)) * 2
+        state, metrics = step(state, batch, cids, stale)
+        if r % max(1, args.rounds // 10) == 0:
+            print(f"  round {r:3d}  loss={float(metrics['loss']):.4f}  "
+                  f"mean_sim={float(metrics['mean_similarity']):.3f}")
+    print("done")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", default="rwd", choices=["cv", "nlp", "rwd"])
+    ap.add_argument("--algo", default="fedqs-sgd")
+    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--clients", type=int, default=100)
+    ap.add_argument("--buffer-k", type=int, default=10)
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--alpha", type=float, default=0.5)
+    ap.add_argument("--sigma", type=float, default=1.0)
+    ap.add_argument("--local-epochs", type=int, default=2)
+    ap.add_argument("--resource-ratio", type=float, default=50.0)
+    ap.add_argument("--eval-every", type=int, default=1)
+    ap.add_argument("--n-total", type=int, default=4000)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--strategy", default="sgd", choices=["sgd", "avg"])
+    ap.add_argument("--dist-clients", type=int, default=4)
+    args = ap.parse_args()
+    if args.distributed:
+        run_distributed(args)
+    else:
+        run_simulation(args)
+
+
+if __name__ == "__main__":
+    main()

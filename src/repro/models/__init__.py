@@ -1,0 +1,3 @@
+from .small import make_cnn_spec, make_lstm_spec, make_mlp_spec
+
+__all__ = ["make_cnn_spec", "make_lstm_spec", "make_mlp_spec"]

@@ -1,0 +1,587 @@
+"""Layer primitives for the assigned-architecture zoo.
+
+Pure functional (init/apply) JAX.  Covers: RMSNorm, RoPE, GQA attention
+(full-causal chunked, sliding-window block-banded, cross, decode), MLA
+(DeepSeek-V3 latent attention), SwiGLU FFN, capacity-based MoE, Mamba
+selective-SSM block (Jamba), and RWKV6 data-dependent-decay block.
+
+Attention is *memory-bounded by construction*: training/prefill use an
+online-softmax scan over KV chunks (flash-style in pure JAX, DESIGN §3) so
+no [T, S] score tensor ever materializes — this is what keeps the 32k
+prefill dry-run's memory_analysis sane and is also the jnp oracle for the
+Pallas window-attention kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+DTYPE = jnp.bfloat16
+NEG_INF = -1e9
+
+
+# --------------------------------------------------------------------------
+# basics
+# --------------------------------------------------------------------------
+def dense_init(key, n_in, n_out, bias=False, dtype=DTYPE):
+    p = {"w": (jax.random.normal(key, (n_in, n_out), jnp.float32) / math.sqrt(n_in)).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((n_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d, dtype=DTYPE):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 1e4):
+    """Rotary embedding.  x [..., T, H, dh], positions [..., T]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (math.log(theta) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # [..., T, 1, half]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention cores
+# --------------------------------------------------------------------------
+def _gqa_scores(q, k):
+    """q [B,T,H,dh], k [B,S,KV,dh] → scores [B,KV,G,T,S] with H=KV·G."""
+    B, T, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, T, KV, G, dh)
+    return jnp.einsum("btkgd,bskd->bkgts", qg, k) / math.sqrt(dh)
+
+
+def causal_attention(q, k, v, *, kv_chunk: int = 1024, q_offset: int = 0):
+    """Online-softmax causal attention, scanning KV in chunks.
+
+    q [B,T,H,dk]; k [B,S,KV,dk]; v [B,S,KV,dv] (dk may differ from dv —
+    MLA); ``q_offset`` is the absolute position of q[0] (so decode /
+    prefill-continuation mask correctly).  Returns [B,T,H,dv].
+    """
+    B, T, H, dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    G = H // KV
+    n_chunks = max(1, (S + kv_chunk - 1) // kv_chunk)
+    pad = n_chunks * kv_chunk - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, kv_chunk, KV, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, kv_chunk, KV, dv).transpose(1, 0, 2, 3, 4)
+
+    qg = q.reshape(B, T, KV, G, dh)
+    q_pos = q_offset + jnp.arange(T)
+
+    def step(carry, chunk):
+        m, l, acc, s0 = carry
+        kj, vj = chunk  # [B, C, KV, dh]
+        s = jnp.einsum("btkgd,bckd->bkgtc", qg, kj).astype(jnp.float32) / math.sqrt(dh)
+        kv_pos = s0 + jnp.arange(kv_chunk)
+        mask = (kv_pos[None, :] <= q_pos[:, None]) & (kv_pos[None, :] < S)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgtc,bckd->bkgtd", p.astype(vj.dtype), vj
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new, s0 + kv_chunk), None
+
+    m0 = jnp.full((B, KV, G, T), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, T), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, T, dv), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, a0, 0), (kc, vc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, T, H, dv).astype(q.dtype)
+
+
+def local_attention(q, k, v, window: int):
+    """Block-banded causal sliding-window attention (sub-quadratic).
+
+    Blocks of size ``window``; each q block attends to itself + previous
+    block with an exact band mask, so each token sees exactly the trailing
+    ``window`` positions.  q,k,v [B,T,H/KV,dh]; T padded to window multiple.
+    """
+    B, T, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    W = window
+    n_blk = (T + W - 1) // W
+    pad = n_blk * W - T
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qb = q.reshape(B, n_blk, W, KV, G, dh)
+    kb = k.reshape(B, n_blk, W, KV, dh)
+    vb = v.reshape(B, n_blk, W, KV, dh)
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], 1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], 1)
+    k2 = jnp.concatenate([k_prev, kb], 2)  # [B,n,2W,KV,dh]
+    v2 = jnp.concatenate([v_prev, vb], 2)
+
+    s = jnp.einsum("bnwkgd,bnckd->bnkgwc", qb, k2).astype(jnp.float32) / math.sqrt(dh)
+    qi = jnp.arange(W)[:, None] + W           # absolute pos within 2W frame
+    ki = jnp.arange(2 * W)[None, :]
+    band = (ki <= qi) & (ki > qi - W)          # exactly the last `window` keys
+    first = jnp.arange(n_blk) == 0             # block 0's `prev` is padding
+    valid = jnp.where(first[:, None, None], ki >= W, True) & band  # [n,W,2W]
+    s = jnp.where(valid[None, :, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnkgwc,bnckd->bnwkgd", p.astype(v2.dtype), v2)
+    out = out.reshape(B, n_blk * W, H, dh)[:, :T]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, cache_k, cache_v, cache_len):
+    """Single-position attention against a cache.  q [B,1,H,dk];
+    cache_k [B,S,KV,dk], cache_v [B,S,KV,dv] (dk may differ from dv — MLA);
+    ``cache_len`` = number of valid positions."""
+    B, _, H, dh = q.shape
+    S, KV = cache_k.shape[1], cache_k.shape[2]
+    dv = cache_v.shape[-1]
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, dh)
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, cache_k).astype(jnp.float32) / math.sqrt(dh)
+    mask = jnp.arange(S)[None, None, None, None, :] < cache_len
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, -1)
+    out = jnp.einsum("bkgts,bskd->btkgd", p.astype(cache_v.dtype), cache_v)
+    return out.reshape(B, 1, H, dv).astype(q.dtype)
+
+
+def cross_attention_core(q, k, v):
+    """Plain softmax attention to a (small) memory."""
+    s = _gqa_scores(q, k).astype(jnp.float32)
+    p = jax.nn.softmax(s, -1)
+    B, T, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    out = jnp.einsum("bkgts,bskd->btkgd", p.astype(v.dtype), v)
+    return out.reshape(B, T, H, dh).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA attention layer (q/k/v/o projections + RoPE)
+# --------------------------------------------------------------------------
+def gqa_init(key, d_model, n_heads, n_kv, d_head, qkv_bias=False, dtype=DTYPE):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d_model, n_heads * d_head, qkv_bias, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv * d_head, qkv_bias, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv * d_head, qkv_bias, dtype),
+        "wo": dense_init(ks[3], n_heads * d_head, d_model, False, dtype),
+    }
+
+
+def gqa_qkv(p, x, n_heads, n_kv, d_head, positions, theta):
+    B, T, _ = x.shape
+    q = dense(p["wq"], x).reshape(B, T, n_heads, d_head)
+    k = dense(p["wk"], x).reshape(B, T, n_kv, d_head)
+    v = dense(p["wv"], x).reshape(B, T, n_kv, d_head)
+    q = rope(q, positions, theta)
+    k = rope(k, positions, theta)
+    return q, k, v
+
+
+# --------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V3)
+# --------------------------------------------------------------------------
+def mla_init(key, d_model, n_heads, cfg, dtype=DTYPE):
+    """cfg carries q_lora_rank, kv_lora_rank, qk_rope_dim, qk_nope_dim,
+    v_head_dim.  The KV cache stores only [c_kv ; k_rope]."""
+    ks = jax.random.split(key, 6)
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    p = {
+        "wkv_a": dense_init(ks[0], d_model, cfg.kv_lora_rank + cfg.qk_rope_dim, False, dtype),
+        "kv_norm": rmsnorm_init(cfg.kv_lora_rank, dtype),
+        "wkv_b": dense_init(ks[1], cfg.kv_lora_rank,
+                            n_heads * (cfg.qk_nope_dim + cfg.v_head_dim), False, dtype),
+        "wo": dense_init(ks[2], n_heads * cfg.v_head_dim, d_model, False, dtype),
+    }
+    if cfg.q_lora_rank > 0:
+        p["wq_a"] = dense_init(ks[3], d_model, cfg.q_lora_rank, False, dtype)
+        p["q_norm"] = rmsnorm_init(cfg.q_lora_rank, dtype)
+        p["wq_b"] = dense_init(ks[4], cfg.q_lora_rank, n_heads * qk_dim, False, dtype)
+    else:
+        p["wq"] = dense_init(ks[5], d_model, n_heads * qk_dim, False, dtype)
+    return p
+
+
+def mla_qkv(p, x, n_heads, cfg, positions, theta):
+    """Returns (q, k, v, latent) — latent is what the decode cache stores."""
+    B, T, _ = x.shape
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    if "wq_a" in p:
+        q = dense(p["wq_b"], rmsnorm(p["q_norm"], dense(p["wq_a"], x)))
+    else:
+        q = dense(p["wq"], x)
+    q = q.reshape(B, T, n_heads, qk_dim)
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim :]
+    q_rope = rope(q_rope, positions, theta)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+
+    kv = dense(p["wkv_a"], x)
+    c_kv, k_rope = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank :]
+    c_kv = rmsnorm(p["kv_norm"], c_kv)
+    k_rope = rope(k_rope.reshape(B, T, 1, cfg.qk_rope_dim), positions, theta)
+    latent = jnp.concatenate([c_kv, k_rope.reshape(B, T, cfg.qk_rope_dim)], -1)
+    k, v = mla_expand(p, latent, n_heads, cfg)
+    return q, k, v, latent
+
+
+def mla_q_and_latent(p, x, n_heads, cfg, positions, theta):
+    """The MLA pieces WITHOUT k/v expansion: (q_nope, q_rope, latent).
+    Used by the absorbed decode path (§Perf: skip the O(S·R·H·d) per-token
+    re-expansion of the whole cache)."""
+    B, T, _ = x.shape
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    if "wq_a" in p:
+        q = dense(p["wq_b"], rmsnorm(p["q_norm"], dense(p["wq_a"], x)))
+    else:
+        q = dense(p["wq"], x)
+    q = q.reshape(B, T, n_heads, qk_dim)
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim :]
+    q_rope = rope(q_rope, positions, theta)
+    kv = dense(p["wkv_a"], x)
+    c_kv, k_rope = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank :]
+    c_kv = rmsnorm(p["kv_norm"], c_kv)
+    k_rope = rope(k_rope.reshape(B, T, 1, cfg.qk_rope_dim), positions, theta)
+    latent = jnp.concatenate([c_kv, k_rope.reshape(B, T, cfg.qk_rope_dim)], -1)
+    return q_nope, q_rope, latent
+
+
+def mla_absorbed_decode(p, q_nope, q_rope, latent_cache, valid_len, n_heads, cfg):
+    """Absorbed-matrix MLA decode: attention runs directly in latent space.
+
+    score_h(s) = q_nope_h·(W_UK_h c_s) + q_rope_h·k_rope_s
+               = (W_UK_hᵀ q_nope_h)·c_s + q_rope_h·k_rope_s
+    so we absorb W_UK into the query once per token (H·R·nope flops) and
+    never materialize per-position k/v.  ctx stays in latent space and is
+    decoded through W_UV at the end.  q_nope/q_rope [B,1,H,·];
+    latent_cache [B,S,R+rope].  Returns [B,1,H,v_head_dim].
+    """
+    R = cfg.kv_lora_rank
+    wb = p["wkv_b"]["w"].astype(jnp.float32)
+    wb = wb.reshape(R, n_heads, cfg.qk_nope_dim + cfg.v_head_dim)
+    W_UK, W_UV = wb[..., : cfg.qk_nope_dim], wb[..., cfg.qk_nope_dim :]
+    c = latent_cache[..., :R].astype(jnp.float32)          # [B,S,R]
+    kr = latent_cache[..., R:].astype(jnp.float32)         # [B,S,rope]
+    q_abs = jnp.einsum("bthn,rhn->bthr", q_nope.astype(jnp.float32), W_UK)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    s = (jnp.einsum("bthr,bsr->bhts", q_abs, c)
+         + jnp.einsum("bthr,bsr->bhts", q_rope.astype(jnp.float32), kr)) * scale
+    S = c.shape[1]
+    mask = jnp.arange(S)[None, None, None, :] < valid_len
+    s = jnp.where(mask, s, NEG_INF)
+    pr = jax.nn.softmax(s, -1)
+    ctx = jnp.einsum("bhts,bsr->bthr", pr, c)              # [B,1,H,R]
+    out = jnp.einsum("bthr,rhv->bthv", ctx, W_UV)          # [B,1,H,v]
+    return out.astype(q_nope.dtype)
+
+
+def mla_expand(p, latent, n_heads, cfg):
+    """Expand cached latent [B,S,kv_lora+rope] → k,v [B,S,H,·]."""
+    B, S, _ = latent.shape
+    c_kv = latent[..., : cfg.kv_lora_rank]
+    k_rope = latent[..., cfg.kv_lora_rank :]
+    kvb = dense(p["wkv_b"], c_kv).reshape(B, S, n_heads, cfg.qk_nope_dim + cfg.v_head_dim)
+    k_nope, v = kvb[..., : cfg.qk_nope_dim], kvb[..., cfg.qk_nope_dim :]
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :], (B, S, n_heads, cfg.qk_rope_dim))
+    k = jnp.concatenate([k_nope, k_rope_b], -1)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# FFNs
+# --------------------------------------------------------------------------
+def swiglu_init(key, d_model, d_ff, dtype=DTYPE):
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(ks[0], d_model, d_ff, False, dtype),
+        "wu": dense_init(ks[1], d_model, d_ff, False, dtype),
+        "wo": dense_init(ks[2], d_ff, d_model, False, dtype),
+    }
+
+
+def swiglu(p, x):
+    return dense(p["wo"], jax.nn.silu(dense(p["wi"], x)) * dense(p["wu"], x))
+
+
+def moe_init(key, d_model, n_experts, expert_d_ff, n_shared, shared_d_ff, dtype=DTYPE):
+    ks = jax.random.split(key, 5)
+
+    def ed(k, a, b):
+        return (jax.random.normal(k, (n_experts, a, b), jnp.float32) / math.sqrt(a)).astype(dtype)
+
+    p = {
+        "router": dense_init(ks[0], d_model, n_experts, False, jnp.float32),
+        "wi": ed(ks[1], d_model, expert_d_ff),
+        "wu": ed(ks[2], d_model, expert_d_ff),
+        "wo": ed(ks[3], expert_d_ff, d_model),
+    }
+    if n_shared > 0:
+        p["shared"] = swiglu_init(ks[4], d_model, shared_d_ff * n_shared, dtype)
+    return p
+
+
+def moe_apply(p, x, top_k: int, capacity_factor: float = 1.25,
+              dispatch_spec=None):
+    """Capacity-based top-k MoE (DESIGN §3 hardware-adaptation notes).
+
+    x [B,T,D] → [B,T,D].  Tokens beyond an expert's capacity are dropped
+    (contribute zero), standard TPU practice.  Returns (out, aux_loss).
+
+    ``dispatch_spec`` (§Perf): PartitionSpec axes for the [E, C, D]
+    dispatch buffer.  Constraining the expert dim to the weight's expert
+    axis makes GSPMD move TOKENS (all-to-all) instead of all-gathering the
+    stacked expert weights.  Ignored outside a mesh context.
+    """
+    def _constrain(t):
+        if dispatch_spec is None:
+            return t
+        try:
+            from jax.sharding import PartitionSpec as _P
+            return jax.lax.with_sharding_constraint(t, _P(*dispatch_spec[: t.ndim]))
+        except Exception:
+            return t  # no mesh (host tests) — constraint is advisory
+
+    B, T, D = x.shape
+    E = p["wi"].shape[0]
+    xt = x.reshape(B * T, D)
+    n_tok = B * T
+    logits = dense(p["router"], xt.astype(jnp.float32))          # [N, E]
+    probs = jax.nn.softmax(logits, -1)
+    gate, idx = jax.lax.top_k(probs, top_k)                      # [N, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(1, int(n_tok * top_k * capacity_factor / E))
+    # position of each (token, k) within its expert, via cumsum over one-hot
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)             # [N, k, E]
+    flat = onehot.reshape(n_tok * top_k, E)
+    pos = jnp.cumsum(flat, 0) * flat - 1                         # [N·k, E]
+    pos = pos.max(-1).reshape(n_tok, top_k)                      # [N, k]
+    keep = pos < capacity
+
+    # dispatch: scatter tokens into [E, C, D]
+    e_idx = idx.reshape(-1)
+    p_idx = jnp.clip(pos.reshape(-1), 0, capacity - 1)
+    src = jnp.repeat(xt, top_k, axis=0) * keep.reshape(-1, 1)
+    buf = jnp.zeros((E, capacity, D), x.dtype).at[e_idx, p_idx].add(src)
+    buf = _constrain(buf)
+
+    # expert compute: grouped matmuls [E, C, ·]
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wi"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["wu"]
+    )
+    y = jnp.einsum("ecf,efd->ecd", h, p["wo"])                   # [E, C, D]
+    y = _constrain(y)
+
+    # combine: gather back and weight by gate
+    out = y[e_idx, p_idx] * (gate.reshape(-1, 1) * keep.reshape(-1, 1)).astype(y.dtype)
+    out = out.reshape(n_tok, top_k, D).sum(1)
+
+    if "shared" in p:
+        out = out + swiglu(p["shared"], xt)
+
+    # load-balance aux loss (Switch-style)
+    me = probs.mean(0)
+    ce = (onehot.sum(1).astype(jnp.float32)).mean(0) / top_k
+    aux = E * jnp.sum(me * ce)
+    return out.reshape(B, T, D), aux
+
+
+# --------------------------------------------------------------------------
+# Mamba block (Jamba's SSM layers)
+# --------------------------------------------------------------------------
+def mamba_init(key, d_model, d_state=16, d_conv=4, expand=2, dtype=DTYPE):
+    d_in = expand * d_model
+    dt_rank = max(1, d_model // 16)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * d_in, False, dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_in), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": dense_init(ks[2], d_in, dt_rank + 2 * d_state, False, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, d_in, True, dtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_in, 1))),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[4], d_in, d_model, False, dtype),
+    }
+
+
+def _mamba_scan(u, dt, A, B, C, D):
+    """Selective scan.  u,dt [Bt,T,din]; A [din,S]; B,C [Bt,T,S]."""
+    dA = jnp.exp(dt[..., None] * A)                     # [Bt,T,din,S]
+    dBu = dt[..., None] * B[..., None, :] * u[..., None]
+
+    def step(h, xs):
+        dA_t, dBu_t, C_t = xs
+        h = dA_t * h + dBu_t                             # [Bt,din,S]
+        y = jnp.einsum("bds,bs->bd", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((u.shape[0], u.shape[2], A.shape[1]), jnp.float32)
+    h_final, ys = jax.lax.scan(
+        step, h0,
+        (dA.transpose(1, 0, 2, 3), dBu.transpose(1, 0, 2, 3), C.transpose(1, 0, 2)),
+    )
+    y = ys.transpose(1, 0, 2)                            # [Bt,T,din]
+    return y + u * D, h_final
+
+
+def mamba_apply(p, x, d_state=16, return_state=False):
+    B, T, D = x.shape
+    d_in = p["conv_b"].shape[0]
+    dt_rank = p["dt_proj"]["w"].shape[0]
+    xz = dense(p["in_proj"], x)
+    u, z = jnp.split(xz, 2, -1)
+    # causal depthwise conv (kernel k): sum of right-shifted copies, so
+    # conv_w[k-1] multiplies the current token and conv_w[0] the oldest.
+    k = p["conv_w"].shape[0]
+    conv = sum(
+        jnp.pad(u, ((0, 0), (k - 1 - i, 0), (0, 0)))[:, :T] * p["conv_w"][i]
+        for i in range(k)
+    )
+    u = jax.nn.silu(conv + p["conv_b"])
+    proj = dense(p["x_proj"], u).astype(jnp.float32)
+    dt_r, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + d_state], -1)
+    dt = jax.nn.softplus(dense(p["dt_proj"], dt_r.astype(x.dtype)).astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])
+    y, h_final = _mamba_scan(u.astype(jnp.float32), dt, A, Bc, Cc, p["D"])
+    out = dense(p["out_proj"], (y.astype(x.dtype) * jax.nn.silu(z)))
+    if not return_state:
+        return out
+    # decode state: last k−1 *pre-conv* inputs + final SSM state
+    u_raw = jnp.split(xz, 2, -1)[0]
+    pad = max(0, (k - 1) - T)
+    conv_buf = jnp.pad(u_raw, ((0, 0), (pad, 0), (0, 0)))[:, -(k - 1):]
+    return out, (conv_buf, h_final)
+
+
+def mamba_decode(p, state, x, d_state=16):
+    """Single-token step.  state = (conv_buf [B,k-1,din], h [B,din,S])."""
+    conv_buf, h = state
+    B = x.shape[0]
+    d_in = p["conv_b"].shape[0]
+    dt_rank = p["dt_proj"]["w"].shape[0]
+    xz = dense(p["in_proj"], x)            # [B, 2·din]
+    u, z = jnp.split(xz, 2, -1)
+    k = p["conv_w"].shape[0]
+    window = jnp.concatenate([conv_buf, u[:, None, :]], 1)   # [B,k,din]
+    conv = jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"]
+    u = jax.nn.silu(conv)
+    proj = dense(p["x_proj"], u).astype(jnp.float32)
+    dt_r, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + d_state], -1)
+    dt = jax.nn.softplus(dense(p["dt_proj"], dt_r.astype(x.dtype)).astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A)
+    dBu = dt[..., None] * Bc[:, None, :] * u.astype(jnp.float32)[..., None]
+    h = dA * h + dBu
+    y = jnp.einsum("bds,bs->bd", h, Cc) + u.astype(jnp.float32) * p["D"]
+    out = dense(p["out_proj"], y.astype(x.dtype) * jax.nn.silu(z))
+    return (window[:, 1:], h), out
+
+
+# --------------------------------------------------------------------------
+# RWKV6 block ("Finch": data-dependent decay linear attention)
+# --------------------------------------------------------------------------
+def rwkv6_init(key, d_model, n_heads, dtype=DTYPE):
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "mix": (jax.random.uniform(ks[0], (5, d_model), jnp.float32)).astype(dtype),
+        "wr": dense_init(ks[1], d_model, d_model, False, dtype),
+        "wk": dense_init(ks[2], d_model, d_model, False, dtype),
+        "wv": dense_init(ks[3], d_model, d_model, False, dtype),
+        "wg": dense_init(ks[4], d_model, d_model, False, dtype),
+        "ww": dense_init(ks[5], d_model, d_model, False, dtype),  # decay proj (data-dependent!)
+        "u": (jax.random.normal(ks[6], (n_heads, dh), jnp.float32) * 0.1),
+        "wo": dense_init(ks[7], d_model, d_model, False, dtype),
+        "ln_x": rmsnorm_init(d_model, dtype),
+    }
+
+
+def _rwkv6_core(r, k, v, w, u):
+    """WKV6 recurrence.  r,k,v [B,T,H,dh]; w [B,T,H,dh] decay ∈(0,1);
+    u [H,dh] bonus.  Returns [B,T,H,dh].  State S: [B,H,dh_k,dh_v]."""
+    B, T, H, dh = r.shape
+
+    def step(S, xs):
+        r_t, k_t, v_t, w_t = xs                      # [B,H,dh]
+        kv = k_t[..., :, None] * v_t[..., None, :]   # [B,H,dh,dh]
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[..., :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, out
+
+    S0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    xs = tuple(a.transpose(1, 0, 2, 3).astype(jnp.float32) for a in (r, k, v, w))
+    S_final, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 0, 2, 3), S_final         # [B,T,H,dh]
+
+
+def rwkv6_apply(p, x, n_heads, return_state=False):
+    B, T, D = x.shape
+    dh = D // n_heads
+    prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], 1)  # token shift
+    mixed = [x + (prev - x) * p["mix"][i] for i in range(5)]
+    r = dense(p["wr"], mixed[0]).reshape(B, T, n_heads, dh)
+    k = dense(p["wk"], mixed[1]).reshape(B, T, n_heads, dh)
+    v = dense(p["wv"], mixed[2]).reshape(B, T, n_heads, dh)
+    g = dense(p["wg"], mixed[3])
+    w = dense(p["ww"], mixed[4]).reshape(B, T, n_heads, dh)
+    w = jnp.exp(-jnp.exp(w.astype(jnp.float32)))      # data-dependent decay ∈ (0,1)
+    y, S_final = _rwkv6_core(r, k, v, w, p["u"])
+    y = y.reshape(B, T, D).astype(x.dtype)
+    out = dense(p["wo"], rmsnorm(p["ln_x"], y) * jax.nn.silu(g))
+    if not return_state:
+        return out
+    return out, (x[:, -1], S_final)
+
+
+def rwkv6_decode(p, state, x, n_heads):
+    """state = (x_prev [B,D], S [B,H,dh,dh]); x [B,D] single token."""
+    x_prev, S = state
+    B, D = x.shape
+    dh = D // n_heads
+    mixed = [x + (x_prev - x) * p["mix"][i] for i in range(5)]
+    r = dense(p["wr"], mixed[0]).reshape(B, n_heads, dh).astype(jnp.float32)
+    k = dense(p["wk"], mixed[1]).reshape(B, n_heads, dh).astype(jnp.float32)
+    v = dense(p["wv"], mixed[2]).reshape(B, n_heads, dh).astype(jnp.float32)
+    g = dense(p["wg"], mixed[3])
+    w = dense(p["ww"], mixed[4]).reshape(B, n_heads, dh)
+    w = jnp.exp(-jnp.exp(w.astype(jnp.float32)))
+    kv = k[..., :, None] * v[..., None, :]
+    out = jnp.einsum("bhk,bhkv->bhv", r, S + p["u"][..., :, None] * kv)
+    S = w[..., :, None] * S + kv
+    y = out.reshape(B, D).astype(x.dtype)
+    y = dense(p["wo"], rmsnorm(p["ln_x"], y) * jax.nn.silu(g))
+    return (x, S), y

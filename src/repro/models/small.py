@@ -1,0 +1,170 @@
+"""Small task models for the SAFL simulation (paper §5.1 analogues).
+
+* ConvNet  — residual-block CNN standing in for ResNet-18 on CIFAR-like data;
+* LSTM     — char-level LSTM for the Shakespeare-like task;
+* MLP(FCN) — two dense layers + dropout-free eval for the Adult-like task.
+
+Pure functional JAX (init/apply pairs) so params are plain pytrees — the
+whole FedQS machinery (similarity, weighted aggregation, clipping) treats
+them uniformly with the big architectures in ``repro.models.transformer``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.safl import ModelSpec
+
+
+def _dense_init(key, n_in, n_out, scale=None):
+    scale = scale or (1.0 / np.sqrt(n_in))
+    wk, bk = jax.random.split(key)
+    return {
+        "w": jax.random.normal(wk, (n_in, n_out), jnp.float32) * scale,
+        "b": jnp.zeros((n_out,), jnp.float32),
+    }
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+# --------------------------------------------------------------------------
+# ConvNet (CV)
+# --------------------------------------------------------------------------
+def _conv_init(key, cin, cout, k=3):
+    scale = 1.0 / np.sqrt(cin * k * k)
+    return {"w": jax.random.normal(key, (k, k, cin, cout), jnp.float32) * scale,
+            "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def _conv(p, x, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return y + p["b"]
+
+
+def cnn_init(key, n_classes=10, width=16):
+    ks = jax.random.split(key, 6)
+    return {
+        "stem": _conv_init(ks[0], 3, width),
+        "b1a": _conv_init(ks[1], width, width),
+        "b1b": _conv_init(ks[2], width, width),
+        "down": _conv_init(ks[3], width, 2 * width),
+        "b2a": _conv_init(ks[4], 2 * width, 2 * width),
+        "head": _dense_init(ks[5], 2 * width, n_classes),
+    }
+
+
+def cnn_apply(params, x):
+    h = jax.nn.relu(_conv(params["stem"], x))
+    r = jax.nn.relu(_conv(params["b1a"], h))
+    h = jax.nn.relu(h + _conv(params["b1b"], r))       # residual block
+    h = jax.nn.relu(_conv(params["down"], h, stride=2))
+    h = jax.nn.relu(h + _conv(params["b2a"], h))       # residual block
+    h = jnp.mean(h, axis=(1, 2))                        # global avg pool
+    return _dense(params["head"], h)
+
+
+# --------------------------------------------------------------------------
+# LSTM (NLP)
+# --------------------------------------------------------------------------
+def lstm_init(key, vocab=80, embed=24, hidden=64):
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": jax.random.normal(ks[0], (vocab, embed), jnp.float32) * 0.1,
+        "wx": jax.random.normal(ks[1], (embed, 4 * hidden), jnp.float32) / np.sqrt(embed),
+        "wh": jax.random.normal(ks[2], (hidden, 4 * hidden), jnp.float32) / np.sqrt(hidden),
+        "bias": jnp.zeros((4 * hidden,), jnp.float32),
+        "head": _dense_init(ks[3], hidden, vocab),
+    }
+
+
+def lstm_apply(params, tokens):
+    x = params["embed"][tokens]                        # [B, T, E]
+    B = x.shape[0]
+    H = params["wh"].shape[0]
+
+    def step(carry, xt):
+        h, c = carry
+        gates = xt @ params["wx"] + h @ params["wh"] + params["bias"]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    init = (jnp.zeros((B, H)), jnp.zeros((B, H)))
+    (h, _), _ = jax.lax.scan(step, init, jnp.swapaxes(x, 0, 1))
+    return _dense(params["head"], h)
+
+
+# --------------------------------------------------------------------------
+# FCN (RWD)
+# --------------------------------------------------------------------------
+def mlp_init(key, n_features=14, hidden=32, n_classes=2):
+    ks = jax.random.split(key, 2)
+    return {
+        "l1": _dense_init(ks[0], n_features, hidden),
+        "l2": _dense_init(ks[1], hidden, n_classes),
+    }
+
+
+def mlp_apply(params, x):
+    return _dense(params["l2"], jax.nn.relu(_dense(params["l1"], x)))
+
+
+# --------------------------------------------------------------------------
+# spec factories
+# --------------------------------------------------------------------------
+def _make_spec(init_fn, apply_fn, batch_size, int_inputs=False) -> ModelSpec:
+    def loss_fn(params, batch):
+        logits = apply_fn(params, batch["x"])
+        labels = batch["y"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+    @jax.jit
+    def grad_fn(params, batch):
+        return jax.grad(loss_fn)(params, batch)
+
+    @jax.jit
+    def _eval(params, x, y):
+        logits = apply_fn(params, x)
+        logp = jax.nn.log_softmax(logits)
+        loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+        acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+        return loss, acc
+
+    def eval_fn(params, x, y):
+        loss, acc = _eval(params, jnp.asarray(x), jnp.asarray(y))
+        return float(loss), float(acc)
+
+    @jax.jit
+    def _pred(params, x):
+        return jnp.argmax(apply_fn(params, x), -1)
+
+    def predict_fn(params, x):
+        return np.asarray(_pred(params, jnp.asarray(x)))
+
+    return ModelSpec(init=init_fn, grad_fn=grad_fn, eval_fn=eval_fn,
+                     predict_fn=predict_fn, batch_size=batch_size)
+
+
+def make_cnn_spec(n_classes=10, width=16, batch_size=32) -> ModelSpec:
+    return _make_spec(functools.partial(cnn_init, n_classes=n_classes, width=width),
+                      cnn_apply, batch_size)
+
+
+def make_lstm_spec(vocab=80, embed=24, hidden=64, batch_size=32) -> ModelSpec:
+    return _make_spec(functools.partial(lstm_init, vocab=vocab, embed=embed, hidden=hidden),
+                      lstm_apply, batch_size, int_inputs=True)
+
+
+def make_mlp_spec(n_features=14, hidden=32, n_classes=2, batch_size=32) -> ModelSpec:
+    return _make_spec(functools.partial(mlp_init, n_features=n_features, hidden=hidden, n_classes=n_classes),
+                      mlp_apply, batch_size)

@@ -1,0 +1,606 @@
+"""Composable decoder / encoder-decoder stack covering all 10 assigned
+architectures (DESIGN §5).
+
+A model is described by an ``ArchConfig``: an optional *prefix* of unrolled
+layers, a scanned *super-block pattern* repeated ``n_repeats`` times (HLO
+stays O(pattern), not O(depth) — compile-time critical, DESIGN §9), and an
+optional unrolled *suffix*.  Layer kinds:
+
+    attn        causal GQA self-attention (+ optional QKV bias / RoPE)
+    local       sliding-window GQA self-attention (gemma3 locals)
+    mla         DeepSeek-V3 multi-head latent attention
+    attn_cross  self-attention + cross-attention (enc-dec decoder layers)
+    cross       cross-attention only (llama-3.2-vision image layers)
+    mamba       selective-SSM block (jamba)
+    rwkv        RWKV6 time-mix (attention-free)
+
+FFN kinds: ``dense`` (SwiGLU) and ``moe`` (capacity-based top-k).
+
+Three entry points per config — ``train_loss`` (causal LM), ``prefill``
+(logits + populated caches), ``decode_step`` (one token against caches).
+Caches for attention layers are *ring buffers* of capacity
+``min(max_seq, cache_cap)`` so the same code path serves full-context
+decode and bounded-window long-context decode (DESIGN §5 skips table).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    arch_id: str
+    family: str                       # dense|moe|ssm|hybrid|vlm|audio
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    # layout: tuples of (kind, ffn) pairs
+    prefix: Tuple[Tuple[str, str], ...] = ()
+    pattern: Tuple[Tuple[str, str], ...] = (("attn", "dense"),)
+    n_repeats: int = 1
+    suffix: Tuple[Tuple[str, str], ...] = ()
+    # attention options
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    window: int = 1024                # sliding window for `local` layers
+    global_cache_cap: int = 0         # 0 = unbounded full-attention cache
+    # MLA dims (deepseek)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 512
+    qk_rope_dim: int = 64
+    qk_nope_dim: int = 128
+    v_head_dim: int = 128
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    expert_d_ff: int = 0
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01
+    # SSM
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    # encoder (audio enc-dec)
+    n_encoder_layers: int = 0
+    # modality frontend stub (the one allowed stub): precomputed embeddings
+    frontend: str = "none"            # none|audio|vision
+    n_frontend_tokens: int = 0
+    # MTP head (deepseek)
+    mtp: bool = False
+    # FL distributed mode (DESIGN §6): stacked per-client weights vs FSDP
+    fl_mode: str = "stacked"
+    # ---- §Perf hillclimb knobs (EXPERIMENTS.md §Perf) ----
+    remat: bool = False          # jax.checkpoint each super-block (memory)
+    mla_absorbed: bool = False   # absorbed MLA decode (skip k/v expansion)
+    cache_cross_kv: bool = False  # cache cross-attn memory K/V at prefill
+    embed_dshard: bool = False   # shard embedding on d_model (not vocab):
+    #   token lookups stay shard-local instead of all-gathering the table
+    row_parallel_out: bool = False  # Megatron pairing: down/out projections
+    #   sharded on the INPUT dim (+psum) instead of gathering activations
+    moe_data_dispatch: bool = False  # constrain MoE dispatch buffer to the
+    #   expert ('data') axis so GSPMD all-to-alls tokens instead of
+    #   all-gathering the stacked expert weights
+    # source citation for the config
+    source: str = ""
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.prefix) + len(self.pattern) * self.n_repeats + len(self.suffix)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6·N·D roofline MODEL_FLOPS)."""
+        shapes = jax.eval_shape(lambda k: init_params(self, k), jax.random.PRNGKey(0))
+        return sum(int(math.prod(s.shape)) for s in jax.tree_util.tree_leaves(shapes))
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        total = self.param_count()
+        per_expert = 3 * self.d_model * self.expert_d_ff
+        n_moe_layers = sum(
+            1 for k, f in (self.prefix + self.pattern * self.n_repeats + self.suffix) if f == "moe"
+        )
+        inactive = n_moe_layers * (self.n_experts - self.top_k) * per_expert
+        return total - inactive
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def _mix_init(cfg: ArchConfig, kind: str, key):
+    if kind in ("attn", "local"):
+        return L.gqa_init(key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.qkv_bias)
+    if kind == "mla":
+        return L.mla_init(key, cfg.d_model, cfg.n_heads, cfg)
+    if kind == "cross":
+        return L.gqa_init(key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, False)
+    if kind == "attn_cross":
+        k1, k2 = jax.random.split(key)
+        return {
+            "self": L.gqa_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.qkv_bias),
+            "cross": L.gqa_init(k2, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, False),
+        }
+    if kind == "mamba":
+        return L.mamba_init(key, cfg.d_model, cfg.ssm_state, cfg.ssm_conv, cfg.ssm_expand)
+    if kind == "rwkv":
+        return L.rwkv6_init(key, cfg.d_model, cfg.n_heads)
+    raise ValueError(f"unknown layer kind {kind!r}")
+
+
+def _ffn_init(cfg: ArchConfig, ffn: str, key):
+    if ffn == "dense":
+        return L.swiglu_init(key, cfg.d_model, cfg.d_ff)
+    if ffn == "moe":
+        return L.moe_init(
+            key, cfg.d_model, cfg.n_experts, cfg.expert_d_ff,
+            cfg.n_shared_experts, cfg.expert_d_ff,
+        )
+    raise ValueError(f"unknown ffn kind {ffn!r}")
+
+
+def _layer_init(cfg: ArchConfig, kind: str, ffn: str, key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"ln1": L.rmsnorm_init(cfg.d_model), "mix": _mix_init(cfg, kind, k1),
+         "ln2": L.rmsnorm_init(cfg.d_model), "ffn": _ffn_init(cfg, ffn, k2)}
+    if kind == "attn_cross":
+        p["lnx"] = L.rmsnorm_init(cfg.d_model)
+    return p
+
+
+def _superblock_init(cfg: ArchConfig, key):
+    ks = jax.random.split(key, len(cfg.pattern))
+    return {f"l{i}": _layer_init(cfg, kind, ffn, ks[i])
+            for i, (kind, ffn) in enumerate(cfg.pattern)}
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    n_keys = 6 + len(cfg.prefix) + len(cfg.suffix)
+    ks = list(jax.random.split(key, n_keys))
+    p: Dict[str, Any] = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model), jnp.float32)
+                  * 0.02).astype(L.DTYPE),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+        "lm_head": L.dense_init(ks[1], cfg.d_model, cfg.vocab),
+    }
+    # scanned super-blocks: stacked along leading axis via vmap-init
+    block_keys = jax.random.split(ks[2], cfg.n_repeats)
+    p["blocks"] = jax.vmap(lambda k: _superblock_init(cfg, k))(block_keys)
+    for i, (kind, ffn) in enumerate(cfg.prefix):
+        p[f"pre{i}"] = _layer_init(cfg, kind, ffn, ks[3 + i])
+    for i, (kind, ffn) in enumerate(cfg.suffix):
+        p[f"suf{i}"] = _layer_init(cfg, kind, ffn, ks[3 + len(cfg.prefix) + i])
+    if cfg.n_encoder_layers > 0:
+        enc_keys = jax.random.split(ks[-3], cfg.n_encoder_layers)
+        p["enc_blocks"] = jax.vmap(
+            lambda k: _layer_init(cfg, "attn", "dense", k)
+        )(enc_keys)
+        p["enc_norm"] = L.rmsnorm_init(cfg.d_model)
+    if cfg.frontend == "vision":
+        # projector from stub patch embeddings into d_model (the ViT itself
+        # is the allowed carve-out stub)
+        p["vis_proj"] = L.dense_init(ks[-2], cfg.d_model, cfg.d_model)
+    if cfg.mtp:
+        k1, k2 = jax.random.split(ks[-1])
+        p["mtp"] = {
+            "proj": L.dense_init(k1, 2 * cfg.d_model, cfg.d_model),
+            "layer": _layer_init(cfg, "attn", "dense", k2),
+            "norm": L.rmsnorm_init(cfg.d_model),
+        }
+    return p
+
+
+def abstract_params(cfg: ArchConfig):
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+# --------------------------------------------------------------------------
+# forward (training / prefill)
+# --------------------------------------------------------------------------
+def _apply_mix(cfg, kind, p, h, positions, memory):
+    """→ (mix_out, cache_payload).  Payload = what decode later needs:
+    roped (k, v) for attention kinds, the compressed latent for MLA,
+    final recurrent state for SSM kinds, () for cross (memory is static)."""
+    if kind in ("attn", "local"):
+        q, k, v = L.gqa_qkv(p, h, cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+                            positions, cfg.rope_theta)
+        out = (L.local_attention(q, k, v, cfg.window) if kind == "local"
+               else L.causal_attention(q, k, v))
+        return L.dense(p["wo"], out.reshape(*h.shape[:2], -1)), (k, v)
+    if kind == "mla":
+        q, k, v, latent = L.mla_qkv(p, h, cfg.n_heads, cfg, positions, cfg.rope_theta)
+        out = L.causal_attention(q, k, v)
+        return L.dense(p["wo"], out.reshape(*h.shape[:2], -1)), latent
+    if kind == "cross":
+        B, T, _ = h.shape
+        q = L.dense(p["wq"], h).reshape(B, T, cfg.n_heads, cfg.d_head)
+        mk = L.dense(p["wk"], memory).reshape(B, -1, cfg.n_kv_heads, cfg.d_head)
+        mv = L.dense(p["wv"], memory).reshape(B, -1, cfg.n_kv_heads, cfg.d_head)
+        out = L.cross_attention_core(q, mk, mv)
+        return L.dense(p["wo"], out.reshape(B, T, -1)), (
+            (mk, mv) if cfg.cache_cross_kv else ())
+    if kind == "mamba":
+        out, state = L.mamba_apply(p, h, cfg.ssm_state, return_state=True)
+        return out, state
+    if kind == "rwkv":
+        out, state = L.rwkv6_apply(p, h, cfg.n_heads, return_state=True)
+        return out, state
+    raise ValueError(kind)
+
+
+def _apply_ffn(cfg, ffn, p, h):
+    if ffn == "dense":
+        return L.swiglu(p, h), 0.0
+    dispatch_spec = ("data", None, None) if cfg.moe_data_dispatch else None
+    out, aux = L.moe_apply(p, h, cfg.top_k, cfg.capacity_factor,
+                           dispatch_spec=dispatch_spec)
+    return out, aux
+
+
+def _apply_layer(cfg, kind, ffn, p, h, positions, memory):
+    """→ (h, aux_loss, cache_payload)."""
+    if kind == "attn_cross":
+        B, T, _ = h.shape
+        q, k, v = L.gqa_qkv(p["mix"]["self"], L.rmsnorm(p["ln1"], h),
+                            cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+                            positions, cfg.rope_theta)
+        h = h + L.dense(p["mix"]["self"]["wo"],
+                        L.causal_attention(q, k, v).reshape(B, T, -1))
+        hx = L.rmsnorm(p["lnx"], h)
+        cp = p["mix"]["cross"]
+        q = L.dense(cp["wq"], hx).reshape(B, T, cfg.n_heads, cfg.d_head)
+        mk = L.dense(cp["wk"], memory).reshape(B, -1, cfg.n_kv_heads, cfg.d_head)
+        mv = L.dense(cp["wv"], memory).reshape(B, -1, cfg.n_kv_heads, cfg.d_head)
+        h = h + L.dense(cp["wo"], L.cross_attention_core(q, mk, mv).reshape(B, T, -1))
+        payload = (k, v, mk, mv) if cfg.cache_cross_kv else (k, v)
+        aux = 0.0
+    else:
+        mix_out, payload = _apply_mix(cfg, kind, p["mix"], L.rmsnorm(p["ln1"], h),
+                                      positions, memory)
+        h = h + mix_out
+        aux = 0.0
+    ffn_out, aux_ffn = _apply_ffn(cfg, ffn, p["ffn"], L.rmsnorm(p["ln2"], h))
+    return h + ffn_out, aux + aux_ffn, payload
+
+
+def _encoder(cfg: ArchConfig, params, src_embeds):
+    """Bidirectional encoder over (stub-)frontend embeddings."""
+    def step(h, blk):
+        B, S, _ = h.shape
+        q, k, v = L.gqa_qkv(blk["mix"], L.rmsnorm(blk["ln1"], h),
+                            cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+                            jnp.arange(S), cfg.rope_theta)
+        h = h + L.dense(blk["mix"]["wo"], L.cross_attention_core(q, k, v).reshape(B, S, -1))
+        h = h + L.swiglu(blk["ffn"], L.rmsnorm(blk["ln2"], h))
+        return h, None
+
+    h, _ = jax.lax.scan(step, src_embeds.astype(L.DTYPE), params["enc_blocks"])
+    return L.rmsnorm(params["enc_norm"], h)
+
+
+def forward(cfg: ArchConfig, params, tokens, memory_embeds=None, emit_cache=False):
+    """Causal LM forward → (hidden [B,T,D], aux_loss[, payloads]).
+
+    ``memory_embeds`` feeds cross-attention layers: encoder output (audio),
+    projected patch embeddings (vision).  With ``emit_cache`` the per-layer
+    cache payloads are also returned (for prefill)."""
+    B, T = tokens.shape
+    h = params["embed"][tokens].astype(L.DTYPE)
+    positions = jnp.arange(T)
+    memory = None
+    if cfg.n_encoder_layers > 0 and memory_embeds is not None:
+        memory = _encoder(cfg, params, memory_embeds)
+    elif cfg.frontend == "vision" and memory_embeds is not None:
+        memory = L.dense(params["vis_proj"], memory_embeds.astype(L.DTYPE))
+
+    payloads: Dict[str, Any] = {}
+    aux_total = 0.0
+    for i, (kind, ffn) in enumerate(cfg.prefix):
+        h, aux, pay = _apply_layer(cfg, kind, ffn, params[f"pre{i}"], h, positions, memory)
+        aux_total += aux
+        payloads[f"pre{i}"] = pay
+
+    def block_step(carry, blk):
+        h, aux = carry
+        pays = {}
+        for i, (kind, ffn) in enumerate(cfg.pattern):
+            h, a, pay = _apply_layer(cfg, kind, ffn, blk[f"l{i}"], h, positions, memory)
+            aux = aux + a
+            pays[f"l{i}"] = pay
+        return (h, aux), (pays if emit_cache else None)
+
+    if cfg.remat:
+        # activation checkpointing at super-block granularity: save only the
+        # inter-block residual stream, recompute block internals on backward
+        block_step = jax.checkpoint(block_step)
+    (h, aux_total), blk_pays = jax.lax.scan(
+        block_step, (h, jnp.asarray(aux_total, jnp.float32)), params["blocks"])
+    payloads["blocks"] = blk_pays
+    for i, (kind, ffn) in enumerate(cfg.suffix):
+        h, aux, pay = _apply_layer(cfg, kind, ffn, params[f"suf{i}"], h, positions, memory)
+        aux_total += aux
+        payloads[f"suf{i}"] = pay
+    h = L.rmsnorm(params["final_norm"], h)
+    if emit_cache:
+        return h, aux_total, payloads
+    return h, aux_total
+
+
+def train_loss(cfg: ArchConfig, params, batch):
+    """batch: tokens [B,T] int32, targets [B,T] int32 (−1 = masked),
+    optional memory_embeds [B,M,D] f32."""
+    h, aux = forward(cfg, params, batch["tokens"], batch.get("memory_embeds"))
+    logits = L.dense(params["lm_head"], h).astype(jnp.float32)
+    targets = batch["targets"]
+    mask = (targets >= 0).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits)
+    tgt = jnp.maximum(targets, 0)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], -1)[..., 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    if cfg.mtp:  # next-next-token prediction head (DeepSeek-V3 style)
+        emb_next = params["embed"][jnp.maximum(batch["tokens"], 0)].astype(L.DTYPE)
+        emb_next = jnp.concatenate([emb_next[:, 1:], emb_next[:, -1:]], axis=1)
+        hm = L.dense(params["mtp"]["proj"], jnp.concatenate([h.astype(L.DTYPE), emb_next], -1))
+        hm, _, _ = _apply_layer(cfg, "attn", "dense", params["mtp"]["layer"], hm,
+                                jnp.arange(h.shape[1]), None)
+        hm = L.rmsnorm(params["mtp"]["norm"], hm)
+        logits2 = L.dense(params["lm_head"], hm).astype(jnp.float32)
+        tgt2 = jnp.concatenate([targets[:, 1:], -jnp.ones_like(targets[:, -1:])], 1)
+        mask2 = (tgt2 >= 0).astype(jnp.float32)
+        nll2 = -jnp.take_along_axis(jax.nn.log_softmax(logits2),
+                                    jnp.maximum(tgt2, 0)[..., None], -1)[..., 0]
+        loss = loss + 0.3 * jnp.sum(nll2 * mask2) / jnp.maximum(jnp.sum(mask2), 1.0)
+
+    return loss + cfg.aux_loss_coef * aux
+
+
+# --------------------------------------------------------------------------
+# KV / state caches
+# --------------------------------------------------------------------------
+def _cache_cap(cfg: ArchConfig, kind: str, max_seq: int) -> int:
+    if kind == "local":
+        return min(cfg.window, max_seq)
+    cap = cfg.global_cache_cap or max_seq
+    return min(cap, max_seq)
+
+
+def _layer_cache_init(cfg: ArchConfig, kind: str, B: int, max_seq: int):
+    if kind in ("attn", "local"):
+        cap = _cache_cap(cfg, kind, max_seq)
+        shp = (B, cap, cfg.n_kv_heads, cfg.d_head)
+        return {"k": jnp.zeros(shp, L.DTYPE), "v": jnp.zeros(shp, L.DTYPE)}
+    if kind == "mla":
+        cap = _cache_cap(cfg, "attn", max_seq)
+        return {"latent": jnp.zeros((B, cap, cfg.kv_lora_rank + cfg.qk_rope_dim), L.DTYPE)}
+    if kind == "attn_cross":
+        cap = _cache_cap(cfg, "attn", max_seq)
+        shp = (B, cap, cfg.n_kv_heads, cfg.d_head)
+        out = {"k": jnp.zeros(shp, L.DTYPE), "v": jnp.zeros(shp, L.DTYPE)}
+        if cfg.cache_cross_kv:
+            mshp = (B, cfg.n_frontend_tokens, cfg.n_kv_heads, cfg.d_head)
+            out["mk"] = jnp.zeros(mshp, L.DTYPE)
+            out["mv"] = jnp.zeros(mshp, L.DTYPE)
+        return out
+    if kind == "cross":
+        if cfg.cache_cross_kv:   # §Perf: memory K/V computed once at prefill
+            mshp = (B, cfg.n_frontend_tokens, cfg.n_kv_heads, cfg.d_head)
+            return {"mk": jnp.zeros(mshp, L.DTYPE), "mv": jnp.zeros(mshp, L.DTYPE)}
+        return {}  # memory K/V are recomputed from memory_embeds (static)
+    if kind == "mamba":
+        d_in = cfg.ssm_expand * cfg.d_model
+        return {"conv": jnp.zeros((B, cfg.ssm_conv - 1, d_in), L.DTYPE),
+                "h": jnp.zeros((B, d_in, cfg.ssm_state), jnp.float32)}
+    if kind == "rwkv":
+        dh = cfg.d_model // cfg.n_heads
+        return {"x_prev": jnp.zeros((B, cfg.d_model), L.DTYPE),
+                "S": jnp.zeros((B, cfg.n_heads, dh, dh), jnp.float32)}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, B: int, max_seq: int):
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    for i, (kind, _) in enumerate(cfg.prefix):
+        cache[f"pre{i}"] = _layer_cache_init(cfg, kind, B, max_seq)
+    blk = {f"l{i}": _layer_cache_init(cfg, kind, B, max_seq)
+           for i, (kind, _) in enumerate(cfg.pattern)}
+    cache["blocks"] = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_repeats,) + x.shape), blk
+    )
+    for i, (kind, _) in enumerate(cfg.suffix):
+        cache[f"suf{i}"] = _layer_cache_init(cfg, kind, B, max_seq)
+    return cache
+
+
+def _ring_write(buf, val, pos):
+    """Write val [B,1,...] at ring slot pos%cap."""
+    cap = buf.shape[1]
+    slot = jnp.mod(pos, cap)
+    return jax.lax.dynamic_update_slice(buf, val.astype(buf.dtype),
+                                        (0, slot) + (0,) * (buf.ndim - 2))
+
+
+def _decode_layer(cfg, kind, ffn, p, c, h, pos, memory):
+    """One-token layer step.  h [B,1,D]."""
+    B = h.shape[0]
+    aux = 0.0
+    if kind in ("attn", "local", "attn_cross"):
+        sp = p["mix"]["self"] if kind == "attn_cross" else p["mix"]
+        q, k, v = L.gqa_qkv(sp, L.rmsnorm(p["ln1"], h), cfg.n_heads,
+                            cfg.n_kv_heads, cfg.d_head, pos[None], cfg.rope_theta)
+        c = dict(c, k=_ring_write(c["k"], k, pos), v=_ring_write(c["v"], v, pos))
+        cap = c["k"].shape[1]
+        valid = jnp.minimum(pos + 1, cap)
+        out = L.decode_attention(q, c["k"], c["v"], valid)
+        h = h + L.dense(sp["wo"], out.reshape(B, 1, -1))
+        if kind == "attn_cross":
+            hx = L.rmsnorm(p["lnx"], h)
+            cp = p["mix"]["cross"]
+            qx = L.dense(cp["wq"], hx).reshape(B, 1, cfg.n_heads, cfg.d_head)
+            if "mk" in c:   # §Perf: memory K/V cached at prefill
+                mk, mv = c["mk"], c["mv"]
+            else:
+                mk = L.dense(cp["wk"], memory).reshape(B, -1, cfg.n_kv_heads, cfg.d_head)
+                mv = L.dense(cp["wv"], memory).reshape(B, -1, cfg.n_kv_heads, cfg.d_head)
+            h = h + L.dense(cp["wo"], L.cross_attention_core(qx, mk, mv).reshape(B, 1, -1))
+    elif kind == "mla":
+        if cfg.mla_absorbed:
+            # §Perf: absorbed decode — no per-token cache re-expansion
+            q_nope, q_rope, latent = L.mla_q_and_latent(
+                p["mix"], L.rmsnorm(p["ln1"], h), cfg.n_heads, cfg,
+                pos[None], cfg.rope_theta)
+            c = dict(c, latent=_ring_write(c["latent"], latent, pos))
+            cap = c["latent"].shape[1]
+            valid = jnp.minimum(pos + 1, cap)
+            out = L.mla_absorbed_decode(p["mix"], q_nope, q_rope,
+                                        c["latent"], valid, cfg.n_heads, cfg)
+        else:
+            q, k, v, latent = L.mla_qkv(p["mix"], L.rmsnorm(p["ln1"], h),
+                                        cfg.n_heads, cfg, pos[None], cfg.rope_theta)
+            c = dict(c, latent=_ring_write(c["latent"], latent, pos))
+            cap = c["latent"].shape[1]
+            k_all, v_all = L.mla_expand(p["mix"], c["latent"], cfg.n_heads, cfg)
+            valid = jnp.minimum(pos + 1, cap)
+            out = L.decode_attention(q, k_all, v_all, valid)
+        h = h + L.dense(p["mix"]["wo"], out.reshape(B, 1, -1))
+    elif kind == "cross":
+        hx = L.rmsnorm(p["ln1"], h)
+        q = L.dense(p["mix"]["wq"], hx).reshape(B, 1, cfg.n_heads, cfg.d_head)
+        if "mk" in c:   # §Perf: memory K/V cached at prefill
+            mk, mv = c["mk"], c["mv"]
+        else:
+            mk = L.dense(p["mix"]["wk"], memory).reshape(B, -1, cfg.n_kv_heads, cfg.d_head)
+            mv = L.dense(p["mix"]["wv"], memory).reshape(B, -1, cfg.n_kv_heads, cfg.d_head)
+        h = h + L.dense(p["mix"]["wo"], L.cross_attention_core(q, mk, mv).reshape(B, 1, -1))
+    elif kind == "mamba":
+        st = (c["conv"], c["h"])
+        st, y = L.mamba_decode(p["mix"], st, L.rmsnorm(p["ln1"], h)[:, 0], cfg.ssm_state)
+        c = dict(c, conv=st[0], h=st[1])
+        h = h + y[:, None, :]
+    elif kind == "rwkv":
+        st = (c["x_prev"], c["S"])
+        st, y = L.rwkv6_decode(p["mix"], st, L.rmsnorm(p["ln1"], h)[:, 0], cfg.n_heads)
+        c = dict(c, x_prev=st[0], S=st[1])
+        h = h + y[:, None, :]
+    else:
+        raise ValueError(kind)
+    ffn_out, aux = _apply_ffn(cfg, ffn, p["ffn"], L.rmsnorm(p["ln2"], h))
+    return h + ffn_out, c
+
+
+def decode_step(cfg: ArchConfig, params, cache, token, memory_embeds=None):
+    """One decoding step.  token [B] int32 → (logits [B,V], new cache)."""
+    B = token.shape[0]
+    pos = cache["pos"]
+    h = params["embed"][token][:, None, :].astype(L.DTYPE)
+    memory = None
+    # §Perf: with cache_cross_kv the memory K/V live in the cache, so the
+    # encoder / vision projector is NOT re-run per decoded token.
+    if memory_embeds is not None and not cfg.cache_cross_kv:
+        if cfg.n_encoder_layers > 0:
+            memory = _encoder(cfg, params, memory_embeds)
+        elif cfg.frontend == "vision":
+            memory = L.dense(params["vis_proj"], memory_embeds.astype(L.DTYPE))
+
+    new_cache: Dict[str, Any] = {"pos": pos + 1}
+    for i, (kind, ffn) in enumerate(cfg.prefix):
+        h, new_cache[f"pre{i}"] = _decode_layer(
+            cfg, kind, ffn, params[f"pre{i}"], cache[f"pre{i}"], h, pos, memory)
+
+    def block_step(h, xs):
+        blk, bc = xs
+        nc = {}
+        for i, (kind, ffn) in enumerate(cfg.pattern):
+            h, nc[f"l{i}"] = _decode_layer(cfg, kind, ffn, blk[f"l{i}"], bc[f"l{i}"],
+                                           h, pos, memory)
+        return h, nc
+
+    h, new_cache["blocks"] = jax.lax.scan(block_step, h,
+                                          (params["blocks"], cache["blocks"]))
+    for i, (kind, ffn) in enumerate(cfg.suffix):
+        h, new_cache[f"suf{i}"] = _decode_layer(
+            cfg, kind, ffn, params[f"suf{i}"], cache[f"suf{i}"], h, pos, memory)
+
+    h = L.rmsnorm(params["final_norm"], h)
+    logits = L.dense(params["lm_head"], h)[:, 0].astype(jnp.float32)
+    return logits, new_cache
+
+
+def _to_ring(x, T: int, cap: int, seq_axis: int):
+    """Convert a length-T sequence tensor into ring-buffer layout with
+    capacity ``cap``: slot p%cap holds position p for the last cap
+    positions (matches ``_ring_write``'s indexing).  Static T, cap."""
+    if T >= cap:
+        sl = [slice(None)] * x.ndim
+        sl[seq_axis] = slice(T - cap, T)
+        arr = x[tuple(sl)]
+        return jnp.roll(arr, shift=T % cap, axis=seq_axis)
+    pad = [(0, 0)] * x.ndim
+    pad[seq_axis] = (0, cap - T)
+    return jnp.pad(x, pad)
+
+
+def _payload_to_cache(cfg, kind, pay, T: int, max_seq: int, scanned: bool):
+    """Convert a forward cache-payload into the decode cache structure.
+    ``scanned`` payloads carry a leading n_repeats axis."""
+    ax = 2 if scanned else 1  # seq axis of [R?,B,T,...]
+    if kind in ("attn", "local", "attn_cross"):
+        cap = _cache_cap(cfg, "local" if kind == "local" else "attn", max_seq)
+        k, v = pay[0], pay[1]
+        out = {"k": _to_ring(k, T, cap, ax), "v": _to_ring(v, T, cap, ax)}
+        if kind == "attn_cross" and len(pay) == 4:
+            out["mk"], out["mv"] = pay[2], pay[3]
+        return out
+    if kind == "mla":
+        cap = _cache_cap(cfg, "attn", max_seq)
+        return {"latent": _to_ring(pay, T, cap, ax)}
+    if kind == "cross":
+        if pay:
+            return {"mk": pay[0], "mv": pay[1]}
+        return {}
+    if kind == "mamba":
+        conv, hst = pay
+        return {"conv": conv, "h": hst}
+    if kind == "rwkv":
+        x_prev, S = pay
+        return {"x_prev": x_prev, "S": S}
+    raise ValueError(kind)
+
+
+def prefill(cfg: ArchConfig, params, tokens, memory_embeds=None, max_seq=None):
+    """Full-sequence forward that also populates the decode caches (ring
+    semantics for attention, final states for SSM).  Returns
+    (last-position logits [B,V], cache)."""
+    B, T = tokens.shape
+    max_seq = max_seq or T
+    h, _, payloads = forward(cfg, params, tokens, memory_embeds, emit_cache=True)
+    logits = L.dense(params["lm_head"], h[:, -1])
+
+    cache: Dict[str, Any] = {"pos": jnp.asarray(T, jnp.int32)}
+    for i, (kind, _) in enumerate(cfg.prefix):
+        cache[f"pre{i}"] = _payload_to_cache(cfg, kind, payloads[f"pre{i}"],
+                                             T, max_seq, scanned=False)
+    blk = {}
+    for i, (kind, _) in enumerate(cfg.pattern):
+        blk[f"l{i}"] = _payload_to_cache(cfg, kind, payloads["blocks"][f"l{i}"],
+                                         T, max_seq, scanned=True)
+    cache["blocks"] = blk
+    for i, (kind, _) in enumerate(cfg.suffix):
+        cache[f"suf{i}"] = _payload_to_cache(cfg, kind, payloads[f"suf{i}"],
+                                             T, max_seq, scanned=False)
+    return logits.astype(jnp.float32), cache

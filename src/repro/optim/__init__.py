@@ -1,0 +1,10 @@
+from .sgd import eq3_momentum_step, local_train_epochs, sgd_step
+from .schedule import constant_schedule, wsd_schedule
+
+__all__ = [
+    "eq3_momentum_step",
+    "local_train_epochs",
+    "sgd_step",
+    "constant_schedule",
+    "wsd_schedule",
+]

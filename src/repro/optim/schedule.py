@@ -1,0 +1,42 @@
+"""Learning-rate schedules.
+
+``wsd_schedule`` (Warmup–Stable–Decay) is required by the minicpm-2b
+assigned architecture [arXiv:2404.06395]; FedQS itself adapts the *local*
+lr multiplicatively on top of whatever schedule the deployment uses.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(base_lr: float):
+    def fn(step):
+        return jnp.asarray(base_lr, jnp.float32)
+
+    return fn
+
+
+def wsd_schedule(
+    base_lr: float,
+    warmup_steps: int,
+    stable_steps: int,
+    decay_steps: int,
+    final_ratio: float = 0.1,
+):
+    """Warmup–Stable–Decay: linear warmup, flat plateau, exponential-ish
+    (here cosine-to-ratio) decay tail, per MiniCPM."""
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+        decay_t = jnp.clip(
+            (step - warmup_steps - stable_steps) / jnp.maximum(decay_steps, 1), 0.0, 1.0
+        )
+        decay = base_lr * (final_ratio + (1 - final_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * decay_t)))
+        return jnp.where(
+            step < warmup_steps,
+            warm,
+            jnp.where(step < warmup_steps + stable_steps, base_lr, decay),
+        )
+
+    return fn

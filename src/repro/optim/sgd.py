@@ -1,0 +1,62 @@
+"""Local optimizer implementing paper Eq. 3.
+
+Eq. 3 momentum is a geometric accumulation over the *local* trajectory:
+
+    w_{i,e} = w_{i,e−1} − η_i [ Σ_{r=1..e} m^r ∇F_{i,e−r} + ∇F_{i,e} ]
+
+The bracket telescopes into the recursion  v_e = g_e + m · v_{e−1}
+(v_0 = 0), since  v_e = g_e + m g_{e−1} + m² g_{e−2} + …  matches the
+paper's sum term-for-term.  With m=0 this is plain SGD, which is what
+FSBC / SSBC-Situation-2 clients run.
+
+Gradients are clipped by global norm at G_c (Assumption A.2 justification:
+"the gradient clipping threshold can be directly utilized as the upper
+bound").
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Params, tree_clip_by_global_norm, tree_zeros_like
+
+
+def eq3_momentum_step(
+    params: Params,
+    velocity: Params,
+    grads: Params,
+    lr,
+    momentum,
+) -> Tuple[Params, Params]:
+    """One Eq-3 step: v ← g + m·v ; w ← w − η·v. Returns (params, velocity)."""
+    velocity = jax.tree_util.tree_map(lambda g, v: g + momentum * v, grads, velocity)
+    params = jax.tree_util.tree_map(lambda w, v: w - lr * v, params, velocity)
+    return params, velocity
+
+
+def sgd_step(params: Params, grads: Params, lr) -> Params:
+    return jax.tree_util.tree_map(lambda w, g: w - lr * g, params, grads)
+
+
+def local_train_epochs(
+    params: Params,
+    grad_fn: Callable[[Params, dict], Params],
+    batches,
+    lr,
+    momentum,
+    grad_clip: float = 20.0,
+) -> Tuple[Params, Params]:
+    """Run the client's E local epochs (one batch = one epoch, paper E=2).
+
+    Returns (final params, final velocity).  The uploaded FedQS-SGD payload
+    is the model difference  δ = w_start − w_end = η Σ_e v_e, equal to the
+    paper's η_i Σ_e ΔF_{i,e} (Remark B.1 / §3.4).
+    """
+    velocity = tree_zeros_like(params)
+    for batch in batches:
+        grads = grad_fn(params, batch)
+        grads = tree_clip_by_global_norm(grads, grad_clip)
+        params, velocity = eq3_momentum_step(params, velocity, grads, lr, momentum)
+    return params, velocity

@@ -1,0 +1,12 @@
+import os
+import sys
+
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke
+# tests and benches must see the real (1-device) CPU topology; only
+# repro.launch.dryrun uses the 512 placeholder devices.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import settings
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")

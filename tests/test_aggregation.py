@@ -1,0 +1,128 @@
+"""Mod-3 (server aggregation) unit + property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.aggregation import (
+    aggregate_gradients,
+    aggregate_models,
+    aggregation_weights,
+    feedback_weight,
+    server_aggregate,
+    staleness_weight,
+    update_table,
+)
+from repro.core.types import (
+    AggregationStrategy,
+    FedQSHyperParams,
+    ServerTable,
+    Update,
+    tree_weighted_sum,
+)
+
+HP = FedQSHyperParams()
+
+
+class TestTable:
+    def test_eq1_updates(self):
+        t = ServerTable.init(4)
+        t = update_table(t, jnp.asarray([1, 3]), jnp.asarray([0.5, -0.2]))
+        assert t.counts.tolist() == [0, 1, 0, 1]
+        np.testing.assert_allclose(np.asarray(t.sims), [0, 0.5, 0, -0.2], atol=1e-7)
+
+    def test_duplicate_cids_count_twice(self):
+        t = ServerTable.init(2)
+        t = update_table(t, jnp.asarray([0, 0]), jnp.asarray([0.1, 0.7]))
+        assert int(t.counts[0]) == 2
+        assert float(t.sims[0]) == pytest.approx(0.7)  # last wins
+
+
+class TestWeights:
+    def test_staleness_weight_identity_at_phi(self):
+        assert float(staleness_weight(jnp.float32(0.3), jnp.float32(0.3))) == pytest.approx(1.0)
+
+    def test_feedback_weight_formula(self):
+        K, N = 10, 100
+        F, G = jnp.float32(0.5), jnp.float32(2.0)
+        phi = K / N
+        want = np.exp(phi - 0.5) / 2 ** (phi - 0.5) * (1 + 2.0) ** 2 / K
+        assert float(feedback_weight(F, G, K, N)) == pytest.approx(want, rel=1e-5)
+
+    @given(hnp.arrays(np.float32, st.integers(2, 12),
+                      elements=st.floats(0.125, 10.0)))
+    def test_weights_normalized_and_nonnegative(self, fg):
+        K = len(fg)
+        n = jnp.ones((K,), jnp.int32) * 10
+        fb = jnp.asarray([i % 2 == 0 for i in range(K)])
+        p = aggregation_weights(n, fb, jnp.asarray(fg), jnp.asarray(fg), K, 100)
+        p = np.asarray(p)
+        assert (p >= 0).all()
+        assert p.sum() == pytest.approx(1.0, abs=1e-5)
+
+    def test_no_feedback_gives_sample_weights(self):
+        n = jnp.asarray([10, 30], jnp.int32)
+        fb = jnp.asarray([False, False])
+        p = aggregation_weights(n, fb, jnp.ones(2), jnp.ones(2), 2, 10)
+        np.testing.assert_allclose(np.asarray(p), [0.25, 0.75], atol=1e-6)
+
+
+class TestAggregation:
+    def test_gradient_aggregation_descends(self):
+        w = {"a": jnp.asarray([1.0, 1.0])}
+        deltas = [{"a": jnp.asarray([0.2, 0.0])}, {"a": jnp.asarray([0.0, 0.4])}]
+        new = aggregate_gradients(w, deltas, jnp.asarray([0.5, 0.5]), eta_g=1.0)
+        np.testing.assert_allclose(np.asarray(new["a"]), [0.9, 0.8], atol=1e-6)
+
+    @given(hnp.arrays(np.float32, (3, 4), elements=st.floats(-5, 5, width=32)))
+    def test_model_aggregation_is_convex_combination(self, ws):
+        models = [{"w": jnp.asarray(row)} for row in ws]
+        p = jnp.asarray([0.2, 0.3, 0.5])
+        out = np.asarray(aggregate_models(models, p)["w"])
+        lo, hi = ws.min(0), ws.max(0)
+        assert (out >= lo - 1e-4).all() and (out <= hi + 1e-4).all()
+
+    def test_tree_weighted_sum_linear(self):
+        trees = [{"x": jnp.ones(3) * i} for i in (1.0, 2.0)]
+        out = tree_weighted_sum(trees, jnp.asarray([0.5, 0.5]))
+        np.testing.assert_allclose(np.asarray(out["x"]), 1.5 * np.ones(3))
+
+
+def _mk_update(cid, sim, feedback, delta_val, n=10):
+    return Update(cid=cid, n_samples=n, stale_round=0, lr=0.1,
+                  similarity=sim, feedback=feedback, speed_f=0.01,
+                  delta={"w": jnp.ones(2) * delta_val},
+                  params={"w": jnp.ones(2) * (1 - delta_val)})
+
+
+class TestServerAggregate:
+    def test_full_pass_gradient(self):
+        table = ServerTable.init(10)
+        w = {"w": jnp.ones(2)}
+        buf = [_mk_update(0, 0.5, False, 0.1), _mk_update(1, 0.3, True, 0.2)]
+        new, table2, p = server_aggregate(
+            AggregationStrategy.GRADIENT, w, buf, table, HP, 10)
+        assert float(jnp.sum(p)) == pytest.approx(1.0, abs=1e-5)
+        assert int(table2.counts[0]) == 1 and int(table2.counts[1]) == 1
+        # descent happened
+        assert (np.asarray(new["w"]) < 1.0).all()
+
+    def test_full_pass_model(self):
+        table = ServerTable.init(10)
+        w = {"w": jnp.ones(2)}
+        buf = [_mk_update(0, 0.5, False, 0.1), _mk_update(1, 0.3, False, 0.2)]
+        new, _, p = server_aggregate(
+            AggregationStrategy.MODEL, w, buf, table, HP, 10)
+        lo = min(0.9, 0.8)
+        hi = max(0.9, 0.8)
+        assert (np.asarray(new["w"]) >= lo - 1e-6).all()
+        assert (np.asarray(new["w"]) <= hi + 1e-6).all()
+
+    def test_feedback_ablation_switch(self):
+        hp = FedQSHyperParams(use_feedback=False)
+        table = ServerTable.init(10)
+        w = {"w": jnp.ones(2)}
+        buf = [_mk_update(0, 0.5, True, 0.1), _mk_update(1, 0.3, True, 0.2)]
+        _, _, p = server_aggregate(AggregationStrategy.MODEL, w, buf, table, hp, 10)
+        np.testing.assert_allclose(np.asarray(p), [0.5, 0.5], atol=1e-6)

@@ -1,0 +1,140 @@
+"""Mod-2 (divide-and-conquer adaptation) unit + property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.classify import (
+    adapt,
+    adapt_learning_rate,
+    classify_quadrant,
+    mean_similarity,
+    momentum_rate,
+    speed_ratio,
+    ssbc_situation,
+    update_speed,
+)
+from repro.core.types import FedQSHyperParams, Quadrant, SSBCSituation
+
+HP = FedQSHyperParams()
+
+pos = st.floats(1e-4, 1e3, allow_nan=False)
+sim = st.floats(-1.0, 1.0, allow_nan=False)
+
+
+class TestQuadrants:
+    def test_four_corners(self):
+        # (fast, biased) (fast, weak) (slow, weak) (slow, biased)
+        assert int(classify_quadrant(2.0, 1.0, 0.1, 0.5)) == Quadrant.FSBC
+        assert int(classify_quadrant(2.0, 1.0, 0.9, 0.5)) == Quadrant.FWBC
+        assert int(classify_quadrant(0.5, 1.0, 0.9, 0.5)) == Quadrant.SWBC
+        assert int(classify_quadrant(0.5, 1.0, 0.1, 0.5)) == Quadrant.SSBC
+
+    @given(pos, pos, sim, sim)
+    def test_partition_total_and_disjoint(self, f, fb, s, sb):
+        q = int(classify_quadrant(f, fb, s, sb))
+        assert q in (0, 1, 2, 3)
+        # consistency with the defining inequalities
+        fast, weak = f > fb, s >= sb
+        expect = {(True, False): 0, (True, True): 1,
+                  (False, True): 2, (False, False): 3}[(fast, weak)]
+        assert q == expect
+
+
+class TestLearningRate:
+    def test_fsbc_keeps_lr(self):
+        lr = adapt_learning_rate(jnp.float32(0.1), jnp.int32(Quadrant.FSBC), 1.0, HP)
+        assert float(lr) == pytest.approx(0.1)
+
+    def test_fwbc_decreases_lr(self):
+        lr = adapt_learning_rate(jnp.float32(0.1), jnp.int32(Quadrant.FWBC), 1.0, HP)
+        assert float(lr) == pytest.approx(0.1 - HP.a)
+
+    def test_stragglers_increase_lr(self):
+        for q in (Quadrant.SWBC, Quadrant.SSBC):
+            lr = adapt_learning_rate(jnp.float32(0.1), jnp.int32(q), 2.0, HP)
+            assert float(lr) == pytest.approx(0.1 + HP.a * 2.0)
+
+    @given(st.floats(0.001, 0.5), pos,
+           st.sampled_from([0, 1, 2, 3]))
+    def test_lr_always_within_bounds(self, lr0, F, q):
+        lr = adapt_learning_rate(jnp.float32(lr0), jnp.int32(q), jnp.float32(F), HP)
+        assert HP.lr_min - 1e-7 <= float(lr) <= HP.lr_max + 1e-7
+
+
+class TestMomentum:
+    def test_momentum_formula(self):
+        # m = m0 + k(1/G − 1)
+        m = momentum_rate(jnp.float32(0.5), HP)
+        assert float(m) == pytest.approx(HP.m0 + HP.k * (1 / 0.5 - 1))
+
+    @given(pos)
+    def test_momentum_clipped(self, G):
+        m = float(momentum_rate(jnp.float32(G), HP))
+        assert 0.0 <= m <= HP.momentum_max
+
+    def test_aligned_clients_get_more_momentum(self):
+        # smaller G = s̄/s_i (client more aligned) ⇒ larger momentum
+        assert float(momentum_rate(jnp.float32(0.5), HP)) > float(
+            momentum_rate(jnp.float32(2.0), HP))
+
+
+class TestSSBCSituation:
+    def test_uniform_labels_is_straggler(self):
+        acc = jnp.asarray([0.8, 0.82, 0.79, 0.81])
+        assert int(ssbc_situation(acc, 0.5)) == SSBCSituation.STRAGGLER
+
+    def test_dispersed_labels_is_situation2(self):
+        acc = jnp.asarray([0.95, 0.05, 0.9, 0.02])
+        assert int(ssbc_situation(acc, 0.5)) == SSBCSituation.DISPERSED
+
+    def test_nan_labels_ignored(self):
+        acc = jnp.asarray([0.8, jnp.nan, 0.8, jnp.nan])
+        assert int(ssbc_situation(acc, 0.5)) == SSBCSituation.STRAGGLER
+
+
+class TestAdaptEndToEnd:
+    def test_fsbc_raises_feedback_no_momentum(self):
+        d = adapt(2.0, 1.0, 0.1, 0.5, 0.1, HP)
+        assert int(d.quadrant) == Quadrant.FSBC
+        assert bool(d.feedback)
+        assert float(d.momentum) == 0.0
+
+    def test_ssbc_situation2_raises_feedback(self):
+        d = adapt(0.5, 1.0, 0.1, 0.5, 0.1, HP, ssbc_sit=SSBCSituation.DISPERSED)
+        assert int(d.quadrant) == Quadrant.SSBC
+        assert bool(d.feedback)
+        assert float(d.momentum) == 0.0
+
+    def test_ssbc_situation1_gets_momentum(self):
+        # mildly-biased straggler: momentum path, no feedback.  (A *strongly*
+        # anti-aligned SSBC gets m clipped to 0 — the Eq-3 formula m0+k(1/G−1)
+        # goes negative for G ≫ 1, which is the paper's intended damping.)
+        d = adapt(0.5, 1.0, 0.45, 0.5, 0.1, HP, ssbc_sit=SSBCSituation.STRAGGLER)
+        assert not bool(d.feedback)
+        assert float(d.momentum) > 0.0
+        # strongly-biased straggler: momentum floors at 0
+        d2 = adapt(0.5, 1.0, 0.1, 0.5, 0.1, HP, ssbc_sit=SSBCSituation.STRAGGLER)
+        assert float(d2.momentum) == 0.0
+
+    def test_momentum_ablation_switch(self):
+        hp = FedQSHyperParams(use_momentum=False)
+        d = adapt(0.5, 1.0, 0.9, 0.5, 0.1, hp)
+        assert float(d.momentum) == 0.0
+
+    @given(pos, pos, sim, sim)
+    def test_F_G_ratios_clamped(self, f, fb, s, sb):
+        d = adapt(f, fb, s, sb, 0.1, HP)
+        assert 1 / HP.ratio_clip <= float(d.F) <= HP.ratio_clip
+        assert 1 / HP.ratio_clip <= float(d.G) <= HP.ratio_clip
+
+
+def test_update_speed_eq2():
+    counts = jnp.asarray([2, 4, 2, 0])
+    f, f_bar = update_speed(counts)
+    np.testing.assert_allclose(np.asarray(f), [0.25, 0.5, 0.25, 0.0])
+    assert float(f_bar) == pytest.approx(0.25)  # = 1/N
+
+
+def test_mean_similarity():
+    assert float(mean_similarity(jnp.asarray([0.0, 1.0]))) == pytest.approx(0.5)

@@ -1,0 +1,97 @@
+"""Data pipeline: partition laws + federated dataset invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (
+    dirichlet_partition,
+    lognormal_partition,
+    make_federated_data,
+    synth_adult,
+    synth_cifar10,
+    synth_shakespeare,
+)
+
+
+class TestSynthetics:
+    def test_cifar_deterministic(self):
+        x1, y1 = synth_cifar10(n=100, seed=7)
+        x2, y2 = synth_cifar10(n=100, seed=7)
+        np.testing.assert_array_equal(x1, x2)
+        np.testing.assert_array_equal(y1, y2)
+        assert x1.shape == (100, 16, 16, 3)
+
+    def test_cifar_learnable_structure(self):
+        """Class templates must separate: same-class pairs closer than
+        cross-class pairs on average."""
+        x, y = synth_cifar10(n=400, seed=0)
+        x = x.reshape(len(x), -1)
+        c0, c1 = x[y == 0], x[y == 1]
+        intra = np.linalg.norm(c0[:10] - c0[10:20], axis=1).mean()
+        inter = np.linalg.norm(c0[:10] - c1[:10], axis=1).mean()
+        assert inter > intra * 0.99
+
+    def test_shakespeare_roles_distinct(self):
+        data = synth_shakespeare(n_roles=3, chars_per_role=512, seed=0)
+        assert set(data) == {0, 1, 2}
+        x0, _ = data[0]
+        x1, _ = data[1]
+        assert not np.array_equal(x0[: len(x1)], x1[: len(x0)])
+
+    def test_adult_group_correlation(self):
+        x, y, g = synth_adult(n=4000, seed=0)
+        # the sensitive attribute shifts covariate 0 (heterogeneity source)
+        assert x[g == 1, 0].mean() > x[g == 0, 0].mean() + 0.3
+
+
+class TestPartitioners:
+    @given(st.sampled_from([0.1, 0.5, 1.0]), st.integers(4, 12))
+    @settings(max_examples=6, deadline=None)
+    def test_dirichlet_partition_covers_everything(self, alpha, n_clients):
+        y = np.random.default_rng(0).integers(0, 10, 600)
+        parts = dirichlet_partition(y, n_clients, alpha, seed=1)
+        all_idx = np.sort(np.concatenate(parts))
+        np.testing.assert_array_equal(all_idx, np.arange(600))
+
+    def test_dirichlet_skew_increases_as_alpha_drops(self):
+        y = np.random.default_rng(0).integers(0, 10, 4000)
+
+        def label_skew(alpha):
+            parts = dirichlet_partition(y, 10, alpha, seed=3)
+            stds = []
+            for ix in parts:
+                hist = np.bincount(y[ix], minlength=10) / max(len(ix), 1)
+                stds.append(hist.std())
+            return np.mean(stds)
+
+        assert label_skew(0.1) > label_skew(10.0)
+
+    def test_lognormal_sizes_positive(self):
+        parts = lognormal_partition(1000, 10, sigma=1.0, seed=0)
+        assert all(len(p) >= 8 for p in parts)
+
+
+class TestFederatedData:
+    @pytest.mark.parametrize("task", ["cv", "nlp", "rwd"])
+    def test_build_and_shapes(self, task):
+        fed = make_federated_data(task, 6, seed=0, n_total=600)
+        assert fed.n_clients == 6
+        for c in fed.clients:
+            assert c.n > 0 and len(c.val_x) > 0
+        assert len(fed.test_x) > 0
+
+    def test_per_label_val_accuracy_nan_for_missing(self):
+        fed = make_federated_data("cv", 8, alpha=0.1, seed=0, n_total=600)
+        c = fed.clients[0]
+        acc = c.per_label_val_accuracy(lambda x: np.zeros(len(x), np.int64), 10)
+        # label 0 predicted everywhere: accuracy defined only where label present
+        present = np.unique(c.val_y)
+        for lab in range(10):
+            if lab not in present:
+                assert np.isnan(acc[lab])
+
+    def test_batches_respect_epochs(self):
+        fed = make_federated_data("rwd", 4, seed=0, n_total=400)
+        batches = list(fed.clients[0].batches(16, epoch_seed=0, n_batches=3))
+        assert len(batches) == 3
+        assert batches[0]["x"].shape[0] <= 16

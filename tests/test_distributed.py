@@ -1,0 +1,136 @@
+"""Distributed FedQS round step: correctness on the host (1-device) mesh.
+
+The production 256/512-chip lowering is exercised by
+``repro.launch.dryrun`` (deliverable e); here we verify the *numerics* of
+the same step functions at toy scale.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_reduced
+from repro.core.distributed import (
+    RoundState,
+    input_specs,
+    make_fedqs_round_step,
+    make_prefill_step,
+    make_serve_step,
+)
+from repro.core.types import FedQSHyperParams
+
+KEY = jax.random.PRNGKey(0)
+HP = FedQSHyperParams(local_epochs=2)
+
+
+def _setup(aid="phi4-mini-3.8b", C=4, b=2, S=16, fl_mode=None, **cfg_kw):
+    import dataclasses
+    from repro.models import transformer as T
+
+    cfg = get_reduced(aid)
+    if fl_mode:
+        cfg = dataclasses.replace(cfg, fl_mode=fl_mode)
+    params = T.init_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (C, b, S), 0, cfg.vocab)
+    batch = {"tokens": tokens, "targets": tokens}
+    if cfg.frontend != "none":
+        batch["memory_embeds"] = jax.random.normal(
+            KEY, (C, b, cfg.n_frontend_tokens, cfg.d_model))
+    state = RoundState(
+        params=params,
+        prev_params=jax.tree_util.tree_map(lambda x: x * 0.999, params),
+        lr=jnp.full((C,), 0.05),
+        momentum=jnp.full((C,), 0.1),
+        counts=jnp.ones((10,), jnp.int32),
+        sims=jnp.full((10,), 0.3),
+    )
+    return cfg, state, batch, jnp.arange(C, dtype=jnp.int32), jnp.zeros((C,))
+
+
+class TestRoundStep:
+    @pytest.mark.parametrize("mode", ["stacked", "fsdp"])
+    @pytest.mark.parametrize("strategy", ["sgd", "avg"])
+    def test_round_updates_and_is_finite(self, mode, strategy):
+        cfg, state, batch, cids, stale = _setup(fl_mode=mode)
+        step = jax.jit(make_fedqs_round_step(cfg, HP, strategy=strategy,
+                                             n_clients=4, total_clients=10))
+        new_state, metrics = step(state, batch, cids, stale)
+        assert np.isfinite(float(metrics["loss"]))
+        # params actually moved
+        d = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree_util.tree_leaves(new_state.params),
+                                jax.tree_util.tree_leaves(state.params)))
+        assert d > 0
+        # table advanced by C participations
+        assert int(jnp.sum(new_state.counts)) == int(jnp.sum(state.counts)) + 4
+        # prev_params rolled forward (Mod-1 window)
+        for a, b in zip(jax.tree_util.tree_leaves(new_state.prev_params),
+                        jax.tree_util.tree_leaves(state.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_stacked_and_fsdp_agree_numerically(self):
+        """Both execution strategies implement the same math (sgd path,
+        uniform weights when no feedback fires)."""
+        cfg_s, st_s, batch, cids, stale = _setup(fl_mode="stacked")
+        cfg_f, st_f, _, _, _ = _setup(fl_mode="fsdp")
+        step_s = jax.jit(make_fedqs_round_step(cfg_s, HP, strategy="sgd",
+                                               n_clients=4, total_clients=10))
+        step_f = jax.jit(make_fedqs_round_step(cfg_f, HP, strategy="sgd",
+                                               n_clients=4, total_clients=10))
+        ns, _ = step_s(st_s, batch, cids, stale)
+        nf, _ = step_f(st_f, batch, cids, stale)
+        for a, b in zip(jax.tree_util.tree_leaves(ns.params),
+                        jax.tree_util.tree_leaves(nf.params)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=2e-2, atol=2e-2)
+
+    def test_loss_decreases_over_rounds(self):
+        cfg, state, batch, cids, stale = _setup()
+        step = jax.jit(make_fedqs_round_step(cfg, HP, strategy="sgd",
+                                             n_clients=4, total_clients=10))
+        losses = []
+        for _ in range(5):
+            state, metrics = step(state, batch, cids, stale)
+            losses.append(float(metrics["loss"]))
+        assert losses[-1] < losses[0]
+
+    def test_similarity_vector_bounded(self):
+        cfg, state, batch, cids, stale = _setup()
+        step = jax.jit(make_fedqs_round_step(cfg, HP, n_clients=4, total_clients=10))
+        new_state, metrics = step(state, batch, cids, stale)
+        s = np.asarray(new_state.sims[np.asarray(cids)])
+        assert (s >= -1.001).all() and (s <= 1.001).all()
+
+
+class TestServePrefill:
+    def test_serve_step_advances_cache(self):
+        from repro.models import transformer as T
+        cfg = get_reduced("gemma3-1b")
+        params = T.init_params(cfg, KEY)
+        cache = T.init_cache(cfg, B=2, max_seq=32)
+        serve = jax.jit(make_serve_step(cfg))
+        toks = jnp.asarray([1, 2], jnp.int32)
+        logits, cache = serve(params, cache, toks)
+        assert logits.shape == (2, cfg.vocab)
+        assert int(cache["pos"]) == 1
+
+    def test_input_specs_cover_all_modes(self):
+        cfg = get_reduced("phi4-mini-3.8b")
+        for name, shape in INPUT_SHAPES.items():
+            specs = input_specs(cfg, shape, n_clients=4)
+            assert isinstance(specs, dict) and specs
+            if shape.mode == "train":
+                C, b, S = specs["batch"]["tokens"].shape
+                assert C * b == shape.global_batch and S == shape.seq_len
+            elif shape.mode == "decode":
+                assert specs["tokens"].shape == (shape.global_batch,)
+                assert specs["cache"]["pos"].shape == ()
+
+    def test_input_specs_are_abstract(self):
+        """Dry-run inputs must be ShapeDtypeStructs (no allocation)."""
+        cfg = get_reduced("kimi-k2-1t-a32b")
+        specs = input_specs(cfg, INPUT_SHAPES["train_4k"], n_clients=4)
+        for leaf in jax.tree_util.tree_leaves(specs,
+                                              is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)

@@ -1,0 +1,103 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the ref.py oracles,
+executed with interpret=True on CPU (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.similarity import cosine_from_stats, fused_similarity_stats
+from repro.kernels.weighted_agg import weighted_agg
+from repro.kernels.window_attention import window_decode_attention
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestWeightedAgg:
+    @pytest.mark.parametrize("K,D", [(2, 64), (4, 100), (8, 4096), (16, 5000),
+                                     (10, 12289), (3, 1)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, K, D, dtype):
+        x = jax.random.normal(KEY, (K, D), dtype)
+        w = jax.random.uniform(jax.random.PRNGKey(1), (K,))
+        got = weighted_agg(x, w, interpret=True)
+        want = ref.weighted_agg_ref(x, w)
+        np.testing.assert_allclose(got, want, rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                                   atol=1e-4)
+
+    def test_convex_weights_bound_output(self):
+        x = jax.random.normal(KEY, (5, 200))
+        w = jnp.full((5,), 0.2)
+        got = np.asarray(weighted_agg(x, w, interpret=True))
+        xs = np.asarray(x)
+        assert (got <= xs.max(0) + 1e-5).all() and (got >= xs.min(0) - 1e-5).all()
+
+    @given(st.integers(2, 8), st.integers(1, 300))
+    @settings(max_examples=10)
+    def test_property_shapes(self, K, D):
+        x = jnp.ones((K, D))
+        w = jnp.ones((K,)) / K
+        got = weighted_agg(x, w, interpret=True)
+        assert got.shape == (D,)
+        np.testing.assert_allclose(got, np.ones(D), rtol=1e-5)
+
+
+class TestSimilarity:
+    @pytest.mark.parametrize("D", [64, 1000, 65536, 70000, 131073])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_stats_match_ref(self, D, dtype):
+        a = jax.random.normal(KEY, (D,), dtype)
+        b = jax.random.normal(jax.random.PRNGKey(1), (D,), dtype)
+        got = fused_similarity_stats(a, b, interpret=True)
+        want = ref.fused_similarity_stats_ref(a, b)
+        np.testing.assert_allclose(got, want,
+                                   rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+    def test_cosine_of_self_is_one(self):
+        a = jax.random.normal(KEY, (5000,))
+        s = cosine_from_stats(a, a, interpret=True)
+        assert float(s) == pytest.approx(1.0, abs=1e-5)
+
+    def test_cosine_orthogonal(self):
+        a = jnp.concatenate([jnp.ones(64), jnp.zeros(64)])
+        b = jnp.concatenate([jnp.zeros(64), jnp.ones(64)])
+        s = cosine_from_stats(a, b, interpret=True)
+        assert float(s) == pytest.approx(0.0, abs=1e-6)
+
+
+class TestWindowAttention:
+    @pytest.mark.parametrize("B,H,KV,W,dh", [
+        (1, 4, 4, 32, 16), (2, 8, 2, 64, 32), (2, 8, 8, 128, 64),
+        (1, 16, 2, 256, 128), (3, 4, 1, 32, 16),
+    ])
+    def test_matches_ref_full_window(self, B, H, KV, W, dh):
+        q = jax.random.normal(KEY, (B, H, dh))
+        k = jax.random.normal(jax.random.PRNGKey(1), (B, W, KV, dh))
+        v = jax.random.normal(jax.random.PRNGKey(2), (B, W, KV, dh))
+        got = window_decode_attention(q, k, v, jnp.asarray(W), interpret=True)
+        want = ref.window_decode_attention_ref(q, k, v, jnp.asarray(W))
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("valid", [1, 7, 31, 64])
+    def test_partial_validity_masking(self, valid):
+        B, H, KV, W, dh = 2, 4, 2, 64, 32
+        q = jax.random.normal(KEY, (B, H, dh))
+        k = jax.random.normal(jax.random.PRNGKey(1), (B, W, KV, dh))
+        v = jax.random.normal(jax.random.PRNGKey(2), (B, W, KV, dh))
+        got = window_decode_attention(q, k, v, jnp.asarray(valid), interpret=True)
+        want = ref.window_decode_attention_ref(q, k, v, jnp.asarray(valid))
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+    def test_invalid_slots_do_not_leak(self):
+        """Changing dead-slot contents must not change the output."""
+        B, H, KV, W, dh = 1, 4, 2, 32, 16
+        q = jax.random.normal(KEY, (B, H, dh))
+        k = jax.random.normal(jax.random.PRNGKey(1), (B, W, KV, dh))
+        v = jax.random.normal(jax.random.PRNGKey(2), (B, W, KV, dh))
+        valid = jnp.asarray(10)
+        out1 = window_decode_attention(q, k, v, valid, interpret=True)
+        k2 = k.at[:, 10:].set(999.0)
+        v2 = v.at[:, 10:].set(-999.0)
+        out2 = window_decode_attention(q, k2, v2, valid, interpret=True)
+        np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,69 @@
+"""Eq-3 momentum optimizer + schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.types import tree_clip_by_global_norm, tree_global_norm
+from repro.optim import eq3_momentum_step, local_train_epochs, wsd_schedule
+
+
+def test_eq3_recursion_matches_closed_form():
+    """v_e = g_e + m·g_{e−1} + m²·g_{e−2} + …  (paper Eq. 3 bracket)."""
+    m = 0.5
+    gs = [jnp.asarray([1.0]), jnp.asarray([2.0]), jnp.asarray([4.0])]
+    w = jnp.asarray([0.0])
+    v = jnp.zeros(1)
+    steps = []
+    for g in gs:
+        w, v = eq3_momentum_step(w, v, g, lr=1.0, momentum=m)
+        steps.append(float(v[0]))
+    # closed forms
+    assert steps[0] == pytest.approx(1.0)
+    assert steps[1] == pytest.approx(2.0 + m * 1.0)
+    assert steps[2] == pytest.approx(4.0 + m * 2.0 + m * m * 1.0)
+
+
+def test_zero_momentum_is_plain_sgd():
+    w = jnp.asarray([1.0])
+    v = jnp.zeros(1)
+    w2, _ = eq3_momentum_step(w, v, jnp.asarray([0.5]), lr=0.1, momentum=0.0)
+    assert float(w2[0]) == pytest.approx(1.0 - 0.05)
+
+
+def test_local_train_delta_equals_eta_sum_v():
+    """Uploaded δ = w_start − w_end = η Σ_e v_e (Remark B.1)."""
+    grads = iter([{"w": jnp.asarray([1.0])}, {"w": jnp.asarray([1.0])}])
+
+    def grad_fn(params, batch):
+        return next(grads)
+
+    w0 = {"w": jnp.asarray([0.0])}
+    w_end, _ = local_train_epochs(w0, grad_fn, [None, None], lr=0.1,
+                                  momentum=0.5, grad_clip=100.0)
+    # v1=1, v2=1+0.5=1.5 ⇒ δ=0.1·2.5=0.25
+    assert float(w0["w"][0] - w_end["w"][0]) == pytest.approx(0.25)
+
+
+@given(st.floats(0.1, 50.0))
+def test_clip_by_global_norm_bound(max_norm):
+    tree = {"a": jnp.ones((4,)) * 10.0, "b": jnp.ones((2, 2)) * -10.0}
+    clipped = tree_clip_by_global_norm(tree, max_norm)
+    assert float(tree_global_norm(clipped)) <= max_norm * (1 + 1e-5)
+
+
+def test_clip_noop_under_threshold():
+    tree = {"a": jnp.asarray([0.1, 0.1])}
+    out = tree_clip_by_global_norm(tree, 20.0)
+    np.testing.assert_allclose(np.asarray(out["a"]), [0.1, 0.1], rtol=1e-6)
+
+
+def test_wsd_schedule_phases():
+    sched = wsd_schedule(1.0, warmup_steps=10, stable_steps=10, decay_steps=10)
+    assert float(sched(0)) == pytest.approx(0.0)
+    assert float(sched(5)) == pytest.approx(0.5)
+    assert float(sched(15)) == pytest.approx(1.0)
+    assert float(sched(30)) == pytest.approx(0.1, abs=1e-6)  # final_ratio
+    # monotone decay in the tail
+    assert float(sched(22)) > float(sched(27))

@@ -1,0 +1,105 @@
+"""SAFL engine behaviour: buffering, staleness, table updates, dynamics."""
+import numpy as np
+import pytest
+
+from repro.core import FedQSHyperParams, SAFLEngine, make_algorithm
+from repro.core.safl import (
+    scenario_dropout,
+    scenario_resource_scale,
+    scenario_unstable_resources,
+)
+from repro.data import make_federated_data
+from repro.models import make_mlp_spec
+
+
+@pytest.fixture(scope="module")
+def rwd_data():
+    return make_federated_data("rwd", 10, sigma=1.0, seed=0, n_total=1000)
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return make_mlp_spec()
+
+
+def _run(data, spec, name="fedqs-sgd", rounds=8, hp=None, **kw):
+    hp = hp or FedQSHyperParams(buffer_k=4)
+    eng = SAFLEngine(data, spec, make_algorithm(name, hp), hp, seed=1, **kw)
+    return eng, eng.run(rounds)
+
+
+class TestEngineMechanics:
+    def test_buffer_trigger_counts_rounds(self, rwd_data, spec):
+        eng, res = _run(rwd_data, spec, rounds=6)
+        assert eng.round == 6
+        assert len(res.metrics) == 6
+
+    def test_staleness_occurs_under_heterogeneity(self, rwd_data, spec):
+        eng, res = _run(rwd_data, spec, rounds=10)
+        # with 1:50 resources some buffered updates must be stale
+        assert any(m.n_stale > 0 for m in res.metrics)
+
+    def test_table_tracks_participation(self, rwd_data, spec):
+        eng, _ = _run(rwd_data, spec, rounds=6)
+        counts = np.asarray(eng.table.counts)
+        assert counts.sum() == 6 * eng.hp.buffer_k
+        # fast clients participate more (speeds sorted ↔ counts anti-sorted)
+        fast = np.argsort(eng.speeds)[:3]
+        slow = np.argsort(eng.speeds)[-3:]
+        assert counts[fast].sum() >= counts[slow].sum()
+
+    def test_virtual_time_monotone(self, rwd_data, spec):
+        _, res = _run(rwd_data, spec, rounds=6)
+        vts = [m.virtual_time for m in res.metrics]
+        assert all(a <= b for a, b in zip(vts, vts[1:]))
+
+    def test_sync_mode_runs(self, rwd_data, spec):
+        _, res = _run(rwd_data, spec, rounds=4, sync_mode=True)
+        assert len(res.metrics) == 4
+
+    def test_fedqs_adapts_lrs(self, rwd_data, spec):
+        eng, _ = _run(rwd_data, spec, rounds=10)
+        lrs = {round(c.lr, 5) for c in eng.clients}
+        assert len(lrs) > 1  # Mod-2 produced heterogeneous lrs
+
+    def test_quadrants_populated(self, rwd_data, spec):
+        eng, res = _run(rwd_data, spec, rounds=10)
+        qc = res.metrics[-1].quadrant_counts
+        assert sum(qc.values()) == rwd_data.n_clients
+
+
+class TestDynamics:
+    def test_resource_scale_scenario(self, rwd_data, spec):
+        eng, res = _run(rwd_data, spec, rounds=6,
+                        dynamics=scenario_resource_scale(3, 100.0))
+        assert len(res.metrics) == 6
+
+    def test_unstable_resources(self, rwd_data, spec):
+        eng, res = _run(rwd_data, spec, rounds=6,
+                        dynamics=scenario_unstable_resources())
+        assert len(res.metrics) == 6
+
+    def test_dropout_kills_clients(self, rwd_data, spec):
+        eng, res = _run(rwd_data, spec, rounds=8,
+                        dynamics=scenario_dropout(2, 0.5))
+        assert (~eng.alive).sum() == rwd_data.n_clients // 2
+        assert len(res.metrics) == 8
+
+
+class TestResultHelpers:
+    def test_metrics_api(self, rwd_data, spec):
+        _, res = _run(rwd_data, spec, rounds=6)
+        assert 0.0 <= res.best_accuracy() <= 1.0
+        assert res.oscillations(threshold=0.0) >= 0
+        t = res.rounds_to_accuracy(0.0)
+        assert t == 1  # trivially reached at first eval
+
+
+class TestAllAlgorithmsRun:
+    @pytest.mark.parametrize("name", [
+        "fedqs-sgd", "fedqs-avg", "fedavg", "fedsgd", "safa", "fedat",
+        "m-step", "defedavg", "fedbuff", "wkafl", "fedac", "fadas", "ca2fl"])
+    def test_runs_and_finite(self, rwd_data, spec, name):
+        _, res = _run(rwd_data, spec, name=name, rounds=4)
+        assert len(res.metrics) == 4
+        assert all(np.isfinite(m.loss) for m in res.metrics)

@@ -1,0 +1,83 @@
+"""Mod-1 (global aggregation estimation) unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.similarity import (
+    cosine_similarity,
+    euclidean_similarity,
+    fused_dot_norms,
+    get_similarity_fn,
+    local_global_similarity,
+    manhattan_similarity,
+    pseudo_global_gradient,
+)
+
+vec = hnp.arrays(np.float32, st.integers(2, 64),
+                 elements=st.floats(-10, 10, width=32))
+
+
+def test_pseudo_global_gradient_is_model_difference():
+    a = {"w": jnp.asarray([1.0, 2.0]), "b": jnp.asarray(3.0)}
+    b = {"w": jnp.asarray([0.5, 1.0]), "b": jnp.asarray(1.0)}
+    pg = pseudo_global_gradient(a, b)
+    np.testing.assert_allclose(pg["w"], [0.5, 1.0])
+    np.testing.assert_allclose(pg["b"], 2.0)
+
+
+def test_cosine_self_similarity_is_one():
+    v = jnp.asarray([1.0, -2.0, 3.0])
+    assert float(cosine_similarity(v, v)) == pytest.approx(1.0, abs=1e-6)
+
+
+def test_cosine_opposite_is_minus_one():
+    v = jnp.asarray([1.0, -2.0, 3.0])
+    assert float(cosine_similarity(v, -v)) == pytest.approx(-1.0, abs=1e-6)
+
+
+@given(vec)
+def test_cosine_bounded(a):
+    b = a[::-1].copy() + 0.5
+    s = float(cosine_similarity(jnp.asarray(a), jnp.asarray(b)))
+    assert -1.0 - 1e-4 <= s <= 1.0 + 1e-4
+
+
+@given(vec)
+def test_distance_similarities_in_unit_interval(a):
+    b = a * 0.5 + 1.0
+    for fn in (euclidean_similarity, manhattan_similarity):
+        s = float(fn(jnp.asarray(a), jnp.asarray(b)))
+        assert 0.0 < s <= 1.0 + 1e-6
+
+
+@given(vec)
+def test_identical_vectors_maximize_every_metric(a):
+    a_j = jnp.asarray(a)
+    for name in ("cosine", "euclidean", "manhattan"):
+        fn = get_similarity_fn(name)
+        s_self = float(fn(a_j, a_j))
+        s_other = float(fn(a_j, a_j + 1.0))
+        assert s_self >= s_other - 1e-6
+
+
+def test_unknown_similarity_raises():
+    with pytest.raises(ValueError):
+        get_similarity_fn("chebyshev")
+
+
+def test_local_global_similarity_on_trees():
+    upd = {"a": jnp.ones((3,)), "b": jnp.ones((2, 2))}
+    s = local_global_similarity(upd, upd, "cosine")
+    assert float(s) == pytest.approx(1.0, abs=1e-6)
+
+
+def test_fused_dot_norms_matches_components():
+    a = jnp.asarray([1.0, 2.0, 3.0])
+    b = jnp.asarray([-1.0, 0.5, 2.0])
+    dot, na, nb = fused_dot_norms(a, b)
+    assert float(dot) == pytest.approx(float(jnp.vdot(a, b)))
+    assert float(na) == pytest.approx(float(jnp.vdot(a, a)))
+    assert float(nb) == pytest.approx(float(jnp.vdot(b, b)))
