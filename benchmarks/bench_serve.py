@@ -1,0 +1,142 @@
+"""Streaming-service throughput: sustained updates/sec per trigger policy,
+batched-vs-sequential aggregation, and stream-vs-virtual-clock parity.
+
+CSV rows follow benchmarks/common.py: ``name,us_per_call,derived`` where
+us_per_call is wall-microseconds per *submitted update* and derived
+carries updates/sec, rounds fired, and admission drops.
+
+Reading the numbers: the K-buffer trigger aggregates fixed-shape [K, D]
+batches, so XLA compiles the round once and steady state is a few ms per
+round.  Variable-K triggers (time-window; quorum grace fires; end-of-stream
+flushes) pay a per-shape compile on every new buffer size — their mean
+aggregation latency is compile-dominated on short streams.  A production
+deployment would pad variable buffers up to K_max to keep shapes static.
+
+    PYTHONPATH=src python benchmarks/bench_serve.py [--updates 400] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from common import emit
+
+from repro.core import FedQSHyperParams, SAFLEngine, make_algorithm
+from repro.data import make_federated_data
+from repro.models import make_mlp_spec
+from repro.serve import (
+    CaptureStream,
+    KBuffer,
+    Quorum,
+    StalenessAdmission,
+    StreamingAggregator,
+    TimeWindow,
+    replay,
+    synthetic_stream,
+)
+
+
+def bench_trigger(name, trigger, params, args, *, admission=None, batched=False,
+                  algo="fedqs-sgd"):
+    hp = FedQSHyperParams(buffer_k=args.buffer_k)
+    svc = StreamingAggregator(
+        make_algorithm(algo, hp), hp, params, args.clients,
+        trigger=trigger, admission=admission, batched=batched,
+    )
+    stream = list(synthetic_stream(params, args.clients, args.updates,
+                                   seed=args.seed))
+    # warm-up: compile the aggregation path once so steady-state throughput
+    # is measured, not jit tracing
+    warm = StreamingAggregator(
+        make_algorithm(algo, hp), hp, params, args.clients,
+        trigger=KBuffer(args.buffer_k), admission=admission, batched=batched)
+    replay(warm, stream[: args.buffer_k], flush=True)
+
+    t0 = time.perf_counter()
+    replay(svc, stream)
+    dt = time.perf_counter() - t0
+    s = svc.stats
+    emit(
+        name,
+        dt / max(s.submitted, 1) * 1e6,
+        updates_per_sec=f"{s.submitted / dt:.1f}",
+        rounds=s.rounds,
+        dropped=s.dropped,
+        mean_agg_ms=f"{s.agg_seconds / max(s.rounds, 1) * 1e3:.2f}",
+    )
+    return svc
+
+
+def bench_parity(args):
+    """Stream replay vs the virtual-clock engine on the seed small model."""
+    data = make_federated_data("rwd", 10, sigma=1.0, seed=0, n_total=1000)
+    spec = make_mlp_spec()
+    hp = FedQSHyperParams(buffer_k=4)
+    eng = SAFLEngine(data, spec, make_algorithm("fedqs-sgd", hp), hp, seed=1)
+    init = eng.global_params
+    cap = CaptureStream()
+    cap.wrap(eng.service)
+    t0 = time.perf_counter()
+    eng.run(args.parity_rounds)
+    dt_engine = time.perf_counter() - t0
+
+    svc = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp, init,
+                              data.n_clients)
+    t0 = time.perf_counter()
+    replay(svc, cap.updates, flush=False)
+    dt_stream = time.perf_counter() - t0
+
+    gap = max(
+        float(np.abs(np.asarray(a) - np.asarray(b)).max())
+        for a, b in zip(jax.tree_util.tree_leaves(eng.global_params),
+                        jax.tree_util.tree_leaves(svc.global_params))
+    )
+    ok = gap <= 1e-5 and svc.round == eng.round
+    emit(
+        "serve_parity_vs_virtual_clock",
+        dt_stream / max(len(cap.updates), 1) * 1e6,
+        equivalent=ok,
+        max_abs_gap=f"{gap:.2e}",
+        rounds=svc.round,
+        engine_s=f"{dt_engine:.2f}",
+        stream_s=f"{dt_stream:.2f}",
+    )
+    if not ok:
+        raise SystemExit(f"stream/virtual-clock divergence: gap={gap:.3e}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--updates", type=int, default=400)
+    ap.add_argument("--clients", type=int, default=64)
+    ap.add_argument("--buffer-k", type=int, default=10)
+    ap.add_argument("--window", type=float, default=3.0)
+    ap.add_argument("--parity-rounds", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    if args.quick:
+        args.updates, args.parity_rounds = 120, 3
+
+    spec = make_mlp_spec()
+    params = spec.init(jax.random.PRNGKey(args.seed))
+
+    k, q = args.buffer_k, max(2, args.buffer_k // 2)
+    bench_trigger("serve_kbuffer", KBuffer(k), params, args)
+    bench_trigger("serve_timewindow", TimeWindow(args.window, min_updates=2),
+                  params, args)
+    bench_trigger("serve_quorum", Quorum(k, q, grace=args.window), params, args)
+    bench_trigger("serve_kbuffer_batched", KBuffer(k), params, args, batched=True)
+    bench_trigger("serve_kbuffer_admission", KBuffer(k), params, args,
+                  admission=StalenessAdmission(tau_max=2, mode="drop"))
+    bench_parity(args)
+
+
+if __name__ == "__main__":
+    main()

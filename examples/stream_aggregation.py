@@ -1,0 +1,76 @@
+"""Streaming SAFL aggregation service, standalone (no virtual clock).
+
+Builds a ``StreamingAggregator`` with a quorum trigger and
+staleness-bounded admission, feeds it a synthetic semi-asynchronous
+update stream, checkpoints it mid-stream, then resumes into a fresh
+service and verifies the resumed state picks up where it left off.
+
+    PYTHONPATH=src python examples/stream_aggregation.py [--updates 300]
+"""
+import argparse
+import sys, os, tempfile
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--updates", type=int, default=300)
+    ap.add_argument("--clients", type=int, default=48)
+    ap.add_argument("--algo", default="fedqs-sgd")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.core import FedQSHyperParams, make_algorithm
+    from repro.models import make_mlp_spec
+    from repro.serve import (
+        Quorum, StalenessAdmission, StreamingAggregator, replay, synthetic_stream,
+    )
+
+    hp = FedQSHyperParams(buffer_k=8)
+    spec = make_mlp_spec()
+    params = spec.init(jax.random.PRNGKey(args.seed))
+
+    def build():
+        return StreamingAggregator(
+            make_algorithm(args.algo, hp), hp, params, args.clients,
+            trigger=Quorum(k=8, quorum=4, grace=5.0),
+            admission=StalenessAdmission(tau_max=3, mode="downweight"),
+            on_round=lambda rep: print(
+                f"  round {rep.round:3d}  K={rep.n_updates:2d} "
+                f"distinct={rep.n_distinct:2d} stale_max={rep.max_staleness} "
+                f"dropped={rep.dropped_since_last} agg={rep.agg_seconds*1e3:.1f}ms"
+            ),
+        )
+
+    stream = list(synthetic_stream(params, args.clients, args.updates,
+                                   seed=args.seed))
+    half = len(stream) // 2
+
+    print(f"phase 1: ingest {half} updates")
+    svc = build()
+    replay(svc, stream[:half], flush=False)
+    ckpt = os.path.join(tempfile.gettempdir(), "stream_agg_ck")
+    svc.save(ckpt)
+    print(f"checkpointed at round {svc.round} → {ckpt}")
+
+    print(f"phase 2: resume and ingest the remaining {len(stream) - half}")
+    svc2 = build()
+    svc2.restore(ckpt)
+    assert svc2.round == svc.round, "resume must restore the round counter"
+    replay(svc2, stream[half:])
+
+    s = svc2.stats
+    drift = max(
+        float(np.abs(np.asarray(a) - np.asarray(b)).max())
+        for a, b in zip(jax.tree_util.tree_leaves(svc2.global_params),
+                        jax.tree_util.tree_leaves(params))
+    )
+    print(f"done: {s.rounds} resumed-service rounds, {s.downweighted} downweighted, "
+          f"{s.dropped} dropped; |global - init|_max = {drift:.2e}")
+
+
+if __name__ == "__main__":
+    main()

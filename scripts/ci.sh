@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# Continuous-integration entry point: dependency check, tier-1 tests, and
+# smoke runs of the README quickstart commands, so the advertised entry
+# points stay continuously exercised.
+#
+#   bash scripts/ci.sh            # full tier-1 + smokes
+#   CI_SKIP_SMOKE=1 bash scripts/ci.sh   # tests only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+PY=${PYTHON:-python}
+
+echo "== deps =="
+$PY -c "import jax, numpy; print('jax', jax.__version__, '| numpy', numpy.__version__)"
+# test-only deps: install if absent and an index is reachable; the suite
+# runs without hypothesis (property tests skip collection), so failure to
+# install extras is non-fatal.
+$PY -c "import pytest" 2>/dev/null || $PY -m pip install -q pytest || true
+$PY -c "import hypothesis" 2>/dev/null \
+  && echo "hypothesis: present (property suites active)" \
+  || { $PY -m pip install -q hypothesis 2>/dev/null \
+       || echo "hypothesis: absent (property suites skipped)"; }
+
+echo "== tier-1 tests =="
+$PY -m pytest -x -q
+
+if [ -z "${CI_SKIP_SMOKE:-}" ]; then
+  echo "== smoke: quickstart =="
+  $PY examples/quickstart.py --rounds 8 --clients 10
+
+  echo "== smoke: streaming service =="
+  $PY -m repro.launch.serve --safl-stream --updates 120 --trigger kbuffer
+  $PY benchmarks/bench_serve.py --quick
+
+  echo "== smoke: simulator launcher =="
+  $PY -m repro.launch.train --task rwd --algo fedqs-sgd --rounds 4 \
+      --clients 10 --eval-every 2 --n-total 1000
+fi
+
+echo "CI OK"

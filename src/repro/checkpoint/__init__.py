@@ -1,3 +1,14 @@
-from .ckpt import load_params, save_params, save_server_state, load_server_state
+from .ckpt import (
+    load_params,
+    load_server_state,
+    load_service_state,
+    save_params,
+    save_server_state,
+    save_service_state,
+)
 
-__all__ = ["load_params", "save_params", "save_server_state", "load_server_state"]
+__all__ = [
+    "load_params", "save_params",
+    "save_server_state", "load_server_state",
+    "save_service_state", "load_service_state",
+]

@@ -1,5 +1,6 @@
 """Checkpointing: pytree ↔ .npz with stable key paths, plus SAFL server
-state (global model, status table, round counter, per-client lr/momentum).
+state (global model, status table, round counter, per-client lr/momentum)
+and streaming-service state (``repro.serve.StreamingAggregator``).
 
 Restore is sharding-aware: ``load_params(..., like=params_spec)`` places
 leaves with ``jax.device_put`` against the template's shardings when given.
@@ -81,3 +82,49 @@ def load_server_state(path: str, engine) -> None:
     for c, m in zip(engine.clients, meta["clients"]):
         c.lr, c.momentum = m["lr"], m["momentum"]
         c.last_similarity, c.quadrant, c.speed = m["similarity"], m["quadrant"], m["speed"]
+
+
+def save_service_state(path: str, service) -> None:
+    """Persist a ``repro.serve.StreamingAggregator`` for resume.
+
+    Captures the aggregation state (global model, status table, round) and
+    the ingestion counters; the in-flight ingest buffer is deliberately NOT
+    persisted — a restarted service re-admits live traffic, it does not
+    replay half-filled buffers (clients re-upload on reconnect).
+    """
+    os.makedirs(path, exist_ok=True)
+    save_params(os.path.join(path, "global.npz"), service.global_params)
+    meta = {
+        "round": service.round,
+        "counts": np.asarray(service.table.counts).tolist(),
+        "sims": np.asarray(service.table.sims).tolist(),
+        "stats": {
+            "submitted": service.stats.submitted,
+            "accepted": service.stats.accepted,
+            "dropped": service.stats.dropped,
+            "downweighted": service.stats.downweighted,
+            "rounds": service.stats.rounds,
+        },
+        "trigger": service.trigger.describe(),
+        "admission": service.admission.describe(),
+    }
+    with open(os.path.join(path, "service.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def load_service_state(path: str, service) -> None:
+    """Restore ``save_service_state`` output into ``service`` in place."""
+    from repro.core.types import ServerTable
+
+    service.global_params = load_params(
+        os.path.join(path, "global.npz"), service.global_params
+    )
+    with open(os.path.join(path, "service.json")) as f:
+        meta = json.load(f)
+    service.round = meta["round"]
+    service.table = ServerTable(
+        counts=jnp.asarray(meta["counts"], jnp.int32),
+        sims=jnp.asarray(meta["sims"], jnp.float32),
+    )
+    for k, v in meta.get("stats", {}).items():
+        setattr(service.stats, k, v)

@@ -76,15 +76,27 @@ def aggregate_gradients(
     deltas: Sequence[Params],
     weights: jnp.ndarray,
     eta_g: float = 1.0,
+    *,
+    tree_sum=tree_weighted_sum,
 ) -> Params:
-    """FedQS-SGD server step.  δ_i is the uploaded model-difference."""
-    step = tree_weighted_sum(list(deltas), weights)
+    """FedQS-SGD server step.  δ_i is the uploaded model-difference.
+
+    ``tree_sum`` is the Σ_i w_i·tree_i primitive; the default is the
+    sequential host form, the streaming service passes the batched
+    stacked form (``repro.serve.batched``) to hit the Pallas kernel.
+    """
+    step = tree_sum(list(deltas), weights)
     return jax.tree_util.tree_map(lambda w, s: w - eta_g * s, w_global, step)
 
 
-def aggregate_models(models: Sequence[Params], weights: jnp.ndarray) -> Params:
+def aggregate_models(
+    models: Sequence[Params],
+    weights: jnp.ndarray,
+    *,
+    tree_sum=tree_weighted_sum,
+) -> Params:
     """FedQS-Avg server step: convex combination of buffered local models."""
-    return tree_weighted_sum(list(models), weights)
+    return tree_sum(list(models), weights)
 
 
 def server_aggregate(
@@ -94,6 +106,8 @@ def server_aggregate(
     table: ServerTable,
     hp: FedQSHyperParams,
     n_clients: int,
+    *,
+    tree_sum=tree_weighted_sum,
 ) -> Tuple[Params, ServerTable, jnp.ndarray]:
     """Full Mod-3 pass over one K-buffer.
 
@@ -121,8 +135,8 @@ def server_aggregate(
 
     if strategy is AggregationStrategy.GRADIENT:
         new_global = aggregate_gradients(
-            w_global, [u.delta for u in buffer], p, hp.eta_g
+            w_global, [u.delta for u in buffer], p, hp.eta_g, tree_sum=tree_sum
         )
     else:
-        new_global = aggregate_models([u.params for u in buffer], p)
+        new_global = aggregate_models([u.params for u in buffer], p, tree_sum=tree_sum)
     return new_global, table, p

@@ -6,6 +6,12 @@ push updates; the server buffers K updates and then aggregates (SAFL
 conditional trigger).  FedQS and all 11 baselines plug in through the
 ``Algorithm`` interface (``repro.core.algorithms``).
 
+The server side lives in ``repro.serve.StreamingAggregator`` — the engine
+is one client of its ingestion API: the event loop ``submit``s each
+finished local-training burst and the service owns the K-buffer trigger,
+the aggregation dispatch, and the server state (global model, status
+table, round counter), which the engine re-exports as properties.
+
 Fidelity notes:
 * staleness τ_i arises naturally: a client trains on the global round it
   last fetched; fast clients re-fetch often, stragglers lag;
@@ -111,7 +117,6 @@ class SAFLEngine:
         # uniformly distributed compute resources, fastest:slowest = 1:ratio
         self.speeds = self.rng.uniform(1.0, resource_ratio, n)
         key = jax.random.PRNGKey(seed)
-        self.global_params = spec.init(key)
         self.prev_global: Dict[int, Params] = {}
         self.clients = [
             ClientState(
@@ -123,12 +128,51 @@ class SAFLEngine:
             )
             for i in range(n)
         ]
-        self.table = ServerTable.init(n)
-        self.round = 0
         self.alive = np.ones(n, bool)
+
+        # the server is the streaming service with the paper's K-buffer
+        # trigger and admit-all policy; ``context=self`` hands algorithms
+        # the full engine surface (speeds, clients, data) at aggregation.
+        # Imported lazily: repro.serve pulls in repro.core at module scope.
+        from repro.serve.service import StreamingAggregator
+        from repro.serve.triggers import KBuffer
+
+        self.service = StreamingAggregator(
+            algo, hp, spec.init(key), n,
+            trigger=KBuffer(hp.buffer_k),
+            context=self,
+            speeds=self.speeds,
+        )
 
         # client-side Mod-1 storage: the last two global models seen
         self._client_globals: Dict[int, Tuple[int, Params, Optional[Params]]] = {}
+
+    # ------------------------------------------------- server state (service)
+    # The service owns the server state; these properties keep the historic
+    # engine surface (tests, checkpointing, algorithms) working unchanged.
+    @property
+    def global_params(self) -> Params:
+        return self.service.global_params
+
+    @global_params.setter
+    def global_params(self, value: Params) -> None:
+        self.service.global_params = value
+
+    @property
+    def table(self) -> ServerTable:
+        return self.service.table
+
+    @table.setter
+    def table(self, value: ServerTable) -> None:
+        self.service.table = value
+
+    @property
+    def round(self) -> int:
+        return self.service.round
+
+    @round.setter
+    def round(self, value: int) -> None:
+        self.service.round = value
 
     # ---------------------------------------------------------- client side
     def _client_fetch(self, cid: int):
@@ -203,11 +247,6 @@ class SAFLEngine:
         )
 
     # ---------------------------------------------------------- server side
-    def _aggregate(self, buffer: List[Update]):
-        new_global, self.table = self.algo.server_aggregate(self, buffer)
-        self.global_params = new_global
-        self.round += 1
-
     def _metrics(self, vt: float, buffer: List[Update]) -> RoundMetrics:
         loss, acc = self.spec.eval_fn(self.global_params, self.data.test_x, self.data.test_y)
         stale = [self.round - 1 - u.stale_round for u in buffer]
@@ -243,25 +282,25 @@ class SAFLEngine:
             heapq.heappush(heap, (self.clients[cid].speed * jitter, seq, cid))
             seq += 1
 
-        buffer: List[Update] = []
         metrics: List[RoundMetrics] = []
         vt = 0.0
         while self.round < n_rounds and heap:
             vt, _, cid = heapq.heappop(heap)
             if not self.alive[cid]:
                 continue
-            buffer.append(self._client_train(cid))
-            # client immediately checks for a fresh global model, then keeps going
+            update = self._client_train(cid)
+            # client immediately checks for a fresh global model, then keeps
+            # going — the fetch deliberately precedes the submit so the
+            # uploader trains on the pre-aggregation model (upload/fetch race)
             self._client_fetch(cid)
             jitter = self.rng.uniform(0.9, 1.1)
             heapq.heappush(heap, (vt + self.clients[cid].speed * jitter, seq, cid))
             seq += 1
 
-            if len(buffer) >= self.hp.buffer_k:
-                self._aggregate(buffer)
+            result = self.service.submit(update, now=vt)
+            if result.fired:
                 if self.round % self.eval_every == 0:
-                    metrics.append(self._metrics(vt, buffer))
-                buffer = []
+                    metrics.append(self._metrics(vt, result.report.buffer))
                 if self.dynamics is not None:
                     new_speeds = self.dynamics(self.round, self.speeds, self.rng)
                     if new_speeds is not None:
@@ -282,14 +321,17 @@ class SAFLEngine:
         while self.round < n_rounds:
             live = np.flatnonzero(self.alive)
             sel = self.rng.choice(live, size=min(self.hp.buffer_k, len(live)), replace=False)
-            buffer = []
+            vt += max(self.clients[c].speed for c in sel)  # idle until slowest
+            report = None
             for cid in sel:
                 self._client_fetch(cid)
-                buffer.append(self._client_train(cid))
-            vt += max(self.clients[c].speed for c in sel)  # idle until slowest
-            self._aggregate(buffer)
+                res = self.service.submit(self._client_train(cid), now=vt)
+                if res.fired:
+                    report = res.report
+            if report is None:  # fewer live clients than K: force the round
+                report = self.service.flush(now=vt)
             if self.round % self.eval_every == 0:
-                metrics.append(self._metrics(vt, buffer))
+                metrics.append(self._metrics(vt, report.buffer))
         return metrics
 
 

@@ -9,6 +9,7 @@ Validated against ``ref.py`` oracles with ``interpret=True`` on CPU.
 from .ops import (
     cosine_op,
     similarity_stats_op,
+    weighted_agg_auto_op,
     weighted_agg_op,
     window_decode_attention_op,
 )
@@ -16,6 +17,7 @@ from .ops import (
 __all__ = [
     "cosine_op",
     "similarity_stats_op",
+    "weighted_agg_auto_op",
     "weighted_agg_op",
     "window_decode_attention_op",
 ]

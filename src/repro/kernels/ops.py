@@ -28,6 +28,16 @@ def weighted_agg_op(x, w):
     return weighted_agg(x, w, interpret=_INTERPRET)
 
 
+def weighted_agg_auto_op(x, w):
+    """Throughput-oriented dispatch for the streaming service: the compiled
+    Pallas kernel on TPU, the jnp oracle elsewhere.  Unlike ``weighted_agg_op``
+    (which exercises the kernel body under interpret=True for validation),
+    this never pays interpret-mode cost on a serving hot path."""
+    if _ON_TPU and not _FORCE_REF:
+        return weighted_agg(x, w)
+    return _ref.weighted_agg_ref(x, w)
+
+
 def similarity_stats_op(a, b):
     if _FORCE_REF:
         return _ref.fused_similarity_stats_ref(a, b)

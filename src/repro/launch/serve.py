@@ -1,8 +1,17 @@
-"""Serving launcher: batched autoregressive decoding of a (reduced)
-architecture through the prefill + serve_step path — the host-scale twin
-of the decode-shape dry-runs.
+"""Serving launcher.
+
+Two serving surfaces:
+
+* default — batched autoregressive decoding of a (reduced) architecture
+  through the prefill + serve_step path, the host-scale twin of the
+  decode-shape dry-runs;
+* ``--safl-stream`` — the streaming SAFL aggregation service
+  (``repro.serve``): ingest a synthetic semi-asynchronous update stream
+  through admission control + a trigger policy and report sustained
+  updates/sec and per-round aggregation latency.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --batch 4 --steps 32
+    PYTHONPATH=src python -m repro.launch.serve --safl-stream --trigger quorum --updates 400
 """
 from __future__ import annotations
 
@@ -14,6 +23,54 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def run_safl_stream(args):
+    from repro.core import FedQSHyperParams, make_algorithm
+    from repro.models import make_mlp_spec
+    from repro.serve import (
+        AdmitAll, StalenessAdmission, StreamingAggregator, make_trigger,
+        replay, synthetic_stream,
+    )
+
+    hp = FedQSHyperParams(buffer_k=args.buffer_k)
+    spec = make_mlp_spec()
+    params = spec.init(jax.random.PRNGKey(args.seed))
+
+    trigger = {
+        "kbuffer": lambda: make_trigger("kbuffer", k=args.buffer_k),
+        "timewindow": lambda: make_trigger("timewindow", window=args.window,
+                                           min_updates=2),
+        "quorum": lambda: make_trigger("quorum", k=args.buffer_k,
+                                       quorum=max(2, args.buffer_k // 2),
+                                       grace=args.window),
+    }[args.trigger]()
+    admission = (StalenessAdmission(args.tau_max, mode=args.admission_mode)
+                 if args.tau_max >= 0 else AdmitAll())
+    service = StreamingAggregator(
+        make_algorithm(args.algo, hp), hp, params, args.clients,
+        trigger=trigger, admission=admission, batched=args.batched,
+    )
+    stream = list(synthetic_stream(params, args.clients, args.updates,
+                                   seed=args.seed))
+    t0 = time.perf_counter()
+    reports = replay(service, stream)
+    dt = time.perf_counter() - t0
+    s = service.stats
+    print(f"safl-stream: algo={args.algo} trigger={trigger.describe()} "
+          f"admission={admission.describe()} batched={args.batched}")
+    print(f"  {s.submitted} updates → {s.accepted} admitted, {s.dropped} dropped, "
+          f"{s.downweighted} downweighted, {s.rounds} rounds")
+    print(f"  sustained {s.submitted / dt:.1f} updates/s "
+          f"({dt / max(s.rounds, 1) * 1e3:.2f} ms/round wall, "
+          f"{s.agg_seconds / max(s.rounds, 1) * 1e3:.2f} ms/round aggregation)")
+    for rep in reports[:: max(1, len(reports) // 8)]:
+        print(f"  round {rep.round:3d}  K={rep.n_updates:3d} "
+              f"distinct={rep.n_distinct:3d} stale(mean={rep.mean_staleness:.1f},"
+              f"max={rep.max_staleness}) dropped={rep.dropped_since_last}")
+    if args.ckpt:
+        service.save(args.ckpt)
+        print("checkpoint →", args.ckpt)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-1b")
@@ -22,7 +79,29 @@ def main():
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=1.0)
+    # streaming SAFL aggregation service
+    ap.add_argument("--safl-stream", action="store_true",
+                    help="serve a streaming SAFL update stream instead of decoding")
+    ap.add_argument("--trigger", default="kbuffer",
+                    choices=["kbuffer", "timewindow", "quorum"])
+    ap.add_argument("--algo", default="fedqs-sgd")
+    ap.add_argument("--clients", type=int, default=64)
+    ap.add_argument("--updates", type=int, default=400)
+    ap.add_argument("--buffer-k", type=int, default=10)
+    ap.add_argument("--window", type=float, default=3.0,
+                    help="time-window / quorum-grace length (stream clock units)")
+    ap.add_argument("--tau-max", type=int, default=-1,
+                    help="staleness bound for admission (-1 = admit all)")
+    ap.add_argument("--admission-mode", default="drop",
+                    choices=["drop", "downweight"])
+    ap.add_argument("--batched", action="store_true",
+                    help="stacked [K,D] aggregation (Pallas kernel on TPU)")
+    ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
+
+    if args.safl_stream:
+        run_safl_stream(args)
+        return
 
     from repro.configs import get_reduced
     from repro.core.distributed import make_prefill_step, make_serve_step

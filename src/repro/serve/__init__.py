@@ -1,0 +1,21 @@
+"""Streaming SAFL aggregation service (runtime layer 2).
+
+Generalizes the virtual-clock engine's K-buffer loop into a live
+ingestion pipeline: staleness-bounded admission → pluggable trigger
+(K-buffer / time-window / quorum) → batched aggregation (Pallas
+``weighted_agg`` on TPU, jnp fallback) with double-buffered ingest and
+checkpoint/resume.  See docs/ARCHITECTURE.md.
+"""
+from .admission import Admission, AdmissionPolicy, AdmitAll, StalenessAdmission
+from .batched import batched_weighted_sum, make_tree_sum, stack_trees
+from .service import RoundReport, ServiceStats, StreamingAggregator, SubmitResult
+from .stream import CaptureStream, replay, synthetic_stream
+from .triggers import KBuffer, Quorum, TimeWindow, TriggerPolicy, make_trigger
+
+__all__ = [
+    "Admission", "AdmissionPolicy", "AdmitAll", "StalenessAdmission",
+    "batched_weighted_sum", "make_tree_sum", "stack_trees",
+    "RoundReport", "ServiceStats", "StreamingAggregator", "SubmitResult",
+    "CaptureStream", "replay", "synthetic_stream",
+    "KBuffer", "Quorum", "TimeWindow", "TriggerPolicy", "make_trigger",
+]

@@ -1,0 +1,93 @@
+"""Staleness-bounded admission control for the update queue.
+
+SEAFL (arXiv:2503.05755) shows that bounding the staleness of admitted
+updates — dropping or attenuating those older than a threshold — is what
+keeps buffered semi-asynchronous aggregation efficient under heavy
+heterogeneity.  An admission policy inspects every incoming ``Update``
+against the server's current round *before* it enters the ingest buffer.
+
+Down-weighting is expressed through the update's sample count
+``n_samples``: every algorithm in the zoo (FedQS included — its initial
+weights are p_i = n_i/n) weights buffered updates by sample count, so
+scaling n_i attenuates the update uniformly across all 12 algorithms
+without touching their ``server_aggregate`` implementations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+from repro.core.types import Update
+
+
+@dataclass
+class Admission:
+    """Verdict for one incoming update."""
+
+    accepted: bool
+    weight_scale: float = 1.0  # applied to n_samples when < 1.0
+    reason: str = ""
+
+
+class AdmissionPolicy:
+    """Base policy: admit everything at full weight."""
+
+    name = "admit-all"
+
+    def admit(self, update: Update, current_round: int) -> Admission:
+        return Admission(True)
+
+    def describe(self) -> str:
+        return self.name
+
+    def apply(self, update: Update, current_round: int):
+        """Run the policy; returns (update_or_None, Admission).
+
+        The returned update carries any down-weighting baked into its
+        ``n_samples`` (floored at 1 so an admitted update never vanishes).
+        """
+        verdict = self.admit(update, current_round)
+        if not verdict.accepted:
+            return None, verdict
+        if verdict.weight_scale != 1.0:
+            scaled = max(1, int(round(update.n_samples * verdict.weight_scale)))
+            update = replace(update, n_samples=scaled)
+        return update, verdict
+
+
+class AdmitAll(AdmissionPolicy):
+    """Simulator default — the virtual-clock engine admits every update,
+    matching the paper's server exactly."""
+
+
+class StalenessAdmission(AdmissionPolicy):
+    """Bounded-staleness admission: τ = round − stale_round vs ``tau_max``.
+
+    mode="drop":       reject updates with τ > τ_max outright;
+    mode="downweight": admit them at weight ``decay**(τ − τ_max)``.
+    """
+
+    name = "staleness"
+
+    def __init__(self, tau_max: int, mode: str = "drop", decay: float = 0.5):
+        if mode not in ("drop", "downweight"):
+            raise ValueError(f"mode must be 'drop' or 'downweight', got {mode!r}")
+        if not 0.0 < decay <= 1.0:
+            raise ValueError(f"decay must be in (0, 1], got {decay}")
+        self.tau_max = int(tau_max)
+        self.mode = mode
+        self.decay = float(decay)
+
+    def admit(self, update, current_round):
+        tau = max(0, current_round - update.stale_round)
+        if tau <= self.tau_max:
+            return Admission(True)
+        if self.mode == "drop":
+            return Admission(False, reason=f"stale: tau={tau} > tau_max={self.tau_max}")
+        return Admission(
+            True,
+            weight_scale=self.decay ** (tau - self.tau_max),
+            reason=f"downweighted: tau={tau} > tau_max={self.tau_max}",
+        )
+
+    def describe(self):
+        return f"staleness(tau_max={self.tau_max},mode={self.mode})"

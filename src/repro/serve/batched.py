@@ -1,0 +1,78 @@
+"""Batched (stacked) Mod-3 aggregation for the streaming service.
+
+The K buffered updates are flattened into one ``[K, D]`` matrix and the
+weighted reduction Σ_k w[k]·x[k] runs as a single matvec:
+
+* on TPU it dispatches to the Pallas ``weighted_agg`` kernel
+  (``repro.kernels.weighted_agg``) — every parameter byte crosses HBM
+  exactly once;
+* elsewhere it falls back to the pure-jnp oracle (one fused einsum) —
+  interpret-mode Pallas is far too slow for a hot ingestion loop.
+
+This is numerically a reordering of ``repro.core.types.tree_weighted_sum``
+(sequential scale+add), so results agree to fp32 tolerance, not bitwise;
+the virtual-clock engine therefore keeps the sequential form by default
+and the streaming service opts in.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.core.types import Params
+from repro.kernels import weighted_agg_auto_op
+from repro.kernels.ref import weighted_agg_ref
+from repro.kernels.weighted_agg import weighted_agg
+
+
+def stack_trees(trees: List[Params]) -> Tuple[jnp.ndarray, Callable[[jnp.ndarray], Params]]:
+    """Ravel each pytree to a row of a [K, D] f32 matrix; returns the matrix
+    and the unravel closure mapping a flat [D] vector back to the pytree."""
+    if not trees:
+        raise ValueError("cannot stack an empty buffer")
+    flats = []
+    unravel = None
+    for t in trees:
+        f, u = ravel_pytree(t)
+        flats.append(f.astype(jnp.float32))
+        if unravel is None:
+            unravel = u
+    return jnp.stack(flats), unravel
+
+
+def batched_weighted_sum(
+    trees: List[Params],
+    weights,
+    *,
+    use_kernel: Optional[bool] = None,
+) -> Params:
+    """Σ_i w_i · tree_i via the stacked [K, D] matvec.
+
+    ``use_kernel``: None → auto (Pallas on TPU, jnp einsum elsewhere);
+    True → force the Pallas kernel (interpreted off-TPU, for validation);
+    False → force the jnp oracle.
+
+    Drop-in for ``tree_weighted_sum`` — pass as the ``tree_sum`` argument
+    of ``repro.core.aggregation.server_aggregate``.
+    """
+    x, unravel = stack_trees(trees)
+    w = jnp.asarray(weights, jnp.float32)
+    if use_kernel is None:
+        flat = weighted_agg_auto_op(x, w)
+    elif use_kernel:
+        flat = weighted_agg(x, w, interpret=jax.default_backend() != "tpu")
+    else:
+        flat = weighted_agg_ref(x, w)
+    return unravel(flat)
+
+
+def make_tree_sum(use_kernel: Optional[bool] = None):
+    """Bind ``use_kernel`` into a tree_sum(trees, weights) callable."""
+
+    def tree_sum(trees, weights):
+        return batched_weighted_sum(trees, weights, use_kernel=use_kernel)
+
+    return tree_sum

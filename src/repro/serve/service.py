@@ -1,0 +1,285 @@
+"""Streaming SAFL aggregation service (DESIGN: runtime layer 2).
+
+Generalizes the virtual-clock engine's buffered K-trigger loop into a
+real ingestion pipeline:
+
+1. **admission** — every incoming ``Update`` passes staleness-bounded
+   admission control (``repro.serve.admission``) before entering the
+   ingest buffer;
+2. **trigger** — a pluggable policy (``repro.serve.triggers``) decides
+   when the buffer is ready: the paper's K-buffer, a time window, or a
+   distinct-client quorum hybrid;
+3. **aggregation** — the frozen buffer is handed to the ``Algorithm``'s
+   ``server_aggregate`` (all 12 baselines plug in unchanged), or — for
+   linear-weighting algorithms — to the batched stacked path that
+   dispatches the Pallas ``weighted_agg`` kernel with a jnp fallback;
+4. **double-buffering** — the ingest buffer is swapped out at fire time,
+   so ingestion continues into a fresh buffer while the frozen batch
+   aggregates (synchronously inline, or on a worker thread with
+   ``async_agg=True``; rounds always serialize);
+5. **hooks** — per-round metrics via ``on_round`` and checkpoint/resume
+   via ``save``/``restore`` (``repro.checkpoint.ckpt``).
+
+The virtual-clock engine (``repro.core.safl``) is one client of this
+API: it constructs the service with the paper's K-buffer trigger and
+admit-all policy and submits updates as its event loop produces them,
+which keeps the stream path and the paper-faithful path one code path.
+"""
+from __future__ import annotations
+
+import time as _time
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field, replace
+from types import SimpleNamespace
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.aggregation import server_aggregate as fedqs_server_aggregate
+from repro.core.aggregation import update_table
+from repro.core.algorithms import Algorithm, FedQS
+from repro.core.aggregation import aggregate_gradients, aggregate_models
+from repro.core.types import (
+    AggregationStrategy,
+    FedQSHyperParams,
+    Params,
+    ServerTable,
+    Update,
+)
+import jax.numpy as jnp
+
+from .admission import AdmissionPolicy, AdmitAll
+from .batched import make_tree_sum
+from .triggers import KBuffer, TriggerPolicy
+
+
+@dataclass
+class RoundReport:
+    """What one aggregation fire produced (delivered via ``on_round``)."""
+
+    round: int                 # round number after the fire
+    n_updates: int             # size of the aggregated buffer
+    n_distinct: int            # distinct clients in the buffer
+    mean_staleness: float      # mean τ over the buffer (pre-fire round basis)
+    max_staleness: int
+    dropped_since_last: int    # admission drops since the previous fire
+    trigger: str               # trigger.describe() at fire time
+    agg_seconds: float         # host wall time of the aggregation call
+    buffer: List[Update] = field(repr=False, default_factory=list)
+
+
+@dataclass
+class SubmitResult:
+    accepted: bool
+    fired: bool
+    round: int                 # service round after this submit
+    reason: str = ""           # admission reason when rejected/downweighted
+    report: Optional[RoundReport] = None  # None for async fires (see on_round)
+
+
+@dataclass
+class ServiceStats:
+    submitted: int = 0
+    accepted: int = 0
+    dropped: int = 0
+    downweighted: int = 0
+    rounds: int = 0
+    agg_seconds: float = 0.0
+
+
+class StreamingAggregator:
+    """Ingestion front-end + buffered aggregation back-end for SAFL.
+
+    Presents the same server-state surface as ``SAFLEngine`` to the
+    ``Algorithm`` interface (``global_params``, ``table``, ``round``,
+    ``data.n_clients``, ``speeds``), so every algorithm's
+    ``server_aggregate`` runs against it unchanged.  When embedded in the
+    engine, ``context`` points back at the engine so algorithms that read
+    engine-only state (e.g. FedAT's observed speeds) keep working.
+    """
+
+    def __init__(
+        self,
+        algo: Algorithm,
+        hp: FedQSHyperParams,
+        init_params: Params,
+        n_clients: int,
+        *,
+        trigger: Optional[TriggerPolicy] = None,
+        admission: Optional[AdmissionPolicy] = None,
+        context=None,
+        batched: bool = False,
+        use_kernel: Optional[bool] = None,
+        async_agg: bool = False,
+        on_round: Optional[Callable[[RoundReport], None]] = None,
+        speeds: Optional[np.ndarray] = None,
+        clock: Callable[[], float] = _time.monotonic,
+    ):
+        self.algo = algo
+        self.hp = hp
+        self.global_params = init_params
+        self.table = ServerTable.init(n_clients)
+        self.round = 0
+        self.n_clients = int(n_clients)
+        self.data = SimpleNamespace(n_clients=int(n_clients))  # Algorithm facade
+        self.speeds = speeds
+        self.trigger = trigger or KBuffer(hp.buffer_k)
+        self.admission = admission or AdmitAll()
+        self.stats = ServiceStats()
+        self.on_round = on_round
+        self._context = context
+        self._clock = clock
+        self._ingest: List[Update] = []
+        self._dropped_since_fire = 0
+        self._batched = batched
+        self._tree_sum = make_tree_sum(use_kernel) if batched else None
+        self._pool = ThreadPoolExecutor(max_workers=1) if async_agg else None
+        self._inflight: Optional[Future] = None
+        # the trigger arms itself lazily at the first submit — the service
+        # cannot arm it here because callers may drive any clock (virtual
+        # time in the simulator, wall time live)
+
+    # ------------------------------------------------------------- ingestion
+    def submit(self, update: Update, now: Optional[float] = None) -> SubmitResult:
+        """Offer one client update to the service.
+
+        Admission runs against the current round; on acceptance the update
+        joins the ingest buffer and the trigger policy is consulted.  A
+        firing trigger swaps the buffer (ingestion continues immediately)
+        and aggregates the frozen batch.
+        """
+        now = self._clock() if now is None else now
+        self.stats.submitted += 1
+        if update.stale_round > self.round:
+            # no update can be trained on a future round — a live gateway
+            # stamps τ against its own round registry, so clamp here
+            update = replace(update, stale_round=self.round)
+        update, verdict = self.admission.apply(update, self.round)
+        if update is None:
+            self.stats.dropped += 1
+            self._dropped_since_fire += 1
+            return SubmitResult(False, False, self.round, verdict.reason)
+        if verdict.weight_scale != 1.0:
+            self.stats.downweighted += 1
+        self.stats.accepted += 1
+        self._ingest.append(update)
+        if self.trigger.should_fire(self._ingest, now):
+            report = self._fire(now)
+            return SubmitResult(True, True, self.round, verdict.reason, report)
+        return SubmitResult(True, False, self.round, verdict.reason)
+
+    def flush(self, now: Optional[float] = None) -> Optional[RoundReport]:
+        """Force-aggregate whatever is buffered (end of stream / sync mode
+        with fewer live clients than K).  Returns None only for the
+        empty-buffer no-op — a flush is a barrier, so on an async service
+        it joins the dispatched round and returns its report."""
+        if not self._ingest:
+            return None
+        report = self._fire(self._clock() if now is None else now)
+        if report is None and self._inflight is not None:
+            report = self._inflight.result()
+            self._inflight = None
+        return report
+
+    @property
+    def pending(self) -> int:
+        return len(self._ingest)
+
+    def join(self) -> None:
+        """Block until any in-flight async aggregation has completed."""
+        if self._inflight is not None:
+            self._inflight.result()
+            self._inflight = None
+
+    def close(self) -> None:
+        self.join()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    # ----------------------------------------------------------- aggregation
+    def _fire(self, now: float) -> Optional[RoundReport]:
+        # double-buffer swap: new submissions land in a fresh list while
+        # the frozen batch aggregates
+        batch, self._ingest = self._ingest, []
+        self.trigger.arm(now)
+        dropped, self._dropped_since_fire = self._dropped_since_fire, 0
+        if self._pool is None:
+            return self._aggregate(batch, dropped)
+        self.join()  # rounds serialize: at most one aggregation in flight
+        self._inflight = self._pool.submit(self._aggregate, batch, dropped)
+        return None
+
+    def _aggregate(self, batch: List[Update], dropped: int) -> RoundReport:
+        t0 = _time.perf_counter()
+        ctx = self._context if self._context is not None else self
+        new_global, new_table = self._dispatch(ctx, batch)
+        jax.block_until_ready(jax.tree_util.tree_leaves(new_global))
+        dt = _time.perf_counter() - t0
+
+        stale = [self.round - u.stale_round for u in batch]
+        self.global_params = new_global
+        self.table = new_table
+        self.round += 1
+        self.stats.rounds += 1
+        self.stats.agg_seconds += dt
+        report = RoundReport(
+            round=self.round,
+            n_updates=len(batch),
+            n_distinct=len({u.cid for u in batch}),
+            mean_staleness=float(np.mean(stale)) if stale else 0.0,
+            max_staleness=int(max(stale)) if stale else 0,
+            dropped_since_last=dropped,
+            trigger=self.trigger.describe(),
+            agg_seconds=dt,
+            buffer=batch,
+        )
+        if self.on_round is not None:
+            self.on_round(report)
+        return report
+
+    def _dispatch(self, ctx, batch: List[Update]):
+        """Route one frozen batch to the algorithm.
+
+        The batched fast path only applies to algorithms whose aggregation
+        is a pure weighted reduction with externally computed weights —
+        FedQS itself and any algorithm still on the base
+        ``Algorithm.server_aggregate`` (FedAvg/FedSGD/DeFedAvg).  Stateful
+        baselines (caches, momenta, EMAs) always take their own path.
+        """
+        if self._batched and isinstance(self.algo, FedQS):
+            new_global, new_table, _ = fedqs_server_aggregate(
+                self.algo.strategy, ctx.global_params, batch, ctx.table,
+                self.hp, ctx.data.n_clients, tree_sum=self._tree_sum,
+            )
+            return new_global, new_table
+        if self._batched and type(self.algo).server_aggregate is Algorithm.server_aggregate:
+            cids = jnp.asarray([u.cid for u in batch], jnp.int32)
+            sims = jnp.asarray([u.similarity for u in batch], jnp.float32)
+            new_table = update_table(ctx.table, cids, sims)
+            p = self.algo._base_weights(batch)
+            if self.algo.strategy is AggregationStrategy.GRADIENT:
+                new_global = aggregate_gradients(
+                    ctx.global_params, [u.delta for u in batch], p,
+                    self.hp.eta_g, tree_sum=self._tree_sum,
+                )
+            else:
+                new_global = aggregate_models(
+                    [u.params for u in batch], p, tree_sum=self._tree_sum
+                )
+            return new_global, new_table
+        return self.algo.server_aggregate(ctx, batch)
+
+    # ------------------------------------------------------------ checkpoint
+    def save(self, path: str) -> None:
+        from repro.checkpoint.ckpt import save_service_state
+
+        self.join()
+        save_service_state(path, self)
+
+    def restore(self, path: str) -> None:
+        from repro.checkpoint.ckpt import load_service_state
+
+        self.join()
+        load_service_state(path, self)

@@ -1,0 +1,123 @@
+"""Update-stream utilities: synthetic client streams and capture/replay.
+
+``synthetic_stream`` fabricates a realistic semi-asynchronous upload
+sequence (heterogeneous client rates, natural staleness lag, noisy
+deltas shaped like the model) for load-testing the service without
+running local training — this is what the throughput benchmark and the
+``--safl-stream`` launcher feed in.
+
+``replay`` pushes a recorded (update, timestamp) sequence through a
+service; together with ``CaptureStream`` it underpins the
+stream-vs-virtual-clock equivalence test.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import Params, Update
+
+from .service import RoundReport, StreamingAggregator
+
+
+def synthetic_stream(
+    params: Params,
+    n_clients: int,
+    n_updates: int,
+    *,
+    seed: int = 0,
+    delta_scale: float = 1e-3,
+    rate_ratio: float = 50.0,
+    distinct_deltas: int = 8,
+) -> Iterator[Tuple[Update, float]]:
+    """Yield ``(update, arrival_time)`` pairs mimicking SAFL traffic.
+
+    Client inter-upload gaps are drawn per-client from a 1:``rate_ratio``
+    speed spread (fast clients upload often → they dominate the stream,
+    exactly the bias the quorum trigger exists for).  ``stale_round``
+    lags a virtual round counter by a speed-correlated amount.  Deltas
+    cycle through ``distinct_deltas`` pre-generated noise pytrees so the
+    generator costs O(distinct) model copies, not O(n_updates).
+    """
+    rng = np.random.default_rng(seed)
+    speeds = rng.uniform(1.0, rate_ratio, n_clients)
+    next_at = speeds * rng.uniform(0.5, 1.5, n_clients)
+    n_samples = rng.integers(20, 200, n_clients)
+
+    key = jax.random.PRNGKey(seed)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    deltas, models = [], []
+    for d in range(distinct_deltas):
+        key, sub = jax.random.split(key)
+        ks = jax.random.split(sub, len(leaves))
+        noise = [
+            delta_scale * jax.random.normal(k, l.shape, jnp.float32)
+            for k, l in zip(ks, leaves)
+        ]
+        delta = jax.tree_util.tree_unflatten(treedef, noise)
+        deltas.append(delta)
+        models.append(jax.tree_util.tree_map(jnp.add, params, delta))
+
+    virtual_round = 0
+    for i in range(n_updates):
+        cid = int(np.argmin(next_at))
+        now = float(next_at[cid])
+        next_at[cid] += speeds[cid] * rng.uniform(0.9, 1.1)
+        # slow clients trained on an older global round
+        lag = int(speeds[cid] / rate_ratio * 5)
+        yield Update(
+            cid=cid,
+            n_samples=int(n_samples[cid]),
+            stale_round=max(0, virtual_round - lag),
+            lr=0.1,
+            similarity=float(rng.uniform(0.05, 1.0)),
+            feedback=bool(rng.random() < 0.3),
+            speed_f=float(1.0 / speeds[cid]),
+            delta=deltas[i % distinct_deltas],
+            params=models[i % distinct_deltas],
+        ), now
+        virtual_round += 1 if (i + 1) % 10 == 0 else 0
+
+
+@dataclass
+class CaptureStream:
+    """Records every update offered to a service (install via ``wrap``)."""
+
+    updates: List[Tuple[Update, Optional[float]]] = field(default_factory=list)
+
+    def wrap(self, service: StreamingAggregator) -> StreamingAggregator:
+        inner = service.submit
+
+        def recording_submit(update, now=None):
+            self.updates.append((update, now))
+            return inner(update, now=now)
+
+        service.submit = recording_submit  # type: ignore[method-assign]
+        return service
+
+
+def replay(
+    service: StreamingAggregator,
+    stream,
+    *,
+    flush: bool = True,
+) -> List[RoundReport]:
+    """Push an (update, time) sequence through ``service``; returns the
+    round reports of every fire (including the final flush if requested)."""
+    reports: List[RoundReport] = []
+    last = None
+    for update, now in stream:
+        last = now
+        res = service.submit(update, now=now)
+        if res.fired and res.report is not None:
+            reports.append(res.report)
+    if flush:
+        rep = service.flush(now=last)
+        if rep is not None:
+            reports.append(rep)
+    service.join()
+    return reports

@@ -1,0 +1,129 @@
+"""Pluggable aggregation trigger policies for the streaming SAFL service.
+
+The paper's server fires on a fixed K-buffer (§3.4).  Production
+semi-asynchronous deployments also need time-bounded rounds (bound the
+tail latency when traffic is thin) and participation quorums (bound the
+bias when traffic is bursty from a few fast clients) — cf. SEAFL
+(arXiv:2503.05755) on adaptive buffered aggregation.  A trigger policy
+observes the ingest buffer on every admitted update and decides when the
+service should swap buffers and aggregate.
+
+All policies are host-side and allocation-free per submit; ``now`` is
+whatever clock the caller uses (virtual time in the simulator, wall time
+in a live service) — policies only compare differences of it.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from repro.core.types import Update
+
+
+class TriggerPolicy:
+    """Decides when the ingest buffer is ready to aggregate."""
+
+    name = "base"
+
+    def arm(self, now: float) -> None:
+        """Called when a fresh ingest buffer opens (service start / post-fire)."""
+
+    def should_fire(self, buffer: Sequence[Update], now: float) -> bool:
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        return self.name
+
+
+class KBuffer(TriggerPolicy):
+    """Paper-faithful trigger: fire once K updates are buffered (§3.4)."""
+
+    name = "kbuffer"
+
+    def __init__(self, k: int):
+        if k < 1:
+            raise ValueError(f"KBuffer needs k >= 1, got {k}")
+        self.k = int(k)
+
+    def should_fire(self, buffer, now):
+        return len(buffer) >= self.k
+
+    def describe(self):
+        return f"kbuffer(k={self.k})"
+
+
+class TimeWindow(TriggerPolicy):
+    """Fire every ``window`` clock units, provided ≥ ``min_updates`` arrived.
+
+    The window opens lazily at the first submit observed after (re)arming,
+    so a service idling on a wall clock does not fire on stale windows.
+    """
+
+    name = "timewindow"
+
+    def __init__(self, window: float, min_updates: int = 1):
+        if window <= 0:
+            raise ValueError(f"TimeWindow needs window > 0, got {window}")
+        self.window = float(window)
+        self.min_updates = int(min_updates)
+        self._opened: Optional[float] = None
+
+    def arm(self, now):
+        # reopen lazily at the next observed submit — measuring from the
+        # fire time would make the first submit after an idle gap fire
+        # instantly on a stale window
+        self._opened = None
+
+    def should_fire(self, buffer, now):
+        if self._opened is None:  # first submit after an idle period
+            self._opened = now
+        return len(buffer) >= self.min_updates and (now - self._opened) >= self.window
+
+    def describe(self):
+        return f"timewindow(w={self.window},min={self.min_updates})"
+
+
+class Quorum(TriggerPolicy):
+    """Hybrid trigger: K updates from at least ``quorum`` distinct clients.
+
+    Guards against one fast client filling the whole buffer (the bias mode
+    SEAFL's adaptive aggregation targets).  An optional ``grace`` window
+    fires anyway once it expires with a non-empty buffer, so a thin stream
+    of repeat uploaders cannot stall rounds forever.
+    """
+
+    name = "quorum"
+
+    def __init__(self, k: int, quorum: int, grace: Optional[float] = None):
+        if quorum > k:
+            raise ValueError(f"quorum ({quorum}) cannot exceed k ({k})")
+        self.k = int(k)
+        self.quorum = int(quorum)
+        self.grace = grace
+        self._opened: Optional[float] = None
+
+    def arm(self, now):
+        self._opened = None  # lazy reopen, same rationale as TimeWindow
+
+    def should_fire(self, buffer, now):
+        if self._opened is None:
+            self._opened = now
+        if len(buffer) >= self.k:
+            distinct = len({u.cid for u in buffer})
+            if distinct >= self.quorum:
+                return True
+        if self.grace is not None and buffer and (now - self._opened) >= self.grace:
+            return True
+        return False
+
+    def describe(self):
+        g = f",grace={self.grace}" if self.grace is not None else ""
+        return f"quorum(k={self.k},q={self.quorum}{g})"
+
+
+def make_trigger(name: str, **kw) -> TriggerPolicy:
+    """Factory used by launch/bench CLIs: kbuffer | timewindow | quorum."""
+    table = {"kbuffer": KBuffer, "timewindow": TimeWindow, "quorum": Quorum}
+    try:
+        return table[name](**kw)
+    except KeyError:
+        raise ValueError(f"unknown trigger {name!r}; choose from {sorted(table)}") from None

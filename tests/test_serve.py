@@ -1,0 +1,315 @@
+"""Streaming SAFL aggregation service: triggers, admission, batched
+aggregation parity, and stream-vs-virtual-clock equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FedQSHyperParams, SAFLEngine, make_algorithm
+from repro.core.aggregation import server_aggregate
+from repro.core.types import ServerTable, Update, tree_weighted_sum
+from repro.data import make_federated_data
+from repro.models import make_mlp_spec
+from repro.serve import (
+    AdmitAll,
+    CaptureStream,
+    KBuffer,
+    Quorum,
+    StalenessAdmission,
+    StreamingAggregator,
+    TimeWindow,
+    batched_weighted_sum,
+    make_trigger,
+    replay,
+    synthetic_stream,
+)
+
+
+def _mk_update(cid=0, n_samples=50, stale_round=0, similarity=0.5, delta=None,
+               params=None):
+    return Update(cid=cid, n_samples=n_samples, stale_round=stale_round,
+                  lr=0.1, similarity=similarity, feedback=False, speed_f=0.1,
+                  delta=delta, params=params)
+
+
+# ---------------------------------------------------------------------------
+# trigger policies
+# ---------------------------------------------------------------------------
+class TestTriggers:
+    def test_kbuffer_fires_at_k(self):
+        t = KBuffer(3)
+        buf = [_mk_update(i) for i in range(2)]
+        assert not t.should_fire(buf, 0.0)
+        buf.append(_mk_update(2))
+        assert t.should_fire(buf, 0.0)
+
+    def test_kbuffer_validates(self):
+        with pytest.raises(ValueError):
+            KBuffer(0)
+
+    def test_timewindow_waits_for_window(self):
+        t = TimeWindow(window=10.0, min_updates=2)
+        buf = [_mk_update(0), _mk_update(1)]
+        assert not t.should_fire(buf, 5.0)    # lazily opens at t=5
+        assert not t.should_fire(buf, 14.0)   # 9 < 10 elapsed
+        assert t.should_fire(buf, 15.0)       # 10 elapsed
+
+    def test_timewindow_needs_min_updates(self):
+        t = TimeWindow(window=1.0, min_updates=3)
+        buf = [_mk_update(0)]
+        assert not t.should_fire(buf, 100.0)
+
+    def test_timewindow_rearms_lazily(self):
+        """After a fire the window reopens at the NEXT submit, so an idle
+        gap never makes the first new update fire on a stale window."""
+        t = TimeWindow(window=10.0)
+        buf = [_mk_update(0)]
+        assert t.should_fire(buf, 0.0) is False
+        assert t.should_fire(buf, 10.0)
+        t.arm(10.0)
+        assert not t.should_fire(buf, 50.0)   # long idle gap: reopens at 50
+        assert not t.should_fire(buf, 59.0)
+        assert t.should_fire(buf, 60.0)
+
+    def test_quorum_grace_rearms_lazily(self):
+        t = Quorum(k=4, quorum=3, grace=5.0)
+        same = [_mk_update(0) for _ in range(4)]
+        assert t.should_fire(same, 1.0) is False
+        t.arm(6.0)
+        assert not t.should_fire(same, 100.0)  # idle gap: grace restarts here
+        assert t.should_fire(same, 105.5)
+
+    def test_quorum_needs_distinct_clients(self):
+        t = Quorum(k=4, quorum=3)
+        same = [_mk_update(0) for _ in range(4)]          # 1 distinct client
+        assert not t.should_fire(same, 0.0)
+        mixed = [_mk_update(c) for c in (0, 0, 1, 2)]     # 3 distinct
+        assert t.should_fire(mixed, 0.0)
+
+    def test_quorum_grace_breaks_stalls(self):
+        t = Quorum(k=4, quorum=3, grace=5.0)
+        same = [_mk_update(0) for _ in range(4)]
+        assert not t.should_fire(same, 1.0)   # opens at t=1
+        assert t.should_fire(same, 6.5)       # grace expired
+
+    def test_quorum_validates(self):
+        with pytest.raises(ValueError):
+            Quorum(k=2, quorum=3)
+
+    def test_factory(self):
+        assert make_trigger("kbuffer", k=5).k == 5
+        with pytest.raises(ValueError):
+            make_trigger("nope")
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+class TestAdmission:
+    def test_admit_all(self):
+        u, v = AdmitAll().apply(_mk_update(stale_round=0), current_round=1000)
+        assert u is not None and v.accepted
+
+    def test_staleness_drop(self):
+        pol = StalenessAdmission(tau_max=2, mode="drop")
+        ok, v = pol.apply(_mk_update(stale_round=8), current_round=10)
+        assert ok is not None and v.accepted            # tau=2 == tau_max
+        gone, v = pol.apply(_mk_update(stale_round=7), current_round=10)
+        assert gone is None and not v.accepted and "stale" in v.reason
+
+    def test_staleness_downweight_scales_samples(self):
+        pol = StalenessAdmission(tau_max=1, mode="downweight", decay=0.5)
+        u, v = pol.apply(_mk_update(n_samples=100, stale_round=0), current_round=3)
+        assert u is not None and v.accepted
+        assert u.n_samples == 25                        # 100 * 0.5**(3-1)
+        # floor at 1 so an admitted update never vanishes
+        u2, _ = pol.apply(_mk_update(n_samples=2, stale_round=0), current_round=20)
+        assert u2.n_samples == 1
+
+    def test_validates(self):
+        with pytest.raises(ValueError):
+            StalenessAdmission(1, mode="explode")
+        with pytest.raises(ValueError):
+            StalenessAdmission(1, decay=0.0)
+
+
+# ---------------------------------------------------------------------------
+# service mechanics + aggregation parity
+# ---------------------------------------------------------------------------
+def _tiny_params(seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return {"w": jax.random.normal(k1, (7, 5)), "b": jax.random.normal(k2, (5,))}
+
+
+def _tiny_buffer(params, n=4, seed=1):
+    key = jax.random.PRNGKey(seed)
+    buf = []
+    for i in range(n):
+        key, sub = jax.random.split(key)
+        delta = jax.tree_util.tree_map(
+            lambda l, s=sub: 0.01 * jax.random.normal(s, l.shape), params)
+        buf.append(_mk_update(cid=i, n_samples=50 + 10 * i, similarity=0.2 + 0.1 * i,
+                              delta=delta,
+                              params=jax.tree_util.tree_map(jnp.add, params, delta)))
+    return buf
+
+
+class TestService:
+    def test_kbuffer_parity_with_server_aggregate(self):
+        """One service round must equal a direct Mod-3 pass (§3.4)."""
+        hp = FedQSHyperParams(buffer_k=4)
+        params = _tiny_params()
+        buf = _tiny_buffer(params, n=4)
+
+        svc = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp, params, 8)
+        reports = replay(svc, [(u, float(i)) for i, u in enumerate(buf)], flush=False)
+        assert len(reports) == 1 and svc.round == 1
+
+        want, want_table, _ = server_aggregate(
+            make_algorithm("fedqs-sgd", hp).strategy, params, list(buf),
+            ServerTable.init(8), hp, 8)
+        for a, b in zip(jax.tree_util.tree_leaves(svc.global_params),
+                        jax.tree_util.tree_leaves(want)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(svc.table.counts),
+                                      np.asarray(want_table.counts))
+
+    @pytest.mark.parametrize("algo", ["fedqs-sgd", "fedqs-avg", "fedavg", "fedsgd"])
+    def test_batched_path_matches_sequential(self, algo):
+        """Stacked [K,D] aggregation ≡ sequential tree sum (fp32 tol)."""
+        hp = FedQSHyperParams(buffer_k=4)
+        params = _tiny_params()
+        buf = _tiny_buffer(params, n=4)
+        stream = [(u, float(i)) for i, u in enumerate(buf)]
+
+        plain = StreamingAggregator(make_algorithm(algo, hp), hp, params, 8)
+        fast = StreamingAggregator(make_algorithm(algo, hp), hp, params, 8,
+                                   batched=True, use_kernel=False)
+        replay(plain, stream, flush=False)
+        replay(fast, stream, flush=False)
+        for a, b in zip(jax.tree_util.tree_leaves(plain.global_params),
+                        jax.tree_util.tree_leaves(fast.global_params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_batched_weighted_sum_matches_tree_weighted_sum(self):
+        trees = [_tiny_params(s) for s in range(3)]
+        w = jnp.asarray([0.2, 0.5, 0.3])
+        want = tree_weighted_sum(trees, w)
+        for use_kernel in (False, True):  # jnp oracle and interpreted Pallas
+            got = batched_weighted_sum(trees, w, use_kernel=use_kernel)
+            for a, b in zip(jax.tree_util.tree_leaves(want),
+                            jax.tree_util.tree_leaves(got)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-5, atol=1e-6)
+
+    def test_staleness_admission_drops_in_stream(self):
+        hp = FedQSHyperParams(buffer_k=2)
+        params = _tiny_params()
+        buf = _tiny_buffer(params, n=6)
+        svc = StreamingAggregator(
+            make_algorithm("fedavg", hp), hp, params, 8,
+            admission=StalenessAdmission(tau_max=0, mode="drop"))
+        # two clean rounds (stamped fresh), then two updates 3 rounds stale
+        from dataclasses import replace
+        for i, u in enumerate(buf[:4]):
+            assert svc.submit(replace(u, stale_round=svc.round), now=float(i)).accepted
+        assert svc.round == 2
+        stale = [replace(u, stale_round=-3) for u in buf[4:]]
+        for u in stale:
+            res = svc.submit(u, now=9.0)
+            assert not res.accepted and "stale" in res.reason
+        assert svc.stats.dropped == 2 and svc.pending == 0
+
+    def test_flush_forces_partial_round(self):
+        hp = FedQSHyperParams(buffer_k=10)
+        params = _tiny_params()
+        svc = StreamingAggregator(make_algorithm("fedavg", hp), hp, params, 8)
+        for i, u in enumerate(_tiny_buffer(params, n=3)):
+            svc.submit(u, now=float(i))
+        assert svc.round == 0 and svc.pending == 3
+        rep = svc.flush(now=3.0)
+        assert rep is not None and rep.n_updates == 3 and svc.round == 1
+        assert svc.flush(now=4.0) is None  # empty buffer is a no-op
+
+    def test_async_agg_matches_sync(self):
+        hp = FedQSHyperParams(buffer_k=4)
+        params = _tiny_params()
+        buf = _tiny_buffer(params, n=8)
+        stream = [(u, float(i)) for i, u in enumerate(buf)]
+        sync = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp, params, 8)
+        seen = []
+        asyn = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp, params, 8,
+                                   async_agg=True, on_round=seen.append)
+        replay(sync, stream, flush=False)
+        replay(asyn, stream, flush=False)
+        asyn.close()
+        assert asyn.round == sync.round == 2 and len(seen) == 2
+        for a, b in zip(jax.tree_util.tree_leaves(sync.global_params),
+                        jax.tree_util.tree_leaves(asyn.global_params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_async_flush_returns_report(self):
+        """flush is a barrier: on an async service it joins the dispatched
+        partial round and hands back its report (None = empty buffer only)."""
+        hp = FedQSHyperParams(buffer_k=10)
+        params = _tiny_params()
+        svc = StreamingAggregator(make_algorithm("fedavg", hp), hp, params, 8,
+                                  async_agg=True)
+        for i, u in enumerate(_tiny_buffer(params, n=3)):
+            svc.submit(u, now=float(i))
+        rep = svc.flush(now=3.0)
+        assert rep is not None and rep.n_updates == 3 and svc.round == 1
+        svc.close()
+
+    def test_checkpoint_roundtrip(self, tmp_path):
+        hp = FedQSHyperParams(buffer_k=4)
+        params = _tiny_params()
+        svc = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp, params, 8)
+        replay(svc, [(u, float(i)) for i, u in enumerate(_tiny_buffer(params, 4))],
+               flush=False)
+        svc.save(str(tmp_path / "ck"))
+        svc2 = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp, params, 8)
+        svc2.restore(str(tmp_path / "ck"))
+        assert svc2.round == svc.round == 1
+        np.testing.assert_array_equal(np.asarray(svc2.table.counts),
+                                      np.asarray(svc.table.counts))
+        for a, b in zip(jax.tree_util.tree_leaves(svc.global_params),
+                        jax.tree_util.tree_leaves(svc2.global_params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_synthetic_stream_shape(self):
+        params = _tiny_params()
+        pairs = list(synthetic_stream(params, 6, 40, seed=3))
+        assert len(pairs) == 40
+        times = [t for _, t in pairs]
+        assert all(a <= b for a, b in zip(times, times[1:]))  # arrival order
+        assert {u.cid for u, _ in pairs} <= set(range(6))
+
+
+# ---------------------------------------------------------------------------
+# stream ≡ virtual clock (the acceptance bar)
+# ---------------------------------------------------------------------------
+class TestStreamEquivalence:
+    def test_stream_replay_equals_virtual_clock(self):
+        """Capturing the engine's submits and replaying them through a
+        standalone service must reproduce the virtual-clock global model."""
+        data = make_federated_data("rwd", 10, sigma=1.0, seed=0, n_total=1000)
+        spec = make_mlp_spec()
+        hp = FedQSHyperParams(buffer_k=4)
+        eng = SAFLEngine(data, spec, make_algorithm("fedqs-sgd", hp), hp, seed=1)
+        init = eng.global_params
+        cap = CaptureStream()
+        cap.wrap(eng.service)
+        eng.run(5)
+
+        svc = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp, init,
+                                  data.n_clients)
+        reports = replay(svc, cap.updates, flush=False)
+        assert svc.round == eng.round == 5 and len(reports) == 5
+        for a, b in zip(jax.tree_util.tree_leaves(eng.global_params),
+                        jax.tree_util.tree_leaves(svc.global_params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=0, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(svc.table.counts),
+                                      np.asarray(eng.table.counts))
