@@ -1,0 +1,108 @@
+"""Scenario engine benchmark: catalog scenarios through the event-driven
+engine, and the vectorized cohort fast path at 10k+ clients.
+
+CSV rows follow benchmarks/common.py: ``name,us_per_call,derived`` where
+us_per_call is wall-microseconds per aggregation round and derived
+carries accuracy / virtual time / throughput.
+
+The headline row is ``cohort_diurnal_churn_10000``: a 10,000-client
+diurnal-churn scenario (bimodal speeds, sinusoidal availability,
+periodic join/leave) end-to-end through the virtual-clock cohort engine
+— the acceptance gate is wall < 60 s on CPU, and the script exits
+non-zero if it regresses past that.
+
+    PYTHONPATH=src python benchmarks/bench_scenarios.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from common import emit
+
+from repro.core import FedQSHyperParams, SAFLEngine, make_algorithm
+from repro.data import make_federated_data
+from repro.models import make_mlp_spec
+from repro.scenarios import CohortEngine, get_scenario
+
+
+ENGINE_SCENARIOS = [
+    "static", "resource-shift", "unstable", "dropout", "churn",
+    "diurnal", "burst", "zipf-poisson", "drift", "degrade",
+]
+
+
+def bench_engine_scenarios(args):
+    """Every catalog scenario through the paper-faithful event engine."""
+    spec = make_mlp_spec()
+    hp = FedQSHyperParams(buffer_k=max(3, args.clients // 5))
+    for name in ENGINE_SCENARIOS:
+        # fresh data per scenario: data-mutating events (drift) edit client
+        # datasets in place and must not contaminate later rows
+        data = make_federated_data("rwd", args.clients, sigma=1.0, seed=0,
+                                   n_total=2000)
+        scn = get_scenario(name)
+        eng = SAFLEngine(data, spec, make_algorithm("fedqs-sgd", hp), hp,
+                         seed=0, eval_every=2, scenario=scn)
+        res = eng.run(args.rounds)
+        rounds = max(eng.round, 1)
+        emit(
+            f"scenario_{name.replace('-', '_')}",
+            res.wall_seconds / rounds * 1e6,
+            rounds=rounds,
+            final_acc=f"{res.final_accuracy(5):.4f}",
+            virtual_time=f"{res.virtual_time():.1f}",
+            n_alive=int(eng.alive.sum()),
+        )
+
+
+def bench_cohort_scale(args):
+    """The fast path: diurnal-churn at increasing population sizes."""
+    budget_exceeded = False
+    for n in args.scales:
+        k = max(32, min(128, n // 16))
+        hp = FedQSHyperParams(buffer_k=k)
+        t0 = time.perf_counter()
+        eng = CohortEngine(get_scenario("diurnal-churn"), n, hp=hp,
+                           cohort_k=k, seed=0, eval_every=5)
+        res = eng.run(args.cohort_rounds)
+        dt = time.perf_counter() - t0
+        served = eng.service.stats.accepted
+        under = dt < 60.0
+        emit(
+            f"cohort_diurnal_churn_{n}",
+            dt / max(eng.round, 1) * 1e6,
+            clients=n,
+            rounds=eng.round,
+            updates=served,
+            updates_per_sec=f"{served / dt:.0f}",
+            wall_s=f"{dt:.1f}",
+            final_acc=f"{res.final_accuracy(3):.4f}",
+            under_60s=under,
+        )
+        if n >= 10_000 and not under:
+            budget_exceeded = True
+    if budget_exceeded:
+        raise SystemExit("cohort fast path regressed: 10k clients took >= 60s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=20)
+    ap.add_argument("--rounds", type=int, default=16)
+    ap.add_argument("--cohort-rounds", type=int, default=30)
+    ap.add_argument("--scales", type=int, nargs="+", default=[1_000, 10_000])
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    if args.quick:
+        args.rounds, args.cohort_rounds, args.scales = 6, 8, [500]
+
+    bench_engine_scenarios(args)
+    bench_cohort_scale(args)
+
+
+if __name__ == "__main__":
+    main()

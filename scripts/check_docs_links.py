@@ -1,0 +1,51 @@
+#!/usr/bin/env python
+"""Docs link check: fail on broken relative links in README.md / docs/*.md.
+
+Scans markdown inline links ``[text](target)``; external schemes
+(http/https/mailto) and pure in-page anchors are skipped, ``#anchor``
+suffixes on file targets are stripped, and each remaining target must
+exist relative to the file that references it.  Run by scripts/ci.sh.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(path: Path) -> list:
+    broken = []
+    text = path.read_text(encoding="utf-8")
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES) or "://" in target:
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (path.parent / rel).exists():
+            line = text.count("\n", 0, m.start()) + 1
+            broken.append((path, line, target))
+    return broken
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    files = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    broken = []
+    for f in files:
+        if f.exists():
+            broken.extend(check_file(f))
+    if broken:
+        for path, line, target in broken:
+            print(f"BROKEN LINK {path.relative_to(root)}:{line}: ({target})")
+        return 1
+    print(f"docs links OK ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,6 +22,9 @@ $PY -c "import hypothesis" 2>/dev/null \
   || { $PY -m pip install -q hypothesis 2>/dev/null \
        || echo "hypothesis: absent (property suites skipped)"; }
 
+echo "== docs link check =="
+$PY scripts/check_docs_links.py
+
 echo "== tier-1 tests =="
 $PY -m pytest -x -q
 
@@ -36,6 +39,10 @@ if [ -z "${CI_SKIP_SMOKE:-}" ]; then
   echo "== smoke: simulator launcher =="
   $PY -m repro.launch.train --task rwd --algo fedqs-sgd --rounds 4 \
       --clients 10 --eval-every 2 --n-total 1000
+
+  echo "== smoke: scenario engine =="
+  $PY examples/scenario_churn.py --smoke
+  $PY benchmarks/bench_scenarios.py --quick
 fi
 
 echo "CI OK"

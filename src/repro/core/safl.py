@@ -19,8 +19,14 @@ Fidelity notes:
   (not the server's — the paper is explicit that Mod-1 is client-local);
 * the server's status table, averages f̄/s̄ and the 3-float downlink are
   modeled exactly;
-* dynamic environments (paper §5.3 scenarios 1–3) are supported via a
-  ``dynamics`` callback mutating speeds / dropping clients per round.
+* dynamic environments (paper §5.3 scenarios 1–3) are first-class
+  ``Scenario`` objects (``repro.scenarios``): population models decide
+  who the clients are, arrival processes decide when they are available
+  (always-on / Poisson / diurnal / burst / trace replay), and dynamic
+  events mutate speeds, churn membership, or drift data per round.  The
+  historic ``dynamics`` callback still works — it is wrapped into a
+  single-event scenario, bit-identical to the legacy path.  For 10k+
+  client populations use the vectorized ``repro.scenarios.CohortEngine``.
 """
 from __future__ import annotations
 
@@ -70,6 +76,18 @@ class EngineResult:
         return max(m.accuracy for m in self.metrics) if self.metrics else 0.0
 
     def final_accuracy(self, last: int = 20) -> float:
+        """Mean accuracy over the **tail window** of the ``last`` most
+        recent evaluated rounds — not the single final round.  The
+        window smooths SAFL's round-to-round oscillation (paper Fig. 4);
+        pass ``last=1`` for the literal final-round accuracy.  Fewer
+        than ``last`` recorded rounds simply average what exists.
+
+        Raises ``ValueError`` for ``last <= 0`` (a non-positive window
+        would silently average the *whole* history via Python's
+        negative-slice semantics).
+        """
+        if last <= 0:
+            raise ValueError(f"final_accuracy window must be >= 1, got {last}")
         tail = self.metrics[-last:]
         return float(np.mean([m.accuracy for m in tail])) if tail else 0.0
 
@@ -101,6 +119,7 @@ class SAFLEngine:
         resource_ratio: float = 50.0,
         seed: int = 0,
         dynamics: Optional[Callable[[int, np.ndarray, np.random.Generator], np.ndarray]] = None,
+        scenario: Optional["Scenario"] = None,
         eval_every: int = 1,
         sync_mode: bool = False,
     ):
@@ -109,13 +128,37 @@ class SAFLEngine:
         self.algo = algo
         self.hp = hp
         self.rng = np.random.default_rng(seed)
-        self.dynamics = dynamics
         self.eval_every = eval_every
         self.sync_mode = sync_mode
 
+        # Environment description.  ``scenario`` is the first-class API
+        # (repro.scenarios); a legacy ``dynamics`` callback is wrapped into
+        # a single-event scenario consuming identical RNG draws, so old
+        # callers are bit-identical.  Imported lazily (scenarios imports
+        # repro.core back).
+        from repro.scenarios.scenario import Scenario
+
+        if scenario is not None and dynamics is not None:
+            raise ValueError("pass either scenario= or the legacy dynamics=, not both")
+        if scenario is None:
+            scenario = (Scenario.from_dynamics(dynamics) if dynamics is not None
+                        else Scenario())
+        if sync_mode and (scenario.events or scenario.arrivals is not None):
+            # the sync reference loop consults neither events nor arrivals —
+            # refuse rather than silently run the static setting
+            raise ValueError(
+                "sync_mode supports only static scenarios (population models "
+                "are fine); dynamic events and arrival processes are "
+                "semi-asynchronous features"
+            )
+        self.scenario = scenario
+        self.dynamics = dynamics  # kept for introspection/back-compat
+
         n = data.n_clients
-        # uniformly distributed compute resources, fastest:slowest = 1:ratio
-        self.speeds = self.rng.uniform(1.0, resource_ratio, n)
+        # compute resources: the scenario's population model, defaulting to
+        # the historic uniform spread, fastest:slowest = 1:ratio (the same
+        # single rng.uniform draw, keeping seeded runs reproducible)
+        self.speeds = scenario.sample_speeds(n, self.rng, resource_ratio)
         key = jax.random.PRNGKey(seed)
         self.prev_global: Dict[int, Params] = {}
         self.clients = [
@@ -129,6 +172,10 @@ class SAFLEngine:
             for i in range(n)
         ]
         self.alive = np.ones(n, bool)
+        # per-client event-chain generation: bumped on revival so stale heap
+        # events from before a death are discarded instead of forking the
+        # client into two concurrent chains
+        self._gen = np.zeros(n, np.int64)
 
         # the server is the streaming service with the paper's K-buffer
         # trigger and admit-all policy; ``context=self`` hands algorithms
@@ -273,20 +320,22 @@ class SAFLEngine:
         return EngineResult(result, _time.perf_counter() - t0, self.global_params)
 
     def _run_async(self, n_rounds: int) -> List[RoundMetrics]:
+        if self.scenario.arrivals is not None:
+            return self._run_async_arrivals(n_rounds)
         n = self.data.n_clients
-        heap: List[Tuple[float, int, int]] = []  # (finish_time, seq, cid)
+        heap: List[Tuple[float, int, int, int]] = []  # (finish_time, seq, cid, gen)
         seq = 0
         for cid in range(n):
             self._client_fetch(cid)
             jitter = self.rng.uniform(0.5, 1.5)
-            heapq.heappush(heap, (self.clients[cid].speed * jitter, seq, cid))
+            heapq.heappush(heap, (self.clients[cid].speed * jitter, seq, cid, 0))
             seq += 1
 
         metrics: List[RoundMetrics] = []
         vt = 0.0
         while self.round < n_rounds and heap:
-            vt, _, cid = heapq.heappop(heap)
-            if not self.alive[cid]:
+            vt, _, cid, gen = heapq.heappop(heap)
+            if not self.alive[cid] or gen != self._gen[cid]:
                 continue
             update = self._client_train(cid)
             # client immediately checks for a fresh global model, then keeps
@@ -294,23 +343,102 @@ class SAFLEngine:
             # uploader trains on the pre-aggregation model (upload/fetch race)
             self._client_fetch(cid)
             jitter = self.rng.uniform(0.9, 1.1)
-            heapq.heappush(heap, (vt + self.clients[cid].speed * jitter, seq, cid))
+            heapq.heappush(heap, (vt + self.clients[cid].speed * jitter, seq, cid, gen))
             seq += 1
 
             result = self.service.submit(update, now=vt)
             if result.fired:
                 if self.round % self.eval_every == 0:
                     metrics.append(self._metrics(vt, result.report.buffer))
-                if self.dynamics is not None:
-                    new_speeds = self.dynamics(self.round, self.speeds, self.rng)
-                    if new_speeds is not None:
-                        self.speeds = new_speeds
-                        for i, c in enumerate(self.clients):
-                            if np.isfinite(new_speeds[i]):
-                                c.speed = float(new_speeds[i])
-                            else:
-                                self.alive[i] = False
+                for rcid in self._post_round():
+                    self._client_fetch(rcid)
+                    jitter = self.rng.uniform(0.9, 1.1)
+                    heapq.heappush(
+                        heap,
+                        (vt + self.clients[rcid].speed * jitter, seq, rcid,
+                         int(self._gen[rcid])),
+                    )
+                    seq += 1
         return metrics
+
+    _START, _FINISH = 0, 1
+
+    def _run_async_arrivals(self, n_rounds: int) -> List[RoundMetrics]:
+        """Arrival-gated event loop: the scenario's ``ArrivalProcess``
+        decides when each client begins a local-training burst.  Unlike
+        the always-on loop, the client fetches the global model at burst
+        *start* (not right after its previous upload), so availability
+        gaps translate into staleness exactly as they would live; trace
+        replay can also pin per-burst compute times."""
+        n = self.data.n_clients
+        arr = self.scenario.arrivals
+        heap: List[Tuple[float, int, int, int, int]] = []  # (time, seq, cid, kind, gen)
+        seq = 0
+        starts = arr.start(n, self.rng)
+        for cid in range(n):
+            if np.isfinite(starts[cid]):
+                heapq.heappush(heap, (float(starts[cid]), seq, cid, self._START, 0))
+                seq += 1
+
+        metrics: List[RoundMetrics] = []
+        while self.round < n_rounds and heap:
+            vt, _, cid, kind, gen = heapq.heappop(heap)
+            if not self.alive[cid] or gen != self._gen[cid]:
+                continue
+            if kind == self._START:
+                self._client_fetch(cid)
+                default = self.clients[cid].speed * self.rng.uniform(0.9, 1.1)
+                compute = arr.compute_time(cid, vt, default, self.rng)
+                heapq.heappush(heap, (vt + float(compute), seq, cid, self._FINISH, gen))
+                seq += 1
+                continue
+            update = self._client_train(cid)
+            result = self.service.submit(update, now=vt)
+            nxt = arr.next_start(cid, vt, self.rng)
+            if np.isfinite(nxt):
+                heapq.heappush(heap, (max(float(nxt), vt), seq, cid, self._START, gen))
+                seq += 1
+            if result.fired:
+                if self.round % self.eval_every == 0:
+                    metrics.append(self._metrics(vt, result.report.buffer))
+                for rcid in self._post_round():
+                    t = arr.next_start(rcid, vt, self.rng)
+                    if np.isfinite(t):
+                        heapq.heappush(
+                            heap,
+                            (max(float(t), vt), seq, rcid, self._START,
+                             int(self._gen[rcid])),
+                        )
+                        seq += 1
+        return metrics
+
+    def _post_round(self) -> List[int]:
+        """Apply the scenario's dynamic events after an aggregation fire.
+
+        Speed mutations follow the historic ``dynamics`` contract (NaN =
+        dead); additionally a dead client whose speed turns finite again
+        is *revived* — returned so the caller can re-enqueue it — and
+        data-mutating events (drift) run against ``self.data``.
+        """
+        revived: List[int] = []
+        new_speeds = self.scenario.apply_events(self.round, self.speeds, self.rng)
+        if new_speeds is not None:
+            self.speeds = new_speeds
+            for i, c in enumerate(self.clients):
+                if np.isfinite(new_speeds[i]):
+                    c.speed = float(new_speeds[i])
+                    if not self.alive[i]:
+                        # bump the generation so any heap event from before
+                        # the death is discarded — revival starts one fresh
+                        # event chain, never a duplicate
+                        self.alive[i] = True
+                        self._gen[i] += 1
+                        revived.append(i)
+                else:
+                    self.alive[i] = False
+        if self.scenario.has_data_events:
+            self.scenario.mutate_data(self.round, self.data, self.rng)
+        return revived
 
     def _run_sync(self, n_rounds: int) -> List[RoundMetrics]:
         """Synchronous FL reference (paper Table 3 shadowed columns):
@@ -336,7 +464,9 @@ class SAFLEngine:
 
 
 # --------------------------------------------------------------------------
-# dynamic-environment callbacks (paper §5.3)
+# dynamic-environment callbacks (paper §5.3) — legacy API.  The first-class
+# form is ``repro.scenarios`` (ResourceScale / SpeedJitter / Dropout events
+# delegate to these exact functions, so the two paths are bit-identical).
 # --------------------------------------------------------------------------
 def scenario_resource_scale(at_round: int, new_ratio: float):
     """Scenario 1: speed ratio shifts (1:50 → 1:new_ratio) at ``at_round``."""

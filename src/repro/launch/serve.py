@@ -10,8 +10,15 @@ Two serving surfaces:
   through admission control + a trigger policy and report sustained
   updates/sec and per-round aggregation latency.
 
+With ``--scenario`` the update stream comes from the scenario engine
+(docs/SCENARIOS.md): population speeds, arrival-process timing (diurnal
+troughs thin the stream, bursts flood it), and mid-stream churn — the
+load-generation twin of ``SAFLEngine(..., scenario=...)``.
+
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --batch 4 --steps 32
     PYTHONPATH=src python -m repro.launch.serve --safl-stream --trigger quorum --updates 400
+    PYTHONPATH=src python -m repro.launch.serve --safl-stream --scenario diurnal-churn \
+        --clients 256 --updates 800 --trigger timewindow
 """
 from __future__ import annotations
 
@@ -28,7 +35,7 @@ def run_safl_stream(args):
     from repro.models import make_mlp_spec
     from repro.serve import (
         AdmitAll, StalenessAdmission, StreamingAggregator, make_trigger,
-        replay, synthetic_stream,
+        replay, scenario_stream, synthetic_stream,
     )
 
     hp = FedQSHyperParams(buffer_k=args.buffer_k)
@@ -49,14 +56,24 @@ def run_safl_stream(args):
         make_algorithm(args.algo, hp), hp, params, args.clients,
         trigger=trigger, admission=admission, batched=args.batched,
     )
-    stream = list(synthetic_stream(params, args.clients, args.updates,
-                                   seed=args.seed))
+    if args.scenario:
+        from repro.scenarios import get_scenario
+
+        scenario = get_scenario(args.scenario)
+        stream = list(scenario_stream(params, scenario, args.clients,
+                                      args.updates, seed=args.seed))
+        source = f"scenario[{scenario.describe()}]"
+    else:
+        stream = list(synthetic_stream(params, args.clients, args.updates,
+                                       seed=args.seed))
+        source = "synthetic"
     t0 = time.perf_counter()
     reports = replay(service, stream)
     dt = time.perf_counter() - t0
     s = service.stats
     print(f"safl-stream: algo={args.algo} trigger={trigger.describe()} "
-          f"admission={admission.describe()} batched={args.batched}")
+          f"admission={admission.describe()} batched={args.batched} "
+          f"source={source}")
     print(f"  {s.submitted} updates → {s.accepted} admitted, {s.dropped} dropped, "
           f"{s.downweighted} downweighted, {s.rounds} rounds")
     print(f"  sustained {s.submitted / dt:.1f} updates/s "
@@ -84,6 +101,8 @@ def main():
                     help="serve a streaming SAFL update stream instead of decoding")
     ap.add_argument("--trigger", default="kbuffer",
                     choices=["kbuffer", "timewindow", "quorum"])
+    ap.add_argument("--scenario", default=None,
+                    help="drive the stream from a named scenario (docs/SCENARIOS.md)")
     ap.add_argument("--algo", default="fedqs-sgd")
     ap.add_argument("--clients", type=int, default=64)
     ap.add_argument("--updates", type=int, default=400)

@@ -11,8 +11,16 @@ Two entry modes:
   the host devices.  The production 256/512-chip lowering of the same step
   is exercised by ``repro.launch.dryrun``.
 
+``--scenario`` runs the simulation inside any catalog scenario
+(docs/SCENARIOS.md): population model + arrival process + dynamic
+events.  ``--cohort`` switches to the vectorized cohort fast path
+(``repro.scenarios.CohortEngine``) for 10k+ client populations.
+
 Examples:
     PYTHONPATH=src python -m repro.launch.train --task rwd --algo fedqs-sgd --rounds 100
+    PYTHONPATH=src python -m repro.launch.train --task rwd --scenario churn --rounds 60
+    PYTHONPATH=src python -m repro.launch.train --scenario diurnal-churn --cohort \
+        --clients 10000 --buffer-k 128 --rounds 30
     PYTHONPATH=src python -m repro.launch.train --distributed --arch gemma3-1b --rounds 20
 """
 from __future__ import annotations
@@ -23,6 +31,31 @@ import os
 import time
 
 
+def run_cohort(args, hp, scenario):
+    from repro.core import make_algorithm
+    from repro.scenarios import CohortEngine
+
+    eng = CohortEngine(scenario, args.clients, hp=hp,
+                       algo=make_algorithm(args.algo, hp), seed=args.seed,
+                       eval_every=args.eval_every,
+                       resource_ratio=args.resource_ratio)
+    print(f"cohort fast path: scenario={scenario.describe()} algo={args.algo} "
+          f"N={args.clients} K={eng.cohort_k} task=virtual "
+          f"(--task/--alpha/--sigma/--n-total apply to the event engine only)")
+    res = eng.run(args.rounds)
+    for m in res.metrics[:: max(1, len(res.metrics) // 20)]:
+        print(f"  round {m.round:4d}  t={m.virtual_time:8.1f}  "
+              f"loss={m.loss:.4f}  acc={m.accuracy:.4f}  stale={m.n_stale}")
+    s = eng.service.stats
+    print(f"best_acc={res.best_accuracy():.4f} final_acc={res.final_accuracy():.4f} "
+          f"updates={s.accepted} wall={res.wall_seconds:.1f}s "
+          f"({s.accepted / max(res.wall_seconds, 1e-9):.0f} updates/s)")
+    if args.ckpt:
+        eng.service.save(args.ckpt)
+        print("service checkpoint →", args.ckpt)
+    return res
+
+
 def run_simulation(args):
     from repro.checkpoint import save_server_state
     from repro.core import FedQSHyperParams, SAFLEngine, make_algorithm
@@ -31,15 +64,26 @@ def run_simulation(args):
 
     hp = FedQSHyperParams(buffer_k=args.buffer_k, eta0=args.lr,
                           local_epochs=args.local_epochs)
+    scenario = None
+    if args.scenario:
+        from repro.scenarios import get_scenario
+        scenario = get_scenario(args.scenario)
+    if args.cohort:
+        if scenario is None:
+            from repro.scenarios import Scenario
+            scenario = Scenario()
+        return run_cohort(args, hp, scenario)
     data = make_federated_data(args.task, args.clients, alpha=args.alpha,
                                sigma=args.sigma, seed=args.seed,
                                n_total=args.n_total)
     spec = {"cv": make_cnn_spec, "nlp": make_lstm_spec, "rwd": make_mlp_spec}[args.task]()
     algo = make_algorithm(args.algo, hp)
     eng = SAFLEngine(data, spec, algo, hp, resource_ratio=args.resource_ratio,
-                     seed=args.seed, eval_every=args.eval_every)
+                     seed=args.seed, eval_every=args.eval_every,
+                     scenario=scenario)
     print(f"FedQS SAFL simulation: task={args.task} algo={args.algo} "
-          f"N={args.clients} K={hp.buffer_k} ratio=1:{args.resource_ratio:.0f}")
+          f"N={args.clients} K={hp.buffer_k} ratio=1:{args.resource_ratio:.0f}"
+          + (f" scenario={scenario.describe()}" if scenario else ""))
     res = eng.run(args.rounds)
     for m in res.metrics[:: max(1, len(res.metrics) // 20)]:
         print(f"  round {m.round:4d}  t={m.virtual_time:8.1f}  "
@@ -110,6 +154,10 @@ def main():
     ap.add_argument("--eval-every", type=int, default=1)
     ap.add_argument("--n-total", type=int, default=4000)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scenario", default=None,
+                    help="named scenario from docs/SCENARIOS.md (or trace:<path>)")
+    ap.add_argument("--cohort", action="store_true",
+                    help="vectorized cohort fast path (10k+ clients, virtual data)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--arch", default="gemma3-1b")

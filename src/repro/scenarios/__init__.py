@@ -1,0 +1,67 @@
+"""Scenario engine: trace-driven heterogeneous client populations.
+
+Replaces the engine's bare ``dynamics`` callback with a composable
+subsystem (docs/SCENARIOS.md is the catalog):
+
+* **population models** — who the clients are: speed distributions
+  (uniform / log-normal / bimodal / Zipf), quantity skew, Dirichlet
+  label skew; vectorized and seed-deterministic;
+* **arrival processes** — when they are available: always-on (legacy),
+  Poisson, diurnal (sinusoidal rate), burst, and trace replay
+  (CSV/JSONL ``client_id,t_arrival,t_compute``);
+* **dynamic events** — what changes mid-run: the paper-§5.3 scenarios
+  (resource shift / instability / dropout) plus join-leave churn,
+  speed shifts, and label drift;
+* the **cohort fast path** (``CohortEngine``) — same-round clients
+  batched under ``vmap`` so 10k+ client simulations need no per-client
+  Python loop.
+
+``SAFLEngine(..., scenario=get_scenario("churn"))`` runs any of these
+through the paper-faithful event-driven engine; ``repro.serve`` gets
+scenario-driven load generation via ``scenario_stream``.
+"""
+from .arrivals import (
+    AlwaysOn,
+    ArrivalProcess,
+    BurstArrivals,
+    DiurnalArrivals,
+    PoissonArrivals,
+    TraceReplay,
+)
+from .catalog import SCENARIOS, get_scenario, list_scenarios
+from .cohort import CohortEngine, make_cohort_trainer
+from .events import (
+    CallbackEvent,
+    Churn,
+    Dropout,
+    DynamicEvent,
+    LabelDrift,
+    ResourceScale,
+    SpeedJitter,
+    SpeedShift,
+)
+from .population import (
+    BimodalSpeeds,
+    Cohort,
+    DirichletLabelSkew,
+    LognormalSpeeds,
+    Population,
+    QuantitySkew,
+    SpeedModel,
+    UniformSpeeds,
+    ZipfSpeeds,
+)
+from .scenario import Scenario
+from .virtual_data import VirtualTaskData
+
+__all__ = [
+    "AlwaysOn", "ArrivalProcess", "BurstArrivals", "DiurnalArrivals",
+    "PoissonArrivals", "TraceReplay",
+    "SCENARIOS", "get_scenario", "list_scenarios",
+    "CohortEngine", "make_cohort_trainer",
+    "CallbackEvent", "Churn", "Dropout", "DynamicEvent", "LabelDrift",
+    "ResourceScale", "SpeedJitter", "SpeedShift",
+    "BimodalSpeeds", "Cohort", "DirichletLabelSkew", "LognormalSpeeds",
+    "Population", "QuantitySkew", "SpeedModel", "UniformSpeeds", "ZipfSpeeds",
+    "Scenario", "VirtualTaskData",
+]

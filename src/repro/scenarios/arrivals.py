@@ -1,0 +1,247 @@
+"""Arrival processes: when is each client available to train?
+
+The virtual-clock engine historically assumed *always-on* clients — every
+client starts its next local round the instant the previous one finishes.
+Real federated populations are intermittently available (devices charge,
+users sleep, networks drop), and SAFL behavior depends heavily on the
+arrival law (SEAFL, arXiv:2503.05755).  An ``ArrivalProcess`` decides the
+next *start* time of a client; the client's speed (plus jitter, or a
+trace-provided compute time) decides when the resulting update lands.
+
+Contract — every method draws only from the caller's Generator, so the
+full event trace is a pure function of the seed:
+
+* ``start(n, rng)``            → f64[N] first start times (vectorized);
+* ``next_start(cid, t, rng)``  → next start strictly after finishing at
+  ``t`` (``inf`` = the client never returns);
+* ``compute_time(cid, t, default, rng)`` → local-round duration
+  (traces override it; synthetic processes keep the engine's default).
+"""
+from __future__ import annotations
+
+import csv
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class ArrivalProcess:
+    def start(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        raise NotImplementedError
+
+    def next_start(self, cid: int, finished_at: float, rng: np.random.Generator) -> float:
+        raise NotImplementedError
+
+    def compute_time(self, cid: int, started_at: float, default: float,
+                     rng: np.random.Generator) -> float:
+        return default
+
+    def describe(self) -> str:
+        return type(self).__name__
+
+
+@dataclass
+class AlwaysOn(ArrivalProcess):
+    """The legacy regime: clients re-start immediately after finishing."""
+
+    def start(self, n, rng):
+        return np.zeros(n)
+
+    def next_start(self, cid, finished_at, rng):
+        return finished_at
+
+    def describe(self):
+        return "always-on"
+
+
+@dataclass
+class PoissonArrivals(ArrivalProcess):
+    """Homogeneous Poisson availability: think time ~ Exp(mean_gap).
+
+    ``mean_gap`` is in virtual-clock units (the same units as client
+    speeds); a gap of 0 degenerates to always-on.
+    """
+
+    mean_gap: float = 10.0
+
+    def start(self, n, rng):
+        return rng.exponential(self.mean_gap, n)
+
+    def next_start(self, cid, finished_at, rng):
+        return finished_at + rng.exponential(self.mean_gap)
+
+    def describe(self):
+        return f"poisson(gap={self.mean_gap:g})"
+
+
+@dataclass
+class DiurnalArrivals(ArrivalProcess):
+    """Inhomogeneous Poisson with a sinusoidal day/night rate:
+
+        λ(t) = (1/mean_gap) · (1 + amplitude · sin(2πt/period))
+
+    sampled by Ogata thinning against λ_max.  ``amplitude`` ∈ [0, 1);
+    at amplitude → 1 the trough rate approaches zero (deep night).
+    """
+
+    mean_gap: float = 10.0
+    period: float = 200.0
+    amplitude: float = 0.8
+    phase: float = 0.0
+
+    def _rate(self, t: float) -> float:
+        return (1.0 / self.mean_gap) * (
+            1.0 + self.amplitude * np.sin(2.0 * np.pi * (t / self.period) + self.phase)
+        )
+
+    def _thin(self, t: float, rng: np.random.Generator) -> float:
+        lam_max = (1.0 + self.amplitude) / self.mean_gap
+        for _ in range(10_000):
+            t += rng.exponential(1.0 / lam_max)
+            if rng.random() * lam_max <= self._rate(t):
+                return t
+        return t  # pathological amplitude≈1 troughs: accept the last point
+
+    def start(self, n, rng):
+        # vectorized first arrivals: thin a stacked candidate block, falling
+        # back to the scalar loop only for clients that never accepted
+        lam_max = (1.0 + self.amplitude) / self.mean_gap
+        t = np.zeros(n)
+        pending = np.arange(n)
+        for _ in range(64):
+            if len(pending) == 0:
+                break
+            t[pending] += rng.exponential(1.0 / lam_max, len(pending))
+            # _rate is pure numpy algebra, so it broadcasts over the block
+            accept = rng.random(len(pending)) * lam_max <= self._rate(t[pending])
+            pending = pending[~accept]
+        for cid in pending:  # deep-trough stragglers: keep thinning scalar
+            t[cid] = self._thin(float(t[cid]), rng)
+        return t
+
+    def next_start(self, cid, finished_at, rng):
+        return self._thin(finished_at, rng)
+
+    def describe(self):
+        return (f"diurnal(gap={self.mean_gap:g},period={self.period:g},"
+                f"amp={self.amplitude:g})")
+
+
+@dataclass
+class BurstArrivals(ArrivalProcess):
+    """Quiet Poisson traffic punctuated by synchronized bursts: every
+    ``burst_every`` units, the next ``burst_len`` units run at
+    ``quiet_gap/burst_factor`` think time (a flash crowd / synchronized
+    wake-up, e.g. devices plugged in at 22:00)."""
+
+    quiet_gap: float = 30.0
+    burst_every: float = 150.0
+    burst_len: float = 20.0
+    burst_factor: float = 20.0
+
+    def _gap(self, t: float) -> float:
+        in_burst = (t % self.burst_every) < self.burst_len
+        return self.quiet_gap / self.burst_factor if in_burst else self.quiet_gap
+
+    def start(self, n, rng):
+        return rng.exponential(self.quiet_gap / self.burst_factor, n) % self.burst_len
+
+    def next_start(self, cid, finished_at, rng):
+        return finished_at + rng.exponential(self._gap(finished_at))
+
+    def describe(self):
+        return (f"burst(quiet={self.quiet_gap:g},every={self.burst_every:g},"
+                f"len={self.burst_len:g},x{self.burst_factor:g})")
+
+
+@dataclass
+class TraceReplay(ArrivalProcess):
+    """Replay a recorded availability trace.
+
+    ``events`` is a sequence of ``(client_id, t_arrival, t_compute)``
+    tuples; loaders for CSV (header ``client_id,t_arrival,t_compute``)
+    and JSONL (one object per line with those keys) are provided.  Each
+    client consumes its own arrivals in time order; after the trace is
+    exhausted the client never returns (inf).  ``t_compute`` ≤ 0 means
+    "use the engine's synthetic compute time".
+    """
+
+    events: Sequence[Tuple[int, float, float]] = ()
+    _by_client: Dict[int, List[Tuple[float, float]]] = field(default_factory=dict, repr=False)
+    _cursor: Dict[int, int] = field(default_factory=dict, repr=False)
+    _last_compute: Dict[int, float] = field(default_factory=dict, repr=False)
+
+    def __post_init__(self):
+        by: Dict[int, List[Tuple[float, float]]] = {}
+        for cid, t_arr, t_cmp in self.events:
+            by.setdefault(int(cid), []).append((float(t_arr), float(t_cmp)))
+        for cid in by:
+            by[cid].sort()
+        self._by_client = by
+        self._cursor = {cid: 0 for cid in by}
+
+    @staticmethod
+    def from_csv(path: str) -> "TraceReplay":
+        with open(path, newline="") as f:
+            rows = list(csv.DictReader(f))
+        return TraceReplay([
+            (int(r["client_id"]), float(r["t_arrival"]), float(r.get("t_compute", 0) or 0))
+            for r in rows
+        ])
+
+    @staticmethod
+    def from_jsonl(path: str) -> "TraceReplay":
+        events = []
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                o = json.loads(line)
+                events.append((int(o["client_id"]), float(o["t_arrival"]),
+                               float(o.get("t_compute", 0) or 0)))
+        return TraceReplay(events)
+
+    @staticmethod
+    def from_file(path: str) -> "TraceReplay":
+        if path.endswith(".jsonl") or path.endswith(".json"):
+            return TraceReplay.from_jsonl(path)
+        return TraceReplay.from_csv(path)
+
+    def _advance(self, cid: int, after: float) -> float:
+        q = self._by_client.get(cid)
+        if not q:
+            return float("inf")
+        i = self._cursor.get(cid, 0)
+        while i < len(q) and q[i][0] < after:
+            i += 1
+        if i >= len(q):
+            self._cursor[cid] = i
+            return float("inf")
+        t_arr, t_cmp = q[i]
+        self._cursor[cid] = i + 1
+        self._last_compute[cid] = t_cmp
+        return t_arr
+
+    def start(self, n, rng):
+        # a run always begins at t=0: rewind the cursors so one TraceReplay
+        # (and therefore one trace Scenario) can drive any number of runs
+        self._cursor = {cid: 0 for cid in self._by_client}
+        self._last_compute = {}
+        out = np.full(n, np.inf)
+        for cid in range(n):
+            out[cid] = self._advance(cid, 0.0)
+        return out
+
+    def next_start(self, cid, finished_at, rng):
+        return self._advance(cid, finished_at)
+
+    def compute_time(self, cid, started_at, default, rng):
+        t = self._last_compute.get(cid, 0.0)
+        return t if t > 0 else default
+
+    def describe(self):
+        n_ev = sum(len(v) for v in self._by_client.values())
+        return f"trace({len(self._by_client)} clients, {n_ev} events)"

@@ -1,0 +1,158 @@
+"""The named scenario catalog (documented in docs/SCENARIOS.md).
+
+``get_scenario(name)`` builds a fresh ``Scenario`` from the registry;
+``trace:<path>`` replays a recorded availability trace (CSV/JSONL of
+``client_id,t_arrival,t_compute``).  Every entry is a zero-argument
+recipe with paper-calibrated defaults — pass keyword overrides through
+``get_scenario`` to tweak (they are forwarded to the factory).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from .arrivals import BurstArrivals, DiurnalArrivals, PoissonArrivals, TraceReplay
+from .events import Churn, Dropout, LabelDrift, ResourceScale, SpeedJitter, SpeedShift
+from .population import (
+    BimodalSpeeds,
+    DirichletLabelSkew,
+    LognormalSpeeds,
+    Population,
+    QuantitySkew,
+    ZipfSpeeds,
+)
+from .scenario import Scenario
+
+
+def _static() -> Scenario:
+    return Scenario(name="static", description="no dynamics — the paper's base SAFL setting")
+
+
+def _resource_shift(at_round: int = 20, new_ratio: float = 100.0) -> Scenario:
+    return Scenario(
+        name="resource-shift",
+        events=(ResourceScale(at_round, new_ratio),),
+        description=f"paper §5.3 scenario 1: speed spread 1:50 → 1:{new_ratio:g} at round {at_round}",
+    )
+
+
+def _unstable(unit: float = 10.0) -> Scenario:
+    return Scenario(
+        name="unstable",
+        events=(SpeedJitter(unit=unit),),
+        description=f"paper §5.3 scenario 2: per-round ±{unit:g} resource fluctuation",
+    )
+
+
+def _dropout(at_round: int = 15, frac: float = 0.5) -> Scenario:
+    return Scenario(
+        name="dropout",
+        events=(Dropout(at_round, frac),),
+        description=f"paper §5.3 scenario 3: {frac:.0%} of clients leave at round {at_round}",
+    )
+
+
+def _churn(period: int = 10, frac: float = 0.2) -> Scenario:
+    return Scenario(
+        name="churn",
+        events=(Churn(period, frac),),
+        description=f"join/leave churn: every {period} rounds {frac:.0%} leave, the departed rejoin",
+    )
+
+
+def _diurnal(mean_gap: float = 20.0, period: float = 400.0, amplitude: float = 0.8) -> Scenario:
+    return Scenario(
+        name="diurnal",
+        population=Population(speeds=LognormalSpeeds()),
+        arrivals=DiurnalArrivals(mean_gap=mean_gap, period=period, amplitude=amplitude),
+        description="log-normal device speeds, sinusoidal day/night availability",
+    )
+
+
+def _diurnal_churn(mean_gap: float = 20.0, period: float = 400.0,
+                   churn_period: int = 10, churn_frac: float = 0.2) -> Scenario:
+    return Scenario(
+        name="diurnal-churn",
+        population=Population(
+            speeds=BimodalSpeeds(),
+            quantity=QuantitySkew(),
+            labels=DirichletLabelSkew(alpha=0.5),
+        ),
+        arrivals=DiurnalArrivals(mean_gap=mean_gap, period=period, amplitude=0.8),
+        events=(Churn(churn_period, churn_frac),),
+        description=("the 10k-scale headline: bimodal devices, diurnal arrivals, "
+                     "periodic join/leave churn"),
+    )
+
+
+def _burst() -> Scenario:
+    return Scenario(
+        name="burst",
+        population=Population(speeds=LognormalSpeeds()),
+        arrivals=BurstArrivals(),
+        description="flash-crowd traffic: quiet Poisson baseline with synchronized bursts",
+    )
+
+
+def _zipf_poisson(mean_gap: float = 15.0) -> Scenario:
+    return Scenario(
+        name="zipf-poisson",
+        population=Population(speeds=ZipfSpeeds()),
+        arrivals=PoissonArrivals(mean_gap=mean_gap),
+        description="power-law speed tail with memoryless availability",
+    )
+
+
+def _drift(at_round: int = 20, frac: float = 0.3) -> Scenario:
+    return Scenario(
+        name="drift",
+        events=(LabelDrift(at_round, frac),),
+        description=f"distribution drift: {frac:.0%} of clients' labels rotate at round {at_round}",
+    )
+
+
+def _degrade(at_round: int = 15, factor: float = 3.0) -> Scenario:
+    return Scenario(
+        name="degrade",
+        events=(SpeedShift(at_round, factor),),
+        description=f"mid-run network degradation: every client {factor:g}× slower from round {at_round}",
+    )
+
+
+SCENARIOS: Dict[str, Callable[..., Scenario]] = {
+    "static": _static,
+    "resource-shift": _resource_shift,
+    "unstable": _unstable,
+    "dropout": _dropout,
+    "churn": _churn,
+    "diurnal": _diurnal,
+    "diurnal-churn": _diurnal_churn,
+    "burst": _burst,
+    "zipf-poisson": _zipf_poisson,
+    "drift": _drift,
+    "degrade": _degrade,
+}
+
+
+def list_scenarios() -> List[str]:
+    return sorted(SCENARIOS)
+
+
+def get_scenario(name: str, **overrides) -> Scenario:
+    """Build a catalog scenario by name, or replay ``trace:<path>``."""
+    if name.startswith("trace:"):
+        if overrides:
+            raise TypeError(
+                f"trace:<path> scenarios take no overrides, got {sorted(overrides)}"
+            )
+        path = name.split(":", 1)[1]
+        return Scenario(
+            name=f"trace({path})",
+            arrivals=TraceReplay.from_file(path),
+            description="availability replayed from a recorded trace",
+        )
+    if name not in SCENARIOS:
+        raise KeyError(
+            f"unknown scenario {name!r}; known: {', '.join(list_scenarios())} "
+            f"or trace:<path>"
+        )
+    return SCENARIOS[name](**overrides)

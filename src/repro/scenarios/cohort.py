@@ -1,0 +1,357 @@
+"""Vectorized cohort fast path: 10k+ client SAFL without per-client Python.
+
+``SAFLEngine`` is event-driven: every local-training burst is one Python
+heap event and one jitted grad call — perfect fidelity, O(N) Python work
+per round.  At the ROADMAP's "millions of users" regime that loop is the
+bottleneck, not the math.  ``CohortEngine`` keeps the SAFL semantics —
+K-buffer trigger, staleness from late fetches, Mod-1/2/3 — but processes
+each aggregation round as one *cohort*: the K clients whose virtual
+finish times land in the round's window, trained as a single ``vmap``
+batch and pushed through the same ``StreamingAggregator`` the
+event-driven engine uses.
+
+Approximations (documented in docs/SCENARIOS.md "Cohort fast path"):
+
+* all cohort members start local training from the *newest* global
+  model; staleness is still tracked per client (from each one's actual
+  start time against the fire history) and still feeds Mod-3 weighting
+  and metrics, but stale *parameters* are not replayed;
+* Mod-1 similarity is computed against the shared (current − previous)
+  pseudo-global gradient, vectorized over the cohort;
+* Mod-2 runs in its branch-free vector form (``repro.core.classify``)
+  with the SSBC situation detector defaulting to Situation 1 (there is
+  no per-client validation set — data is virtual).
+
+Everything else — the status table, feedback weighting, the trigger and
+admission pipeline, round reports — is the production service code path.
+"""
+from __future__ import annotations
+
+import time as _time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.classify import adapt
+from repro.core.safl import EngineResult, ModelSpec
+from repro.core.similarity import local_global_similarity
+from repro.core.types import (
+    FedQSHyperParams,
+    RoundMetrics,
+    Update,
+    tree_clip_by_global_norm,
+    tree_sub,
+    tree_zeros_like,
+)
+from .population import Population, UniformSpeeds
+from .scenario import Scenario
+from .virtual_data import VirtualTaskData
+
+
+def make_cohort_trainer(grad_fn, n_epochs: int, grad_clip: float, similarity: str):
+    """Build the jitted, vmapped cohort step.
+
+    One call trains B clients for E local epochs from the shared start
+    params (Eq. 3 momentum recursion, per-client lr/momentum), and
+    returns stacked end params, stacked deltas (w_start − w_end), and
+    Mod-1 similarities against the pseudo-global gradient.
+    """
+
+    def train_one(w, xs, ys, lr, mom):
+        v = tree_zeros_like(w)
+        for e in range(n_epochs):
+            g = grad_fn(w, {"x": xs[e], "y": ys[e]})
+            g = tree_clip_by_global_norm(g, grad_clip)
+            v = jax.tree_util.tree_map(lambda g_, v_: g_ + mom * v_, g, v)
+            w = jax.tree_util.tree_map(lambda w_, v_: w_ - lr * v_, w, v)
+        return w
+
+    @jax.jit
+    def cohort_step(w_global, w_prev, xs, ys, lr, mom):
+        w_end = jax.vmap(train_one, in_axes=(None, 0, 0, 0, 0))(
+            w_global, xs, ys, lr, mom
+        )
+        delta = jax.tree_util.tree_map(lambda we, ws: ws - we, w_end, w_global)
+        pg = tree_sub(w_global, w_prev)
+        sims = jax.vmap(
+            lambda d: local_global_similarity(
+                jax.tree_util.tree_map(jnp.negative, d), pg, similarity
+            )
+        )(delta)
+        return w_end, delta, sims
+
+    return cohort_step
+
+
+class CohortEngine:
+    """Scenario-driven SAFL at scale (see module docstring).
+
+    The server side is a ``StreamingAggregator`` with the paper's
+    K-buffer trigger and the batched stacked aggregation path, exactly
+    as the event-driven engine uses it — one server code path at every
+    scale.
+    """
+
+    def __init__(
+        self,
+        scenario: Scenario,
+        n_clients: int,
+        *,
+        hp: Optional[FedQSHyperParams] = None,
+        spec: Optional[ModelSpec] = None,
+        task: Optional[VirtualTaskData] = None,
+        algo=None,
+        seed: int = 0,
+        cohort_k: Optional[int] = None,
+        eval_every: int = 1,
+        resource_ratio: float = 50.0,
+    ):
+        if scenario.has_data_events:
+            # cohort data is virtual (a generating law, not per-client
+            # arrays), so FederatedData-mutating events cannot apply —
+            # refuse rather than silently run the scenario minus its drift
+            raise ValueError(
+                f"scenario {scenario.name!r} carries data-mutating events "
+                "(e.g. LabelDrift), which the cohort fast path cannot apply "
+                "to virtual data — run it through SAFLEngine instead"
+            )
+        self.scenario = scenario
+        self.hp = hp or FedQSHyperParams()
+        self.rng = np.random.default_rng(seed)
+        self.eval_every = eval_every
+        n = int(n_clients)
+        self.n_clients = n
+        self.cohort_k = int(cohort_k or self.hp.buffer_k)
+
+        # without a population model, mirror SAFLEngine's default uniform
+        # 1:resource_ratio spread so engine configs port over unchanged
+        pop = scenario.population or Population(
+            speeds=UniformSpeeds(1.0, resource_ratio)
+        )
+        cohort = pop.sample(n, self.rng)
+        # scenario speeds win over the raw population draw only in the
+        # sense that the scenario *is* the population; keep the arrays
+        self.speeds = cohort.speeds
+        self.n_samples = cohort.n_samples
+        self.label_probs = cohort.label_probs
+
+        self.task = task or VirtualTaskData.make(
+            n_labels=self.label_probs.shape[1], seed=seed
+        )
+        if spec is None:
+            from repro.models.small import make_mlp_spec
+
+            spec = make_mlp_spec(
+                n_features=self.task.n_features, n_classes=self.task.n_labels
+            )
+        self.spec = spec
+
+        from repro.core.algorithms import make_algorithm
+        from repro.serve.service import StreamingAggregator
+        from repro.serve.triggers import KBuffer
+
+        self.algo = algo or make_algorithm("fedqs-sgd", self.hp)
+        key = jax.random.PRNGKey(seed)
+        self.service = StreamingAggregator(
+            self.algo, self.hp, spec.init(key), n,
+            trigger=KBuffer(self.cohort_k),
+            context=self,
+            batched=True,
+            speeds=self.speeds,
+        )
+        # Algorithm facade (server_aggregate reads ctx.data.n_clients)
+        from types import SimpleNamespace
+
+        self.data = SimpleNamespace(n_clients=n)
+
+        self._trainer = make_cohort_trainer(
+            spec.grad_fn, self.hp.local_epochs, self.hp.grad_clip,
+            self.hp.similarity,
+        )
+        self._prev_global = self.service.global_params
+
+        # per-client vector state
+        self.alive = np.ones(n, bool)
+        self.lr = np.full(n, self.hp.eta0, np.float32)
+        self.momentum = np.full(n, self.hp.m0, np.float32)
+        self.last_sim = np.zeros(n, np.float32)
+        self.quadrant = np.full(n, 2, np.int32)  # SWBC default, like ClientState
+        arr = scenario.arrivals
+        if arr is not None:
+            self.started_at = arr.start(n, self.rng)
+        else:
+            self.started_at = np.zeros(n)
+        # first-burst durations: the engine's desynchronizing 0.5–1.5 jitter,
+        # with the arrival process able to pin them (trace-replayed compute)
+        defaults = self.speeds * self.rng.uniform(0.5, 1.5, n)
+        if arr is not None:
+            finite = np.flatnonzero(np.isfinite(self.started_at))
+            for cid in finite:
+                defaults[cid] = arr.compute_time(
+                    int(cid), float(self.started_at[cid]),
+                    float(defaults[cid]), self.rng,
+                )
+        self.next_finish = self.started_at + defaults
+        self.next_finish[~np.isfinite(self.started_at)] = np.inf
+        self._fire_times: List[float] = []
+
+    # --------------------------------------------------- server-state facade
+    @property
+    def global_params(self):
+        return self.service.global_params
+
+    @property
+    def table(self):
+        return self.service.table
+
+    @property
+    def round(self) -> int:
+        return self.service.round
+
+    # ---------------------------------------------------------------- driver
+    def run(self, n_rounds: int) -> EngineResult:
+        t0 = _time.perf_counter()
+        metrics: List[RoundMetrics] = []
+        K = self.cohort_k
+        while self.round < n_rounds:
+            ready = self.alive & np.isfinite(self.next_finish)
+            if ready.sum() < K:
+                break
+            vt, report = self._one_round(np.flatnonzero(ready), K)
+            if self.round % self.eval_every == 0 or self.round == n_rounds:
+                metrics.append(self._metrics(vt, report))
+            self._apply_events(vt)
+        return EngineResult(metrics, _time.perf_counter() - t0,
+                            self.service.global_params)
+
+    def _one_round(self, ready: np.ndarray, K: int):
+        # cohort = the K earliest finishers (ties break by client id)
+        finish = self.next_finish[ready]
+        order = np.lexsort((ready, finish))[:K]
+        cohort = ready[order]
+        finish = finish[order]
+        vt = float(finish[-1])
+
+        # Mod-2, vectorized over the cohort (FedQS adaptation; base
+        # algorithms keep constant lr / zero momentum, like the zoo)
+        counts = np.asarray(self.table.counts)
+        f_all = counts / max(counts.sum(), 1)
+        from repro.core.algorithms import FedQS
+
+        if isinstance(self.algo, FedQS):
+            d = adapt(
+                jnp.asarray(f_all[cohort], jnp.float32),
+                float(f_all.mean()),
+                jnp.asarray(self.last_sim[cohort], jnp.float32),
+                float(np.asarray(self.table.sims).mean()),
+                jnp.asarray(self.lr[cohort], jnp.float32),
+                self.hp,
+            )
+            lr_c = np.asarray(d.lr, np.float32)
+            mom_c = np.asarray(d.momentum, np.float32)
+            fb_c = np.asarray(d.feedback, bool)
+            self.quadrant[cohort] = np.asarray(d.quadrant, np.int32)
+        else:
+            lr_c = np.full(K, self.hp.eta0, np.float32)
+            mom_c = np.zeros(K, np.float32)
+            fb_c = np.zeros(K, bool)
+        self.lr[cohort] = lr_c
+        self.momentum[cohort] = mom_c
+
+        # vmapped local training on virtual data
+        xs, ys = self.task.sample_cohort_batches(
+            self.label_probs[cohort], self.hp.local_epochs,
+            self.spec.batch_size, self.rng,
+        )
+        w_global = self.service.global_params
+        w_end, delta, sims = self._trainer(
+            w_global, self._prev_global, jnp.asarray(xs), jnp.asarray(ys),
+            jnp.asarray(lr_c), jnp.asarray(mom_c),
+        )
+        sims = np.asarray(sims, np.float32)
+        if not self._fire_times:
+            sims = np.zeros_like(sims)  # no pseudo-global gradient yet
+        self.last_sim[cohort] = sims
+
+        # staleness: the round each client's burst actually started in
+        fetch_rounds = np.searchsorted(
+            np.asarray(self._fire_times), self.started_at[cohort], side="right"
+        )
+
+        # submit in finish order through the service (K-th submit fires)
+        report = None
+        self._prev_global = w_global
+        for i in range(K):
+            cid = int(cohort[i])
+            u = Update(
+                cid=cid,
+                n_samples=int(self.n_samples[cid]),
+                stale_round=int(fetch_rounds[i]),
+                lr=float(lr_c[i]),
+                similarity=float(sims[i]),
+                feedback=bool(fb_c[i]),
+                speed_f=float(f_all[cid]),
+                delta=jax.tree_util.tree_map(lambda l, i=i: l[i], delta),
+                params=jax.tree_util.tree_map(lambda l, i=i: l[i], w_end),
+            )
+            res = self.service.submit(u, now=float(finish[i]))
+            if res.fired:
+                report = res.report
+        assert report is not None, "K cohort submits must fire the K-buffer"
+        self._fire_times.append(vt)
+
+        # reschedule the cohort
+        arr = self.scenario.arrivals
+        for i in range(K):
+            cid = int(cohort[i])
+            t_fin = float(finish[i])
+            nxt = arr.next_start(cid, t_fin, self.rng) if arr is not None else t_fin
+            self._schedule(cid, nxt, arr)
+        return vt, report
+
+    def _schedule(self, cid: int, start: float, arr) -> None:
+        if not np.isfinite(start):
+            self.next_finish[cid] = np.inf
+            return
+        default = float(self.speeds[cid]) * self.rng.uniform(0.9, 1.1)
+        compute = arr.compute_time(cid, start, default, self.rng) if arr is not None else default
+        self.started_at[cid] = start
+        self.next_finish[cid] = start + compute
+
+    def _apply_events(self, vt: float) -> None:
+        new_speeds = self.scenario.apply_events(self.round, self.speeds, self.rng)
+        if new_speeds is None:
+            return
+        was_dead = ~self.alive
+        self.speeds = new_speeds
+        finite = np.isfinite(new_speeds)
+        died = self.alive & ~finite
+        self.alive[died] = False
+        self.next_finish[died] = np.inf
+        revived = np.flatnonzero(was_dead & finite)
+        arr = self.scenario.arrivals
+        for cid in revived:
+            self.alive[cid] = True
+            nxt = arr.next_start(int(cid), vt, self.rng) if arr is not None else vt
+            self._schedule(int(cid), nxt, arr)
+
+    def _metrics(self, vt: float, report) -> RoundMetrics:
+        loss, acc = self.spec.eval_fn(
+            self.service.global_params, self.task.test_x, self.task.test_y
+        )
+        qc: Dict[str, int] = {}
+        vals, cnts = np.unique(self.quadrant[self.alive], return_counts=True)
+        for v, c in zip(vals, cnts):
+            qc[str(int(v))] = int(c)
+        stale = [self.round - 1 - u.stale_round for u in report.buffer]
+        return RoundMetrics(
+            round=self.round,
+            virtual_time=vt,
+            loss=float(loss),
+            accuracy=float(acc),
+            n_stale=sum(1 for s in stale if s > 0),
+            mean_staleness=float(np.mean(stale)) if stale else 0.0,
+            quadrant_counts=qc,
+        )

@@ -1,0 +1,185 @@
+"""Dynamic events: mid-run mutations of the client population.
+
+Each event keeps the contract of the engine's historic ``dynamics``
+callback — ``apply(round, speeds, rng) -> Optional[np.ndarray]`` where a
+``None`` return means "no change" and NaN entries mark dead clients —
+so a ``Scenario`` carrying one wrapped callback is *bit-identical* to
+the legacy path (tests/test_scenarios.py::TestDynamicsParity).  The
+paper-§5.3 events delegate to the exact legacy implementations in
+``repro.core.safl`` so they consume the same RNG draws.
+
+Beyond the callback contract, events may additionally revive clients
+(a finite speed where there was NaN: the engine re-enqueues them) and
+mutate client data (``mutate_data``), which the callbacks never could.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+
+class DynamicEvent:
+    """Base event: speed-array mutation per aggregation round."""
+
+    def apply(self, rnd: int, speeds: np.ndarray,
+              rng: np.random.Generator) -> Optional[np.ndarray]:
+        return None
+
+    def mutate_data(self, rnd: int, data, rng: np.random.Generator) -> None:
+        """Optional hook mutating ``FederatedData`` in place (drift)."""
+
+    def describe(self) -> str:
+        return type(self).__name__
+
+
+@dataclass
+class CallbackEvent(DynamicEvent):
+    """Adapter for a legacy ``dynamics`` callback (the shim the engine
+    installs when callers still pass ``dynamics=``)."""
+
+    fn: Callable[[int, np.ndarray, np.random.Generator], Optional[np.ndarray]]
+
+    def apply(self, rnd, speeds, rng):
+        return self.fn(rnd, speeds, rng)
+
+    def describe(self):
+        return f"callback({getattr(self.fn, '__name__', 'fn')})"
+
+
+@dataclass
+class ResourceScale(DynamicEvent):
+    """Paper §5.3 scenario 1: the speed spread rescales from 1:50 to
+    1:``new_ratio`` at round ``at_round`` (same math as
+    ``repro.core.safl.scenario_resource_scale``)."""
+
+    at_round: int
+    new_ratio: float = 100.0
+
+    def __post_init__(self):
+        from repro.core.safl import scenario_resource_scale
+        self._fn = scenario_resource_scale(self.at_round, self.new_ratio)
+
+    def apply(self, rnd, speeds, rng):
+        return self._fn(rnd, speeds, rng)
+
+    def describe(self):
+        return f"resource-scale(@{self.at_round}→1:{self.new_ratio:g})"
+
+
+@dataclass
+class SpeedJitter(DynamicEvent):
+    """Paper §5.3 scenario 2: every client's resource fluctuates within
+    ±``unit`` per round, clipped to [lo, hi]."""
+
+    lo: float = 1.0
+    hi: float = 50.0
+    unit: float = 10.0
+
+    def __post_init__(self):
+        from repro.core.safl import scenario_unstable_resources
+        self._fn = scenario_unstable_resources(self.lo, self.hi, self.unit)
+
+    def apply(self, rnd, speeds, rng):
+        return self._fn(rnd, speeds, rng)
+
+    def describe(self):
+        return f"speed-jitter(±{self.unit:g})"
+
+
+@dataclass
+class Dropout(DynamicEvent):
+    """Paper §5.3 scenario 3: ``frac`` of clients leave permanently at
+    round ``at_round`` (NaN = dead)."""
+
+    at_round: int
+    frac: float = 0.5
+
+    def __post_init__(self):
+        from repro.core.safl import scenario_dropout
+        self._fn = scenario_dropout(self.at_round, self.frac)
+
+    def apply(self, rnd, speeds, rng):
+        return self._fn(rnd, speeds, rng)
+
+    def describe(self):
+        return f"dropout(@{self.at_round},{self.frac:.0%})"
+
+
+@dataclass
+class SpeedShift(DynamicEvent):
+    """Mid-run global speed shift: all live clients' speeds multiply by
+    ``factor`` at ``at_round`` (a network-tier change, e.g. wifi→LTE)."""
+
+    at_round: int
+    factor: float = 2.0
+
+    def apply(self, rnd, speeds, rng):
+        if rnd == self.at_round:
+            return speeds * self.factor
+        return None
+
+    def describe(self):
+        return f"speed-shift(@{self.at_round}×{self.factor:g})"
+
+
+@dataclass
+class Churn(DynamicEvent):
+    """Join/leave churn: every ``period`` rounds, ``frac`` of the *live*
+    clients leave (NaN) and every currently-dead client rejoins with a
+    fresh speed drawn uniformly from the live speed range.
+
+    Unlike ``Dropout`` this cycles — the population breathes.  Revived
+    entries (NaN → finite) are re-enqueued by the engine.
+    """
+
+    period: int = 10
+    frac: float = 0.2
+
+    def apply(self, rnd, speeds, rng):
+        if rnd == 0 or rnd % self.period != 0:
+            return None
+        out = speeds.copy()
+        dead = np.flatnonzero(~np.isfinite(out))
+        live = np.flatnonzero(np.isfinite(out))
+        if len(live) > 0:
+            lo, hi = float(out[live].min()), float(out[live].max())
+            # rejoin first so the draw range reflects the pre-churn spread
+            if len(dead) > 0:
+                out[dead] = rng.uniform(lo, max(hi, lo + 1e-9), len(dead))
+            n_leave = int(len(live) * self.frac)
+            if n_leave > 0:
+                out[rng.choice(live, n_leave, replace=False)] = np.nan
+        return out
+
+    def describe(self):
+        return f"churn(every {self.period}r, {self.frac:.0%})"
+
+
+@dataclass
+class LabelDrift(DynamicEvent):
+    """Distribution drift: at ``at_round``, a ``frac`` of clients see
+    their local label semantics rotate (y ← (y+shift) mod C) — the
+    concept-drift analogue of §5.3's environment changes.  Mutates the
+    engine's ``FederatedData`` in place (train, validation); the global
+    test set is untouched, so drifted clients now pull the global model
+    away from it.
+    """
+
+    at_round: int
+    frac: float = 0.3
+    shift: int = 1
+
+    def mutate_data(self, rnd, data, rng):
+        if rnd != self.at_round or data is None:
+            return
+        n = data.n_clients
+        picked = rng.choice(n, max(1, int(n * self.frac)), replace=False)
+        for cid in picked:
+            ds = data.clients[cid]
+            ds.y = (ds.y + self.shift) % data.n_labels
+            ds.val_y = (ds.val_y + self.shift) % data.n_labels
+
+    def describe(self):
+        return f"label-drift(@{self.at_round},{self.frac:.0%})"

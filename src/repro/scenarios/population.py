@@ -1,0 +1,185 @@
+"""Population models: sample heterogeneous client cohorts.
+
+A population model answers "who are the N clients?" — their compute
+speeds (virtual seconds per local round), their data volumes (quantity
+skew), and their label distributions (Dirichlet label skew).  Everything
+is generated vectorized from a caller-supplied ``numpy`` Generator, so a
+10k- or 1M-client cohort costs one array draw, and the same seed always
+produces the same cohort (the determinism contract the scenario tests
+pin down).
+
+Speed distributions (docs/SCENARIOS.md "Population models"):
+
+* ``UniformSpeeds``   — the engine's historic 1:ratio uniform spread;
+* ``LognormalSpeeds`` — heavy-tailed device times (FLGo's phone traces
+  and the MLSys device benchmarks are roughly log-normal);
+* ``BimodalSpeeds``   — two device classes (flagship vs budget), the
+  CSAFL grouping-by-delay setting;
+* ``ZipfSpeeds``      — a power-law long tail: a few very slow devices,
+  most fast.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# speed models
+# --------------------------------------------------------------------------
+class SpeedModel:
+    """Base: sample per-client virtual seconds per local round."""
+
+    def sample(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        return type(self).__name__
+
+
+@dataclass
+class UniformSpeeds(SpeedModel):
+    """U[lo, hi] — the engine default (``resource_ratio`` spread)."""
+
+    lo: float = 1.0
+    hi: float = 50.0
+
+    def sample(self, n, rng):
+        return rng.uniform(self.lo, self.hi, n)
+
+    def describe(self):
+        return f"uniform[{self.lo:g},{self.hi:g}]"
+
+
+@dataclass
+class LognormalSpeeds(SpeedModel):
+    """exp(N(ln median, σ²)), clipped to [lo, hi] — heavy-tailed devices."""
+
+    median: float = 8.0
+    sigma: float = 0.75
+    lo: float = 1.0
+    hi: float = 200.0
+
+    def sample(self, n, rng):
+        s = rng.lognormal(np.log(self.median), self.sigma, n)
+        return np.clip(s, self.lo, self.hi)
+
+    def describe(self):
+        return f"lognormal(med={self.median:g},sigma={self.sigma:g})"
+
+
+@dataclass
+class BimodalSpeeds(SpeedModel):
+    """Two device classes: ``slow_frac`` of clients around ``slow``,
+    the rest around ``fast``; each class gets ±``jitter`` relative noise."""
+
+    fast: float = 2.0
+    slow: float = 30.0
+    slow_frac: float = 0.3
+    jitter: float = 0.2
+
+    def sample(self, n, rng):
+        is_slow = rng.random(n) < self.slow_frac
+        base = np.where(is_slow, self.slow, self.fast)
+        return base * rng.uniform(1.0 - self.jitter, 1.0 + self.jitter, n)
+
+    def describe(self):
+        return f"bimodal(fast={self.fast:g},slow={self.slow:g},frac={self.slow_frac:g})"
+
+
+@dataclass
+class ZipfSpeeds(SpeedModel):
+    """Power-law straggler tail: slowness ∝ (n/rank)^exponent, so most
+    clients sit near the fast floor ``scale`` and a handful (low ranks)
+    are extreme stragglers, clipped at ``hi``."""
+
+    exponent: float = 1.2
+    scale: float = 1.0
+    hi: float = 100.0
+
+    def sample(self, n, rng):
+        ranks = rng.permutation(n) + 1.0
+        slowness = self.scale * (n / ranks) ** self.exponent
+        return np.clip(slowness, self.scale, self.hi)
+
+    def describe(self):
+        return f"zipf(s={self.exponent:g})"
+
+
+# --------------------------------------------------------------------------
+# data-skew models
+# --------------------------------------------------------------------------
+@dataclass
+class DirichletLabelSkew:
+    """Per-client label distribution π_i ~ Dir(α·1_C) (paper Eq. 13).
+
+    Smaller α ⇒ more skew; α→∞ recovers IID.  Vectorized: one
+    ``rng.dirichlet`` call of shape [N, C].
+    """
+
+    alpha: float = 0.5
+
+    def sample(self, n: int, n_labels: int, rng: np.random.Generator) -> np.ndarray:
+        return rng.dirichlet([self.alpha] * n_labels, size=n).astype(np.float32)
+
+    def describe(self):
+        return f"dirichlet(alpha={self.alpha:g})"
+
+
+@dataclass
+class QuantitySkew:
+    """Per-client sample counts ~ round(Log-N(ln mean, σ²)), ≥ min_samples."""
+
+    mean: float = 100.0
+    sigma: float = 0.8
+    min_samples: int = 8
+
+    def sample(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        sizes = rng.lognormal(np.log(self.mean), self.sigma, n)
+        return np.maximum(sizes.astype(np.int64), self.min_samples)
+
+    def describe(self):
+        return f"lognormal-qty(mean={self.mean:g},sigma={self.sigma:g})"
+
+
+# --------------------------------------------------------------------------
+# the composed population
+# --------------------------------------------------------------------------
+@dataclass
+class Cohort:
+    """One sampled client population (all arrays are length N)."""
+
+    speeds: np.ndarray       # f64[N] — virtual seconds per local round
+    n_samples: np.ndarray    # i64[N] — local dataset sizes
+    label_probs: np.ndarray  # f32[N, C] — per-client label distribution
+
+    @property
+    def n(self) -> int:
+        return len(self.speeds)
+
+
+@dataclass
+class Population:
+    """Composable cohort sampler: speed model × quantity skew × label skew."""
+
+    speeds: SpeedModel = field(default_factory=UniformSpeeds)
+    quantity: QuantitySkew = field(default_factory=QuantitySkew)
+    labels: DirichletLabelSkew = field(default_factory=DirichletLabelSkew)
+    n_labels: int = 10
+
+    def sample(self, n: int, rng: np.random.Generator) -> Cohort:
+        return Cohort(
+            speeds=self.speeds.sample(n, rng),
+            n_samples=self.quantity.sample(n, rng),
+            label_probs=self.labels.sample(n, self.n_labels, rng),
+        )
+
+    def sample_speeds(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        """Speeds only — what ``SAFLEngine`` needs (its data is external)."""
+        return self.speeds.sample(n, rng)
+
+    def describe(self) -> str:
+        return (f"{self.speeds.describe()} × {self.quantity.describe()} "
+                f"× {self.labels.describe()}")

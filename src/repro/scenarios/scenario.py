@@ -1,0 +1,87 @@
+"""The ``Scenario`` object: population × arrivals × dynamic events.
+
+A scenario fully describes a simulated environment:
+
+* **who** the clients are (``population`` — speed/quantity/label skew);
+* **when** they are available (``arrivals`` — Poisson/diurnal/burst/trace;
+  ``None`` keeps the engine's legacy always-on loop, bit-identical to
+  the pre-scenario engine);
+* **what changes** mid-run (``events`` — churn, speed shifts, drift;
+  the paper-§5.3 scenarios are one event each).
+
+``SAFLEngine(..., scenario=...)`` consumes it directly; the old
+``dynamics=`` callback is auto-wrapped via ``Scenario.from_dynamics``.
+The named catalog lives in ``repro.scenarios.catalog`` and is documented
+knob-by-knob in docs/SCENARIOS.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .arrivals import ArrivalProcess
+from .events import CallbackEvent, DynamicEvent
+from .population import Population
+
+
+@dataclass
+class Scenario:
+    name: str = "static"
+    population: Optional[Population] = None
+    arrivals: Optional[ArrivalProcess] = None
+    events: Sequence[DynamicEvent] = ()
+    description: str = ""
+
+    # ------------------------------------------------------------- factories
+    @staticmethod
+    def from_dynamics(fn: Callable, name: str = "dynamics-shim") -> "Scenario":
+        """Wrap a legacy ``dynamics(round, speeds, rng)`` callback.  The
+        resulting scenario consumes exactly the same RNG draws, so engine
+        runs are bit-identical to the callback path."""
+        return Scenario(name=name, events=(CallbackEvent(fn),))
+
+    # ------------------------------------------------------------ population
+    def sample_speeds(self, n: int, rng: np.random.Generator,
+                      default_ratio: float = 50.0) -> np.ndarray:
+        """Cohort speeds; without a population model this is the engine's
+        historic uniform 1:ratio draw (same single ``rng.uniform`` call)."""
+        if self.population is not None:
+            return self.population.sample_speeds(n, rng)
+        return rng.uniform(1.0, default_ratio, n)
+
+    # ---------------------------------------------------------------- events
+    def apply_events(self, rnd: int, speeds: np.ndarray,
+                     rng: np.random.Generator) -> Optional[np.ndarray]:
+        """Chain every event's speed mutation for this round.  Returns the
+        final speed array, or ``None`` when no event changed anything —
+        the exact contract of the legacy ``dynamics`` callback."""
+        current, changed = speeds, False
+        for ev in self.events:
+            out = ev.apply(rnd, current, rng)
+            if out is not None:
+                current, changed = out, True
+        return current if changed else None
+
+    def mutate_data(self, rnd: int, data, rng: np.random.Generator) -> None:
+        for ev in self.events:
+            ev.mutate_data(rnd, data, rng)
+
+    # ------------------------------------------------------------------ misc
+    @property
+    def has_data_events(self) -> bool:
+        return any(
+            type(ev).mutate_data is not DynamicEvent.mutate_data
+            for ev in self.events
+        )
+
+    def describe(self) -> str:
+        parts = [self.name]
+        if self.population is not None:
+            parts.append(f"pop[{self.population.describe()}]")
+        if self.arrivals is not None:
+            parts.append(f"arr[{self.arrivals.describe()}]")
+        if self.events:
+            parts.append("ev[" + ", ".join(e.describe() for e in self.events) + "]")
+        return " ".join(parts)

@@ -1,0 +1,71 @@
+"""Virtual federated data for the cohort fast path.
+
+At 10k+ clients, materializing per-client datasets (the
+``FederatedData`` path) costs O(N) arrays before the first round runs.
+The cohort fast path instead keeps only the *generating law*: C class
+templates in feature space plus each client's label distribution
+π_i (from the population's Dirichlet skew).  Minibatches are sampled on
+demand, vectorized over the whole cohort — one inverse-CDF gather per
+round, no per-client Python.
+
+This is the same class-conditional Gaussian construction as
+``repro.data.synthetic.synth_adult``/``synth_cifar10`` (template + noise,
+learnable by the small models), so accuracy numbers are comparable
+across the two paths even though clients never own a fixed sample set.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclass
+class VirtualTaskData:
+    """Class-template task: x = template[y] + N(0, noise²)."""
+
+    templates: np.ndarray          # f32[C, d]
+    noise: float
+    test_x: np.ndarray             # f32[T, d]
+    test_y: np.ndarray             # i32[T]
+
+    @property
+    def n_labels(self) -> int:
+        return self.templates.shape[0]
+
+    @property
+    def n_features(self) -> int:
+        return self.templates.shape[1]
+
+    @staticmethod
+    def make(n_labels: int = 10, n_features: int = 14, *, noise: float = 1.0,
+             n_test: int = 512, seed: int = 0) -> "VirtualTaskData":
+        rng = np.random.default_rng(seed)
+        templates = rng.normal(0, 1, (n_labels, n_features)).astype(np.float32)
+        test_y = rng.integers(0, n_labels, n_test).astype(np.int32)
+        test_x = templates[test_y] + rng.normal(0, noise, (n_test, n_features)).astype(np.float32)
+        return VirtualTaskData(templates, noise, test_x, test_y)
+
+    def sample_cohort_batches(
+        self,
+        label_probs: np.ndarray,   # f32[B, C] — the cohort rows of the skew
+        n_epochs: int,
+        batch_size: int,
+        rng: np.random.Generator,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized draw of [B, E, bs] labeled samples.
+
+        Labels come from each client's π_i by inverse CDF; features are
+        template + Gaussian noise.  Costs one [B,E,bs,C] comparison and
+        one gather — no loop over clients.
+        """
+        B = label_probs.shape[0]
+        cdf = np.cumsum(label_probs.astype(np.float64), axis=1)   # [B, C]
+        cdf[:, -1] = 1.0                                          # guard fp drift
+        u = rng.random((B, n_epochs, batch_size))
+        y = (u[..., None] > cdf[:, None, None, :]).sum(-1).astype(np.int32)
+        x = self.templates[y] + rng.normal(
+            0, self.noise, (B, n_epochs, batch_size, self.n_features)
+        ).astype(np.float32)
+        return x, y

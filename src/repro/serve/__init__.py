@@ -9,13 +9,13 @@ checkpoint/resume.  See docs/ARCHITECTURE.md.
 from .admission import Admission, AdmissionPolicy, AdmitAll, StalenessAdmission
 from .batched import batched_weighted_sum, make_tree_sum, stack_trees
 from .service import RoundReport, ServiceStats, StreamingAggregator, SubmitResult
-from .stream import CaptureStream, replay, synthetic_stream
+from .stream import CaptureStream, replay, scenario_stream, synthetic_stream
 from .triggers import KBuffer, Quorum, TimeWindow, TriggerPolicy, make_trigger
 
 __all__ = [
     "Admission", "AdmissionPolicy", "AdmitAll", "StalenessAdmission",
     "batched_weighted_sum", "make_tree_sum", "stack_trees",
     "RoundReport", "ServiceStats", "StreamingAggregator", "SubmitResult",
-    "CaptureStream", "replay", "synthetic_stream",
+    "CaptureStream", "replay", "scenario_stream", "synthetic_stream",
     "KBuffer", "Quorum", "TimeWindow", "TriggerPolicy", "make_trigger",
 ]

@@ -6,6 +6,13 @@ deltas shaped like the model) for load-testing the service without
 running local training — this is what the throughput benchmark and the
 ``--safl-stream`` launcher feed in.
 
+``scenario_stream`` is its scenario-driven twin: the population model
+decides client speeds and data volumes, the arrival process decides
+upload timing (diurnal troughs thin the stream, bursts flood it), and
+dynamic events churn the uploading population mid-stream — so trigger
+and admission policies can be load-tested against every catalog entry
+in docs/SCENARIOS.md (``--scenario`` on ``repro.launch.serve``).
+
 ``replay`` pushes a recorded (update, timestamp) sequence through a
 service; together with ``CaptureStream`` it underpins the
 stream-vs-virtual-clock equivalence test.
@@ -48,19 +55,7 @@ def synthetic_stream(
     next_at = speeds * rng.uniform(0.5, 1.5, n_clients)
     n_samples = rng.integers(20, 200, n_clients)
 
-    key = jax.random.PRNGKey(seed)
-    leaves, treedef = jax.tree_util.tree_flatten(params)
-    deltas, models = [], []
-    for d in range(distinct_deltas):
-        key, sub = jax.random.split(key)
-        ks = jax.random.split(sub, len(leaves))
-        noise = [
-            delta_scale * jax.random.normal(k, l.shape, jnp.float32)
-            for k, l in zip(ks, leaves)
-        ]
-        delta = jax.tree_util.tree_unflatten(treedef, noise)
-        deltas.append(delta)
-        models.append(jax.tree_util.tree_map(jnp.add, params, delta))
+    deltas, models = _noise_trees(params, distinct_deltas, delta_scale, seed)
 
     virtual_round = 0
     for i in range(n_updates):
@@ -81,6 +76,120 @@ def synthetic_stream(
             params=models[i % distinct_deltas],
         ), now
         virtual_round += 1 if (i + 1) % 10 == 0 else 0
+
+
+def _noise_trees(params: Params, n: int, scale: float, seed: int):
+    """Pre-generate ``n`` model-shaped noise pytrees (and params+noise)."""
+    key = jax.random.PRNGKey(seed)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    deltas, models = [], []
+    for _ in range(n):
+        key, sub = jax.random.split(key)
+        ks = jax.random.split(sub, len(leaves))
+        noise = [
+            scale * jax.random.normal(k, l.shape, jnp.float32)
+            for k, l in zip(ks, leaves)
+        ]
+        delta = jax.tree_util.tree_unflatten(treedef, noise)
+        deltas.append(delta)
+        models.append(jax.tree_util.tree_map(jnp.add, params, delta))
+    return deltas, models
+
+
+def scenario_stream(
+    params: Params,
+    scenario,
+    n_clients: int,
+    n_updates: int,
+    *,
+    seed: int = 0,
+    delta_scale: float = 1e-3,
+    distinct_deltas: int = 8,
+    updates_per_round: int = 10,
+) -> Iterator[Tuple[Update, float]]:
+    """Yield ``(update, arrival_time)`` pairs driven by a ``Scenario``.
+
+    Speeds and data volumes come from the scenario's population model
+    (falling back to the historic uniform spread), upload timing from
+    its arrival process (always-on when absent), and the scenario's
+    dynamic events mutate the uploading population at every
+    ``updates_per_round``-update virtual round boundary — churned
+    clients stop uploading, revived ones come back.  ``stale_round``
+    is the virtual round at each burst's start, so arrival gaps map to
+    staleness the way they do in the engine.
+    """
+    from repro.scenarios.arrivals import AlwaysOn
+
+    rng = np.random.default_rng(seed)
+    speeds = scenario.sample_speeds(n_clients, rng)
+    if scenario.population is not None:
+        n_samples = scenario.population.quantity.sample(n_clients, rng)
+    else:
+        n_samples = rng.integers(20, 200, n_clients)
+    arr = scenario.arrivals if scenario.arrivals is not None else AlwaysOn()
+
+    deltas, models = _noise_trees(params, distinct_deltas, delta_scale, seed)
+
+    alive = np.ones(n_clients, bool)
+    burst_start = arr.start(n_clients, rng)
+    next_finish = np.full(n_clients, np.inf)
+    fetch_round = np.zeros(n_clients, np.int64)
+    for cid in range(n_clients):
+        if np.isfinite(burst_start[cid]):
+            default = speeds[cid] * rng.uniform(0.9, 1.1)
+            next_finish[cid] = burst_start[cid] + arr.compute_time(
+                cid, burst_start[cid], default, rng
+            )
+
+    virtual_round = 0
+    for i in range(n_updates):
+        ready = alive & np.isfinite(next_finish)
+        if not ready.any():
+            return
+        cid = int(np.flatnonzero(ready)[np.argmin(next_finish[ready])])
+        now = float(next_finish[cid])
+        yield Update(
+            cid=cid,
+            n_samples=int(n_samples[cid]),
+            stale_round=int(fetch_round[cid]),
+            lr=0.1,
+            similarity=float(rng.uniform(0.05, 1.0)),
+            feedback=bool(rng.random() < 0.3),
+            speed_f=float(1.0 / speeds[cid]),
+            delta=deltas[i % distinct_deltas],
+            params=models[i % distinct_deltas],
+        ), now
+
+        nxt = arr.next_start(cid, now, rng)
+        burst_start[cid] = nxt
+        if np.isfinite(nxt):
+            default = speeds[cid] * rng.uniform(0.9, 1.1)
+            next_finish[cid] = nxt + arr.compute_time(cid, nxt, default, rng)
+            fetch_round[cid] = virtual_round
+        else:
+            next_finish[cid] = np.inf
+
+        if (i + 1) % updates_per_round == 0:
+            virtual_round += 1
+            # clients whose next burst has not yet begun keep fetching: their
+            # stale_round tracks the round at burst *start* (the engine's
+            # arrival-gated fetch semantics), not at their previous upload
+            waiting = alive & np.isfinite(burst_start) & (burst_start >= now)
+            fetch_round[waiting] = virtual_round
+            new_speeds = scenario.apply_events(virtual_round, speeds, rng)
+            if new_speeds is not None:
+                was_dead = ~alive
+                speeds = new_speeds
+                finite = np.isfinite(new_speeds)
+                alive = finite
+                next_finish[~finite] = np.inf
+                for rcid in np.flatnonzero(was_dead & finite):
+                    t = arr.next_start(int(rcid), now, rng)
+                    burst_start[rcid] = t
+                    if np.isfinite(t):
+                        default = speeds[rcid] * rng.uniform(0.9, 1.1)
+                        next_finish[rcid] = t + arr.compute_time(int(rcid), t, default, rng)
+                        fetch_round[rcid] = virtual_round
 
 
 @dataclass

@@ -1,0 +1,349 @@
+"""Scenario engine: populations, arrivals, events, determinism, parity,
+the cohort fast path, and the EngineResult tail-window guard."""
+import numpy as np
+import pytest
+
+from repro.core import FedQSHyperParams, SAFLEngine, make_algorithm
+from repro.core.safl import (
+    EngineResult,
+    scenario_dropout,
+    scenario_resource_scale,
+    scenario_unstable_resources,
+)
+from repro.data import make_federated_data
+from repro.models import make_mlp_spec
+from repro.scenarios import (
+    AlwaysOn,
+    BimodalSpeeds,
+    BurstArrivals,
+    Churn,
+    CohortEngine,
+    DiurnalArrivals,
+    Dropout,
+    LabelDrift,
+    LognormalSpeeds,
+    PoissonArrivals,
+    Population,
+    ResourceScale,
+    Scenario,
+    SpeedJitter,
+    TraceReplay,
+    UniformSpeeds,
+    VirtualTaskData,
+    ZipfSpeeds,
+    get_scenario,
+    list_scenarios,
+)
+from repro.serve import scenario_stream
+
+
+@pytest.fixture(scope="module")
+def rwd_data():
+    return make_federated_data("rwd", 10, sigma=1.0, seed=0, n_total=1000)
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return make_mlp_spec()
+
+
+def _run(data, spec, rounds=6, **kw):
+    hp = FedQSHyperParams(buffer_k=4)
+    eng = SAFLEngine(data, spec, make_algorithm("fedqs-sgd", hp), hp, seed=1, **kw)
+    return eng, eng.run(rounds)
+
+
+ARRIVALS = {
+    "always-on": lambda: AlwaysOn(),
+    "poisson": lambda: PoissonArrivals(mean_gap=5.0),
+    "diurnal": lambda: DiurnalArrivals(mean_gap=5.0, period=100.0),
+    "burst": lambda: BurstArrivals(quiet_gap=10.0),
+}
+
+
+class TestPopulations:
+    @pytest.mark.parametrize("model", [
+        UniformSpeeds(), LognormalSpeeds(), BimodalSpeeds(), ZipfSpeeds()])
+    def test_speed_models_shape_and_determinism(self, model):
+        a = model.sample(500, np.random.default_rng(7))
+        b = model.sample(500, np.random.default_rng(7))
+        assert a.shape == (500,)
+        assert np.all(np.isfinite(a)) and np.all(a > 0)
+        np.testing.assert_array_equal(a, b)
+
+    def test_cohort_sampling(self):
+        pop = Population(n_labels=10)
+        c = pop.sample(200, np.random.default_rng(0))
+        assert c.n == 200
+        assert c.label_probs.shape == (200, 10)
+        np.testing.assert_allclose(c.label_probs.sum(1), 1.0, atol=1e-5)
+        assert c.n_samples.min() >= pop.quantity.min_samples
+
+    def test_default_speeds_match_legacy_engine_draw(self):
+        # Scenario without a population must consume the engine's historic
+        # single uniform draw (the seeded-run reproducibility contract)
+        rng1, rng2 = np.random.default_rng(3), np.random.default_rng(3)
+        legacy = rng1.uniform(1.0, 50.0, 20)
+        np.testing.assert_array_equal(Scenario().sample_speeds(20, rng2, 50.0), legacy)
+
+
+class TestArrivalDeterminism:
+    @pytest.mark.parametrize("name", sorted(ARRIVALS))
+    def test_event_trace_deterministic(self, name):
+        def trace(seed):
+            arr = ARRIVALS[name]()
+            rng = np.random.default_rng(seed)
+            t = arr.start(8, rng)
+            events = [tuple(t)]
+            now = float(np.nanmax(t[np.isfinite(t)])) if np.isfinite(t).any() else 0.0
+            for cid in range(8):
+                for _ in range(5):
+                    now2 = arr.next_start(cid, now, rng)
+                    events.append((cid, now2))
+                    if not np.isfinite(now2):
+                        break
+            return events
+
+        assert trace(11) == trace(11)
+
+    @pytest.mark.parametrize("name", sorted(ARRIVALS))
+    def test_engine_metrics_deterministic(self, rwd_data, spec, name):
+        def run():
+            scn = Scenario(name=name, arrivals=ARRIVALS[name]())
+            return _run(rwd_data, spec, rounds=4, scenario=scn)[1].metrics
+
+        m1, m2 = run(), run()
+        assert m1 == m2  # RoundMetrics dataclasses compare exactly
+        assert len(m1) == 4
+
+
+class TestDynamicsParity:
+    """The dynamics-callback shim and the equivalent Scenario must produce
+    bit-identical RoundMetrics (satellite requirement)."""
+
+    CASES = [
+        (lambda: scenario_resource_scale(3, 100.0), lambda: ResourceScale(3, 100.0)),
+        (lambda: scenario_unstable_resources(), lambda: SpeedJitter()),
+        (lambda: scenario_dropout(2, 0.5), lambda: Dropout(2, 0.5)),
+    ]
+
+    @pytest.mark.parametrize("case", range(len(CASES)))
+    def test_callback_vs_scenario_bit_identical(self, rwd_data, spec, case):
+        legacy_fn, event_fn = self.CASES[case]
+        _, res_cb = _run(rwd_data, spec, rounds=6, dynamics=legacy_fn())
+        _, res_shim = _run(rwd_data, spec, rounds=6,
+                           scenario=Scenario.from_dynamics(legacy_fn()))
+        _, res_event = _run(rwd_data, spec, rounds=6,
+                            scenario=Scenario(events=(event_fn(),)))
+        assert res_cb.metrics == res_shim.metrics
+        assert res_cb.metrics == res_event.metrics
+
+    def test_no_scenario_matches_static(self, rwd_data, spec):
+        _, plain = _run(rwd_data, spec, rounds=5)
+        _, static = _run(rwd_data, spec, rounds=5, scenario=get_scenario("static"))
+        assert plain.metrics == static.metrics
+
+    def test_both_dynamics_and_scenario_rejected(self, rwd_data, spec):
+        hp = FedQSHyperParams(buffer_k=4)
+        with pytest.raises(ValueError):
+            SAFLEngine(rwd_data, spec, make_algorithm("fedqs-sgd", hp), hp,
+                       dynamics=scenario_dropout(2, 0.5),
+                       scenario=get_scenario("dropout"))
+
+    def test_sync_mode_rejects_dynamic_scenarios(self, rwd_data, spec):
+        hp = FedQSHyperParams(buffer_k=4)
+        for scn in (get_scenario("dropout"), get_scenario("diurnal")):
+            with pytest.raises(ValueError):
+                SAFLEngine(rwd_data, spec, make_algorithm("fedqs-sgd", hp), hp,
+                           scenario=scn, sync_mode=True)
+
+
+class TestEvents:
+    def test_churn_revives_clients(self, rwd_data, spec):
+        eng, res = _run(rwd_data, spec, rounds=9,
+                        scenario=Scenario(events=(Churn(period=2, frac=0.4),)))
+        # churn cycles: the engine must still be serving and clients that
+        # left must have been revived at the next churn tick
+        assert len(res.metrics) == 9
+        assert eng.alive.sum() >= rwd_data.n_clients // 2
+
+    def test_revival_does_not_fork_event_chains(self, rwd_data, spec):
+        # a client that dies and is revived before its stale heap event pops
+        # must resume as ONE event chain: consecutive uploads from it must be
+        # ~speed apart (a forked chain would halve the gaps)
+        from repro.scenarios.events import DynamicEvent
+        from repro.serve import CaptureStream
+
+        class KillThenRevive(DynamicEvent):
+            def apply(self, rnd, speeds, rng):
+                out = speeds.copy()
+                if rnd == 1:
+                    out[0] = np.nan
+                    return out
+                if rnd == 2:
+                    out[0] = 40.0
+                    return out
+                return None
+
+        hp = FedQSHyperParams(buffer_k=4)
+        eng = SAFLEngine(rwd_data, spec, make_algorithm("fedqs-sgd", hp), hp,
+                         seed=1, scenario=Scenario(events=(KillThenRevive(),)))
+        eng.speeds[0] = eng.clients[0].speed = 40.0  # slow: stale event lingers
+        cap = CaptureStream()
+        cap.wrap(eng.service)
+        eng.run(12)
+        times = [t for u, t in cap.updates if u.cid == 0]
+        gaps = np.diff(times)
+        assert len(gaps) == 0 or gaps.min() >= 0.9 * 40.0
+
+    def test_label_drift_mutates_data(self):
+        data = make_federated_data("rwd", 6, sigma=1.0, seed=3, n_total=600)
+        before = [c.y.copy() for c in data.clients]
+        spec_ = make_mlp_spec()
+        _run(data, spec_, rounds=4,
+             scenario=Scenario(events=(LabelDrift(at_round=1, frac=0.5),)))
+        changed = sum(not np.array_equal(b, c.y)
+                      for b, c in zip(before, data.clients))
+        assert changed >= 1
+
+
+class TestTraceReplay:
+    def _trace(self, tmp_path):
+        p = tmp_path / "trace.csv"
+        rows = ["client_id,t_arrival,t_compute"]
+        for cid in range(6):
+            for k in range(8):
+                rows.append(f"{cid},{k * 10.0 + cid},{2.0 + cid * 0.5}")
+        p.write_text("\n".join(rows) + "\n")
+        return str(p)
+
+    def test_trace_drives_engine(self, rwd_data, spec, tmp_path):
+        path = self._trace(tmp_path)
+        data6 = make_federated_data("rwd", 6, sigma=1.0, seed=0, n_total=600)
+        scn = get_scenario(f"trace:{path}")
+        hp = FedQSHyperParams(buffer_k=3)
+        eng = SAFLEngine(data6, spec, make_algorithm("fedqs-sgd", hp), hp,
+                         seed=1, scenario=scn)
+        res = eng.run(8)
+        # 48 trace events / K=3 → at most 16 rounds; the run must end when
+        # the trace is exhausted, never hang
+        assert 1 <= eng.round <= 16
+        # compute times are pinned by the trace: finish = arrival + t_compute,
+        # so virtual time stays within the trace horizon + max compute
+        assert res.virtual_time() <= 80.0 + 5.0
+
+    def test_trace_determinism(self, tmp_path):
+        path = self._trace(tmp_path)
+        a = TraceReplay.from_file(path)
+        b = TraceReplay.from_file(path)
+        rng = np.random.default_rng(0)
+        np.testing.assert_array_equal(a.start(6, rng), b.start(6, rng))
+        assert a.next_start(0, 0.5, rng) == b.next_start(0, 0.5, rng)
+
+    def test_exhausted_trace_returns_inf(self, tmp_path):
+        tr = TraceReplay([(0, 1.0, 2.0)])
+        rng = np.random.default_rng(0)
+        assert tr.start(1, rng)[0] == 1.0
+        assert tr.next_start(0, 5.0, rng) == float("inf")
+
+
+class TestScenarioStream:
+    def test_deterministic_and_sized(self, spec):
+        import jax
+
+        params = spec.init(jax.random.PRNGKey(0))
+
+        def run():
+            return [(u.cid, u.stale_round, t) for u, t in
+                    scenario_stream(params, get_scenario("diurnal-churn"),
+                                    32, 60, seed=4)]
+
+        s1, s2 = run(), run()
+        assert s1 == s2
+        assert len(s1) == 60
+        times = [t for _, _, t in s1]
+        assert times == sorted(times)
+
+
+class TestCohortEngine:
+    def test_runs_and_deterministic(self):
+        def run():
+            eng = CohortEngine(get_scenario("diurnal-churn"), 300,
+                               hp=FedQSHyperParams(buffer_k=16),
+                               cohort_k=16, seed=5, eval_every=1)
+            return eng, eng.run(5)
+
+        e1, r1 = run()
+        e2, r2 = run()
+        assert r1.metrics == r2.metrics
+        assert len(r1.metrics) == 5
+        assert all(np.isfinite(m.loss) for m in r1.metrics)
+        assert e1.service.stats.rounds == 5
+
+    def test_staleness_emerges(self):
+        eng = CohortEngine(get_scenario("diurnal"), 300,
+                           hp=FedQSHyperParams(buffer_k=16),
+                           cohort_k=16, seed=0, eval_every=1)
+        res = eng.run(6)
+        assert any(m.n_stale > 0 for m in res.metrics)
+
+    def test_events_apply(self):
+        scn = Scenario(events=(Dropout(at_round=2, frac=0.5),))
+        eng = CohortEngine(scn, 200, hp=FedQSHyperParams(buffer_k=16),
+                           cohort_k=16, seed=0)
+        eng.run(4)
+        assert (~eng.alive).sum() == 100
+
+    def test_data_events_rejected(self):
+        with pytest.raises(ValueError):
+            CohortEngine(get_scenario("drift"), 100)
+
+    def test_virtual_data_label_skew(self):
+        task = VirtualTaskData.make(n_labels=4, n_features=6, seed=0)
+        probs = np.zeros((3, 4), np.float32)
+        probs[:, 1] = 1.0  # every client only holds label 1
+        xs, ys = task.sample_cohort_batches(probs, 2, 16, np.random.default_rng(0))
+        assert xs.shape == (3, 2, 16, 6)
+        assert (ys == 1).all()
+
+
+class TestCatalog:
+    def test_all_names_construct(self):
+        for name in list_scenarios():
+            scn = get_scenario(name)
+            assert scn.describe()
+
+    def test_unknown_name(self):
+        with pytest.raises(KeyError):
+            get_scenario("nope")
+
+    def test_overrides_forwarded(self):
+        scn = get_scenario("dropout", at_round=7, frac=0.25)
+        assert "@7" in scn.events[0].describe()
+
+    def test_unknown_override_rejected(self):
+        with pytest.raises(TypeError):
+            get_scenario("churn", perod=5)  # typo must not be swallowed
+
+
+class TestFinalAccuracyGuard:
+    def _result(self, accs):
+        from repro.core.types import RoundMetrics
+
+        ms = [RoundMetrics(i, float(i), 0.0, a, 0, 0.0) for i, a in enumerate(accs)]
+        return EngineResult(ms, 0.0, None)
+
+    def test_tail_window_mean(self):
+        res = self._result([0.1, 0.2, 0.9, 0.7])
+        assert res.final_accuracy(2) == pytest.approx(0.8)
+        assert res.final_accuracy(1) == pytest.approx(0.7)
+        # window larger than history averages what exists
+        assert res.final_accuracy(100) == pytest.approx(np.mean([0.1, 0.2, 0.9, 0.7]))
+
+    @pytest.mark.parametrize("last", [0, -1, -20])
+    def test_non_positive_window_rejected(self, last):
+        with pytest.raises(ValueError):
+            self._result([0.5]).final_accuracy(last)
+
+    def test_empty_metrics(self):
+        assert self._result([]).final_accuracy() == 0.0
