@@ -1,0 +1,208 @@
+"""Compressed-transport benchmark: wire bytes, aggregation throughput,
+kernel parity, and accuracy-vs-ratio (docs/COMPRESSION.md).
+
+CSV rows follow benchmarks/common.py: ``name,us_per_call,derived``.
+Four sections, each with a hard gate (the script exits non-zero on
+regression):
+
+* **bytes**       — bytes/update per codec spec vs dense fp32; gate:
+  ``topk|int8`` achieves >= 3x reduction;
+* **kernel**      — fused ``dequant_agg`` (interpret mode) vs the
+  decode-then-``weighted_agg`` oracle; gate: fp32 allclose;
+* **throughput**  — synthetic stream through the StreamingAggregator,
+  dense vs compressed ingestion (updates/sec);
+* **accuracy**    — the CohortEngine smoke config (500 clients, K=32,
+  60 rounds) dense vs ``int8`` vs ``topk:0.25|int8``; gate: int8+top-k
+  with error feedback loses < 1% final accuracy vs dense.
+
+    PYTHONPATH=src python benchmarks/bench_compress.py [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from .common import emit
+except ImportError:  # run as a script: python benchmarks/bench_compress.py
+    from common import emit
+
+from repro.compress import ClientCompressor, compress_stream, parse_codec
+from repro.core import FedQSHyperParams, make_algorithm
+from repro.core.types import AggregationStrategy
+from repro.kernels.dequant_agg import dequant_agg
+from repro.kernels.ref import dequant_agg_ref, weighted_agg_ref
+from repro.models import make_mlp_spec
+from repro.serve import StreamingAggregator, replay, synthetic_stream
+
+GATE_SPEC = "topk:0.25|int8"  # the int8+top-k CI-gate codec
+ACC_TOLERANCE = 0.01          # < 1% final-accuracy loss vs dense
+BYTES_FACTOR = 3.0            # >= 3x bytes/update reduction vs dense
+
+
+def bench_bytes(args) -> float:
+    """bytes/update per codec on a real model-shaped delta stream."""
+    spec = make_mlp_spec()
+    params = spec.init(jax.random.PRNGKey(args.seed))
+    n_up = 40 if args.fast else 120
+    ratios = {}
+    for cspec in ("none", "int8", "topk:0.05", "topk:0.05|int8", GATE_SPEC):
+        comp = ClientCompressor(cspec, args.clients, seed=args.seed)
+        for u, _ in synthetic_stream(params, args.clients, n_up, seed=args.seed):
+            comp.encode_update(u, strategy=AggregationStrategy.GRADIENT)
+        s = comp.stats
+        ratios[cspec] = s.ratio
+        emit(
+            f"compress_bytes_{cspec.replace('|', '_').replace(':', '')}",
+            0.0,
+            bytes_per_update=f"{s.bytes_per_update:.0f}",
+            dense_bytes=s.dense_bytes // max(s.updates, 1),
+            ratio=f"{s.ratio:.1f}",
+        )
+    return ratios[GATE_SPEC]
+
+
+def bench_kernel(args) -> float:
+    """Fused dequant_agg vs decode-then-weighted_agg, interpret mode."""
+    key = jax.random.PRNGKey(args.seed)
+    worst = 0.0
+    shapes = [(8, 4096, 256)] if args.fast else [(8, 4096, 256), (16, 65536, 512)]
+    for K, D, chunk in shapes:
+        q = jax.random.randint(key, (K, D), -127, 128, jnp.int8)
+        s = jax.random.uniform(jax.random.PRNGKey(1), (K, D // chunk)) * 1e-2
+        w = jax.random.uniform(jax.random.PRNGKey(2), (K,))
+        t0 = time.perf_counter()
+        got = jax.block_until_ready(dequant_agg(q, s, w, chunk=chunk, interpret=True))
+        dt = time.perf_counter() - t0
+        # oracle: decode to dense f32 rows, then the dense reduction
+        dense = (q.astype(jnp.float32).reshape(K, D // chunk, chunk)
+                 * s[..., None]).reshape(K, D)
+        want = weighted_agg_ref(dense, w)
+        gap = float(jnp.abs(got - want).max())
+        rel = gap / max(float(jnp.abs(want).max()), 1e-12)
+        worst = max(worst, rel)
+        np.testing.assert_allclose(got, dequant_agg_ref(q, s, w), rtol=1e-5, atol=1e-5)
+        emit(
+            f"compress_kernel_K{K}_D{D}_c{chunk}",
+            dt * 1e6,
+            max_abs_gap=f"{gap:.2e}",
+            rel_gap=f"{rel:.2e}",
+            int8_hbm_bytes=K * D + 4 * K * (D // chunk),
+            dense_hbm_bytes=4 * K * D,
+        )
+    return worst
+
+
+def bench_throughput(args):
+    """Dense vs compressed ingestion through the streaming service."""
+    spec = make_mlp_spec()
+    params = spec.init(jax.random.PRNGKey(args.seed))
+    hp = FedQSHyperParams(buffer_k=args.buffer_k)
+    n_up = 120 if args.fast else 400
+    base = list(synthetic_stream(params, args.clients, n_up, seed=args.seed))
+    for cspec in (None, "int8", GATE_SPEC):
+        algo = make_algorithm("fedqs-sgd", hp)
+        svc = StreamingAggregator(algo, hp, params, args.clients, batched=True)
+        if cspec is None:
+            stream = base
+        else:
+            comp = ClientCompressor(cspec, args.clients, seed=args.seed)
+            svc.compressor = comp
+            stream = list(compress_stream(iter(base), comp,
+                                          strategy=AggregationStrategy.GRADIENT))
+        # warm-up: compile the fixed-shape aggregation once
+        warm = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp, params,
+                                   args.clients, batched=True)
+        replay(warm, stream[: args.buffer_k])
+        t0 = time.perf_counter()
+        replay(svc, stream)
+        dt = time.perf_counter() - t0
+        s = svc.stats
+        emit(
+            f"compress_serve_{(cspec or 'dense').replace('|', '_').replace(':', '')}",
+            dt / max(s.submitted, 1) * 1e6,
+            updates_per_sec=f"{s.submitted / dt:.1f}",
+            rounds=s.rounds,
+            mean_agg_ms=f"{s.agg_seconds / max(s.rounds, 1) * 1e3:.2f}",
+        )
+
+
+def bench_accuracy(args) -> dict:
+    """Accuracy-vs-ratio on the cohort smoke config; this is the CI gate.
+
+    The smoke config (500 virtual clients, K=32, 60 rounds, seed 0) is
+    identical across codecs, so the comparison isolates transport loss;
+    error feedback is what keeps the sparsified runs on the dense curve.
+    """
+    from repro.scenarios import CohortEngine, Scenario
+
+    accs = {}
+    for cspec in (None, "int8", GATE_SPEC):
+        hp = FedQSHyperParams(buffer_k=32)
+        t0 = time.perf_counter()
+        eng = CohortEngine(Scenario(), 500, hp=hp, cohort_k=32, seed=args.seed,
+                           compress=cspec)
+        res = eng.run(60)
+        dt = time.perf_counter() - t0
+        acc = res.final_accuracy(5)
+        accs[cspec or "dense"] = acc
+        cs = eng.compressor.stats if eng.compressor else None
+        emit(
+            f"compress_accuracy_{(cspec or 'dense').replace('|', '_').replace(':', '')}",
+            dt / max(eng.round, 1) * 1e6,
+            final_acc=f"{acc:.4f}",
+            rounds=eng.round,
+            ratio=f"{cs.ratio:.1f}" if cs else "1.0",
+            wall_s=f"{dt:.1f}",
+        )
+    return accs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=64)
+    ap.add_argument("--buffer-k", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller bytes/kernel/throughput sections (the "
+                         "accuracy gate always runs its fixed smoke config)")
+    ap.add_argument("--skip-accuracy", action="store_true",
+                    help="skip the cohort accuracy section (quick local runs)")
+    args = ap.parse_args(argv)
+
+    gate_ratio = bench_bytes(args)
+    worst_rel = bench_kernel(args)
+    bench_throughput(args)
+
+    failures = []
+    if gate_ratio < BYTES_FACTOR:
+        failures.append(
+            f"bytes gate: {GATE_SPEC} reduction {gate_ratio:.1f}x < {BYTES_FACTOR}x")
+    if worst_rel > 1e-5:
+        failures.append(f"kernel gate: rel gap {worst_rel:.2e} > 1e-5")
+    if not args.skip_accuracy:
+        accs = bench_accuracy(args)
+        loss = accs["dense"] - accs[GATE_SPEC]
+        if loss >= ACC_TOLERANCE:
+            failures.append(
+                f"accuracy gate: {GATE_SPEC} lost {loss * 100:.2f}% >= "
+                f"{ACC_TOLERANCE * 100:.0f}% vs dense "
+                f"({accs[GATE_SPEC]:.4f} vs {accs['dense']:.4f})")
+    if failures:
+        raise SystemExit("compression regression: " + "; ".join(failures))
+
+
+def run(fast: bool = False):
+    """Entry for ``python -m benchmarks.run`` (harness suite)."""
+    main(["--fast"] if fast else [])
+
+
+if __name__ == "__main__":
+    main()

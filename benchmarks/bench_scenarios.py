@@ -21,7 +21,10 @@ import time
 
 sys.path.insert(0, "src")
 
-from common import emit
+try:
+    from .common import emit
+except ImportError:  # run as a script: python benchmarks/bench_scenarios.py
+    from common import emit
 
 from repro.core import FedQSHyperParams, SAFLEngine, make_algorithm
 from repro.data import make_federated_data
@@ -89,19 +92,24 @@ def bench_cohort_scale(args):
         raise SystemExit("cohort fast path regressed: 10k clients took >= 60s")
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=20)
     ap.add_argument("--rounds", type=int, default=16)
     ap.add_argument("--cohort-rounds", type=int, default=30)
     ap.add_argument("--scales", type=int, nargs="+", default=[1_000, 10_000])
     ap.add_argument("--quick", action="store_true")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     if args.quick:
         args.rounds, args.cohort_rounds, args.scales = 6, 8, [500]
 
     bench_engine_scenarios(args)
     bench_cohort_scale(args)
+
+
+def run(fast: bool = False):
+    """Entry for ``python -m benchmarks.run`` (harness suite)."""
+    main(["--quick"] if fast else [])
 
 
 if __name__ == "__main__":

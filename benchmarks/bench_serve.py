@@ -25,7 +25,10 @@ sys.path.insert(0, "src")
 import jax
 import numpy as np
 
-from common import emit
+try:
+    from .common import emit
+except ImportError:  # run as a script: python benchmarks/bench_serve.py
+    from common import emit
 
 from repro.core import FedQSHyperParams, SAFLEngine, make_algorithm
 from repro.data import make_federated_data
@@ -111,7 +114,7 @@ def bench_parity(args):
         raise SystemExit(f"stream/virtual-clock divergence: gap={gap:.3e}")
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--updates", type=int, default=400)
     ap.add_argument("--clients", type=int, default=64)
@@ -120,7 +123,7 @@ def main():
     ap.add_argument("--parity-rounds", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quick", action="store_true")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     if args.quick:
         args.updates, args.parity_rounds = 120, 3
 
@@ -136,6 +139,11 @@ def main():
     bench_trigger("serve_kbuffer_admission", KBuffer(k), params, args,
                   admission=StalenessAdmission(tau_max=2, mode="drop"))
     bench_parity(args)
+
+
+def run(fast: bool = False):
+    """Entry for ``python -m benchmarks.run`` (harness suite)."""
+    main(["--quick"] if fast else [])
 
 
 if __name__ == "__main__":

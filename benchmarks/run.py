@@ -1,44 +1,69 @@
 """Benchmark harness entry point — one module per paper table/figure
 (DESIGN §8).  Prints ``name,us_per_call,derived`` CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run [--only table2,kernels] [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--only serve,kernels] [--fast]
+
+``--fast`` threads through to every suite that has a reduced mode
+(serve / scenarios / compress run their ``--quick``/``--fast``
+configurations); suites without one run their single configuration.
 """
 import argparse
+import inspect
 import os
 import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-SUITES = ("factors", "accuracy", "runtime", "ablation", "dynamic",
-          "hparams", "kernels", "roofline")
+
+def _suite(module_name: str):
+    def call(fast: bool) -> None:
+        import importlib
+
+        mod = importlib.import_module(f".{module_name}", package=__package__
+                                      or "benchmarks")
+        run = mod.run
+        if "fast" in inspect.signature(run).parameters:
+            run(fast=fast)
+        else:
+            run()
+
+    return call
+
+
+SUITES = {
+    "factors": _suite("bench_factors"),
+    "accuracy": _suite("bench_accuracy"),
+    "runtime": _suite("bench_runtime"),
+    "ablation": _suite("bench_ablation"),
+    "dynamic": _suite("bench_dynamic"),
+    "hparams": _suite("bench_hparams"),
+    "kernels": _suite("bench_kernels"),
+    "roofline": _suite("roofline"),
+    "serve": _suite("bench_serve"),
+    "scenarios": _suite("bench_scenarios"),
+    "compress": _suite("bench_compress"),
+}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help=f"comma list from {SUITES}")
+                    help=f"comma list from {tuple(SUITES)}")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced configurations where a suite supports them")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else set(SUITES)
+    unknown = only - set(SUITES)
+    if unknown:
+        raise SystemExit(f"unknown suites: {sorted(unknown)} "
+                         f"(know: {sorted(SUITES)})")
 
     print("name,us_per_call,derived")
     t0 = time.time()
-    if "factors" in only:
-        from . import bench_factors; bench_factors.run()
-    if "accuracy" in only:
-        from . import bench_accuracy; bench_accuracy.run()
-    if "runtime" in only:
-        from . import bench_runtime; bench_runtime.run()
-    if "ablation" in only:
-        from . import bench_ablation; bench_ablation.run()
-    if "dynamic" in only:
-        from . import bench_dynamic; bench_dynamic.run()
-    if "hparams" in only:
-        from . import bench_hparams; bench_hparams.run()
-    if "kernels" in only:
-        from . import bench_kernels; bench_kernels.run()
-    if "roofline" in only:
-        from . import roofline; roofline.run()
+    for name, call in SUITES.items():
+        if name in only:
+            call(args.fast)
     print(f"# total_bench_wall_s={time.time()-t0:.1f}", file=sys.stderr)
 
 

@@ -43,6 +43,12 @@ if [ -z "${CI_SKIP_SMOKE:-}" ]; then
   echo "== smoke: scenario engine =="
   $PY examples/scenario_churn.py --smoke
   $PY benchmarks/bench_scenarios.py --quick
+
+  echo "== smoke: compressed transport =="
+  $PY -m repro.launch.train --task rwd --algo fedqs-sgd --rounds 4 \
+      --clients 10 --eval-every 2 --n-total 1000 --compress int8
+  $PY examples/compressed_stream.py --smoke
+  $PY benchmarks/bench_compress.py --fast
 fi
 
 echo "CI OK"

@@ -50,10 +50,41 @@ def load_params(path: str, like, device_put: bool = False):
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def _save_compressor(path: str, compressor) -> None:
+    """Persist compressed-transport codec state (the error-feedback
+    residual bank) next to the model; see ``repro.compress.feedback``."""
+    state = compressor.state_dict()
+    arrays = {}
+    if state["residual"] is not None:
+        arrays["residual"] = state["residual"]
+    np.savez(os.path.join(path, "codec.npz"),
+             spec=np.asarray(state["spec"]),
+             error_feedback=np.asarray(state["error_feedback"]),
+             **arrays)
+
+
+def _load_compressor(path: str, compressor) -> bool:
+    """Restore codec state saved by ``_save_compressor``; returns whether
+    a codec checkpoint was present."""
+    f = os.path.join(path, "codec.npz")
+    if not os.path.exists(f):
+        return False
+    with np.load(f) as data:
+        state = {
+            "spec": str(data["spec"]),
+            "error_feedback": bool(data["error_feedback"]),
+            "residual": data["residual"] if "residual" in data.files else None,
+        }
+    compressor.load_state_dict(state)
+    return True
+
+
 def save_server_state(path: str, engine) -> None:
     """Persist a ``SAFLEngine`` so a run can resume mid-training."""
     os.makedirs(path, exist_ok=True)
     save_params(os.path.join(path, "global.npz"), engine.global_params)
+    if getattr(engine, "compressor", None) is not None:
+        _save_compressor(path, engine.compressor)
     meta = {
         "round": engine.round,
         "counts": np.asarray(engine.table.counts).tolist(),
@@ -82,6 +113,8 @@ def load_server_state(path: str, engine) -> None:
     for c, m in zip(engine.clients, meta["clients"]):
         c.lr, c.momentum = m["lr"], m["momentum"]
         c.last_similarity, c.quadrant, c.speed = m["similarity"], m["quadrant"], m["speed"]
+    if getattr(engine, "compressor", None) is not None:
+        _load_compressor(path, engine.compressor)
 
 
 def save_service_state(path: str, service) -> None:
@@ -110,6 +143,8 @@ def save_service_state(path: str, service) -> None:
     }
     with open(os.path.join(path, "service.json"), "w") as f:
         json.dump(meta, f)
+    if getattr(service, "compressor", None) is not None:
+        _save_compressor(path, service.compressor)
 
 
 def load_service_state(path: str, service) -> None:
@@ -128,3 +163,5 @@ def load_service_state(path: str, service) -> None:
     )
     for k, v in meta.get("stats", {}).items():
         setattr(service.stats, k, v)
+    if getattr(service, "compressor", None) is not None:
+        _load_compressor(path, service.compressor)

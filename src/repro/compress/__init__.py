@@ -1,0 +1,38 @@
+"""Compressed update transport (docs/COMPRESSION.md).
+
+Codecs shrink client uploads — int8 per-chunk quantization, top-k
+sparsification, composed as ``topk:0.05|int8`` — with client-side error
+feedback, a self-describing ``Encoded`` wire struct, and a
+``CompressedUpdate`` the streaming service ingests without decoding
+(the batched path aggregates quantized rows directly through the fused
+Pallas ``dequant_agg`` kernel).
+"""
+from .codec import (
+    Chain,
+    Codec,
+    CompressedUpdate,
+    Encoded,
+    Identity,
+    Int8Codec,
+    TopKCodec,
+    compress_update,
+    decode,
+    is_compressed,
+    parse_codec,
+    ravel_flat,
+    ravel_flat_batch,
+)
+from .feedback import (
+    ClientCompressor,
+    CompressorStats,
+    compress_stream,
+    quantizer_stage,
+)
+
+__all__ = [
+    "Chain", "Codec", "CompressedUpdate", "Encoded", "Identity",
+    "Int8Codec", "TopKCodec", "compress_update", "decode", "is_compressed",
+    "parse_codec", "ravel_flat", "ravel_flat_batch",
+    "ClientCompressor", "CompressorStats", "compress_stream",
+    "quantizer_stage",
+]

@@ -1,0 +1,412 @@
+"""Codecs for compressed client-update transport (DESIGN: transport layer).
+
+At 10k+ clients per round the uplink and the aggregation path are
+byte-bound, not FLOP-bound: a dense fp32 upload costs 4·D bytes per
+client per round.  This module defines the wire format and the encoders
+that shrink it:
+
+* ``Int8Codec``  — QSGD-style int8 quantization with *per-chunk* scales
+  and stochastic rounding (unbiased: E[decode(encode(v))] = v);
+* ``TopKCodec``  — magnitude top-k sparsification (indices + values);
+* ``Chain``      — composition, e.g. ``topk:0.05|int8``: sparsify, then
+  quantize the survivors.  Int8 scales are always defined over chunks of
+  the *decoded* coordinate space, so a sparse-quantized payload can be
+  scattered into dense int8 rows without per-element scale bookkeeping —
+  exactly the layout the fused ``dequant_agg`` Pallas kernel consumes.
+
+Every encoder is a pure jnp function of statically-shaped inputs, so it
+jits and vmaps — the cohort engine encodes whole cohorts per round with
+one ``jax.vmap`` call.  The ``Encoded`` wire struct is self-describing:
+decoding needs no codec object, only the struct (see ``decode``).
+
+Spec grammar (``parse_codec``)::
+
+    spec    := stage ("|" stage)*
+    stage   := "none" | "int8"[":" opt (":" opt)*] | "topk" ":" opt ...
+    opt     := "chunk=<int>" | "det" | "ratio=<float>" | "k=<int>"
+               | <float in (0,1)>  (topk ratio)  | <int>  (topk k)
+
+    "int8"            dense int8, chunk=256, stochastic rounding
+    "int8:chunk=128"  smaller scale granularity
+    "int8:det"        deterministic (round-to-nearest) quantization
+    "topk:0.05"       keep the 5% largest-|v| coordinates
+    "topk:k=100"      keep exactly 100 coordinates
+    "topk:0.05|int8"  sparsify then quantize the kept values
+
+Whitespace around ``|`` is tolerated (``"topk:0.1 | int8"``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Params, Update, tree_flat_vector
+
+INT8_MAX = 127.0
+DEFAULT_CHUNK = 256
+
+
+# --------------------------------------------------------------------------
+# wire format
+# --------------------------------------------------------------------------
+@dataclass
+class Encoded:
+    """One encoded flat vector — the self-describing wire payload.
+
+    ``data``    quantized int8 values (dense, padded to a chunk multiple)
+                or raw f32 values (top-k without quantization);
+    ``scales``  f32[n_chunks] per-chunk dequantization scales over the
+                *decoded* axis (None when ``data`` is raw f32);
+    ``indices`` i32[k] coordinate of each value (None when dense);
+    ``d``       decoded length;
+    ``chunk``   scale granularity in decoded coordinates (0 = unscaled).
+    """
+
+    data: jnp.ndarray
+    scales: Optional[jnp.ndarray]
+    indices: Optional[jnp.ndarray]
+    d: int
+    chunk: int = 0
+
+    @property
+    def nbytes(self) -> int:
+        """Wire bytes of the payload (arrays only; the fixed per-update
+        metadata header is negligible and identical for dense uploads)."""
+        n = self.data.size * self.data.dtype.itemsize
+        if self.scales is not None:
+            n += self.scales.size * self.scales.dtype.itemsize
+        if self.indices is not None:
+            n += self.indices.size * self.indices.dtype.itemsize
+        return int(n)
+
+    @property
+    def is_quantized(self) -> bool:
+        return self.scales is not None
+
+
+def _encoded_flatten(e: Encoded):
+    return (e.data, e.scales, e.indices), (e.d, e.chunk)
+
+
+def _encoded_unflatten(aux, children):
+    data, scales, indices = children
+    return Encoded(data, scales, indices, d=aux[0], chunk=aux[1])
+
+
+jax.tree_util.register_pytree_node(Encoded, _encoded_flatten, _encoded_unflatten)
+
+
+def decode(enc: Encoded) -> jnp.ndarray:
+    """Encoded → dense f32[d].  Needs no codec: the struct is self-describing."""
+    vals = enc.data.astype(jnp.float32)
+    idx = None if enc.indices is None else enc.indices.astype(jnp.int32)
+    if enc.scales is not None:
+        if idx is None:
+            nc = enc.scales.shape[0]
+            vals = (vals.reshape(nc, -1) * enc.scales[:, None]).ravel()
+        else:
+            vals = vals * enc.scales[idx // enc.chunk]
+    if idx is not None:
+        return jnp.zeros((enc.d,), jnp.float32).at[idx].set(vals)
+    return vals[: enc.d]
+
+
+# --------------------------------------------------------------------------
+# codecs
+# --------------------------------------------------------------------------
+class Codec:
+    """Stateless encoder: flat f32[d] → ``Encoded``.  Implementations are
+    pure jnp transforms of statically-shaped inputs (jit/vmap-safe);
+    randomness (stochastic rounding) comes in through ``key``."""
+
+    spec: str = "none"
+
+    def encode(self, v: jnp.ndarray, key: Optional[jax.Array] = None) -> Encoded:
+        raise NotImplementedError
+
+    def decode(self, enc: Encoded) -> jnp.ndarray:
+        return decode(enc)
+
+    def describe(self) -> str:
+        return self.spec
+
+
+class Identity(Codec):
+    """Dense fp32 pass-through (the ``none`` spec) — for A/B benchmarking."""
+
+    spec = "none"
+
+    def encode(self, v, key=None):
+        return Encoded(v.astype(jnp.float32), None, None, d=v.shape[0])
+
+
+def _index_dtype(d: int):
+    """Smallest integer dtype that addresses a length-``d`` vector — top-k
+    wire bytes are index-dominated, so int16 when it fits halves them."""
+    return jnp.int16 if d <= 32767 else jnp.int32
+
+
+def _stochastic_round(x: jnp.ndarray, key: Optional[jax.Array]) -> jnp.ndarray:
+    """Unbiased round: ⌊x + u⌋, u ~ U[0,1).  Falls back to round-to-nearest
+    when no key is supplied."""
+    if key is None:
+        return jnp.rint(x)
+    return jnp.floor(x + jax.random.uniform(key, x.shape))
+
+
+class Int8Codec(Codec):
+    """Per-chunk absmax int8 quantization (QSGD with s=127 levels).
+
+    The flat vector is padded to a multiple of ``chunk``; each chunk gets
+    scale = absmax/127 and its values are stochastically rounded to
+    int8 — unbiased, with per-element error < scale.  ``encode_sparse``
+    quantizes (index, value) pairs against chunks of the *decoded* axis,
+    which is what lets ``topk|int8`` payloads scatter into dense int8
+    rows for the fused aggregation kernel.
+    """
+
+    def __init__(self, chunk: int = DEFAULT_CHUNK, stochastic: bool = True):
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        self.chunk = int(chunk)
+        self.stochastic = bool(stochastic)
+        self.spec = f"int8:chunk={self.chunk}" + ("" if self.stochastic else ":det")
+
+    def _key(self, key):
+        return key if self.stochastic else None
+
+    def encode(self, v, key=None):
+        d = v.shape[0]
+        pad = (-d) % self.chunk
+        vp = jnp.pad(v.astype(jnp.float32), (0, pad))
+        nc = vp.shape[0] // self.chunk
+        chunks = vp.reshape(nc, self.chunk)
+        scales = jnp.max(jnp.abs(chunks), axis=1) / INT8_MAX
+        safe = jnp.maximum(scales, 1e-12)
+        q = _stochastic_round(chunks / safe[:, None], self._key(key))
+        q = jnp.clip(q, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+        return Encoded(q.ravel(), scales, None, d=d, chunk=self.chunk)
+
+    def encode_sparse(self, indices: jnp.ndarray, vals: jnp.ndarray, d: int,
+                      key: Optional[jax.Array] = None) -> Encoded:
+        """Quantize sparse (index, value) pairs; scales live on decoded-axis
+        chunks (chunks holding no value get scale 0)."""
+        nc = -(-d // self.chunk)
+        cid = indices.astype(jnp.int32) // self.chunk
+        scales = jax.ops.segment_max(
+            jnp.abs(vals.astype(jnp.float32)), cid, num_segments=nc
+        )
+        scales = jnp.maximum(scales, 0.0) / INT8_MAX  # segment_max fill is -inf
+        safe = jnp.maximum(scales, 1e-12)
+        q = _stochastic_round(vals.astype(jnp.float32) / safe[cid], self._key(key))
+        q = jnp.clip(q, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+        return Encoded(q, scales, indices.astype(_index_dtype(d)), d=d,
+                       chunk=self.chunk)
+
+
+class TopKCodec(Codec):
+    """Magnitude top-k sparsification: keep the k largest-|v| coordinates.
+
+    ``ratio`` resolves to k = max(1, round(ratio·d)) at encode time, so one
+    codec object serves any model size; pass ``k`` to pin it.  Combine
+    with client-side error feedback (``repro.compress.feedback``) so the
+    discarded mass re-enters later uploads instead of vanishing.
+    """
+
+    def __init__(self, ratio: Optional[float] = None, k: Optional[int] = None):
+        if (ratio is None) == (k is None):
+            raise ValueError("TopKCodec needs exactly one of ratio= or k=")
+        if ratio is not None and not 0.0 < ratio <= 1.0:
+            raise ValueError(f"topk ratio must be in (0, 1], got {ratio}")
+        if k is not None and k < 1:
+            raise ValueError(f"topk k must be >= 1, got {k}")
+        self.ratio = ratio
+        self.k = k
+        self.spec = f"topk:{ratio}" if ratio is not None else f"topk:k={k}"
+
+    def resolve_k(self, d: int) -> int:
+        k = self.k if self.k is not None else max(1, int(round(self.ratio * d)))
+        return min(int(k), int(d))
+
+    def top(self, v: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        k = self.resolve_k(v.shape[0])
+        _, idx = jax.lax.top_k(jnp.abs(v), k)
+        idx = jnp.sort(idx)  # ascending positions: nicer wire format + chunk locality
+        return idx.astype(_index_dtype(v.shape[0])), v[idx]
+
+    def encode(self, v, key=None):
+        idx, vals = self.top(v)
+        return Encoded(vals.astype(jnp.float32), None, idx, d=v.shape[0])
+
+
+class Chain(Codec):
+    """Stage composition.  The supported pipelines are the useful ones:
+    ``topk`` → ``int8`` (sparsify then quantize survivors), plus each
+    stage alone; arbitrary stacks would need value-space re-indexing that
+    nothing upstream produces."""
+
+    def __init__(self, stages: List[Codec]):
+        stages = [s for s in stages if not isinstance(s, Identity)]
+        if not stages:
+            stages = [Identity()]
+        if len(stages) > 2 or (
+            len(stages) == 2
+            and not (isinstance(stages[0], TopKCodec) and isinstance(stages[1], Int8Codec))
+        ):
+            raise ValueError(
+                "unsupported codec chain: compose as 'topk|int8', or use a "
+                f"single stage (got {[s.spec for s in stages]})"
+            )
+        self.stages = stages
+        self.spec = "|".join(s.spec for s in stages)
+
+    def encode(self, v, key=None):
+        if len(self.stages) == 1:
+            return self.stages[0].encode(v, key)
+        topk, int8 = self.stages
+        idx, vals = topk.top(v)
+        return int8.encode_sparse(idx, vals, v.shape[0], key)
+
+
+# --------------------------------------------------------------------------
+# spec grammar
+# --------------------------------------------------------------------------
+def _parse_stage(stage: str) -> Codec:
+    parts = [p.strip() for p in stage.split(":") if p.strip()]
+    if not parts:
+        raise ValueError("empty codec stage")
+    name, opts = parts[0].lower(), parts[1:]
+    if name in ("none", "dense", "fp32"):
+        if opts:
+            raise ValueError(f"'{name}' takes no options")
+        return Identity()
+    if name == "int8":
+        chunk, stochastic = DEFAULT_CHUNK, True
+        for o in opts:
+            if o == "det":
+                stochastic = False
+            elif o == "sr":
+                stochastic = True
+            elif o.startswith("chunk="):
+                chunk = int(o[len("chunk="):])
+            else:
+                raise ValueError(f"unknown int8 option {o!r}")
+        return Int8Codec(chunk=chunk, stochastic=stochastic)
+    if name == "topk":
+        if len(opts) != 1:
+            raise ValueError("topk needs one option: a ratio in (0,1), or k=<int>")
+        o = opts[0]
+        if o.startswith("k="):
+            return TopKCodec(k=int(o[2:]))
+        if o.startswith("ratio="):
+            return TopKCodec(ratio=float(o[len("ratio="):]))
+        val = float(o)
+        if val <= 1.0:  # topk:1.0 keeps everything, like ratio=1.0
+            return TopKCodec(ratio=val)
+        if val != int(val):
+            raise ValueError(f"topk:{o}: a count must be an integer "
+                             "(ratios live in (0, 1])")
+        return TopKCodec(k=int(val))
+    raise ValueError(f"unknown codec {name!r} (know: none, int8, topk)")
+
+
+def parse_codec(spec: str) -> Codec:
+    """Parse the spec grammar (module docstring) into a ``Codec``."""
+    stages = [_parse_stage(s) for s in str(spec).split("|")]
+    return stages[0] if len(stages) == 1 else Chain(stages)
+
+
+# --------------------------------------------------------------------------
+# compressed wire update
+# --------------------------------------------------------------------------
+@dataclass
+class CompressedUpdate:
+    """Wire form of ``repro.core.types.Update``: identical metadata, but
+    the tensor payloads are ``Encoded`` flat vectors.
+
+    Admission control, triggers, and the status-table update read only
+    the metadata fields — a gateway weighs staleness and buffers the
+    update without ever decoding the payload.  Decoding happens once, at
+    aggregation time, and the batched service path skips even that by
+    feeding quantized rows straight to the fused ``dequant_agg`` kernel.
+    """
+
+    cid: int
+    n_samples: int
+    stale_round: int
+    lr: float
+    similarity: float
+    feedback: bool
+    speed_f: float
+    delta: Optional[Encoded] = None    # encoded raveled pseudo-gradient
+    params: Optional[Encoded] = None   # encoded raveled local model
+
+    @property
+    def nbytes(self) -> int:
+        return sum(p.nbytes for p in (self.delta, self.params) if p is not None)
+
+    def to_update(self, unravel) -> Update:
+        """Decode into a dense ``Update`` (``unravel``: flat [D] → pytree,
+        e.g. from ``jax.flatten_util.ravel_pytree`` of the global model)."""
+        return Update(
+            cid=self.cid,
+            n_samples=self.n_samples,
+            stale_round=self.stale_round,
+            lr=self.lr,
+            similarity=self.similarity,
+            feedback=self.feedback,
+            speed_f=self.speed_f,
+            delta=unravel(decode(self.delta)) if self.delta is not None else None,
+            params=unravel(decode(self.params)) if self.params is not None else None,
+        )
+
+
+def is_compressed(update) -> bool:
+    return isinstance(update, CompressedUpdate)
+
+
+def compress_update(update: Update, codec: Codec,
+                    key: Optional[jax.Array] = None, *,
+                    payloads: Tuple[str, ...] = ("delta", "params")) -> CompressedUpdate:
+    """Encode a dense ``Update``'s pytree payload(s) into wire form.
+
+    Flattening uses leaf order (``ravel_flat``), matching the unravel
+    closure the service derives from its global model.
+    """
+    enc = {}
+    for name in ("delta", "params"):
+        tree = getattr(update, name)
+        if tree is not None and name in payloads:
+            enc[name] = codec.encode(ravel_flat(tree), key)
+    return CompressedUpdate(
+        cid=update.cid,
+        n_samples=update.n_samples,
+        stale_round=update.stale_round,
+        lr=update.lr,
+        similarity=update.similarity,
+        feedback=update.feedback,
+        speed_f=update.speed_f,
+        delta=enc.get("delta"),
+        params=enc.get("params"),
+    )
+
+
+# the wire-format flatten IS the Mod-1 similarity-space flatten: one leaf
+# order shared by encode, decode-unravel, and similarity computations
+ravel_flat = tree_flat_vector
+
+
+def ravel_flat_batch(tree: Params) -> jnp.ndarray:
+    """Batched ravel: a pytree whose leaves carry a leading batch axis
+    [B, ...] → one [B, D] f32 matrix, rows in the same leaf order as
+    ``ravel_flat`` of each slice (the cohort engine's per-round encode)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((0, 0), jnp.float32)
+    B = leaves[0].shape[0]
+    return jnp.concatenate(
+        [l.reshape(B, -1).astype(jnp.float32) for l in leaves], axis=1
+    )

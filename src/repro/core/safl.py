@@ -122,6 +122,7 @@ class SAFLEngine:
         scenario: Optional["Scenario"] = None,
         eval_every: int = 1,
         sync_mode: bool = False,
+        compress: Optional[str] = None,
     ):
         self.data = data
         self.spec = spec
@@ -190,6 +191,16 @@ class SAFLEngine:
             context=self,
             speeds=self.speeds,
         )
+
+        # compressed uplink (docs/COMPRESSION.md): each client's upload is
+        # encoded at the submit boundary — exactly where the wire would be —
+        # and the service decodes (or fused-aggregates) server-side
+        self.compressor = None
+        if compress is not None and compress != "none":
+            from repro.compress import ClientCompressor
+
+            self.compressor = ClientCompressor(compress, n, seed=seed)
+            self.service.compressor = self.compressor
 
         # client-side Mod-1 storage: the last two global models seen
         self._client_globals: Dict[int, Tuple[int, Params, Optional[Params]]] = {}
@@ -293,6 +304,17 @@ class SAFLEngine:
             params=w_end,
         )
 
+    def _submit(self, update: Update, now: float):
+        """Submit one finished burst, crossing the (possibly compressed)
+        uplink: with a compressor the update is encoded here — error
+        feedback against this client's residual — and the service ingests
+        the wire form."""
+        if self.compressor is not None:
+            update = self.compressor.encode_update(
+                update, strategy=getattr(self.algo, "strategy", None)
+            )
+        return self.service.submit(update, now=now)
+
     # ---------------------------------------------------------- server side
     def _metrics(self, vt: float, buffer: List[Update]) -> RoundMetrics:
         loss, acc = self.spec.eval_fn(self.global_params, self.data.test_x, self.data.test_y)
@@ -346,7 +368,7 @@ class SAFLEngine:
             heapq.heappush(heap, (vt + self.clients[cid].speed * jitter, seq, cid, gen))
             seq += 1
 
-            result = self.service.submit(update, now=vt)
+            result = self._submit(update, now=vt)
             if result.fired:
                 if self.round % self.eval_every == 0:
                     metrics.append(self._metrics(vt, result.report.buffer))
@@ -393,7 +415,7 @@ class SAFLEngine:
                 seq += 1
                 continue
             update = self._client_train(cid)
-            result = self.service.submit(update, now=vt)
+            result = self._submit(update, now=vt)
             nxt = arr.next_start(cid, vt, self.rng)
             if np.isfinite(nxt):
                 heapq.heappush(heap, (max(float(nxt), vt), seq, cid, self._START, gen))
@@ -453,7 +475,7 @@ class SAFLEngine:
             report = None
             for cid in sel:
                 self._client_fetch(cid)
-                res = self.service.submit(self._client_train(cid), now=vt)
+                res = self._submit(self._client_train(cid), now=vt)
                 if res.fired:
                     report = res.report
             if report is None:  # fewer live clients than K: force the round

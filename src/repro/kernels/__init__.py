@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the FedQS hot spots (DESIGN §7):
 
 * ``weighted_agg``      — Mod-3 K-way weighted parameter reduction;
+* ``dequant_agg``       — fused int8 dequantize + weighted reduction
+  (compressed-transport aggregation, ``repro.compress``);
 * ``similarity``        — Mod-1 fused <a,b>/|a|^2/|b|^2 one-pass statistics;
 * ``window_attention``  — sliding-window decode attention (long_500k path).
 
@@ -8,6 +10,8 @@ Validated against ``ref.py`` oracles with ``interpret=True`` on CPU.
 """
 from .ops import (
     cosine_op,
+    dequant_agg_auto_op,
+    dequant_agg_op,
     similarity_stats_op,
     weighted_agg_auto_op,
     weighted_agg_op,
@@ -16,6 +20,8 @@ from .ops import (
 
 __all__ = [
     "cosine_op",
+    "dequant_agg_auto_op",
+    "dequant_agg_op",
     "similarity_stats_op",
     "weighted_agg_auto_op",
     "weighted_agg_op",

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused dequantize + Mod-3 weighted aggregation.
+
+    out[d] = Σ_k w[k] · q[k,d] · s[k, d // chunk]
+
+The compressed-transport buffer stacks K quantized client rows
+(int8, per-chunk f32 scales — ``repro.compress``) and reduces them with
+externally computed Mod-3 weights.  Doing decode-then-``weighted_agg``
+would materialize a [K, D] f32 matrix in HBM (4·K·D bytes written, then
+read again); the fused kernel reads each int8 byte exactly once —
+**≈ 4× less HBM traffic than even the dense kernel** — dequantizes in
+VMEM registers, and runs the weighted reduction on the spot.
+
+Tiling: grid over D/block; per step the (K, block) int8 tile, its
+(K, block/chunk) scale columns and the (K, 1) weight column live in VMEM
+together (int8 halves the f32 tile footprint even after the f32
+upcast for the multiply).  ``block`` is the largest multiple of the
+scale chunk ≤ ``BLOCK_D`` so scale columns never straddle tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_D = 4096  # int8: K×4096 ≤ 16·4096 = 64 KiB per tile for K=16
+
+
+def _dequant_agg_kernel(w_ref, s_ref, q_ref, o_ref):
+    # w_ref [K, 1], s_ref [K, NC], q_ref [K, BLK] i8, o_ref [1, BLK] f32
+    K, blk = q_ref.shape
+    nc = s_ref.shape[1]
+    x = q_ref[...].astype(jnp.float32).reshape(K, nc, blk // nc)
+    x = (x * s_ref[...][:, :, None]).reshape(K, blk)
+    o_ref[...] = jnp.dot(
+        w_ref[...].T, x, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def dequant_agg(q: jax.Array, scales: jax.Array, w: jax.Array, *,
+                chunk: int, block_d: int = BLOCK_D,
+                interpret: bool = False) -> jax.Array:
+    """q [K, Dp] int8, scales [K, Dp/chunk] f32, w [K] f32 → [Dp] f32.
+
+    ``Dp`` must be a multiple of ``chunk`` (the encoder pads to it);
+    further padding up to the kernel block is handled here with zero
+    rows/scales, which contribute exactly 0 to the reduction.
+    """
+    K, Dp = q.shape
+    if Dp % chunk:
+        raise ValueError(f"D={Dp} must be a multiple of chunk={chunk}")
+    if scales.shape != (K, Dp // chunk):
+        raise ValueError(
+            f"scales shape {scales.shape} != {(K, Dp // chunk)} for chunk={chunk}"
+        )
+    blk = max(chunk, block_d - block_d % chunk)  # whole chunks per tile
+    pad = (-Dp) % blk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad)))
+        scales = jnp.pad(scales, ((0, 0), (0, pad // chunk)))
+    nc_blk = blk // chunk
+    out = pl.pallas_call(
+        _dequant_agg_kernel,
+        grid=((Dp + pad) // blk,),
+        in_specs=[
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+            pl.BlockSpec((K, nc_blk), lambda i: (0, i)),
+            pl.BlockSpec((K, blk), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, blk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, Dp + pad), jnp.float32),
+        interpret=interpret,
+    )(w.astype(jnp.float32)[:, None], scales.astype(jnp.float32),
+      q.astype(jnp.int8))
+    return out[0, :Dp]

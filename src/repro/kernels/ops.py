@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref as _ref
+from .dequant_agg import dequant_agg
 from .similarity import cosine_from_stats, fused_similarity_stats
 from .weighted_agg import weighted_agg
 from .window_attention import window_decode_attention
@@ -36,6 +37,21 @@ def weighted_agg_auto_op(x, w):
     if _ON_TPU and not _FORCE_REF:
         return weighted_agg(x, w)
     return _ref.weighted_agg_ref(x, w)
+
+
+def dequant_agg_op(q, scales, w, *, chunk):
+    if _FORCE_REF:
+        return _ref.dequant_agg_ref(q, scales, w)
+    return dequant_agg(q, scales, w, chunk=chunk, interpret=_INTERPRET)
+
+
+def dequant_agg_auto_op(q, scales, w, *, chunk):
+    """Throughput dispatch for the compressed aggregation hot path: the
+    fused Pallas kernel on TPU, the jnp decode-then-reduce oracle
+    elsewhere (interpret-mode Pallas is too slow for an ingest loop)."""
+    if _ON_TPU and not _FORCE_REF:
+        return dequant_agg(q, scales, w, chunk=chunk)
+    return _ref.dequant_agg_ref(q, scales, w)
 
 
 def similarity_stats_op(a, b):

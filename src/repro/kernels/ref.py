@@ -14,6 +14,16 @@ def weighted_agg_ref(x: jax.Array, w: jax.Array) -> jax.Array:
     return jnp.einsum("k,kd->d", w.astype(jnp.float32), x.astype(jnp.float32))
 
 
+def dequant_agg_ref(q: jax.Array, scales: jax.Array, w: jax.Array) -> jax.Array:
+    """q [K,Dp] i8, scales [K,Dp/chunk], w [K] → Σ_k w[k]·q[k]·s[k,·/chunk]
+    (decode-then-weighted_agg, fully materialized)."""
+    K, Dp = q.shape
+    nc = scales.shape[1]
+    x = q.astype(jnp.float32).reshape(K, nc, Dp // nc)
+    x = (x * scales.astype(jnp.float32)[:, :, None]).reshape(K, Dp)
+    return weighted_agg_ref(x, w)
+
+
 def fused_similarity_stats_ref(a: jax.Array, b: jax.Array) -> jax.Array:
     a = a.astype(jnp.float32)
     b = b.astype(jnp.float32)

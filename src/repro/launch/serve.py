@@ -41,6 +41,7 @@ def run_safl_stream(args):
     hp = FedQSHyperParams(buffer_k=args.buffer_k)
     spec = make_mlp_spec()
     params = spec.init(jax.random.PRNGKey(args.seed))
+    algo = make_algorithm(args.algo, hp)
 
     trigger = {
         "kbuffer": lambda: make_trigger("kbuffer", k=args.buffer_k),
@@ -53,7 +54,7 @@ def run_safl_stream(args):
     admission = (StalenessAdmission(args.tau_max, mode=args.admission_mode)
                  if args.tau_max >= 0 else AdmitAll())
     service = StreamingAggregator(
-        make_algorithm(args.algo, hp), hp, params, args.clients,
+        algo, hp, params, args.clients,
         trigger=trigger, admission=admission, batched=args.batched,
     )
     if args.scenario:
@@ -67,13 +68,27 @@ def run_safl_stream(args):
         stream = list(synthetic_stream(params, args.clients, args.updates,
                                        seed=args.seed))
         source = "synthetic"
+    compressor = None
+    if args.compress:
+        from repro.compress import ClientCompressor, compress_stream
+
+        compressor = ClientCompressor(args.compress, args.clients,
+                                      seed=args.seed)
+        service.compressor = compressor
+        stream = list(compress_stream(iter(stream), compressor,
+                                      strategy=algo.strategy))
     t0 = time.perf_counter()
     reports = replay(service, stream)
     dt = time.perf_counter() - t0
     s = service.stats
     print(f"safl-stream: algo={args.algo} trigger={trigger.describe()} "
           f"admission={admission.describe()} batched={args.batched} "
-          f"source={source}")
+          f"source={source}"
+          + (f" compress={compressor.describe()}" if compressor else ""))
+    if compressor is not None:
+        cs = compressor.stats
+        print(f"  uplink {cs.bytes_per_update:.0f} bytes/update "
+              f"({cs.ratio:.1f}x smaller than dense fp32)")
     print(f"  {s.submitted} updates → {s.accepted} admitted, {s.dropped} dropped, "
           f"{s.downweighted} downweighted, {s.rounds} rounds")
     print(f"  sustained {s.submitted / dt:.1f} updates/s "
@@ -115,6 +130,9 @@ def main():
                     choices=["drop", "downweight"])
     ap.add_argument("--batched", action="store_true",
                     help="stacked [K,D] aggregation (Pallas kernel on TPU)")
+    ap.add_argument("--compress", default=None, metavar="SPEC",
+                    help="encode the stream through the compressed transport "
+                         "(docs/COMPRESSION.md), e.g. int8, 'topk:0.05|int8'")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 

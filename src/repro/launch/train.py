@@ -15,6 +15,10 @@ Two entry modes:
 (docs/SCENARIOS.md): population model + arrival process + dynamic
 events.  ``--cohort`` switches to the vectorized cohort fast path
 (``repro.scenarios.CohortEngine``) for 10k+ client populations.
+``--compress <spec>`` runs the uplink through the compressed transport
+(docs/COMPRESSION.md): client updates cross the submit boundary as
+int8/top-k payloads and the service aggregates them through the fused
+``dequant_agg`` kernel path.
 
 Examples:
     PYTHONPATH=src python -m repro.launch.train --task rwd --algo fedqs-sgd --rounds 100
@@ -38,10 +42,12 @@ def run_cohort(args, hp, scenario):
     eng = CohortEngine(scenario, args.clients, hp=hp,
                        algo=make_algorithm(args.algo, hp), seed=args.seed,
                        eval_every=args.eval_every,
-                       resource_ratio=args.resource_ratio)
+                       resource_ratio=args.resource_ratio,
+                       compress=args.compress)
     print(f"cohort fast path: scenario={scenario.describe()} algo={args.algo} "
           f"N={args.clients} K={eng.cohort_k} task=virtual "
-          f"(--task/--alpha/--sigma/--n-total apply to the event engine only)")
+          + (f"compress={eng.compressor.describe()} " if eng.compressor else "")
+          + "(--task/--alpha/--sigma/--n-total apply to the event engine only)")
     res = eng.run(args.rounds)
     for m in res.metrics[:: max(1, len(res.metrics) // 20)]:
         print(f"  round {m.round:4d}  t={m.virtual_time:8.1f}  "
@@ -50,6 +56,10 @@ def run_cohort(args, hp, scenario):
     print(f"best_acc={res.best_accuracy():.4f} final_acc={res.final_accuracy():.4f} "
           f"updates={s.accepted} wall={res.wall_seconds:.1f}s "
           f"({s.accepted / max(res.wall_seconds, 1e-9):.0f} updates/s)")
+    if eng.compressor is not None:
+        cs = eng.compressor.stats
+        print(f"uplink: {cs.bytes_per_update:.0f} bytes/update "
+              f"({cs.ratio:.1f}x smaller than dense fp32)")
     if args.ckpt:
         eng.service.save(args.ckpt)
         print("service checkpoint →", args.ckpt)
@@ -80,10 +90,11 @@ def run_simulation(args):
     algo = make_algorithm(args.algo, hp)
     eng = SAFLEngine(data, spec, algo, hp, resource_ratio=args.resource_ratio,
                      seed=args.seed, eval_every=args.eval_every,
-                     scenario=scenario)
+                     scenario=scenario, compress=args.compress)
     print(f"FedQS SAFL simulation: task={args.task} algo={args.algo} "
           f"N={args.clients} K={hp.buffer_k} ratio=1:{args.resource_ratio:.0f}"
-          + (f" scenario={scenario.describe()}" if scenario else ""))
+          + (f" scenario={scenario.describe()}" if scenario else "")
+          + (f" compress={eng.compressor.describe()}" if eng.compressor else ""))
     res = eng.run(args.rounds)
     for m in res.metrics[:: max(1, len(res.metrics) // 20)]:
         print(f"  round {m.round:4d}  t={m.virtual_time:8.1f}  "
@@ -91,6 +102,10 @@ def run_simulation(args):
     print(f"best_acc={res.best_accuracy():.4f} "
           f"final_acc={res.final_accuracy():.4f} "
           f"oscillations={res.oscillations()} wall={res.wall_seconds:.1f}s")
+    if eng.compressor is not None:
+        cs = eng.compressor.stats
+        print(f"uplink: {cs.bytes_per_update:.0f} bytes/update "
+              f"({cs.ratio:.1f}x smaller than dense fp32)")
     if args.ckpt:
         save_server_state(args.ckpt, eng)
         print("checkpoint →", args.ckpt)
@@ -158,6 +173,9 @@ def main():
                     help="named scenario from docs/SCENARIOS.md (or trace:<path>)")
     ap.add_argument("--cohort", action="store_true",
                     help="vectorized cohort fast path (10k+ clients, virtual data)")
+    ap.add_argument("--compress", default=None, metavar="SPEC",
+                    help="compressed uplink codec spec (docs/COMPRESSION.md), "
+                         "e.g. int8, topk:0.05, 'topk:0.05|int8'")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--arch", default="gemma3-1b")

@@ -107,6 +107,7 @@ class CohortEngine:
         cohort_k: Optional[int] = None,
         eval_every: int = 1,
         resource_ratio: float = 50.0,
+        compress: Optional[str] = None,
     ):
         if scenario.has_data_events:
             # cohort data is virtual (a generating law, not per-client
@@ -161,6 +162,15 @@ class CohortEngine:
             batched=True,
             speeds=self.speeds,
         )
+        # compressed transport: deltas (or models) are encoded per virtual
+        # client under vmap before submission; the service's batched path
+        # aggregates the quantized rows through the fused dequant_agg kernel
+        self.compressor = None
+        if compress is not None and compress != "none":
+            from repro.compress import ClientCompressor
+
+            self.compressor = ClientCompressor(compress, n, seed=seed)
+            self.service.compressor = self.compressor
         # Algorithm facade (server_aggregate reads ctx.data.n_clients)
         from types import SimpleNamespace
 
@@ -283,9 +293,23 @@ class CohortEngine:
         # submit in finish order through the service (K-th submit fires)
         report = None
         self._prev_global = w_global
+        enc_delta = enc_params = None
+        if self.compressor is not None:
+            # encode the whole cohort in one vmap call; only the payload
+            # the algorithm's strategy aggregates crosses the wire
+            from repro.compress import ravel_flat_batch
+            from repro.core.types import AggregationStrategy
+
+            if getattr(self.algo, "strategy", None) is AggregationStrategy.MODEL:
+                enc_params = self.compressor.encode_params_flat_batch(
+                    ravel_flat_batch(w_end))
+            else:
+                enc_delta = self.compressor.encode_flat_batch(
+                    cohort, ravel_flat_batch(delta))
+            from repro.compress import CompressedUpdate
         for i in range(K):
             cid = int(cohort[i])
-            u = Update(
+            meta = dict(
                 cid=cid,
                 n_samples=int(self.n_samples[cid]),
                 stale_round=int(fetch_rounds[i]),
@@ -293,9 +317,19 @@ class CohortEngine:
                 similarity=float(sims[i]),
                 feedback=bool(fb_c[i]),
                 speed_f=float(f_all[cid]),
-                delta=jax.tree_util.tree_map(lambda l, i=i: l[i], delta),
-                params=jax.tree_util.tree_map(lambda l, i=i: l[i], w_end),
             )
+            if self.compressor is not None:
+                u = CompressedUpdate(
+                    **meta,
+                    delta=enc_delta[i] if enc_delta is not None else None,
+                    params=enc_params[i] if enc_params is not None else None,
+                )
+            else:
+                u = Update(
+                    **meta,
+                    delta=jax.tree_util.tree_map(lambda l, i=i: l[i], delta),
+                    params=jax.tree_util.tree_map(lambda l, i=i: l[i], w_end),
+                )
             res = self.service.submit(u, now=float(finish[i]))
             if res.fired:
                 report = res.report

@@ -7,14 +7,22 @@ ingestion pipeline: staleness-bounded admission → pluggable trigger
 checkpoint/resume.  See docs/ARCHITECTURE.md.
 """
 from .admission import Admission, AdmissionPolicy, AdmitAll, StalenessAdmission
-from .batched import batched_weighted_sum, make_tree_sum, stack_trees
+from .batched import (
+    batched_weighted_sum,
+    compressed_weighted_sum,
+    make_tree_sum,
+    stack_encoded,
+    stack_trees,
+    unravel_like,
+)
 from .service import RoundReport, ServiceStats, StreamingAggregator, SubmitResult
 from .stream import CaptureStream, replay, scenario_stream, synthetic_stream
 from .triggers import KBuffer, Quorum, TimeWindow, TriggerPolicy, make_trigger
 
 __all__ = [
     "Admission", "AdmissionPolicy", "AdmitAll", "StalenessAdmission",
-    "batched_weighted_sum", "make_tree_sum", "stack_trees",
+    "batched_weighted_sum", "compressed_weighted_sum", "make_tree_sum",
+    "stack_encoded", "stack_trees", "unravel_like",
     "RoundReport", "ServiceStats", "StreamingAggregator", "SubmitResult",
     "CaptureStream", "replay", "scenario_stream", "synthetic_stream",
     "KBuffer", "Quorum", "TimeWindow", "TriggerPolicy", "make_trigger",

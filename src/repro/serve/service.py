@@ -49,8 +49,10 @@ from repro.core.types import (
 )
 import jax.numpy as jnp
 
+from repro.compress.codec import is_compressed
+
 from .admission import AdmissionPolicy, AdmitAll
-from .batched import make_tree_sum
+from .batched import make_tree_sum, unravel_like
 from .triggers import KBuffer, TriggerPolicy
 
 
@@ -133,9 +135,14 @@ class StreamingAggregator:
         self._ingest: List[Update] = []
         self._dropped_since_fire = 0
         self._batched = batched
-        self._tree_sum = make_tree_sum(use_kernel) if batched else None
+        self._tree_sum = (
+            make_tree_sum(use_kernel, unravel_fn=self._unravel) if batched else None
+        )
         self._pool = ThreadPoolExecutor(max_workers=1) if async_agg else None
         self._inflight: Optional[Future] = None
+        # optional ClientCompressor attached by whoever encodes the stream
+        # (engine / cohort / launcher); checkpointed with the service state
+        self.compressor = None
         # the trigger arms itself lazily at the first submit — the service
         # cannot arm it here because callers may drive any clock (virtual
         # time in the simulator, wall time live)
@@ -239,6 +246,21 @@ class StreamingAggregator:
             self.on_round(report)
         return report
 
+    def _unravel(self):
+        """Flat-[D] → model-pytree closure of the served model (cached per
+        structure in ``repro.serve.batched``) — what the compressed paths
+        use to rebuild aggregates and decode payloads."""
+        return unravel_like(self.global_params)
+
+    def _densify(self, batch: List[Update]) -> List[Update]:
+        """Decode any ``CompressedUpdate`` in the batch into a dense
+        ``Update`` — the fallback for algorithms (or the sequential path)
+        that need real pytrees.  Dense updates pass through untouched."""
+        if not any(is_compressed(u) for u in batch):
+            return batch
+        unravel = self._unravel()
+        return [u.to_update(unravel) if is_compressed(u) else u for u in batch]
+
     def _dispatch(self, ctx, batch: List[Update]):
         """Route one frozen batch to the algorithm.
 
@@ -247,7 +269,19 @@ class StreamingAggregator:
         FedQS itself and any algorithm still on the base
         ``Algorithm.server_aggregate`` (FedAvg/FedSGD/DeFedAvg).  Stateful
         baselines (caches, momenta, EMAs) always take their own path.
+
+        Compressed buffers stay encoded on the batched fast path — the
+        tree_sum stacks quantized rows and dispatches the fused
+        ``dequant_agg`` kernel; every other path decodes first.
         """
+        if not self._batched:
+            batch = self._densify(batch)
+        elif any(is_compressed(u) for u in batch) and not all(
+            is_compressed(u) for u in batch
+        ):
+            # the stacked tree_sum needs a homogeneous buffer; a stream
+            # mixing wire formats decodes the compressed minority
+            batch = self._densify(batch)
         if self._batched and isinstance(self.algo, FedQS):
             new_global, new_table, _ = fedqs_server_aggregate(
                 self.algo.strategy, ctx.global_params, batch, ctx.table,
@@ -269,7 +303,7 @@ class StreamingAggregator:
                     [u.params for u in batch], p, tree_sum=self._tree_sum
                 )
             return new_global, new_table
-        return self.algo.server_aggregate(ctx, batch)
+        return self.algo.server_aggregate(ctx, self._densify(batch))
 
     # ------------------------------------------------------------ checkpoint
     def save(self, path: str) -> None:
