@@ -20,19 +20,16 @@ regression):
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
-sys.path.insert(0, "src")
+try:
+    from .common import emit, make_suite_run
+except ImportError:  # run as a script: python benchmarks/bench_compress.py
+    from common import emit, make_suite_run
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-
-try:
-    from .common import emit
-except ImportError:  # run as a script: python benchmarks/bench_compress.py
-    from common import emit
 
 from repro.compress import ClientCompressor, compress_stream, parse_codec
 from repro.core import FedQSHyperParams, make_algorithm
@@ -199,9 +196,7 @@ def main(argv=None):
         raise SystemExit("compression regression: " + "; ".join(failures))
 
 
-def run(fast: bool = False):
-    """Entry for ``python -m benchmarks.run`` (harness suite)."""
-    main(["--fast"] if fast else [])
+run = make_suite_run(main, "--fast")  # harness entry: python -m benchmarks.run
 
 
 if __name__ == "__main__":

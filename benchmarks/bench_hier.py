@@ -1,0 +1,217 @@
+"""Hierarchical aggregation plane benchmark (docs/HIERARCHY.md).
+
+Three sections, each with a hard gate (the script exits non-zero on
+regression):
+
+* **kernel** — ``segment_agg_op`` (the Pallas kernel body, interpret
+  mode off-TPU) vs the ``segment_agg_ref`` one-hot-matmul oracle; gate:
+  **exact** fp32 equality (the two deliberately share their algebra);
+* **parity** — a 2-tier ``HierarchicalService`` with all-pass edge
+  triggers vs the flat ``StreamingAggregator`` on the same recorded
+  stream; gate: identical round count, exact status table, and global
+  model equal to ≤ 1e-5 relative error;
+* **throughput** — 10k clients / 64 edges: sustained latency of the
+  **globally-serialized aggregation stage** (``stats.agg_seconds`` per
+  round) for the flat service vs the tiered plane; gate: hierarchy ≥ 3×.
+
+Reading the throughput numbers: rounds serialize on the global
+aggregation (``repro.serve.service`` — at most one fire in flight), so
+the global stage bounds the sustainable round rate.  Flat, that stage
+stacks and reduces every buffered client row — O(K) work on the one
+contended server.  Tiered, edges and regions pre-reduce their members
+(work that shards across edge hosts, or across devices via
+``segment_agg_sharded``) and the global stage touches only partial
+rows — O(#regions).  Total host wall is reported unguarded
+(``total_wall_s``): in-process the tier work still runs inline, the
+win is where it sits, not whether it runs.
+
+    PYTHONPATH=src python benchmarks/bench_hier.py [--fast] [--parity-only]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+try:
+    from .common import emit, make_suite_run
+except ImportError:  # run as a script: python benchmarks/bench_hier.py
+    from common import emit, make_suite_run
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import FedQSHyperParams, make_algorithm
+from repro.hier import HierarchicalService, Topology
+from repro.kernels import segment_agg_op
+from repro.kernels.ref import segment_agg_ref
+from repro.models import make_mlp_spec
+from repro.serve import KBuffer, StreamingAggregator, replay, synthetic_stream
+
+SPEEDUP_FACTOR = 3.0   # hier global-stage latency gate vs flat
+PARITY_RTOL = 1e-5     # all-pass 2-tier vs flat relative error gate
+
+
+def bench_kernel(args) -> bool:
+    """segment_agg kernel body vs oracle — exact fp32 equality."""
+    exact = True
+    shapes = [(64, 4096, 8)] if args.fast else [(64, 4096, 8), (512, 16384, 64)]
+    for K, D, G in shapes:
+        x = jax.random.normal(jax.random.PRNGKey(0), (K, D))
+        w = jax.random.uniform(jax.random.PRNGKey(1), (K,))
+        seg = jax.random.randint(jax.random.PRNGKey(2), (K,), 0, G)
+        t0 = time.perf_counter()
+        got = jax.block_until_ready(
+            segment_agg_op(x, w, seg, num_segments=G))
+        dt = time.perf_counter() - t0
+        want = segment_agg_ref(x, w, seg, G)
+        ok = bool((np.asarray(got) == np.asarray(want)).all())
+        exact &= ok
+        emit(
+            f"hier_kernel_K{K}_D{D}_G{G}",
+            dt * 1e6,
+            exact=ok,
+            max_abs_gap=f"{float(jnp.abs(got - want).max()):.2e}",
+        )
+    return exact
+
+
+def _rel_gap(a, b) -> float:
+    gaps = []
+    for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        la, lb = np.asarray(la), np.asarray(lb)
+        gaps.append(np.abs(la - lb).max() / max(np.abs(la).max(), 1e-12))
+    return float(max(gaps))
+
+
+def bench_parity(args) -> float:
+    """All-pass 2-tier plane vs flat service on one recorded stream."""
+    spec = make_mlp_spec()
+    params = spec.init(jax.random.PRNGKey(args.seed))
+    hp = FedQSHyperParams(buffer_k=args.buffer_k)
+    stream = list(synthetic_stream(params, args.parity_clients,
+                                   args.parity_updates, seed=args.seed))
+
+    flat = StreamingAggregator(make_algorithm(args.algo, hp), hp, params,
+                               args.parity_clients, batched=True)
+    replay(flat, stream, flush=False)
+
+    topo = Topology.from_spec(f"hier:{args.parity_edges}", args.parity_clients)
+    hier = HierarchicalService(make_algorithm(args.algo, hp), hp, params,
+                               args.parity_clients, topo)
+    t0 = time.perf_counter()
+    replay(hier, stream, flush=False)
+    dt = time.perf_counter() - t0
+
+    gap = _rel_gap(flat.global_params, hier.global_params)
+    table_ok = bool(
+        (np.asarray(flat.table.counts) == np.asarray(hier.table.counts)).all()
+        and np.allclose(np.asarray(flat.table.sims),
+                        np.asarray(hier.table.sims))
+    )
+    rounds_ok = flat.round == hier.round
+    emit(
+        "hier_parity_2tier",
+        dt / max(len(stream), 1) * 1e6,
+        rel_gap=f"{gap:.2e}",
+        rounds=f"{hier.round}/{flat.round}",
+        table_exact=table_ok,
+        equivalent=bool(gap <= PARITY_RTOL and table_ok and rounds_ok),
+    )
+    return gap if (table_ok and rounds_ok) else float("inf")
+
+
+def bench_throughput(args) -> float:
+    """Global-stage aggregation latency, flat vs tiered, at scale."""
+    spec = make_mlp_spec()
+    params = spec.init(jax.random.PRNGKey(args.seed))
+    n, edges, regions = args.clients, args.edges, args.regions
+    K = args.agg_k
+    hp = FedQSHyperParams(buffer_k=K)
+    stream = list(synthetic_stream(params, n, args.updates, seed=args.seed,
+                                   distinct_deltas=4))
+
+    results = {}
+    for name, build in (
+        ("flat", lambda: StreamingAggregator(
+            make_algorithm(args.algo, hp), hp, params, n,
+            trigger=KBuffer(K), batched=True)),
+        ("hier", lambda: HierarchicalService(
+            make_algorithm(args.algo, hp), hp, params, n,
+            Topology.from_spec(f"hier:{edges}x{regions}", n),
+            trigger=KBuffer(K),
+            edge_trigger=lambda e: KBuffer(max(1, K // edges)),
+            region_trigger=lambda r: KBuffer(max(1, K // regions)))),
+    ):
+        svc = build()
+        warm = build()
+        replay(warm, stream[: K + edges], flush=True)  # compile the shapes
+        t0 = time.perf_counter()
+        replay(svc, stream, flush=False)
+        wall = time.perf_counter() - t0
+        s = svc.stats
+        agg_ms = s.agg_seconds / max(s.rounds, 1) * 1e3
+        results[name] = agg_ms
+        emit(
+            f"hier_throughput_{name}_{n}c_{edges}e",
+            s.agg_seconds / max(s.accepted, 1) * 1e6,
+            global_agg_ms_per_round=f"{agg_ms:.2f}",
+            rounds=s.rounds,
+            updates=s.accepted,
+            total_wall_s=f"{wall:.1f}",
+            updates_per_sec=f"{s.accepted / wall:.0f}",
+        )
+    speedup = results["flat"] / max(results["hier"], 1e-9)
+    emit("hier_throughput_speedup", 0.0, speedup=f"{speedup:.1f}",
+         gate=f">={SPEEDUP_FACTOR:g}x")
+    return speedup
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--algo", default="fedqs-sgd")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--buffer-k", type=int, default=10)
+    # parity section (the ci.sh smoke runs exactly this config)
+    ap.add_argument("--parity-clients", type=int, default=200)
+    ap.add_argument("--parity-updates", type=int, default=600)
+    ap.add_argument("--parity-edges", type=int, default=16)
+    ap.add_argument("--parity-only", action="store_true",
+                    help="kernel + parity gates only (the CI smoke)")
+    # throughput section
+    ap.add_argument("--clients", type=int, default=10_000)
+    ap.add_argument("--edges", type=int, default=64)
+    ap.add_argument("--regions", type=int, default=8)
+    ap.add_argument("--agg-k", type=int, default=1024,
+                    help="global K-buffer (and the flat stacking size)")
+    ap.add_argument("--updates", type=int, default=6000)
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller kernel/throughput sections")
+    args = ap.parse_args(argv)
+    if args.fast:
+        args.clients, args.edges, args.regions = 2000, 16, 4
+        args.agg_k, args.updates = 256, 1500
+        args.parity_updates = 300
+
+    failures = []
+    if not bench_kernel(args):
+        failures.append("kernel gate: segment_agg_op != segment_agg_ref (fp32)")
+    gap = bench_parity(args)
+    if gap > PARITY_RTOL:
+        failures.append(
+            f"parity gate: 2-tier vs flat rel gap {gap:.2e} > {PARITY_RTOL:g}")
+    if not args.parity_only:
+        speedup = bench_throughput(args)
+        if speedup < SPEEDUP_FACTOR:
+            failures.append(
+                f"throughput gate: hier global stage only {speedup:.1f}x "
+                f"faster than flat (< {SPEEDUP_FACTOR:g}x)")
+    if failures:
+        raise SystemExit("hierarchy regression: " + "; ".join(failures))
+
+
+run = make_suite_run(main, "--fast")  # harness entry: python -m benchmarks.run
+
+
+if __name__ == "__main__":
+    main()

@@ -16,15 +16,12 @@ non-zero if it regresses past that.
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
-sys.path.insert(0, "src")
-
 try:
-    from .common import emit
+    from .common import emit, make_suite_run
 except ImportError:  # run as a script: python benchmarks/bench_scenarios.py
-    from common import emit
+    from common import emit, make_suite_run
 
 from repro.core import FedQSHyperParams, SAFLEngine, make_algorithm
 from repro.data import make_federated_data
@@ -107,9 +104,7 @@ def main(argv=None):
     bench_cohort_scale(args)
 
 
-def run(fast: bool = False):
-    """Entry for ``python -m benchmarks.run`` (harness suite)."""
-    main(["--quick"] if fast else [])
+run = make_suite_run(main)  # harness entry: python -m benchmarks.run
 
 
 if __name__ == "__main__":

@@ -17,18 +17,15 @@ deployment would pad variable buffers up to K_max to keep shapes static.
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
-sys.path.insert(0, "src")
+try:
+    from .common import emit, make_suite_run
+except ImportError:  # run as a script: python benchmarks/bench_serve.py
+    from common import emit, make_suite_run
 
 import jax
 import numpy as np
-
-try:
-    from .common import emit
-except ImportError:  # run as a script: python benchmarks/bench_serve.py
-    from common import emit
 
 from repro.core import FedQSHyperParams, SAFLEngine, make_algorithm
 from repro.data import make_federated_data
@@ -141,9 +138,7 @@ def main(argv=None):
     bench_parity(args)
 
 
-def run(fast: bool = False):
-    """Entry for ``python -m benchmarks.run`` (harness suite)."""
-    main(["--quick"] if fast else [])
+run = make_suite_run(main)  # harness entry: python -m benchmarks.run
 
 
 if __name__ == "__main__":

@@ -4,16 +4,37 @@ Every benchmark prints CSV rows ``name,us_per_call,derived`` where
 ``us_per_call`` is wall-microseconds per simulated global round (or per
 kernel call) and ``derived`` carries the paper-table metric
 (accuracy / gap / rounds-to-target / ...) as ``key=value|key=value``.
+
+Importing this module also puts ``src/`` on ``sys.path`` (resolved
+relative to this file, not the CWD), so every benchmark works both as a
+harness suite (``python -m benchmarks.run``) and as a bare script
+(``python benchmarks/bench_<x>.py``) without its own path bootstrap.
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 from typing import Dict, Optional
 
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
 from repro.core import FedQSHyperParams, SAFLEngine, make_algorithm
 from repro.data import make_federated_data
 from repro.models import make_cnn_spec, make_lstm_spec, make_mlp_spec
+
+
+def make_suite_run(main, fast_flag: str = "--quick"):
+    """Bind a benchmark's ``main(argv)`` into the ``run(fast=...)`` entry
+    the harness (``python -m benchmarks.run``) calls — the one place the
+    ``--fast``/``--quick`` threading convention lives."""
+
+    def run(fast: bool = False):
+        main([fast_flag] if fast else [])
+
+    return run
 
 _SPEC_CACHE: Dict[str, object] = {}
 

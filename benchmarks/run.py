@@ -43,6 +43,7 @@ SUITES = {
     "serve": _suite("bench_serve"),
     "scenarios": _suite("bench_scenarios"),
     "compress": _suite("bench_compress"),
+    "hier": _suite("bench_hier"),
 }
 
 

@@ -49,6 +49,13 @@ if [ -z "${CI_SKIP_SMOKE:-}" ]; then
       --clients 10 --eval-every 2 --n-total 1000 --compress int8
   $PY examples/compressed_stream.py --smoke
   $PY benchmarks/bench_compress.py --fast
+
+  echo "== smoke: hierarchical aggregation plane =="
+  # 2-tier, 200 clients: segment-kernel exactness + trigger parity vs
+  # the flat service (the gates exit non-zero on divergence)
+  $PY benchmarks/bench_hier.py --fast --parity-only
+  $PY -m repro.launch.serve --safl-stream --topology hier:16x4 \
+      --clients 200 --updates 200 --edge-k 2
 fi
 
 echo "CI OK"

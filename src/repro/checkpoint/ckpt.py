@@ -147,6 +147,164 @@ def save_service_state(path: str, service) -> None:
         _save_compressor(path, service.compressor)
 
 
+def save_hier_state(path: str, service) -> None:
+    """Persist a ``repro.hier.HierarchicalService``: the flat service
+    state plus every tier's in-flight buffer.
+
+    Unlike the flat service — whose ingest buffer holds raw uploads that
+    clients simply re-send on reconnect — tier buffers hold *admitted*
+    work that may already be pre-aggregated (partials fold many clients'
+    updates), so dropping them at restart would silently lose accepted
+    contributions.  Edge buffers are stored as raveled fp32 payload rows
+    (compressed uploads are decoded — codec residual state is already
+    persisted separately), partials as their materialized Σw·x vectors
+    plus member metadata.
+    """
+    from repro.hier.partial import materialize
+
+    save_service_state(path, service)
+    topo = service.topology
+    arrays: Dict[str, np.ndarray] = {}
+    manifest: Dict[str, Any] = {
+        "topology": {
+            "spec": topo.spec,
+            "n_clients": topo.n_clients,
+            "n_edges": topo.n_edges,
+            "n_regions": topo.n_regions,
+        },
+        "edges": {},
+        "partials": [],
+        "edge_fires": [e.fires for e in service.edges],
+        "region_fires": [r.fires for r in service.regions],
+    }
+    arrays["client_edge"] = topo.client_edge
+    arrays["edge_region"] = topo.edge_region
+
+    from repro.compress.codec import decode, is_compressed, ravel_flat
+
+    for e, edge in enumerate(service.edges):
+        if not edge.buffer:
+            continue
+        rows = np.stack([
+            np.asarray(decode(edge._payload(u)) if is_compressed(u)
+                       else ravel_flat(edge._payload(u)), np.float32)
+            for u in edge.buffer
+        ])
+        arrays[f"edge{e}_rows"] = rows
+        for name, dtype in (("cid", np.int64), ("n_samples", np.int64),
+                            ("stale_round", np.int64)):
+            arrays[f"edge{e}_{name}"] = np.asarray(
+                [getattr(u, name) for u in edge.buffer], dtype)
+        for name in ("similarity", "lr", "speed_f"):
+            arrays[f"edge{e}_{name}"] = np.asarray(
+                [getattr(u, name) for u in edge.buffer], np.float32)
+        arrays[f"edge{e}_feedback"] = np.asarray(
+            [bool(u.feedback) for u in edge.buffer], bool)
+        manifest["edges"][str(e)] = len(edge.buffer)
+
+    pending = [("global", -1, p) for p in service._ingest]
+    for r, region in enumerate(service.regions):
+        pending.extend(("region", r, p) for p in region.buffer)
+    materialize([p for _, _, p in pending])
+    for j, (where, node, p) in enumerate(pending):
+        arrays[f"p{j}_sum_wx"] = np.asarray(p.sum_wx, np.float32)
+        arrays[f"p{j}_cids"] = p.cids
+        arrays[f"p{j}_n_samples"] = p.n_samples
+        arrays[f"p{j}_sims"] = p.sims
+        arrays[f"p{j}_feedback"] = p.feedback
+        arrays[f"p{j}_stale_rounds"] = p.stale_rounds
+        manifest["partials"].append({
+            "where": where, "node": node, "tier": p.tier,
+            "node_id": p.node_id, "sum_w": p.sum_w, "fired_at": p.fired_at,
+        })
+
+    np.savez(os.path.join(path, "hier.npz"), **arrays)
+    with open(os.path.join(path, "hier.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def load_hier_state(path: str, service) -> None:
+    """Restore ``save_hier_state`` output into ``service`` in place."""
+    from repro.core.types import AggregationStrategy, Update
+    from repro.hier.partial import PartialAggregate
+
+    load_service_state(path, service)
+    with open(os.path.join(path, "hier.json")) as f:
+        manifest = json.load(f)
+    topo_meta = manifest["topology"]
+    topo = service.topology
+    if (topo_meta["n_clients"], topo_meta["n_edges"], topo_meta["n_regions"]) != (
+        topo.n_clients, topo.n_edges, topo.n_regions
+    ):
+        raise ValueError(
+            f"checkpoint topology {topo_meta['spec']!r} "
+            f"({topo_meta['n_edges']}x{topo_meta['n_regions']} over "
+            f"{topo_meta['n_clients']} clients) does not match the "
+            f"service topology {topo.describe()!r}"
+        )
+    with np.load(os.path.join(path, "hier.npz")) as data:
+        arrays = {k: data[k] for k in data.files}
+    # a fresh Topology, not an in-place rewire: the caller may share the
+    # original object with other services (parse_topology passes
+    # Topology instances through by reference)
+    from repro.hier.topology import Topology
+
+    service.topology = Topology(
+        n_clients=topo.n_clients,
+        n_edges=topo.n_edges,
+        n_regions=topo.n_regions,
+        client_edge=np.asarray(arrays["client_edge"], np.int64),
+        edge_region=np.asarray(arrays["edge_region"], np.int64),
+        spec=topo.spec,
+    )
+
+    for e, fires in enumerate(manifest.get("edge_fires", [])):
+        service.edges[e].fires = int(fires)
+    for r, fires in enumerate(manifest.get("region_fires", [])):
+        service.regions[r].fires = int(fires)
+
+    unravel = service._unravel()
+    strategy = getattr(service.algo, "strategy", AggregationStrategy.MODEL)
+    for e, edge in enumerate(service.edges):
+        edge.buffer = []
+        m = manifest["edges"].get(str(e), 0)
+        for i in range(m):
+            tree = unravel(jnp.asarray(arrays[f"edge{e}_rows"][i]))
+            edge.buffer.append(Update(
+                cid=int(arrays[f"edge{e}_cid"][i]),
+                n_samples=int(arrays[f"edge{e}_n_samples"][i]),
+                stale_round=int(arrays[f"edge{e}_stale_round"][i]),
+                lr=float(arrays[f"edge{e}_lr"][i]),
+                similarity=float(arrays[f"edge{e}_similarity"][i]),
+                feedback=bool(arrays[f"edge{e}_feedback"][i]),
+                speed_f=float(arrays[f"edge{e}_speed_f"][i]),
+                delta=tree if strategy is AggregationStrategy.GRADIENT else None,
+                params=tree if strategy is not AggregationStrategy.GRADIENT else None,
+            ))
+    service._ingest = []
+    service._ingest_members = 0
+    for region in service.regions:
+        region.buffer = []
+    for j, meta in enumerate(manifest["partials"]):
+        partial = PartialAggregate(
+            tier=meta["tier"],
+            node_id=int(meta["node_id"]),
+            sum_w=float(meta["sum_w"]),
+            cids=np.asarray(arrays[f"p{j}_cids"], np.int64),
+            n_samples=np.asarray(arrays[f"p{j}_n_samples"], np.int64),
+            sims=np.asarray(arrays[f"p{j}_sims"], np.float32),
+            feedback=np.asarray(arrays[f"p{j}_feedback"], bool),
+            stale_rounds=np.asarray(arrays[f"p{j}_stale_rounds"], np.int64),
+            fired_at=float(meta["fired_at"]),
+            sum_wx=jnp.asarray(arrays[f"p{j}_sum_wx"]),
+        )
+        if meta["where"] == "global":
+            service._ingest.append(partial)
+            service._ingest_members += partial.n_members
+        else:
+            service.regions[int(meta["node"])].buffer.append(partial)
+
+
 def load_service_state(path: str, service) -> None:
     """Restore ``save_service_state`` output into ``service`` in place."""
     from repro.core.types import ServerTable

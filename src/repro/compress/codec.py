@@ -274,10 +274,15 @@ class Chain(Codec):
 # --------------------------------------------------------------------------
 # spec grammar
 # --------------------------------------------------------------------------
+KNOWN_STAGES = ("none", "int8", "topk")
+
+
 def _parse_stage(stage: str) -> Codec:
     parts = [p.strip() for p in stage.split(":") if p.strip()]
     if not parts:
-        raise ValueError("empty codec stage")
+        raise ValueError(
+            f"empty codec stage; known stages: {', '.join(KNOWN_STAGES)}"
+        )
     name, opts = parts[0].lower(), parts[1:]
     if name in ("none", "dense", "fp32"):
         if opts:
@@ -310,12 +315,20 @@ def _parse_stage(stage: str) -> Codec:
             raise ValueError(f"topk:{o}: a count must be an integer "
                              "(ratios live in (0, 1])")
         return TopKCodec(k=int(val))
-    raise ValueError(f"unknown codec {name!r} (know: none, int8, topk)")
+    raise ValueError(
+        f"unknown codec stage {name!r}; known stages: "
+        f"{', '.join(KNOWN_STAGES)} (e.g. 'int8', 'topk:0.05|int8')"
+    )
 
 
 def parse_codec(spec: str) -> Codec:
-    """Parse the spec grammar (module docstring) into a ``Codec``."""
-    stages = [_parse_stage(s) for s in str(spec).split("|")]
+    """Parse the spec grammar (module docstring) into a ``Codec``.
+
+    Whitespace around stages and their options is tolerated
+    (``"topk :0.05 | int8"`` parses like ``"topk:0.05|int8"``); an
+    unknown stage raises a ``ValueError`` naming the known stages.
+    """
+    stages = [_parse_stage(s.strip()) for s in str(spec).split("|")]
     return stages[0] if len(stages) == 1 else Chain(stages)
 
 

@@ -16,6 +16,7 @@ from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .types import (
     AggregationStrategy,
@@ -33,27 +34,41 @@ def update_table(table: ServerTable, cids: jnp.ndarray, sims: jnp.ndarray) -> Se
     """Eq. 1: n(i) += 1 and s_g(i) = s_i^t for the participating clients.
 
     ``cids`` may contain duplicates (SAFL allows repeat uploads within one
-    buffer); each occurrence counts.
+    buffer); each occurrence counts toward n(i), and the **last**
+    occurrence's similarity wins — enforced by a host-side dedupe before
+    the scatter, because XLA's duplicate-index ``set`` order is
+    implementation-defined and the hierarchical plane's host-side table
+    math (``repro.hier``) must match this function exactly on every
+    backend.  (Always called eagerly; the jitted round step in
+    ``core.distributed`` carries its own vectorized table form.)
     """
-    counts = table.counts.at[cids].add(1)
-    sims_new = table.sims.at[cids].set(sims)  # duplicate cid: last one wins
+    counts = table.counts.at[cids].add(1)  # add is commutative: no dedupe
+    cids_np = np.asarray(cids)
+    # last occurrence of each cid: first occurrence in the reversed array
+    _, rev_first = np.unique(cids_np[::-1], return_index=True)
+    last = len(cids_np) - 1 - rev_first
+    sims_new = table.sims.at[cids_np[last]].set(jnp.asarray(sims)[last])
     return ServerTable(counts=counts, sims=sims_new)
 
 
-def staleness_weight(F: jnp.ndarray, phi: jnp.ndarray) -> jnp.ndarray:
+def staleness_weight(F: jnp.ndarray, phi, *, xp=jnp) -> jnp.ndarray:
     """exp(φ−F)/2^(φ−F) — the stale-update attenuation term (§3.4).
 
     Equals (e/2)^(φ−F): >1 when the client is *slower* than the buffer
     average would suggest is fine (φ>F), shrinking as F grows.
+
+    ``xp`` selects the array backend (pass ``numpy`` for host-side
+    callers like the hierarchical plane's metadata math) so the Eq. §3.4
+    algebra lives in exactly one place.
     """
     x = phi - F
-    return jnp.exp(x) / jnp.exp2(x)
+    return xp.exp(x) / xp.exp2(x)
 
 
-def feedback_weight(F, G, K: int, N: int) -> jnp.ndarray:
+def feedback_weight(F, G, K: int, N: int, *, xp=jnp) -> jnp.ndarray:
     """Full feedback weight: exp(φ−F)/2^(φ−F) · (1+G)²/K, φ = K/N."""
-    phi = jnp.asarray(K / N, jnp.float32)
-    return staleness_weight(F, phi) * (1.0 + G) ** 2 / K
+    phi = np.float32(K / N)
+    return staleness_weight(F, phi, xp=xp) * (1.0 + G) ** 2 / K
 
 
 def aggregation_weights(

@@ -123,6 +123,7 @@ class SAFLEngine:
         eval_every: int = 1,
         sync_mode: bool = False,
         compress: Optional[str] = None,
+        topology=None,
     ):
         self.data = data
         self.spec = spec
@@ -181,12 +182,18 @@ class SAFLEngine:
         # the server is the streaming service with the paper's K-buffer
         # trigger and admit-all policy; ``context=self`` hands algorithms
         # the full engine surface (speeds, clients, data) at aggregation.
-        # Imported lazily: repro.serve pulls in repro.core at module scope.
-        from repro.serve.service import StreamingAggregator
+        # With a topology the server becomes the tiered plane
+        # (docs/HIERARCHY.md): clients report to edge aggregators whose
+        # assignment follows the sampled speeds, and the global K-buffer
+        # counts client updates through the partial member view, so round
+        # cadence matches the flat service.  Imported lazily: repro.hier
+        # pulls in repro.serve/repro.core at module scope.
+        from repro.hier import make_aggregation_service
         from repro.serve.triggers import KBuffer
 
-        self.service = StreamingAggregator(
+        self.service = make_aggregation_service(
             algo, hp, spec.init(key), n,
+            topology=topology,
             trigger=KBuffer(hp.buffer_k),
             context=self,
             speeds=self.speeds,

@@ -1,0 +1,35 @@
+"""Hierarchical aggregation plane: tiered edge → regional → global SAFL.
+
+One flat aggregation buffer stops scaling long before the ROADMAP's
+millions of clients — every update contends on a single trigger and the
+global tier sees the full staleness dispersion of the population.  This
+package tiers the plane (CSAFL, arXiv:2104.08184; SEAFL,
+arXiv:2503.05755): clients report to **edge** aggregators, edges to
+**regional** aggregators, regions to the global tier, and every link
+upward carries a ``PartialAggregate`` — one fp32 [D] vector plus scalar
+per-member metadata — instead of raw updates.  Tier buffers reduce
+through the fused ``segment_agg`` Pallas kernel (all edges of a region
+in one VMEM pass) and int8 edges through ``dequant_agg``.
+
+See docs/HIERARCHY.md for the topology grammar, the staleness/weighting
+semantics of partials, and the kernel diagram.
+"""
+from .partial import MemberRef, MemberView, PartialAggregate, materialize, merge
+from .service import HierarchicalService, make_aggregation_service
+from .tier import EdgeAggregator, RegionAggregator, TierAggregator
+from .topology import Topology, parse_topology
+
+__all__ = [
+    "EdgeAggregator",
+    "HierarchicalService",
+    "MemberRef",
+    "MemberView",
+    "PartialAggregate",
+    "RegionAggregator",
+    "TierAggregator",
+    "Topology",
+    "make_aggregation_service",
+    "materialize",
+    "merge",
+    "parse_topology",
+]

@@ -1,0 +1,224 @@
+"""The tier wire format: partial aggregates and the member view.
+
+A ``PartialAggregate`` is what one tier node forwards upward when its
+trigger fires: the weighted tensor sum of its buffer (Σw·x over a flat
+fp32 [D] vector, with w = per-update sample counts) plus Σw and the
+per-member *metadata* — cids, sample counts, similarities, feedback
+flags, fetch rounds.  The metadata is a few scalars per member, so a
+partial costs one [D] vector on the wire no matter how many client
+updates it folds; the global tier still updates the aggregation status
+table (Eq. 1/2) and computes Mod-3 weights against exact per-member
+facts.
+
+Partials are **associative**: merging two partials is an elementwise add
+of the tensor sums and a concatenation of the metadata, so a region can
+fold its edges' partials into one regional partial without changing the
+global result — the algebraic property the whole plane rests on.
+
+The tensor sum may be **lazy**: an edge fire can freeze its member rows
+instead of reducing them immediately, and ``materialize`` batches every
+lazy partial in a buffer through a single ``segment_agg`` kernel launch
+(segment id = partial index) — one launch reduces all edges of a region.
+
+``MemberView`` presents a buffer of partials to a ``TriggerPolicy`` as
+the flat sequence of member updates it aggregates, so K-buffer / quorum
+semantics keep counting *client updates* (and distinct client ids), not
+partial envelopes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import segment_agg_auto_op, segment_agg_op
+
+
+@dataclass
+class MemberRef:
+    """Lightweight per-member record (what triggers and round metrics
+    read); mirrors the metadata surface of ``repro.core.types.Update``."""
+
+    cid: int
+    n_samples: int
+    stale_round: int
+    similarity: float
+    feedback: bool
+
+
+@dataclass
+class PartialAggregate:
+    """One tier node's aggregated contribution (see module docstring).
+
+    ``sum_wx`` is Σ_i n_i·x_i over the members (x = the strategy payload:
+    delta for GRADIENT, params for MODEL), ``sum_w`` = Σ_i n_i.  Either
+    ``sum_wx`` is materialized, or ``rows``/``row_weights`` hold the
+    frozen member rows for a later batched reduction — never both.
+    """
+
+    tier: str                     # "edge" | "region"
+    node_id: int
+    sum_w: float
+    cids: np.ndarray              # i64[M]
+    n_samples: np.ndarray         # i64[M]
+    sims: np.ndarray              # f32[M]
+    feedback: np.ndarray          # bool[M]
+    stale_rounds: np.ndarray      # i64[M]
+    fired_at: float = 0.0
+    sum_wx: Optional[jnp.ndarray] = None          # f32[D], materialized
+    rows: Optional[jnp.ndarray] = field(default=None, repr=False)  # f32[M, D]
+    row_weights: Optional[jnp.ndarray] = None     # f32[M]
+
+    @property
+    def n_members(self) -> int:
+        return len(self.cids)
+
+    @property
+    def pending(self) -> bool:
+        return self.sum_wx is None
+
+    def max_staleness(self, current_round: int) -> int:
+        if not len(self.stale_rounds):
+            return 0
+        return int(current_round - int(self.stale_rounds.min()))
+
+    def members(self) -> List[MemberRef]:
+        return [
+            MemberRef(int(c), int(n), int(t), float(s), bool(f))
+            for c, n, t, s, f in zip(self.cids, self.n_samples,
+                                     self.stale_rounds, self.sims,
+                                     self.feedback)
+        ]
+
+    def materialized(self) -> jnp.ndarray:
+        """This partial's Σw·x, reducing the frozen rows on demand (the
+        single-partial path; buffers go through ``materialize``)."""
+        if self.sum_wx is None:
+            materialize([self])
+        return self.sum_wx
+
+
+@jax.jit
+def _weighted_row_sum(rows: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("k,kd->d", weights, rows)
+
+
+def materialize(partials: Sequence[PartialAggregate], *,
+                use_kernel: Optional[bool] = None) -> None:
+    """Reduce every lazy partial's frozen rows and store the results in
+    place.
+
+    On TPU (or with ``use_kernel=True``) all lazy buffers reduce in ONE
+    ``segment_agg`` kernel launch — segment id = partial index, one
+    [ΣM, D] VMEM pass instead of one launch per edge; this is the fused
+    path the hierarchy exists for.  Off-TPU the auto path reduces each
+    buffer with a jitted einsum instead: interpret-mode Pallas and the
+    one-hot matmul oracle both do G× the flops of the plain reductions,
+    which is the wrong trade on a host simulating thousands of clients.
+    """
+    lazy = [p for p in partials if p.pending]
+    if not lazy:
+        return
+    if use_kernel is None and jax.default_backend() != "tpu":
+        for p in lazy:
+            p.sum_wx = _weighted_row_sum(p.rows, p.row_weights)
+            p.rows = p.row_weights = None
+        return
+    rows = jnp.concatenate([p.rows for p in lazy], axis=0)
+    weights = jnp.concatenate([p.row_weights for p in lazy])
+    seg = np.repeat(np.arange(len(lazy), dtype=np.int32),
+                    [p.rows.shape[0] for p in lazy])
+    # bucket-pad the row axis: the frozen member count varies fire to
+    # fire (time-window triggers, flush tails) and the jitted kernel
+    # must not recompile per shape — zero-weight pad rows contribute 0
+    K = rows.shape[0]
+    bucket = max(8, 1 << (K - 1).bit_length())
+    if bucket != K:
+        rows = jnp.pad(rows, ((0, bucket - K), (0, 0)))
+        weights = jnp.pad(weights, (0, bucket - K))
+        seg = np.pad(seg, (0, bucket - K))
+    seg = jnp.asarray(seg)
+    # bucket the (static) segment count too — it is the kernel's output
+    # shape, and a varying lazy-partial count per fire would otherwise
+    # still recompile; the surplus groups reduce nothing and are dropped
+    G = max(8, 1 << (len(lazy) - 1).bit_length())
+    if use_kernel is None:     # auto on TPU: the compiled segment kernel
+        sums = segment_agg_auto_op(rows, weights, seg, num_segments=G)
+    elif use_kernel:           # force the kernel body (interpreted off-TPU)
+        sums = segment_agg_op(rows, weights, seg, num_segments=G)
+    else:
+        from repro.kernels.ref import segment_agg_ref
+
+        sums = segment_agg_ref(rows, weights, seg, G)
+    for j, p in enumerate(lazy):
+        p.sum_wx = sums[j]
+        p.rows = p.row_weights = None
+
+
+def merge(partials: Sequence[PartialAggregate], *, tier: str, node_id: int,
+          fired_at: float, use_kernel: Optional[bool] = None) -> PartialAggregate:
+    """Fold a buffer of partials into one (the regional tier's fire):
+    tensor sums add, metadata concatenates — exactly associative."""
+    if not partials:
+        raise ValueError("cannot merge an empty partial buffer")
+    materialize(partials, use_kernel=use_kernel)
+    stack = jnp.stack([p.sum_wx for p in partials])
+    return PartialAggregate(
+        tier=tier,
+        node_id=node_id,
+        sum_w=float(sum(p.sum_w for p in partials)),
+        cids=np.concatenate([p.cids for p in partials]),
+        n_samples=np.concatenate([p.n_samples for p in partials]),
+        sims=np.concatenate([p.sims for p in partials]),
+        feedback=np.concatenate([p.feedback for p in partials]),
+        stale_rounds=np.concatenate([p.stale_rounds for p in partials]),
+        fired_at=fired_at,
+        sum_wx=jnp.sum(stack, axis=0),
+    )
+
+
+class MemberView(Sequence):
+    """A buffer of partials viewed as its flat member sequence (len =
+    total member updates; items are ``MemberRef``), so any
+    ``TriggerPolicy`` written against ``Sequence[Update]`` — K-buffer,
+    time-window, quorum — applies unchanged at the upper tiers.
+
+    ``n`` lets a caller that already tracks the member count (the
+    hierarchical service's running counter) skip the per-partial sum —
+    the default K-buffer trigger then costs O(1) per submit instead of
+    O(#partials)."""
+
+    def __init__(self, partials: Sequence[PartialAggregate],
+                 n: Optional[int] = None):
+        self._partials = partials
+        self._n = n
+
+    def __len__(self) -> int:
+        if self._n is None:
+            self._n = sum(p.n_members for p in self._partials)
+        return self._n
+
+    def __iter__(self):
+        # generator over the metadata arrays — no per-partial list
+        # materialization on the trigger-evaluation hot path
+        for p in self._partials:
+            for c, n, t, s, f in zip(p.cids, p.n_samples, p.stale_rounds,
+                                     p.sims, p.feedback):
+                yield MemberRef(int(c), int(n), int(t), float(s), bool(f))
+
+    def __getitem__(self, idx):
+        if isinstance(idx, slice):
+            return list(self)[idx]
+        n = len(self)
+        if idx < 0:
+            idx += n
+        if not 0 <= idx < n:
+            raise IndexError(idx)
+        for p in self._partials:
+            if idx < p.n_members:
+                return p.members()[idx]
+            idx -= p.n_members
+        raise IndexError(idx)  # unreachable

@@ -1,0 +1,353 @@
+"""The hierarchical aggregation service: edge → region → global SAFL.
+
+``HierarchicalService`` subclasses ``repro.serve.StreamingAggregator``
+and keeps its whole public surface — admission, stats, round reports,
+``on_round`` hooks, checkpointing, the server-state facade algorithms
+read — but routes every admitted update through a ``Topology`` of
+``TierAggregator`` nodes instead of one flat ingest buffer.  The global
+tier consumes **partial aggregates**: tensor-wise each partial is one
+[D] fp32 vector however many client updates it folds, so at scale no
+single buffer ever holds the whole population's rows, and edge triggers
+bound staleness dispersion locally (CSAFL, arXiv:2104.08184).
+
+Weighting semantics (docs/HIERARCHY.md "Staleness & weighting"):
+
+* partials carry exact per-member metadata, so the aggregation status
+  table (Eq. 1/2) and the member-level Mod-3 weights p_i are computed
+  from the same facts as the flat service;
+* each partial's aggregate weight is Σ of its members' p_i (member
+  weights come from the algorithm's own ``_base_weights`` for non-FedQS
+  algorithms); inside a partial, members combine sample-proportionally
+  (w = n_i).  This is **exact** whenever member weights are
+  n-proportional within every partial — always for the
+  sample-proportional base algorithms (FedAvg/FedSGD), for FedQS
+  without feedback re-weighting, and for *any* supported algorithm when
+  edge triggers are all-pass (K=1: every partial is a single update).
+  Otherwise only the intra-edge redistribution is approximated (FedQS
+  feedback corrections, DeFedAvg's uniform weighting); each edge's
+  total weight stays exact.
+
+The global trigger is evaluated against the ``MemberView`` of buffered
+partials, so a ``KBuffer(K)`` still fires after K client updates and a
+2-tier all-pass plane is round-for-round identical to the flat service
+(the parity gate in ``benchmarks/bench_hier.py``).
+"""
+from __future__ import annotations
+
+import time as _time
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import feedback_weight
+from repro.core.algorithms import Algorithm, FedQS
+from repro.core.types import (
+    AggregationStrategy,
+    FedQSHyperParams,
+    Params,
+    ServerTable,
+)
+from repro.kernels import weighted_agg_auto_op, weighted_agg_op
+from repro.serve.service import RoundReport, StreamingAggregator, SubmitResult
+from repro.serve.triggers import KBuffer, TriggerPolicy
+
+from .partial import MemberView, PartialAggregate, materialize
+from .tier import EdgeAggregator, RegionAggregator
+from .topology import Topology
+
+
+def _default_edge_trigger(node_id: int) -> TriggerPolicy:
+    # all-pass: each update becomes its own partial — zero added latency,
+    # exact flat parity; pass a factory to actually buffer at the edge
+    return KBuffer(1)
+
+
+class HierarchicalService(StreamingAggregator):
+    """Tiered drop-in for ``StreamingAggregator`` (see module docstring).
+
+    ``edge_trigger`` / ``region_trigger`` are *factories* (node id →
+    ``TriggerPolicy``) because every node arms its own policy instance;
+    the ``trigger`` argument is the global tier's policy, exactly as on
+    the flat service.
+    """
+
+    def __init__(
+        self,
+        algo: Algorithm,
+        hp: FedQSHyperParams,
+        init_params: Params,
+        n_clients: int,
+        topology: Topology,
+        *,
+        trigger: Optional[TriggerPolicy] = None,
+        admission=None,
+        edge_trigger: Optional[Callable[[int], TriggerPolicy]] = None,
+        region_trigger: Optional[Callable[[int], TriggerPolicy]] = None,
+        use_kernel: Optional[bool] = None,
+        context=None,
+        async_agg: bool = False,
+        on_round=None,
+        speeds: Optional[np.ndarray] = None,
+        clock: Callable[[], float] = _time.monotonic,
+    ):
+        if not isinstance(algo, FedQS) and (
+            type(algo).server_aggregate is not Algorithm.server_aggregate
+        ):
+            raise ValueError(
+                f"algorithm {algo.name!r} overrides server_aggregate with "
+                "stateful logic that cannot run on pre-aggregated partials "
+                "— the hierarchical plane supports FedQS and the base "
+                "linear-weighting algorithms"
+            )
+        if topology.n_clients != int(n_clients):
+            raise ValueError(
+                f"topology is wired for {topology.n_clients} clients, "
+                f"service has {n_clients}"
+            )
+        super().__init__(
+            algo, hp, init_params, n_clients,
+            trigger=trigger, admission=admission, context=context,
+            batched=True, use_kernel=use_kernel, async_agg=async_agg,
+            on_round=on_round, speeds=speeds, clock=clock,
+        )
+        self.topology = topology
+        self._use_kernel = use_kernel
+        edge_trigger = edge_trigger or _default_edge_trigger
+        region_trigger = region_trigger or _default_edge_trigger
+        strategy = getattr(algo, "strategy", AggregationStrategy.MODEL)
+        self.edges = [
+            EdgeAggregator(e, edge_trigger(e), strategy=strategy,
+                           use_kernel=use_kernel)
+            for e in range(topology.n_edges)
+        ]
+        self.regions = [
+            RegionAggregator(r, region_trigger(r), use_kernel=use_kernel)
+            for r in range(topology.n_regions)
+        ]
+        # running member count of self._ingest, so the global trigger's
+        # K-buffer check is O(1) per submit instead of re-summing every
+        # buffered partial
+        self._ingest_members = 0
+
+    # ------------------------------------------------------------- ingestion
+    def submit(self, update, now: Optional[float] = None) -> SubmitResult:
+        """Admit one client update and route it down its edge; partials
+        emitted by firing tiers bubble up to the global buffer, where the
+        global trigger sees the flat member count."""
+        now = self._clock() if now is None else now
+        update, verdict = self._admit(update)
+        if update is None:
+            return SubmitResult(False, False, self.round, verdict.reason)
+
+        edge = self.edges[self.topology.edge_of(update.cid)]
+        partial = edge.submit(update, now)
+        if partial is not None:
+            self._forward(partial, now)
+        view = MemberView(self._ingest, n=self._ingest_members)
+        if self.trigger.should_fire(view, now):
+            report = self._fire(now)
+            return SubmitResult(True, True, self.round, verdict.reason, report)
+        return SubmitResult(True, False, self.round, verdict.reason)
+
+    def _forward(self, partial: PartialAggregate, now: float) -> None:
+        """One tier hop: edge partials go to their region (3-tier) or the
+        global buffer (2-tier); regional partials go to the global buffer."""
+        if partial.tier == "edge" and self.regions:
+            region = self.regions[self.topology.region_of(partial.node_id)]
+            merged = region.submit(partial, now)
+            if merged is not None:
+                self._ingest.append(merged)
+                self._ingest_members += merged.n_members
+        else:
+            self._ingest.append(partial)
+            self._ingest_members += partial.n_members
+
+    def _fire(self, now: float):
+        self._ingest_members = 0  # the swap empties the global buffer
+        return super()._fire(now)
+
+    @property
+    def pending(self) -> int:
+        """Client updates admitted but not yet globally aggregated,
+        across every tier of the plane."""
+        return (
+            sum(e.pending for e in self.edges)
+            + sum(r.pending for r in self.regions)
+            + self._ingest_members
+        )
+
+    def flush(self, now: Optional[float] = None) -> Optional[RoundReport]:
+        """Drain the whole plane: force-fire every edge, then every
+        region, then the global tier (the flat flush semantics)."""
+        now = self._clock() if now is None else now
+        for edge in self.edges:
+            partial = edge.flush(now)
+            if partial is not None:
+                self._forward(partial, now)
+        for region in self.regions:
+            merged = region.flush(now)
+            if merged is not None:
+                self._forward(merged, now)
+        return super().flush(now=now)
+
+    # ----------------------------------------------------------- aggregation
+    def _dispatch(self, ctx, batch: List[PartialAggregate]):
+        # the inherited _aggregate drives the round bookkeeping; only the
+        # batch routing differs — partials, not raw updates
+        return self._dispatch_partials(batch)
+
+    def _batch_members(self, batch: List[PartialAggregate]):
+        # round reports carry metadata-only MemberRef records: partials
+        # do not retain per-member tensor payloads (see RoundReport)
+        return list(MemberView(batch))
+
+    def _member_weights(self, batch: List[PartialAggregate],
+                        counts: np.ndarray, table_sims: np.ndarray,
+                        cids: np.ndarray) -> np.ndarray:
+        """Exact member-level Mod-3 weights from the carried metadata —
+        the same algebra ``repro.core.aggregation.server_aggregate`` runs
+        on a flat buffer of raw updates, computed host-side: the member
+        count varies round to round, and a few hundred f32 scalars are
+        not worth a per-shape XLA compile on the serialized global stage.
+        """
+        n_samples = np.concatenate(
+            [p.n_samples for p in batch]).astype(np.float32)
+        if not isinstance(self.algo, FedQS):
+            # the algorithm's own weighting over the member view —
+            # n-proportional for the base class, uniform for DeFedAvg
+            p = np.asarray(self.algo._base_weights(list(MemberView(batch))),
+                           np.float32)
+            return p / max(p.sum(), np.float32(1e-12))
+        hp = self.hp
+        sims = np.concatenate([p.sims for p in batch]).astype(np.float32)
+        fb = np.concatenate([p.feedback for p in batch]) & hp.use_feedback
+        total = max(counts.sum(), 1)
+        f = counts.astype(np.float32) / np.float32(total)
+        f_bar, s_bar = f.mean(), table_sims.mean()
+        F = np.clip(f_bar / np.maximum(f[cids], 1e-12),
+                    1.0 / hp.ratio_clip, hp.ratio_clip).astype(np.float32)
+        G = np.clip(max(s_bar, 1e-6) / np.maximum(sims, 1e-6),
+                    1.0 / hp.ratio_clip, hp.ratio_clip).astype(np.float32)
+        # aggregation_weights (Eq. §3.4) on the numpy backend
+        K, N = len(cids), self.n_clients
+        p = n_samples / max(n_samples.sum(), 1)
+        w_fb = feedback_weight(F, G, K, N, xp=np)
+        p = np.where(fb, w_fb.astype(np.float32), p)
+        return p / max(p.sum(), np.float32(1e-12))
+
+    def _dispatch_partials(self, batch: List[PartialAggregate]):
+        # one segment_agg launch reduces every still-lazy edge buffer of
+        # this fire (the 2-tier fused path; 3-tier planes materialized at
+        # their regions already)
+        materialize(batch, use_kernel=self._use_kernel)
+
+        # status table (Eq. 1/2) from the exact member metadata, host-side
+        # (duplicate cids: each occurrence counts, last similarity wins)
+        cids = np.concatenate([p.cids for p in batch])
+        sims = np.concatenate([p.sims for p in batch]).astype(np.float32)
+        counts = np.asarray(self.table.counts).copy()
+        np.add.at(counts, cids, 1)
+        table_sims = np.asarray(self.table.sims).copy()
+        table_sims[cids] = sims
+        new_table = ServerTable(counts=jnp.asarray(counts, jnp.int32),
+                                sims=jnp.asarray(table_sims, jnp.float32))
+
+        p_members = self._member_weights(batch, counts, table_sims, cids)
+        part_idx = np.repeat(np.arange(len(batch)),
+                             [p.n_members for p in batch])
+        w_partials = np.zeros(len(batch), np.float32)
+        np.add.at(w_partials, part_idx, p_members)
+        # fold the per-partial 1/Σw normalization into the combine weight
+        # so the row stack is the raw fp32 sums the tiers forwarded
+        w_partials /= np.maximum(
+            np.asarray([p.sum_w for p in batch], np.float32), 1e-12)
+
+        rows = jnp.stack([p.sum_wx for p in batch])
+        # pad the partial axis to a small bucket: the partial count
+        # varies round to round and the serialized global stage should
+        # not pay a per-shape compile for it (zero rows contribute 0)
+        P = rows.shape[0]
+        bucket = max(8, 1 << (P - 1).bit_length())
+        if bucket != P:
+            rows = jnp.pad(rows, ((0, bucket - P), (0, 0)))
+            w_partials = np.pad(w_partials, (0, bucket - P))
+        w = jnp.asarray(w_partials)
+        if self._use_kernel is None:
+            flat = weighted_agg_auto_op(rows, w)
+        elif self._use_kernel:
+            flat = weighted_agg_op(rows, w)
+        else:
+            from repro.kernels.ref import weighted_agg_ref
+
+            flat = weighted_agg_ref(rows, w)
+        step = self._unravel()(flat)
+
+        strategy = getattr(self.algo, "strategy", AggregationStrategy.MODEL)
+        if strategy is AggregationStrategy.GRADIENT:
+            new_global = jax.tree_util.tree_map(
+                lambda w, s: w - self.hp.eta_g * s, self.global_params, step)
+        else:
+            new_global = step
+        return new_global, new_table
+
+    # ------------------------------------------------------------ checkpoint
+    def save(self, path: str) -> None:
+        from repro.checkpoint.ckpt import save_hier_state
+
+        self.join()
+        save_hier_state(path, self)
+
+    def restore(self, path: str) -> None:
+        from repro.checkpoint.ckpt import load_hier_state
+
+        self.join()
+        load_hier_state(path, self)
+
+    # ------------------------------------------------------------------ misc
+    def describe(self) -> str:
+        return (f"{self.topology.describe()} "
+                f"edges={len(self.edges)} regions={len(self.regions)} "
+                f"trigger={self.trigger.describe()}")
+
+
+def make_aggregation_service(
+    algo: Algorithm,
+    hp: FedQSHyperParams,
+    init_params: Params,
+    n_clients: int,
+    *,
+    topology=None,
+    trigger: Optional[TriggerPolicy] = None,
+    context=None,
+    speeds: Optional[np.ndarray] = None,
+    label_probs: Optional[np.ndarray] = None,
+    batched: bool = False,
+    **kw,
+) -> StreamingAggregator:
+    """The one server-construction path the engines share: a flat
+    ``StreamingAggregator``, or — when ``topology`` parses to a
+    ``Topology`` — the tiered plane.  A topology given as a *spec
+    string* gets its client→edge assignment derived from the sampled
+    population (``speeds``, and ``label_probs`` when the caller has
+    them); an explicit ``Topology`` instance keeps whatever wiring the
+    caller built (handcrafted maps are never silently overwritten).
+    ``batched`` applies to the flat service only; the hierarchy always
+    reduces stacked rows."""
+    from .topology import Topology, parse_topology
+
+    hand_wired = isinstance(topology, Topology)
+    topo = parse_topology(topology, n_clients)
+    if topo is None:
+        return StreamingAggregator(
+            algo, hp, init_params, n_clients,
+            trigger=trigger, context=context, speeds=speeds,
+            batched=batched, **kw,
+        )
+    if speeds is not None and not hand_wired:
+        topo = topo.with_population(speeds, label_probs)
+    return HierarchicalService(
+        algo, hp, init_params, n_clients, topo,
+        trigger=trigger, context=context, speeds=speeds, **kw,
+    )

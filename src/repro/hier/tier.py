@@ -1,0 +1,170 @@
+"""Tier aggregator nodes: the edge and regional stages of the plane.
+
+Every node owns a buffer and a ``TriggerPolicy`` from
+``repro.serve.triggers`` — the same K-buffer / time-window / quorum
+policies the flat service uses, evaluated against the node's own buffer
+(regions see their buffered partials through ``MemberView`` so trigger
+semantics keep counting client updates).  A firing node emits one
+``PartialAggregate`` upward and re-arms, exactly the double-buffer
+discipline of ``StreamingAggregator``.
+
+**Edge nodes** ingest raw client ``Update``s (dense or compressed):
+
+* a fully-int8 buffer reduces *eagerly* through the fused ``dequant_agg``
+  kernel — the quantized payloads are decoded exactly once, at the edge,
+  and only the fp32 Σw·x crosses the tier link upward;
+* other buffers (dense pytrees, raw-f32 top-k, mixed wire formats)
+  freeze their member rows lazily: the parent tier batches every frozen
+  edge of a fire through ONE ``segment_agg`` launch
+  (``repro.hier.partial.materialize``).
+
+**Region nodes** ingest edge partials and fold them into one regional
+partial per fire (``merge`` — associative, so the global aggregate is
+independent of how many tiers sat in between).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compress.codec import decode, is_compressed, ravel_flat
+from repro.core.types import AggregationStrategy, Update
+from repro.kernels import dequant_agg_auto_op, dequant_agg_op
+from repro.serve.batched import fused_eligible, stack_trees
+from repro.serve.triggers import TriggerPolicy
+
+from .partial import MemberView, PartialAggregate, merge
+
+
+class TierAggregator:
+    """Common tier-node machinery: buffer + trigger + fire bookkeeping."""
+
+    tier = "base"
+
+    def __init__(self, node_id: int, trigger: TriggerPolicy):
+        self.node_id = int(node_id)
+        self.trigger = trigger
+        self.buffer: List = []
+        self.fires = 0
+
+    @property
+    def pending(self) -> int:
+        """Client updates currently buffered at this node."""
+        return len(self.buffer)
+
+    def _trigger_view(self):
+        return self.buffer
+
+    def submit(self, item, now: float) -> Optional[PartialAggregate]:
+        """Buffer one item; returns the emitted partial if the node fired."""
+        self.buffer.append(item)
+        if self.trigger.should_fire(self._trigger_view(), now):
+            return self._fire(now)
+        return None
+
+    def flush(self, now: float) -> Optional[PartialAggregate]:
+        """Force-emit whatever is buffered (end of stream / checkpoint)."""
+        return self._fire(now) if self.buffer else None
+
+    def _fire(self, now: float) -> PartialAggregate:
+        batch, self.buffer = self.buffer, []
+        self.trigger.arm(now)
+        self.fires += 1
+        return self._reduce(batch, now)
+
+    def _reduce(self, batch, now: float) -> PartialAggregate:
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        return f"{self.tier}[{self.node_id}]({self.trigger.describe()})"
+
+
+class EdgeAggregator(TierAggregator):
+    """Leaf tier: raw client updates in, one partial aggregate out."""
+
+    tier = "edge"
+
+    def __init__(self, node_id: int, trigger: TriggerPolicy, *,
+                 strategy: AggregationStrategy,
+                 use_kernel: Optional[bool] = None):
+        super().__init__(node_id, trigger)
+        self.strategy = strategy
+        self.use_kernel = use_kernel
+
+    def _payload(self, u):
+        if self.strategy is AggregationStrategy.GRADIENT:
+            return u.delta
+        return u.params
+
+    def _reduce(self, batch: List[Update], now: float) -> PartialAggregate:
+        weights = np.asarray([u.n_samples for u in batch], np.float32)
+        partial = PartialAggregate(
+            tier=self.tier,
+            node_id=self.node_id,
+            sum_w=float(weights.sum()),
+            cids=np.asarray([u.cid for u in batch], np.int64),
+            n_samples=np.asarray([u.n_samples for u in batch], np.int64),
+            sims=np.asarray([u.similarity for u in batch], np.float32),
+            feedback=np.asarray([bool(u.feedback) for u in batch], bool),
+            stale_rounds=np.asarray([u.stale_round for u in batch], np.int64),
+            fired_at=now,
+        )
+        payloads = [self._payload(u) for u in batch]
+        w = jnp.asarray(weights)
+        if all(is_compressed(u) for u in batch) and fused_eligible(payloads):
+            # every payload int8 with one shared layout: fuse the decode
+            # into the reduction — the edge is the only place the int8
+            # bytes are ever touched, fp32 partials go upward
+            from repro.serve.batched import stack_encoded
+
+            q, scales = stack_encoded(payloads)
+            chunk, d = payloads[0].chunk, payloads[0].d
+            if self.use_kernel is None:
+                flat = dequant_agg_auto_op(q, scales, w, chunk=chunk)
+            elif self.use_kernel:
+                flat = dequant_agg_op(q, scales, w, chunk=chunk)
+            else:
+                from repro.kernels.ref import dequant_agg_ref
+
+                flat = dequant_agg_ref(q, scales, w)
+            partial.sum_wx = flat[:d]
+            return partial
+        # dense / raw-f32 / mixed buffers: decode once per edge into flat
+        # fp32 rows and defer the Σw·x — the parent tier reduces every
+        # frozen edge of a fire in one segment_agg launch
+        if any(is_compressed(u) for u in batch):
+            partial.rows = jnp.stack([
+                decode(self._payload(u)) if is_compressed(u)
+                else ravel_flat(self._payload(u))
+                for u in batch
+            ])
+        else:
+            # the cached-astype stacked ravel of the batched service
+            partial.rows, _ = stack_trees(payloads)
+        partial.row_weights = w
+        return partial
+
+
+class RegionAggregator(TierAggregator):
+    """Middle tier: edge partials in, one merged regional partial out."""
+
+    tier = "region"
+
+    def __init__(self, node_id: int, trigger: TriggerPolicy, *,
+                 use_kernel: Optional[bool] = None):
+        super().__init__(node_id, trigger)
+        self.use_kernel = use_kernel
+
+    @property
+    def pending(self) -> int:
+        return sum(p.n_members for p in self.buffer)
+
+    def _trigger_view(self):
+        # triggers count client updates, not partial envelopes
+        return MemberView(self.buffer)
+
+    def _reduce(self, batch: List[PartialAggregate], now: float) -> PartialAggregate:
+        return merge(batch, tier=self.tier, node_id=self.node_id,
+                     fired_at=now, use_kernel=self.use_kernel)

@@ -1,0 +1,203 @@
+"""Tier topology: which edge aggregates each client, which region each edge.
+
+A ``Topology`` describes the static wiring of the hierarchical
+aggregation plane (docs/HIERARCHY.md):
+
+    clients ──▶ edge aggregators ──▶ regional aggregators ──▶ global
+
+Spec grammar (``parse_topology`` / ``Topology.from_spec``)::
+
+    spec := "flat" | "hier:<edges>" | "hier:<edges>x<regions>"
+
+    "flat"        no hierarchy (callers keep the flat StreamingAggregator)
+    "hier:64"     2-tier: 64 edges reporting straight to the global tier
+    "hier:64x16"  3-tier: 64 edges grouped into 16 regions (fan-in 4),
+                  regions report to the global tier
+
+Edges map onto regions contiguously (edge e → region e·R//E), so region
+membership follows edge ordering.  Client → edge assignment defaults to
+round-robin; ``with_population`` derives a realistic assignment from a
+scenario population instead: clients are banded by speed into regions
+(the CSAFL grouping-by-delay setting — an edge site serves devices of
+similar latency), and within each region's band clients are clustered by
+dominant label so label-skew neighbourhoods land on the same edge (the
+geo-correlated non-IID case the hierarchy papers model).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class Topology:
+    """Static tier wiring.  ``client_edge[i]`` is client i's edge id;
+    ``edge_region[e]`` is edge e's region id (empty ⇒ 2-tier: edges
+    report straight to the global aggregator)."""
+
+    n_clients: int
+    n_edges: int
+    n_regions: int                       # 0 ⇒ no regional tier
+    client_edge: np.ndarray              # i64[N]
+    edge_region: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    spec: str = ""
+
+    def __post_init__(self):
+        if self.n_edges < 1 or self.n_edges > self.n_clients:
+            raise ValueError(
+                f"need 1 <= edges <= clients, got {self.n_edges} edges "
+                f"for {self.n_clients} clients"
+            )
+        if self.n_regions < 0 or self.n_regions > self.n_edges:
+            raise ValueError(
+                f"need 0 <= regions <= edges, got {self.n_regions} regions "
+                f"for {self.n_edges} edges"
+            )
+        self.client_edge = np.asarray(self.client_edge, np.int64)
+        if self.client_edge.shape != (self.n_clients,):
+            raise ValueError(
+                f"client_edge must be [{self.n_clients}], got "
+                f"{self.client_edge.shape}"
+            )
+        if len(self.client_edge) and (
+            self.client_edge.min() < 0 or self.client_edge.max() >= self.n_edges
+        ):
+            raise ValueError(
+                f"client_edge ids must lie in [0, {self.n_edges}); got "
+                f"range [{self.client_edge.min()}, {self.client_edge.max()}]"
+            )
+        if self.n_regions and len(self.edge_region) == 0:
+            self.edge_region = _contiguous_regions(self.n_edges, self.n_regions)
+        if self.n_regions:
+            self.edge_region = np.asarray(self.edge_region, np.int64)
+            if self.edge_region.shape != (self.n_edges,):
+                raise ValueError(
+                    f"edge_region must be [{self.n_edges}], got "
+                    f"{self.edge_region.shape}"
+                )
+            present = np.unique(self.edge_region)
+            if (present < 0).any() or (present >= self.n_regions).any() or (
+                len(present) != self.n_regions
+            ):
+                raise ValueError(
+                    f"edge_region must cover every region in "
+                    f"[0, {self.n_regions}) with at least one edge"
+                )
+        if not self.spec:
+            self.spec = (f"hier:{self.n_edges}x{self.n_regions}"
+                         if self.n_regions else f"hier:{self.n_edges}")
+
+    # -------------------------------------------------------------- wiring
+    @property
+    def tiers(self) -> int:
+        """Aggregation tiers above the clients (2 = edge→global)."""
+        return 3 if self.n_regions else 2
+
+    def edge_of(self, cid: int) -> int:
+        return int(self.client_edge[cid])
+
+    def region_of(self, edge: int) -> int:
+        if not self.n_regions:
+            raise ValueError("2-tier topology has no regional tier")
+        return int(self.edge_region[edge])
+
+    def edges_in_region(self, region: int) -> np.ndarray:
+        return np.flatnonzero(self.edge_region == region)
+
+    def describe(self) -> str:
+        return self.spec
+
+    # ----------------------------------------------------------- factories
+    @classmethod
+    def from_spec(cls, spec: str, n_clients: int) -> "Topology":
+        """Parse the spec grammar with the default round-robin assignment."""
+        n_edges, n_regions = _parse_spec(spec)
+        return cls(
+            n_clients=int(n_clients),
+            n_edges=n_edges,
+            n_regions=n_regions,
+            client_edge=np.arange(int(n_clients), dtype=np.int64) % n_edges,
+            spec=spec.strip(),
+        )
+
+    def with_population(self, speeds: np.ndarray,
+                        label_probs: Optional[np.ndarray] = None) -> "Topology":
+        """Re-derive the client→edge assignment from a sampled population.
+
+        Clients are sorted by speed and banded contiguously into regions
+        (2-tier: into edges), so slow and fast devices aggregate at
+        different sites; with ``label_probs`` the clients inside each
+        region band are re-ordered by dominant label before splitting
+        into that region's edges, co-locating label-skew clusters.
+        NaN/inf speeds (dead clients) sort last and keep an assignment —
+        a revived client reports to a real edge.
+        """
+        speeds = np.asarray(speeds, np.float64)
+        if speeds.shape != (self.n_clients,):
+            raise ValueError(
+                f"speeds must be [{self.n_clients}], got {speeds.shape}"
+            )
+        order = np.argsort(np.nan_to_num(speeds, nan=np.inf, posinf=np.inf),
+                           kind="stable")
+        assignment = np.zeros(self.n_clients, np.int64)
+        n_bands = self.n_regions if self.n_regions else self.n_edges
+        bands = np.array_split(order, n_bands)
+        if not self.n_regions:
+            for e, members in enumerate(bands):
+                assignment[members] = e
+        else:
+            for r, members in enumerate(bands):
+                # the region's actual edge ids — correct for any
+                # edge→region map, contiguous or not
+                region_edges = np.flatnonzero(self.edge_region == r)
+                if label_probs is not None and len(members):
+                    dom = np.argmax(np.asarray(label_probs)[members], axis=1)
+                    members = members[np.argsort(dom, kind="stable")]
+                chunks = np.array_split(members, len(region_edges))
+                for eid, chunk in zip(region_edges, chunks):
+                    assignment[chunk] = eid
+        return Topology(
+            n_clients=self.n_clients,
+            n_edges=self.n_edges,
+            n_regions=self.n_regions,
+            client_edge=assignment,
+            edge_region=self.edge_region,
+            spec=self.spec,
+        )
+
+
+def _contiguous_regions(n_edges: int, n_regions: int) -> np.ndarray:
+    """Edge → region map: contiguous, balanced (edge e → region e·R//E)."""
+    return (np.arange(n_edges, dtype=np.int64) * n_regions) // n_edges
+
+
+def _parse_spec(spec: str):
+    s = str(spec).strip().lower()
+    if not s.startswith("hier:"):
+        raise ValueError(
+            f"bad topology spec {spec!r}: expected 'hier:<edges>' or "
+            "'hier:<edges>x<regions>' (use 'flat' / None for no hierarchy)"
+        )
+    body = s[len("hier:"):]
+    try:
+        if "x" in body:
+            e, r = body.split("x", 1)
+            return int(e), int(r)
+        return int(body), 0
+    except ValueError:
+        raise ValueError(
+            f"bad topology spec {spec!r}: fan-outs must be integers, "
+            "e.g. 'hier:64' or 'hier:64x16'"
+        ) from None
+
+
+def parse_topology(spec, n_clients: int) -> Optional[Topology]:
+    """CLI-facing parse: ``None``/``"flat"`` → no hierarchy; a ``Topology``
+    passes through; anything else goes through the spec grammar."""
+    if spec is None or (isinstance(spec, str) and spec.strip().lower() in ("", "flat", "none")):
+        return None
+    if isinstance(spec, Topology):
+        return spec
+    return Topology.from_spec(spec, n_clients)

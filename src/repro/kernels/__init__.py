@@ -3,6 +3,8 @@
 * ``weighted_agg``      — Mod-3 K-way weighted parameter reduction;
 * ``dequant_agg``       — fused int8 dequantize + weighted reduction
   (compressed-transport aggregation, ``repro.compress``);
+* ``segment_agg``       — per-group segment-reduce Σw·x over stacked
+  client rows (hierarchical aggregation plane, ``repro.hier``);
 * ``similarity``        — Mod-1 fused <a,b>/|a|^2/|b|^2 one-pass statistics;
 * ``window_attention``  — sliding-window decode attention (long_500k path).
 
@@ -12,6 +14,8 @@ from .ops import (
     cosine_op,
     dequant_agg_auto_op,
     dequant_agg_op,
+    segment_agg_auto_op,
+    segment_agg_op,
     similarity_stats_op,
     weighted_agg_auto_op,
     weighted_agg_op,
@@ -22,6 +26,8 @@ __all__ = [
     "cosine_op",
     "dequant_agg_auto_op",
     "dequant_agg_op",
+    "segment_agg_auto_op",
+    "segment_agg_op",
     "similarity_stats_op",
     "weighted_agg_auto_op",
     "weighted_agg_op",

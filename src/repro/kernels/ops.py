@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from . import ref as _ref
 from .dequant_agg import dequant_agg
+from .segment_agg import segment_agg
 from .similarity import cosine_from_stats, fused_similarity_stats
 from .weighted_agg import weighted_agg
 from .window_attention import window_decode_attention
@@ -52,6 +53,22 @@ def dequant_agg_auto_op(q, scales, w, *, chunk):
     if _ON_TPU and not _FORCE_REF:
         return dequant_agg(q, scales, w, chunk=chunk)
     return _ref.dequant_agg_ref(q, scales, w)
+
+
+def segment_agg_op(x, w, seg, *, num_segments):
+    if _FORCE_REF:
+        return _ref.segment_agg_ref(x, w, seg, num_segments)
+    return segment_agg(x, w, seg, num_segments=num_segments,
+                       interpret=_INTERPRET)
+
+
+def segment_agg_auto_op(x, w, seg, *, num_segments):
+    """Throughput dispatch for the tiered aggregation hot path: the
+    compiled segment kernel on TPU, the one-hot-matmul oracle elsewhere
+    (interpret-mode Pallas is too slow for an ingest loop)."""
+    if _ON_TPU and not _FORCE_REF:
+        return segment_agg(x, w, seg, num_segments=num_segments)
+    return _ref.segment_agg_ref(x, w, seg, num_segments)
 
 
 def similarity_stats_op(a, b):

@@ -24,6 +24,22 @@ def dequant_agg_ref(q: jax.Array, scales: jax.Array, w: jax.Array) -> jax.Array:
     return weighted_agg_ref(x, w)
 
 
+def segment_agg_ref(x: jax.Array, w: jax.Array, seg: jax.Array,
+                    num_segments: int) -> jax.Array:
+    """x [K,D], w [K], seg [K] → [G,D] per-group Σ_k [seg==g]·w[k]·x[k].
+
+    Deliberately the same one-hot-matmul algebra as the Pallas kernel
+    (not ``jax.ops.segment_sum``) so interpret-mode kernel runs are
+    bit-identical in fp32 — the hierarchy's exactness gate relies on it.
+    Out-of-range segment ids select no group, matching the kernel.
+    """
+    groups = jnp.arange(num_segments, dtype=jnp.int32)[:, None]
+    selector = (groups == seg.astype(jnp.int32)[None, :]).astype(jnp.float32)
+    selector = selector * w.astype(jnp.float32)[None, :]
+    return jnp.dot(selector, x.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
 def fused_similarity_stats_ref(a: jax.Array, b: jax.Array) -> jax.Array:
     a = a.astype(jnp.float32)
     b = b.astype(jnp.float32)

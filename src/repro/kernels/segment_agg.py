@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: segment-reduce weighted aggregation for the
+hierarchical plane (``repro.hier``).
+
+    out[g, d] = Σ_k [seg[k] == g] · w[k] · x[k, d]
+
+The tiered aggregation plane stacks every member row of a region's
+*ready* edge buffers into one [K, D] matrix with a per-row segment id
+(= which edge the row belongs to).  Reducing edge-by-edge would cost one
+kernel launch per edge and re-read the weight/one-hot bookkeeping each
+time; the segment kernel computes **all** per-edge partial sums in a
+single VMEM pass — the [K, blk] tile is read once and multiplied by a
+[G, K] one-hot-times-weight matrix on the MXU, producing every group's
+Σw·x for that block simultaneously.
+
+Tiling: grid over D/BLOCK_D; per step the (K, BLOCK_D) row tile sits in
+VMEM with the (K, 1) weight and segment-id columns.  The [G, K] selector
+is rebuilt per step from an iota compare — G·K ops, negligible against
+the G·K·BLOCK_D matmul it feeds.
+
+The one-hot-matmul algebra is deliberately shared with
+``repro.kernels.ref.segment_agg_ref`` so interpret-mode runs are
+bit-identical to the oracle (the acceptance gate in
+``benchmarks/bench_hier.py`` checks exact fp32 equality).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+BLOCK_D = 2048  # f32: (K + G)×2048×4B tiles; K=256, G=64 → 2.6 MiB VMEM
+
+
+def _segment_agg_kernel(seg_ref, w_ref, x_ref, o_ref):
+    # seg_ref [K, 1] i32, w_ref [K, 1] f32, x_ref [K, blk] f32, o_ref [G, blk]
+    G = o_ref.shape[0]
+    K = x_ref.shape[0]
+    groups = jax.lax.broadcasted_iota(jnp.int32, (G, K), 0)
+    selector = (groups == seg_ref[...].T).astype(jnp.float32) * w_ref[...].T
+    o_ref[...] = jnp.dot(
+        selector, x_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "block_d", "interpret")
+)
+def segment_agg(x: jax.Array, w: jax.Array, seg: jax.Array, *,
+                num_segments: int, block_d: int = BLOCK_D,
+                interpret: bool = False) -> jax.Array:
+    """x [K, D] f32, w [K] f32, seg [K] i32 → [G, D] f32 per-group Σw·x.
+
+    Rows whose segment id falls outside [0, num_segments) contribute to
+    no group (the one-hot selector row is all-zero) — the hierarchy uses
+    this for padding rows.
+    """
+    K, D = x.shape
+    if w.shape != (K,) or seg.shape != (K,):
+        raise ValueError(
+            f"w {w.shape} and seg {seg.shape} must both be [{K}] to match x"
+        )
+    if num_segments < 1:
+        raise ValueError(f"num_segments must be >= 1, got {num_segments}")
+    pad = (-D) % block_d
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    Dp = D + pad
+    out = pl.pallas_call(
+        _segment_agg_kernel,
+        grid=(Dp // block_d,),
+        in_specs=[
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+            pl.BlockSpec((K, block_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((num_segments, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, Dp), jnp.float32),
+        interpret=interpret,
+    )(seg.astype(jnp.int32)[:, None], w.astype(jnp.float32)[:, None],
+      x.astype(jnp.float32))
+    return out[:, :D]
+
+
+def segment_agg_sharded(x: jax.Array, w: jax.Array, seg: jax.Array, *,
+                        num_segments: int, axis_name: str = "edges",
+                        devices=None) -> jax.Array:
+    """Multi-device segment reduce: shard the stacked row axis.
+
+    Each device runs one ``segment_agg`` launch over its row shard (rows
+    of any segment may land on any device) and the per-device [G, D]
+    partials ``psum`` across the mesh — tiers aggregate in parallel with
+    one collective.  Rows are zero-weight-padded up to a multiple of the
+    device count; on a single device this degenerates to one local
+    launch (no mesh, no collective).
+    """
+    from repro.kernels.ops import segment_agg_op
+
+    devices = list(jax.devices() if devices is None else devices)
+    n_dev = len(devices)
+    if n_dev == 1:
+        return segment_agg_op(x, w, seg, num_segments=num_segments)
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    K = x.shape[0]
+    pad = (-K) % n_dev
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        w = jnp.pad(w, (0, pad))            # zero weight → contributes 0
+        seg = jnp.pad(seg, (0, pad))
+    mesh = Mesh(np.asarray(devices), (axis_name,))
+
+    def local_reduce(xs, ws, ss):
+        part = segment_agg_op(xs, ws, ss, num_segments=num_segments)
+        return jax.lax.psum(part, axis_name)
+
+    fn = shard_map(
+        local_reduce,
+        mesh=mesh,
+        in_specs=(P(axis_name, None), P(axis_name), P(axis_name)),
+        out_specs=P(None, None),
+    )
+    return fn(x, w, seg)

@@ -15,10 +15,17 @@ With ``--scenario`` the update stream comes from the scenario engine
 troughs thin the stream, bursts flood it), and mid-stream churn — the
 load-generation twin of ``SAFLEngine(..., scenario=...)``.
 
+With ``--topology`` the stream ingests through the hierarchical
+aggregation plane (docs/HIERARCHY.md): clients report to edge
+aggregators, partials flow upward, and the global tier aggregates
+per-tier sums — ``--edge-k`` buffers updates at the edges first.
+
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --batch 4 --steps 32
     PYTHONPATH=src python -m repro.launch.serve --safl-stream --trigger quorum --updates 400
     PYTHONPATH=src python -m repro.launch.serve --safl-stream --scenario diurnal-churn \
         --clients 256 --updates 800 --trigger timewindow
+    PYTHONPATH=src python -m repro.launch.serve --safl-stream --topology hier:16x4 \
+        --clients 256 --updates 800 --edge-k 4
 """
 from __future__ import annotations
 
@@ -53,10 +60,22 @@ def run_safl_stream(args):
     }[args.trigger]()
     admission = (StalenessAdmission(args.tau_max, mode=args.admission_mode)
                  if args.tau_max >= 0 else AdmitAll())
-    service = StreamingAggregator(
-        algo, hp, params, args.clients,
-        trigger=trigger, admission=admission, batched=args.batched,
-    )
+    if args.topology:
+        from repro.hier import HierarchicalService, parse_topology
+        from repro.serve import KBuffer
+
+        topo = parse_topology(args.topology, args.clients)
+        service = HierarchicalService(
+            algo, hp, params, args.clients, topo,
+            trigger=trigger, admission=admission,
+            edge_trigger=(lambda e: KBuffer(args.edge_k)) if args.edge_k > 1
+            else None,
+        )
+    else:
+        service = StreamingAggregator(
+            algo, hp, params, args.clients,
+            trigger=trigger, admission=admission, batched=args.batched,
+        )
     if args.scenario:
         from repro.scenarios import get_scenario
 
@@ -81,10 +100,19 @@ def run_safl_stream(args):
     reports = replay(service, stream)
     dt = time.perf_counter() - t0
     s = service.stats
+    # the tiered plane always runs the batched stacked path
+    batched_eff = True if args.topology else args.batched
     print(f"safl-stream: algo={args.algo} trigger={trigger.describe()} "
-          f"admission={admission.describe()} batched={args.batched} "
+          f"admission={admission.describe()} batched={batched_eff} "
           f"source={source}"
+          + (f" topology={service.describe()}" if args.topology else "")
           + (f" compress={compressor.describe()}" if compressor else ""))
+    if args.topology:
+        fires = sum(e.fires for e in service.edges)
+        print(f"  tiers: {len(service.edges)} edges ({fires} edge fires), "
+              f"{len(service.regions)} regions "
+              f"({sum(r.fires for r in service.regions)} region fires), "
+              f"{service.pending} updates still tier-buffered")
     if compressor is not None:
         cs = compressor.stats
         print(f"  uplink {cs.bytes_per_update:.0f} bytes/update "
@@ -130,6 +158,11 @@ def main():
                     choices=["drop", "downweight"])
     ap.add_argument("--batched", action="store_true",
                     help="stacked [K,D] aggregation (Pallas kernel on TPU)")
+    ap.add_argument("--topology", default=None, metavar="SPEC",
+                    help="tiered aggregation plane (docs/HIERARCHY.md), "
+                         "e.g. 'hier:16' or 'hier:64x16'")
+    ap.add_argument("--edge-k", type=int, default=1,
+                    help="edge-tier K-buffer size (1 = all-pass, flat parity)")
     ap.add_argument("--compress", default=None, metavar="SPEC",
                     help="encode the stream through the compressed transport "
                          "(docs/COMPRESSION.md), e.g. int8, 'topk:0.05|int8'")

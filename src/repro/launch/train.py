@@ -18,7 +18,10 @@ events.  ``--cohort`` switches to the vectorized cohort fast path
 ``--compress <spec>`` runs the uplink through the compressed transport
 (docs/COMPRESSION.md): client updates cross the submit boundary as
 int8/top-k payloads and the service aggregates them through the fused
-``dequant_agg`` kernel path.
+``dequant_agg`` kernel path.  ``--topology <spec>`` replaces the flat
+server with the hierarchical aggregation plane (docs/HIERARCHY.md):
+clients report to population-derived edge aggregators and only partial
+aggregates flow toward the global tier.
 
 Examples:
     PYTHONPATH=src python -m repro.launch.train --task rwd --algo fedqs-sgd --rounds 100
@@ -43,9 +46,10 @@ def run_cohort(args, hp, scenario):
                        algo=make_algorithm(args.algo, hp), seed=args.seed,
                        eval_every=args.eval_every,
                        resource_ratio=args.resource_ratio,
-                       compress=args.compress)
+                       compress=args.compress, topology=args.topology)
     print(f"cohort fast path: scenario={scenario.describe()} algo={args.algo} "
           f"N={args.clients} K={eng.cohort_k} task=virtual "
+          + (f"topology={eng.service.describe()} " if args.topology else "")
           + (f"compress={eng.compressor.describe()} " if eng.compressor else "")
           + "(--task/--alpha/--sigma/--n-total apply to the event engine only)")
     res = eng.run(args.rounds)
@@ -90,10 +94,12 @@ def run_simulation(args):
     algo = make_algorithm(args.algo, hp)
     eng = SAFLEngine(data, spec, algo, hp, resource_ratio=args.resource_ratio,
                      seed=args.seed, eval_every=args.eval_every,
-                     scenario=scenario, compress=args.compress)
+                     scenario=scenario, compress=args.compress,
+                     topology=args.topology)
     print(f"FedQS SAFL simulation: task={args.task} algo={args.algo} "
           f"N={args.clients} K={hp.buffer_k} ratio=1:{args.resource_ratio:.0f}"
           + (f" scenario={scenario.describe()}" if scenario else "")
+          + (f" topology={eng.service.describe()}" if args.topology else "")
           + (f" compress={eng.compressor.describe()}" if eng.compressor else ""))
     res = eng.run(args.rounds)
     for m in res.metrics[:: max(1, len(res.metrics) // 20)]:
@@ -176,6 +182,9 @@ def main():
     ap.add_argument("--compress", default=None, metavar="SPEC",
                     help="compressed uplink codec spec (docs/COMPRESSION.md), "
                          "e.g. int8, topk:0.05, 'topk:0.05|int8'")
+    ap.add_argument("--topology", default=None, metavar="SPEC",
+                    help="tiered aggregation plane (docs/HIERARCHY.md), "
+                         "e.g. 'hier:16' or 'hier:64x16'")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--arch", default="gemma3-1b")

@@ -108,6 +108,7 @@ class CohortEngine:
         eval_every: int = 1,
         resource_ratio: float = 50.0,
         compress: Optional[str] = None,
+        topology=None,
     ):
         if scenario.has_data_events:
             # cohort data is virtual (a generating law, not per-client
@@ -150,17 +151,25 @@ class CohortEngine:
         self.spec = spec
 
         from repro.core.algorithms import make_algorithm
-        from repro.serve.service import StreamingAggregator
         from repro.serve.triggers import KBuffer
 
         self.algo = algo or make_algorithm("fedqs-sgd", self.hp)
         key = jax.random.PRNGKey(seed)
-        self.service = StreamingAggregator(
+        # with a topology, the server side is the tiered aggregation
+        # plane: edge assignment is derived from the sampled population
+        # (speed bands → regions, label clusters → edges), and the global
+        # K-buffer counts client updates through the partial member view,
+        # so the cohort round cadence is unchanged (docs/HIERARCHY.md)
+        from repro.hier import make_aggregation_service
+
+        self.service = make_aggregation_service(
             self.algo, self.hp, spec.init(key), n,
+            topology=topology,
             trigger=KBuffer(self.cohort_k),
             context=self,
-            batched=True,
             speeds=self.speeds,
+            label_probs=self.label_probs,
+            batched=True,
         )
         # compressed transport: deltas (or models) are encoded per virtual
         # client under vmap before submission; the service's batched path

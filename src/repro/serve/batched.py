@@ -112,6 +112,8 @@ def batched_weighted_sum(
 def fused_eligible(encs: Sequence[Encoded]) -> bool:
     """True when the buffer can feed ``dequant_agg`` directly: every
     payload int8-quantized with one shared (chunk, decoded-dim)."""
+    if not encs:
+        return False
     first = encs[0]
     return all(
         e.is_quantized and e.chunk == first.chunk and e.d == first.d
@@ -148,6 +150,8 @@ def compressed_weighted_sum(
 ) -> Params:
     """Σ_i w_i · decode(enc_i) without materializing decoded rows in HBM
     when the buffer is int8 (the fused kernel path)."""
+    if not encs:
+        raise ValueError("cannot aggregate an empty compressed buffer")
     w = jnp.asarray(weights, jnp.float32)
     d = encs[0].d
     if fused_eligible(encs):

@@ -58,17 +58,26 @@ from .triggers import KBuffer, TriggerPolicy
 
 @dataclass
 class RoundReport:
-    """What one aggregation fire produced (delivered via ``on_round``)."""
+    """What one aggregation fire produced (delivered via ``on_round``).
+
+    ``buffer`` holds one record per aggregated *client update*.  On the
+    flat service these are the full ``Update`` objects (tensor payloads
+    included); on the hierarchical plane (``repro.hier``) they are
+    metadata-only ``MemberRef`` records — cid, n_samples, stale_round,
+    similarity, feedback — because partial aggregates do not retain
+    per-member tensors.  Hooks that must work on both services should
+    touch only that shared metadata surface.
+    """
 
     round: int                 # round number after the fire
-    n_updates: int             # size of the aggregated buffer
-    n_distinct: int            # distinct clients in the buffer
+    n_updates: int             # client updates aggregated in the fire
+    n_distinct: int            # distinct clients among them
     mean_staleness: float      # mean τ over the buffer (pre-fire round basis)
     max_staleness: int
     dropped_since_last: int    # admission drops since the previous fire
     trigger: str               # trigger.describe() at fire time
     agg_seconds: float         # host wall time of the aggregation call
-    buffer: List[Update] = field(repr=False, default_factory=list)
+    buffer: List = field(repr=False, default_factory=list)  # Update | MemberRef
 
 
 @dataclass
@@ -157,6 +166,21 @@ class StreamingAggregator:
         and aggregates the frozen batch.
         """
         now = self._clock() if now is None else now
+        update, verdict = self._admit(update)
+        if update is None:
+            return SubmitResult(False, False, self.round, verdict.reason)
+        self._ingest.append(update)
+        if self.trigger.should_fire(self._ingest, now):
+            report = self._fire(now)
+            return SubmitResult(True, True, self.round, verdict.reason, report)
+        return SubmitResult(True, False, self.round, verdict.reason)
+
+    def _admit(self, update):
+        """The admission prologue every ingestion front-end shares (the
+        hierarchical service routes to tiers instead of one buffer but
+        must admit identically): stats, future-round clamp, policy
+        verdict, drop/downweight bookkeeping.  Returns ``(None,
+        verdict)`` on rejection."""
         self.stats.submitted += 1
         if update.stale_round > self.round:
             # no update can be trained on a future round — a live gateway
@@ -166,15 +190,11 @@ class StreamingAggregator:
         if update is None:
             self.stats.dropped += 1
             self._dropped_since_fire += 1
-            return SubmitResult(False, False, self.round, verdict.reason)
+            return None, verdict
         if verdict.weight_scale != 1.0:
             self.stats.downweighted += 1
         self.stats.accepted += 1
-        self._ingest.append(update)
-        if self.trigger.should_fire(self._ingest, now):
-            report = self._fire(now)
-            return SubmitResult(True, True, self.round, verdict.reason, report)
-        return SubmitResult(True, False, self.round, verdict.reason)
+        return update, verdict
 
     def flush(self, now: Optional[float] = None) -> Optional[RoundReport]:
         """Force-aggregate whatever is buffered (end of stream / sync mode
@@ -225,7 +245,10 @@ class StreamingAggregator:
         jax.block_until_ready(jax.tree_util.tree_leaves(new_global))
         dt = _time.perf_counter() - t0
 
-        stale = [self.round - u.stale_round for u in batch]
+        # the report describes *client updates*; a subclass whose batch
+        # items fold several of them (hierarchical partials) expands here
+        members = self._batch_members(batch)
+        stale = [self.round - u.stale_round for u in members]
         self.global_params = new_global
         self.table = new_table
         self.round += 1
@@ -233,18 +256,23 @@ class StreamingAggregator:
         self.stats.agg_seconds += dt
         report = RoundReport(
             round=self.round,
-            n_updates=len(batch),
-            n_distinct=len({u.cid for u in batch}),
+            n_updates=len(members),
+            n_distinct=len({u.cid for u in members}),
             mean_staleness=float(np.mean(stale)) if stale else 0.0,
             max_staleness=int(max(stale)) if stale else 0,
             dropped_since_last=dropped,
             trigger=self.trigger.describe(),
             agg_seconds=dt,
-            buffer=batch,
+            buffer=members,
         )
         if self.on_round is not None:
             self.on_round(report)
         return report
+
+    def _batch_members(self, batch: List[Update]) -> List[Update]:
+        """The per-client-update view of one frozen batch (what the
+        round report counts and carries); the flat buffer IS that view."""
+        return batch
 
     def _unravel(self):
         """Flat-[D] → model-pytree closure of the served model (cached per

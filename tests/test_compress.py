@@ -166,6 +166,21 @@ class TestSpecGrammar:
         with pytest.raises(ValueError):
             parse_codec(bad)
 
+    @pytest.mark.parametrize("spec", [
+        "topk :0.05", " topk:0.05 ", "topk:0.05 | int8", "topk: 0.05|int8",
+    ])
+    def test_whitespace_tolerated(self, spec):
+        assert parse_codec(spec).spec == parse_codec(
+            spec.replace(" ", "")).spec
+
+    def test_unknown_stage_error_lists_known_stages(self):
+        with pytest.raises(ValueError, match="none, int8, topk"):
+            parse_codec("gzip")
+        with pytest.raises(ValueError, match="known stages"):
+            parse_codec("topk:0.1|zstd")
+        with pytest.raises(ValueError, match="known stages"):
+            parse_codec("int8|")  # trailing separator → empty stage
+
     def test_quantizer_stage(self):
         assert isinstance(quantizer_stage(parse_codec("topk:0.1|int8")), Int8Codec)
         assert type(quantizer_stage(parse_codec("topk:0.1"))).__name__ == "Identity"
@@ -296,6 +311,95 @@ class TestDequantAgg:
         got = compressed_weighted_sum(encs, w, lambda f: f, use_kernel=False)
         want = weighted_agg_ref(jnp.stack([decode(e) for e in encs]), w)
         np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+class TestCompressedWeightedSumEdgeCases:
+    """Boundary behavior of ``serve/batched.py::compressed_weighted_sum``:
+    empty buffers, single-update buffers, and buffers that must take the
+    documented decode fallback instead of the fused kernel."""
+
+    def test_empty_buffer_raises(self):
+        assert not fused_eligible([])
+        with pytest.raises(ValueError, match="empty"):
+            compressed_weighted_sum([], jnp.zeros(0), lambda f: f)
+
+    def test_single_quantized_update(self):
+        v = jax.random.normal(KEY, (300,))
+        enc = parse_codec("int8:chunk=64").encode(v, KEY)
+        assert fused_eligible([enc])
+        got = compressed_weighted_sum([enc], jnp.asarray([2.0]), lambda f: f,
+                                      use_kernel=False)
+        np.testing.assert_allclose(got, 2.0 * decode(enc), rtol=1e-6)
+
+    def test_single_raw_update_takes_decode_path(self):
+        v = jax.random.normal(KEY, (128,))
+        enc = parse_codec("topk:0.25").encode(v)
+        assert not fused_eligible([enc])
+        got = compressed_weighted_sum([enc], jnp.asarray([1.0]), lambda f: f,
+                                      use_kernel=False)
+        np.testing.assert_allclose(got, decode(enc), rtol=1e-6)
+
+    def test_heterogeneous_wire_formats_decode(self):
+        # int8 + raw top-k in one buffer: not fused-eligible, but the
+        # decode fallback still aggregates them correctly together
+        v0 = jax.random.normal(KEY, (256,))
+        v1 = jax.random.normal(jax.random.PRNGKey(1), (256,))
+        encs = [parse_codec("int8:chunk=64").encode(v0, KEY),
+                parse_codec("topk:0.5").encode(v1)]
+        assert not fused_eligible(encs)
+        w = jnp.asarray([0.4, 0.6])
+        got = compressed_weighted_sum(encs, w, lambda f: f, use_kernel=False)
+        want = weighted_agg_ref(jnp.stack([decode(e) for e in encs]), w)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_chunk_mismatch_not_fused(self):
+        v = jax.random.normal(KEY, (256,))
+        encs = [parse_codec("int8:chunk=64").encode(v, KEY),
+                parse_codec("int8:chunk=128").encode(v, KEY)]
+        assert not fused_eligible(encs)
+        w = jnp.asarray([0.5, 0.5])
+        got = compressed_weighted_sum(encs, w, lambda f: f, use_kernel=False)
+        want = weighted_agg_ref(jnp.stack([decode(e) for e in encs]), w)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_mixed_compressed_dense_service_buffer_densifies(self):
+        """A stream mixing wire formats must trigger the documented
+        decode fallback in the batched service — and produce the same
+        global model as the equivalent all-dense buffer."""
+        hp = FedQSHyperParams(buffer_k=4)
+        spec = make_mlp_spec()
+        params = spec.init(jax.random.PRNGKey(0))
+        unravel = unravel_like(params)
+        base = [u for u, _ in synthetic_stream(params, 8, 4, seed=3)]
+        codec = parse_codec("int8")
+        mixed = [
+            compress_update(u, codec, jax.random.PRNGKey(i),
+                            payloads=("delta",))
+            if i % 2 == 0 else u
+            for i, u in enumerate(base)
+        ]
+        # the dense twin decodes the compressed halves exactly
+        dense = [u.to_update(unravel) if isinstance(u, CompressedUpdate)
+                 else u for u in mixed]
+
+        svc = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp,
+                                  params, 8, batched=True)
+        densify_sizes = []
+        orig = svc._densify
+        svc._densify = lambda batch: (densify_sizes.append(len(batch)),
+                                      orig(batch))[1]
+        for i, u in enumerate(mixed):
+            svc.submit(u, now=float(i))
+        assert densify_sizes == [4], "mixed buffer must take the decode fallback"
+
+        ref = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp,
+                                  params, 8, batched=True)
+        for i, u in enumerate(dense):
+            ref.submit(u, now=float(i))
+        for a, b in zip(jax.tree_util.tree_leaves(svc.global_params),
+                        jax.tree_util.tree_leaves(ref.global_params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-7)
 
 
 # ------------------------------------------------------- stack_trees

@@ -1,0 +1,671 @@
+"""Hierarchical aggregation plane: topology wiring, the segment-reduce
+kernel, partial-aggregate algebra, tier nodes, service parity vs the
+flat StreamingAggregator, checkpointing, and engine integration."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FedQSHyperParams, make_algorithm
+from repro.core.types import AggregationStrategy, Update
+from repro.hier import (
+    HierarchicalService,
+    MemberView,
+    PartialAggregate,
+    Topology,
+    materialize,
+    merge,
+    parse_topology,
+)
+from repro.hier.tier import EdgeAggregator, RegionAggregator
+from repro.kernels.ref import segment_agg_ref
+from repro.kernels.segment_agg import segment_agg, segment_agg_sharded
+from repro.models import make_mlp_spec
+from repro.serve import KBuffer, StalenessAdmission, StreamingAggregator, replay, synthetic_stream
+from repro.serve.triggers import TimeWindow
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mk_update(cid=0, n_samples=50, stale_round=0, similarity=0.5,
+               feedback=False, delta=None, params=None):
+    return Update(cid=cid, n_samples=n_samples, stale_round=stale_round,
+                  lr=0.1, similarity=similarity, feedback=feedback,
+                  speed_f=0.1, delta=delta, params=params)
+
+
+# ---------------------------------------------------------------------------
+# topology
+# ---------------------------------------------------------------------------
+class TestTopology:
+    def test_spec_grammar(self):
+        t = Topology.from_spec("hier:8", 64)
+        assert (t.n_edges, t.n_regions, t.tiers) == (8, 0, 2)
+        t = Topology.from_spec("hier:8x4", 64)
+        assert (t.n_edges, t.n_regions, t.tiers) == (8, 4, 3)
+        assert t.describe() == "hier:8x4"
+
+    @pytest.mark.parametrize("bad", ["tree:4", "hier:", "hier:axb", "hier:4x"])
+    def test_bad_specs_rejected(self, bad):
+        with pytest.raises(ValueError):
+            Topology.from_spec(bad, 64)
+
+    def test_bounds_validated(self):
+        with pytest.raises(ValueError):
+            Topology.from_spec("hier:65", 64)       # more edges than clients
+        with pytest.raises(ValueError):
+            Topology.from_spec("hier:4x8", 64)      # more regions than edges
+
+    def test_round_robin_default(self):
+        t = Topology.from_spec("hier:4", 10)
+        assert t.edge_of(0) == 0 and t.edge_of(5) == 1
+        assert all(0 <= t.edge_of(c) < 4 for c in range(10))
+
+    def test_contiguous_region_map(self):
+        t = Topology.from_spec("hier:8x4", 64)
+        np.testing.assert_array_equal(t.edge_region,
+                                      [0, 0, 1, 1, 2, 2, 3, 3])
+        assert t.region_of(5) == 2
+        np.testing.assert_array_equal(t.edges_in_region(3), [6, 7])
+
+    def test_2tier_has_no_regions(self):
+        t = Topology.from_spec("hier:4", 16)
+        with pytest.raises(ValueError):
+            t.region_of(0)
+
+    def test_population_speed_banding(self):
+        rng = np.random.default_rng(0)
+        speeds = rng.uniform(1, 50, 64)
+        t = Topology.from_spec("hier:8", 64).with_population(speeds)
+        # each edge holds a contiguous speed band: the slowest client of
+        # edge e+1 is at least as slow as the fastest of edge e
+        per_edge = [speeds[t.client_edge == e] for e in range(8)]
+        assert all(len(p) == 8 for p in per_edge)
+        for a, b in zip(per_edge, per_edge[1:]):
+            assert a.max() <= b.min()
+
+    def test_population_label_clusters_within_region(self):
+        rng = np.random.default_rng(1)
+        speeds = rng.uniform(1, 50, 60)
+        labels = rng.dirichlet([0.1] * 4, 60).astype(np.float32)
+        t = Topology.from_spec("hier:6x2", 60).with_population(speeds, labels)
+        # dominant labels inside one region appear edge-contiguously:
+        # the region's member order was sorted by dominant label
+        for r in range(2):
+            edges = t.edges_in_region(r)
+            doms = [np.argmax(labels[t.client_edge == e], 1) for e in edges]
+            # label values never interleave back and forth across edges
+            firsts = [d.min() for d in doms]
+            assert firsts == sorted(firsts)
+
+    def test_noncontiguous_edge_region_respected(self):
+        # hand-built interleaved wiring: population assignment must land
+        # each speed band on that region's actual edge ids
+        t = Topology(n_clients=40, n_edges=4, n_regions=2,
+                     client_edge=np.arange(40) % 4,
+                     edge_region=np.asarray([0, 1, 0, 1]))
+        speeds = np.linspace(1, 50, 40)
+        t2 = t.with_population(speeds)
+        slow_band = speeds[np.isin(t2.client_edge, t2.edges_in_region(0))]
+        fast_band = speeds[np.isin(t2.client_edge, t2.edges_in_region(1))]
+        assert slow_band.max() <= fast_band.min()
+
+    def test_bad_edge_region_rejected(self):
+        with pytest.raises(ValueError, match="edge_region"):
+            Topology(n_clients=8, n_edges=2, n_regions=2,
+                     client_edge=np.zeros(8, np.int64),
+                     edge_region=np.asarray([0, 0]))  # region 1 empty
+        with pytest.raises(ValueError, match="edge_region"):
+            Topology(n_clients=8, n_edges=2, n_regions=1,
+                     client_edge=np.zeros(8, np.int64),
+                     edge_region=np.asarray([0, 5]))  # out of range
+
+    def test_dead_speeds_still_assigned(self):
+        speeds = np.asarray([1.0, np.nan, 3.0, np.inf])
+        t = Topology.from_spec("hier:2", 4).with_population(speeds)
+        assert set(t.client_edge) <= {0, 1}
+
+    def test_parse_topology(self):
+        assert parse_topology(None, 8) is None
+        assert parse_topology("flat", 8) is None
+        assert parse_topology("none", 8) is None
+        t = parse_topology("hier:2", 8)
+        assert isinstance(t, Topology)
+        assert parse_topology(t, 8) is t
+
+
+# ---------------------------------------------------------------------------
+# segment-reduce kernel
+# ---------------------------------------------------------------------------
+class TestSegmentAggKernel:
+    @pytest.mark.parametrize("K,D,G", [
+        (4, 128, 2), (100, 5000, 8), (33, 2048, 7), (8, 2049, 3),
+    ])
+    def test_matches_oracle_exactly(self, K, D, G):
+        x = jax.random.normal(KEY, (K, D))
+        w = jax.random.uniform(jax.random.PRNGKey(1), (K,))
+        seg = jax.random.randint(jax.random.PRNGKey(2), (K,), 0, G)
+        got = segment_agg(x, w, seg, num_segments=G, interpret=True)
+        want = segment_agg_ref(x, w, seg, G)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_matches_segment_sum_semantics(self):
+        K, D, G = 40, 512, 5
+        x = jax.random.normal(KEY, (K, D))
+        w = jax.random.uniform(jax.random.PRNGKey(1), (K,))
+        seg = jax.random.randint(jax.random.PRNGKey(2), (K,), 0, G)
+        want = jax.ops.segment_sum(x * w[:, None], seg, num_segments=G)
+        got = segment_agg(x, w, seg, num_segments=G, interpret=True)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_out_of_range_rows_drop(self):
+        x = jnp.ones((3, 64))
+        w = jnp.ones(3)
+        seg = jnp.asarray([0, 7, 1], jnp.int32)  # 7 outside [0, 2)
+        got = segment_agg(x, w, seg, num_segments=2, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.tile([[1.0], [1.0]], 64))
+
+    def test_rejects_bad_shapes(self):
+        with pytest.raises(ValueError):
+            segment_agg(jnp.ones((3, 8)), jnp.ones(2), jnp.zeros(3, jnp.int32),
+                        num_segments=2, interpret=True)
+        with pytest.raises(ValueError):
+            segment_agg(jnp.ones((3, 8)), jnp.ones(3), jnp.zeros(3, jnp.int32),
+                        num_segments=0, interpret=True)
+
+    def test_sharded_single_device_fallthrough(self):
+        x = jax.random.normal(KEY, (10, 256))
+        w = jnp.ones(10)
+        seg = jnp.asarray(np.arange(10) % 3, jnp.int32)
+        got = segment_agg_sharded(x, w, seg, num_segments=3)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(segment_agg_ref(x, w, seg, 3)))
+
+
+# ---------------------------------------------------------------------------
+# partial aggregates
+# ---------------------------------------------------------------------------
+def _mk_partial(node_id=0, cids=(0, 1), d=16, seed=0, tier="edge"):
+    rng = np.random.default_rng(seed)
+    m = len(cids)
+    rows = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    weights = jnp.asarray(rng.integers(10, 100, m).astype(np.float32))
+    return PartialAggregate(
+        tier=tier, node_id=node_id, sum_w=float(weights.sum()),
+        cids=np.asarray(cids, np.int64),
+        n_samples=np.asarray(weights, np.int64),
+        sims=rng.uniform(0, 1, m).astype(np.float32),
+        feedback=np.zeros(m, bool),
+        stale_rounds=np.asarray(rng.integers(0, 5, m), np.int64),
+        rows=rows, row_weights=weights,
+    )
+
+
+class TestPartialAggregate:
+    def test_materialize_matches_manual(self):
+        p = _mk_partial()
+        rows, w = np.asarray(p.rows), np.asarray(p.row_weights)
+        assert p.pending
+        got = p.materialized()
+        assert not p.pending and p.rows is None
+        np.testing.assert_allclose(np.asarray(got), (w[:, None] * rows).sum(0),
+                                   rtol=1e-6)
+
+    def test_batched_materialize_all_lazy(self):
+        ps = [_mk_partial(i, cids=(2 * i, 2 * i + 1), seed=i) for i in range(4)]
+        singles = [np.asarray((np.asarray(p.row_weights)[:, None]
+                               * np.asarray(p.rows)).sum(0)) for p in ps]
+        materialize(ps, use_kernel=True)  # the fused segment kernel path
+        for p, want in zip(ps, singles):
+            assert not p.pending
+            np.testing.assert_allclose(np.asarray(p.sum_wx), want,
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_merge_is_associative(self):
+        ps = [_mk_partial(i, cids=(i,), seed=i) for i in range(3)]
+        left = merge([merge(ps[:2], tier="region", node_id=0, fired_at=0.0),
+                      ps[2]], tier="region", node_id=0, fired_at=0.0)
+        ps2 = [_mk_partial(i, cids=(i,), seed=i) for i in range(3)]
+        right = merge([ps2[0], merge(ps2[1:], tier="region", node_id=0,
+                                     fired_at=0.0)],
+                      tier="region", node_id=0, fired_at=0.0)
+        np.testing.assert_allclose(np.asarray(left.sum_wx),
+                                   np.asarray(right.sum_wx), rtol=1e-6)
+        assert left.sum_w == right.sum_w
+        assert sorted(left.cids) == sorted(right.cids)
+
+    def test_member_view(self):
+        ps = [_mk_partial(0, cids=(1, 2)), _mk_partial(1, cids=(3,))]
+        view = MemberView(ps)
+        assert len(view) == 3
+        assert [m.cid for m in view] == [1, 2, 3]
+        assert view[2].cid == 3 and view[-1].cid == 3
+        with pytest.raises(IndexError):
+            view[3]
+        # any stock trigger works against the view
+        assert KBuffer(3).should_fire(view, 0.0)
+        assert not KBuffer(4).should_fire(view, 0.0)
+
+    def test_max_staleness(self):
+        p = _mk_partial()
+        p.stale_rounds = np.asarray([2, 5], np.int64)
+        assert p.max_staleness(7) == 5
+
+
+# ---------------------------------------------------------------------------
+# tier nodes
+# ---------------------------------------------------------------------------
+class TestTierNodes:
+    def _tree(self, seed=0, scale=1.0):
+        k = jax.random.PRNGKey(seed)
+        return {"w": scale * jax.random.normal(k, (4, 5)),
+                "b": jnp.ones(3) * seed}
+
+    def test_edge_fires_on_trigger(self):
+        edge = EdgeAggregator(0, KBuffer(2),
+                              strategy=AggregationStrategy.GRADIENT)
+        assert edge.submit(_mk_update(0, delta=self._tree(1)), 0.0) is None
+        assert edge.pending == 1
+        p = edge.submit(_mk_update(1, delta=self._tree(2)), 1.0)
+        assert p is not None and p.n_members == 2 and edge.pending == 0
+        assert p.fired_at == 1.0 and edge.fires == 1
+
+    def test_edge_partial_sums_sample_weighted(self):
+        edge = EdgeAggregator(3, KBuffer(2),
+                              strategy=AggregationStrategy.GRADIENT)
+        t1, t2 = self._tree(1), self._tree(2)
+        edge.submit(_mk_update(0, n_samples=10, delta=t1), 0.0)
+        p = edge.submit(_mk_update(1, n_samples=30, delta=t2), 0.0)
+        from repro.compress import ravel_flat
+
+        want = 10 * np.asarray(ravel_flat(t1)) + 30 * np.asarray(ravel_flat(t2))
+        np.testing.assert_allclose(np.asarray(p.materialized()), want,
+                                   rtol=1e-5)
+        assert p.sum_w == 40.0
+
+    def test_edge_model_strategy_uses_params(self):
+        edge = EdgeAggregator(0, KBuffer(1),
+                              strategy=AggregationStrategy.MODEL)
+        t = self._tree(4)
+        p = edge.submit(_mk_update(0, n_samples=5, params=t, delta=None), 0.0)
+        from repro.compress import ravel_flat
+
+        np.testing.assert_allclose(np.asarray(p.materialized()),
+                                   5 * np.asarray(ravel_flat(t)), rtol=1e-5)
+
+    def test_edge_int8_buffer_fuses_eagerly(self):
+        from repro.compress import ClientCompressor, compress_stream
+
+        spec = make_mlp_spec()
+        params = spec.init(KEY)
+        comp = ClientCompressor("int8", 8, seed=0)
+        stream = list(compress_stream(
+            iter(list(synthetic_stream(params, 8, 2, seed=0))), comp,
+            strategy=AggregationStrategy.GRADIENT))
+        edge = EdgeAggregator(0, KBuffer(2),
+                              strategy=AggregationStrategy.GRADIENT)
+        edge.submit(stream[0][0], 0.0)
+        p = edge.submit(stream[1][0], 0.0)
+        assert not p.pending, "int8 edges reduce eagerly through dequant_agg"
+        from repro.compress import decode
+
+        want = sum(float(u.n_samples) * np.asarray(decode(u.delta))
+                   for u, _ in stream[:2])
+        np.testing.assert_allclose(np.asarray(p.sum_wx), want,
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_edge_raw_topk_defers(self):
+        from repro.compress import ClientCompressor, compress_stream
+
+        spec = make_mlp_spec()
+        params = spec.init(KEY)
+        comp = ClientCompressor("topk:0.2", 8, seed=0)
+        stream = list(compress_stream(
+            iter(list(synthetic_stream(params, 8, 2, seed=0))), comp,
+            strategy=AggregationStrategy.GRADIENT))
+        edge = EdgeAggregator(0, KBuffer(2),
+                              strategy=AggregationStrategy.GRADIENT)
+        edge.submit(stream[0][0], 0.0)
+        p = edge.submit(stream[1][0], 0.0)
+        assert p.pending, "raw-f32 payloads decode once, reduce at the parent"
+
+    def test_edge_flush(self):
+        edge = EdgeAggregator(0, KBuffer(10),
+                              strategy=AggregationStrategy.GRADIENT)
+        edge.submit(_mk_update(0, delta=self._tree(1)), 0.0)
+        p = edge.flush(5.0)
+        assert p is not None and p.n_members == 1
+        assert edge.flush(6.0) is None
+
+    def test_region_merges_member_counts(self):
+        region = RegionAggregator(0, KBuffer(3))
+        assert region.submit(_mk_partial(0, cids=(0, 1)), 0.0) is None
+        assert region.pending == 2
+        merged = region.submit(_mk_partial(1, cids=(2,)), 1.0)
+        assert merged is not None and merged.n_members == 3
+        assert merged.tier == "region" and region.pending == 0
+
+    def test_region_time_window_trigger(self):
+        region = RegionAggregator(0, TimeWindow(5.0, min_updates=1))
+        assert region.submit(_mk_partial(0, cids=(0,)), 1.0) is None
+        merged = region.submit(_mk_partial(1, cids=(1,)), 7.0)
+        assert merged is not None
+
+
+# ---------------------------------------------------------------------------
+# the hierarchical service
+# ---------------------------------------------------------------------------
+def _rel_gap(a, b):
+    gaps = [
+        float(np.abs(np.asarray(x) - np.asarray(y)).max()
+              / max(np.abs(np.asarray(x)).max(), 1e-12))
+        for x, y in zip(jax.tree_util.tree_leaves(a),
+                        jax.tree_util.tree_leaves(b))
+    ]
+    return max(gaps)
+
+
+class TestHierarchicalService:
+    def _stream(self, params, n=64, updates=240, seed=0):
+        return list(synthetic_stream(params, n, updates, seed=seed))
+
+    def _flat(self, hp, params, n, algo="fedqs-sgd"):
+        return StreamingAggregator(make_algorithm(algo, hp), hp, params, n,
+                                   batched=True)
+
+    @pytest.mark.parametrize("spec", ["hier:8", "hier:8x4"])
+    def test_allpass_parity_with_flat(self, spec):
+        mspec = make_mlp_spec()
+        params = mspec.init(KEY)
+        hp = FedQSHyperParams(buffer_k=10)
+        stream = self._stream(params)
+        flat = self._flat(hp, params, 64)
+        replay(flat, stream, flush=False)
+        hier = HierarchicalService(
+            make_algorithm("fedqs-sgd", hp), hp, params, 64,
+            Topology.from_spec(spec, 64))
+        replay(hier, stream, flush=False)
+        assert hier.round == flat.round
+        assert _rel_gap(flat.global_params, hier.global_params) <= 1e-5
+        np.testing.assert_array_equal(np.asarray(flat.table.counts),
+                                      np.asarray(hier.table.counts))
+        np.testing.assert_allclose(np.asarray(flat.table.sims),
+                                   np.asarray(hier.table.sims), atol=1e-6)
+
+    @pytest.mark.parametrize("algo", ["fedavg", "fedsgd", "defedavg"])
+    def test_allpass_parity_base_algorithm(self, algo):
+        # defedavg pins the non-FedQS weight path to the algorithm's own
+        # _base_weights (uniform), not blanket n-proportional weighting
+        mspec = make_mlp_spec()
+        params = mspec.init(KEY)
+        hp = FedQSHyperParams(buffer_k=8)
+        stream = self._stream(params, updates=160)
+        flat = self._flat(hp, params, 64, algo=algo)
+        replay(flat, stream, flush=False)
+        hier = HierarchicalService(
+            make_algorithm(algo, hp), hp, params, 64,
+            Topology.from_spec("hier:8", 64))
+        replay(hier, stream, flush=False)
+        assert hier.round == flat.round
+        assert _rel_gap(flat.global_params, hier.global_params) <= 1e-5
+
+    def test_buffered_edges_same_result_when_weights_linear(self):
+        """With use_feedback off, member weights are n-proportional, so
+        ANY edge buffering produces the flat aggregate (the partial
+        decomposition is exact) as long as rounds fire identically."""
+        mspec = make_mlp_spec()
+        params = mspec.init(KEY)
+        hp = FedQSHyperParams(buffer_k=12, use_feedback=False)
+        stream = self._stream(params, updates=120)
+        flat = self._flat(hp, params, 64)
+        replay(flat, stream, flush=False)
+        hier = HierarchicalService(
+            make_algorithm("fedqs-sgd", hp), hp, params, 64,
+            Topology.from_spec("hier:4", 64),
+            edge_trigger=lambda e: KBuffer(3))
+        replay(hier, stream, flush=False)
+        # rounds may differ (edges hold stragglers) — compare per-round
+        # via the table instead: every admitted member is accounted once
+        assert hier.stats.accepted == flat.stats.accepted
+
+    def test_duplicate_cid_table_matches_flat_exactly(self):
+        # SAFL allows repeat uploads in one buffer; the similarity table
+        # must pick the same (last) occurrence on both services
+        mspec = make_mlp_spec()
+        params = mspec.init(KEY)
+        hp = FedQSHyperParams(buffer_k=4)
+        tree = jax.tree_util.tree_map(lambda l: 1e-3 * jnp.ones_like(l),
+                                      params)
+        ups = [
+            _mk_update(1, similarity=0.9, delta=tree, params=tree),
+            _mk_update(1, similarity=0.2, delta=tree, params=tree),
+            _mk_update(2, similarity=0.5, delta=tree, params=tree),
+            _mk_update(1, similarity=0.7, delta=tree, params=tree),
+        ]
+        flat = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp,
+                                   params, 8, batched=True)
+        hier = HierarchicalService(make_algorithm("fedqs-sgd", hp), hp,
+                                   params, 8, Topology.from_spec("hier:2", 8))
+        for i, u in enumerate(ups):
+            flat.submit(u, now=float(i))
+            hier.submit(u, now=float(i))
+        assert flat.round == hier.round == 1
+        np.testing.assert_array_equal(np.asarray(flat.table.sims),
+                                      np.asarray(hier.table.sims))
+        assert float(flat.table.sims[1]) == pytest.approx(0.7)
+
+    def test_handwired_topology_not_overwritten(self):
+        from repro.hier import make_aggregation_service
+
+        mspec = make_mlp_spec()
+        params = mspec.init(KEY)
+        hp = FedQSHyperParams(buffer_k=4)
+        wiring = np.asarray([3, 2, 1, 0] * 4, np.int64)
+        topo = Topology(n_clients=16, n_edges=4, n_regions=0,
+                        client_edge=wiring.copy())
+        svc = make_aggregation_service(
+            make_algorithm("fedqs-sgd", hp), hp, params, 16,
+            topology=topo, speeds=np.linspace(1, 50, 16))
+        np.testing.assert_array_equal(svc.topology.client_edge, wiring)
+
+    def test_rejects_stateful_algorithms(self):
+        mspec = make_mlp_spec()
+        params = mspec.init(KEY)
+        hp = FedQSHyperParams()
+        with pytest.raises(ValueError, match="hierarchical"):
+            HierarchicalService(make_algorithm("fedbuff", hp), hp, params,
+                                8, Topology.from_spec("hier:2", 8))
+
+    def test_rejects_topology_size_mismatch(self):
+        mspec = make_mlp_spec()
+        params = mspec.init(KEY)
+        hp = FedQSHyperParams()
+        with pytest.raises(ValueError, match="topology"):
+            HierarchicalService(make_algorithm("fedqs-sgd", hp), hp, params,
+                                16, Topology.from_spec("hier:2", 8))
+
+    def test_pending_spans_tiers_and_flush_drains(self):
+        mspec = make_mlp_spec()
+        params = mspec.init(KEY)
+        hp = FedQSHyperParams(buffer_k=50)
+        hier = HierarchicalService(
+            make_algorithm("fedqs-sgd", hp), hp, params, 16,
+            Topology.from_spec("hier:4x2", 16),
+            edge_trigger=lambda e: KBuffer(2),
+            region_trigger=lambda r: KBuffer(4))
+        for i, (u, t) in enumerate(self._stream(params, 16, 9, seed=1)):
+            hier.submit(u, now=t)
+        assert hier.pending == 9 and hier.round == 0
+        report = hier.flush(now=100.0)
+        assert report is not None and report.n_updates == 9
+        assert hier.pending == 0 and hier.round == 1
+
+    def test_admission_drops_before_edges(self):
+        mspec = make_mlp_spec()
+        params = mspec.init(KEY)
+        hp = FedQSHyperParams(buffer_k=4)
+        hier = HierarchicalService(
+            make_algorithm("fedqs-sgd", hp), hp, params, 8,
+            Topology.from_spec("hier:2", 8),
+            admission=StalenessAdmission(tau_max=0, mode="drop"))
+        hier.round = 5
+        res = hier.submit(_mk_update(0, stale_round=1,
+                                     delta={"w": jnp.ones(4)}), now=0.0)
+        assert not res.accepted and hier.stats.dropped == 1
+        assert hier.pending == 0
+
+    def test_round_report_member_semantics(self):
+        mspec = make_mlp_spec()
+        params = mspec.init(KEY)
+        hp = FedQSHyperParams(buffer_k=6)
+        reports = []
+        hier = HierarchicalService(
+            make_algorithm("fedqs-sgd", hp), hp, params, 16,
+            Topology.from_spec("hier:4", 16),
+            edge_trigger=lambda e: KBuffer(2),
+            on_round=reports.append)
+        replay(hier, self._stream(params, 16, 40, seed=2), flush=False)
+        assert reports
+        for rep in reports:
+            assert rep.n_updates >= 6
+            assert rep.n_distinct <= rep.n_updates
+            assert all(hasattr(m, "cid") and hasattr(m, "stale_round")
+                       for m in rep.buffer)
+
+    def test_compressed_end_to_end(self):
+        from repro.compress import ClientCompressor, compress_stream
+
+        mspec = make_mlp_spec()
+        params = mspec.init(KEY)
+        hp = FedQSHyperParams(buffer_k=8)
+        base = self._stream(params, 16, 80, seed=3)
+        comp = ClientCompressor("topk:0.3|int8", 16, seed=0)
+        stream = list(compress_stream(iter(base), comp,
+                                      strategy=AggregationStrategy.GRADIENT))
+        hier = HierarchicalService(
+            make_algorithm("fedqs-sgd", hp), hp, params, 16,
+            Topology.from_spec("hier:4", 16),
+            edge_trigger=lambda e: KBuffer(2))
+        hier.compressor = comp
+        reports = replay(hier, stream)
+        assert hier.round >= 8
+        assert all(np.isfinite(np.asarray(l)).all()
+                   for l in jax.tree_util.tree_leaves(hier.global_params))
+        assert sum(r.n_updates for r in reports) == hier.stats.accepted
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+class TestHierCheckpoint:
+    def _build(self, params, hp):
+        return HierarchicalService(
+            make_algorithm("fedqs-sgd", hp), hp, params, 32,
+            Topology.from_spec("hier:8x4", 32),
+            edge_trigger=lambda e: KBuffer(2),
+            region_trigger=lambda r: KBuffer(4))
+
+    def test_round_trip_with_inflight_tier_buffers(self):
+        mspec = make_mlp_spec()
+        params = mspec.init(KEY)
+        hp = FedQSHyperParams(buffer_k=12)
+        stream = list(synthetic_stream(params, 32, 100, seed=0))
+        a = self._build(params, hp)
+        half = 55
+        for u, t in stream[:half]:
+            a.submit(u, now=t)
+        assert a.pending > 0, "checkpoint must capture in-flight tier state"
+        with tempfile.TemporaryDirectory() as d:
+            a.save(d)
+            assert os.path.exists(os.path.join(d, "hier.npz"))
+            b = self._build(params, hp)
+            b.restore(d)
+        assert b.pending == a.pending and b.round == a.round
+        assert [e.fires for e in b.edges] == [e.fires for e in a.edges]
+        assert [r.fires for r in b.regions] == [r.fires for r in a.regions]
+        for u, t in stream[half:]:
+            a.submit(u, now=t)
+            b.submit(u, now=t)
+        assert a.round == b.round
+        assert _rel_gap(a.global_params, b.global_params) == 0.0
+
+    def test_restore_does_not_mutate_shared_topology(self):
+        mspec = make_mlp_spec()
+        params = mspec.init(KEY)
+        hp = FedQSHyperParams(buffer_k=12)
+        shared = Topology.from_spec("hier:4", 32)
+        a = HierarchicalService(make_algorithm("fedqs-sgd", hp), hp, params,
+                                32, shared)
+        before = shared.client_edge.copy()
+        with tempfile.TemporaryDirectory() as d:
+            a.save(d)
+            b = HierarchicalService(make_algorithm("fedqs-sgd", hp), hp,
+                                    params, 32, shared)
+            b.restore(d)
+        np.testing.assert_array_equal(shared.client_edge, before)
+        assert b.topology is not shared
+
+    def test_topology_mismatch_rejected(self):
+        mspec = make_mlp_spec()
+        params = mspec.init(KEY)
+        hp = FedQSHyperParams(buffer_k=12)
+        a = self._build(params, hp)
+        with tempfile.TemporaryDirectory() as d:
+            a.save(d)
+            other = HierarchicalService(
+                make_algorithm("fedqs-sgd", hp), hp, params, 32,
+                Topology.from_spec("hier:4", 32))
+            with pytest.raises(ValueError, match="topology"):
+                other.restore(d)
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+class TestEngineIntegration:
+    def test_safl_engine_topology_matches_flat(self):
+        from repro.core import SAFLEngine
+        from repro.data import make_federated_data
+
+        hp = FedQSHyperParams(buffer_k=4)
+        spec = make_mlp_spec()
+
+        def run(topology):
+            data = make_federated_data("rwd", 12, sigma=1.0, seed=0,
+                                       n_total=600)
+            eng = SAFLEngine(data, spec, make_algorithm("fedqs-sgd", hp), hp,
+                             seed=1, topology=topology)
+            eng.run(5)
+            return eng
+
+        flat, hier = run(None), run("hier:4")
+        assert flat.round == hier.round
+        assert _rel_gap(flat.global_params, hier.global_params) <= 1e-5
+        from repro.hier import HierarchicalService as HS
+
+        assert isinstance(hier.service, HS)
+        # edge assignment follows the sampled speeds (speed banding)
+        topo = hier.service.topology
+        per_edge = [hier.speeds[topo.client_edge == e] for e in range(4)]
+        for a, b in zip(per_edge, per_edge[1:]):
+            assert a.max() <= b.min()
+
+    def test_cohort_engine_topology(self):
+        from repro.scenarios import CohortEngine, Scenario
+
+        hp = FedQSHyperParams(buffer_k=16)
+        flat = CohortEngine(Scenario(), 200, hp=hp, cohort_k=16, seed=0,
+                            eval_every=2)
+        rf = flat.run(6)
+        hier = CohortEngine(Scenario(), 200, hp=hp, cohort_k=16, seed=0,
+                            eval_every=2, topology="hier:8x2")
+        rh = hier.run(6)
+        assert flat.round == hier.round == 6
+        assert _rel_gap(flat.service.global_params,
+                        hier.service.global_params) <= 1e-5
+        assert rf.final_accuracy(3) == pytest.approx(rh.final_accuracy(3),
+                                                     abs=1e-6)
