@@ -72,10 +72,26 @@ def run_safl(task: str, algo: str, *, rounds: int = 40, n_clients: int = 20,
     return eng, res
 
 
+# Machine-readable twin of the CSV rows: every emit() call also appends
+# a plain dict here, and the harness (benchmarks/run.py) drains the list
+# after each suite into BENCH_<suite>.json so the perf trajectory is
+# tracked run over run, not lost in terminal scrollback.
+_RESULTS = []
+
+
+def drain_results():
+    """Return and clear the rows emitted since the last drain."""
+    global _RESULTS
+    rows, _RESULTS = _RESULTS, []
+    return rows
+
+
 def emit(name: str, us_per_call: float, **derived):
     d = "|".join(f"{k}={v}" for k, v in derived.items())
     print(f"{name},{us_per_call:.1f},{d}")
     sys.stdout.flush()
+    _RESULTS.append({"name": name, "us_per_call": round(float(us_per_call), 1),
+                     "derived": {k: str(v) for k, v in derived.items()}})
 
 
 def us_per_round(res, rounds: int) -> float:

@@ -1,5 +1,8 @@
 """Benchmark harness entry point — one module per paper table/figure
-(DESIGN §8).  Prints ``name,us_per_call,derived`` CSV rows.
+(DESIGN §8).  Prints ``name,us_per_call,derived`` CSV rows and writes
+each suite's rows to ``BENCH_<suite>.json`` at the repo root (override
+the directory with ``--out-dir``; ``--no-json`` disables the artifacts),
+so the perf trajectory is machine-readable run over run.
 
     PYTHONPATH=src python -m benchmarks.run [--only serve,kernels] [--fast]
 
@@ -9,11 +12,14 @@ configurations); suites without one run their single configuration.
 """
 import argparse
 import inspect
+import json
 import os
 import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
 def _suite(module_name: str):
@@ -47,12 +53,33 @@ SUITES = {
 }
 
 
+def _write_bench_json(out_dir: str, suite: str, rows, *, fast: bool,
+                      wall_s: float) -> str:
+    path = os.path.join(out_dir, f"BENCH_{suite}.json")
+    payload = {
+        "suite": suite,
+        "fast": bool(fast),
+        "generated_unix": int(time.time()),
+        "wall_s": round(wall_s, 2),
+        "results": rows,
+    }
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    return path
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help=f"comma list from {tuple(SUITES)}")
     ap.add_argument("--fast", action="store_true",
                     help="reduced configurations where a suite supports them")
+    ap.add_argument("--out-dir", default=ROOT,
+                    help="where BENCH_<suite>.json artifacts land "
+                         "(default: repo root)")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip writing BENCH_<suite>.json artifacts")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else set(SUITES)
     unknown = only - set(SUITES)
@@ -60,11 +87,24 @@ def main() -> None:
         raise SystemExit(f"unknown suites: {sorted(unknown)} "
                          f"(know: {sorted(SUITES)})")
 
+    try:
+        from benchmarks import common  # python -m benchmarks.run
+    except ImportError:
+        import common  # bare-script fallback, matching the suites
+
     print("name,us_per_call,derived")
     t0 = time.time()
     for name, call in SUITES.items():
-        if name in only:
-            call(args.fast)
+        if name not in only:
+            continue
+        common.drain_results()  # suite rows only, even after a prior crash
+        t_suite = time.time()
+        call(args.fast)
+        if not args.no_json:
+            path = _write_bench_json(args.out_dir, name,
+                                     common.drain_results(), fast=args.fast,
+                                     wall_s=time.time() - t_suite)
+            print(f"# wrote {path}", file=sys.stderr)
     print(f"# total_bench_wall_s={time.time()-t0:.1f}", file=sys.stderr)
 
 

@@ -1,47 +1,136 @@
 #!/usr/bin/env python
-"""Docs link check: fail on broken relative links in README.md / docs/*.md.
+"""Docs link check: fail on broken references in README.md / docs/*.md.
 
-Scans markdown inline links ``[text](target)``; external schemes
-(http/https/mailto) and pure in-page anchors are skipped, ``#anchor``
-suffixes on file targets are stripped, and each remaining target must
-exist relative to the file that references it.  Run by scripts/ci.sh.
+Three validation passes over markdown inline links ``[text](target)``
+plus backticked path spans:
+
+1. **relative file links** — external schemes (http/https/mailto) are
+   skipped; each remaining target (minus any ``#anchor`` suffix) must
+   exist relative to the file that references it;
+2. **anchors** — pure in-page ``#anchor`` links and ``file.md#anchor``
+   suffixes must match a heading in the target file, using GitHub's
+   slugification (lowercase, punctuation stripped, spaces → hyphens,
+   ``-N`` suffixes for duplicates);
+3. **source paths** — any backticked span that looks like a repo path
+   (``src/...``, ``benchmarks/...``, ``scripts/...``, ``examples/...``,
+   ``tests/...``, ``experiments/...``) must exist relative to the repo
+   root (a trailing ``::qualifier`` is ignored).
+
+Run by scripts/ci.sh.
 """
 from __future__ import annotations
 
 import re
 import sys
+from collections import Counter
 from pathlib import Path
 
 LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
-SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+CODE_SPAN_RE = re.compile(r"`([^`\n]+)`")
+SRC_PATH_RE = re.compile(
+    r"^(?:src|benchmarks|scripts|examples|tests|experiments)/[\w\-./]+$")
+FENCE_RE = re.compile(r"^\s*(```|~~~)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:")
 
 
-def check_file(path: Path) -> list:
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug for one heading line.
+
+    Only formatting markers (backticks, asterisks) are stripped —
+    literal underscores survive into GitHub anchors, so they must
+    survive here too (``\\w`` keeps them through the punctuation pass).
+    """
+    s = re.sub(r"[`*]", "", heading.strip()).lower()
+    s = re.sub(r"[^\w\- ]", "", s, flags=re.UNICODE)
+    return s.replace(" ", "-")
+
+
+def heading_slugs(text: str) -> set:
+    """Every anchor GitHub generates for ``text`` (duplicates get -N)."""
+    slugs: set = set()
+    seen: Counter = Counter()
+    in_fence = False
+    for line in text.splitlines():
+        if FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        base = slugify(m.group(2))
+        slugs.add(base if not seen[base] else f"{base}-{seen[base]}")
+        seen[base] += 1
+    return slugs
+
+
+def _strip_fences(text: str) -> str:
+    """Drop fenced code blocks (their content is not rendered links)."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            out.append(line)
+    return "\n".join(out)
+
+
+def check_file(path: Path, root: Path, slug_cache: dict) -> list:
     broken = []
     text = path.read_text(encoding="utf-8")
-    for m in LINK_RE.finditer(text):
+    rendered = _strip_fences(text)
+
+    def slugs_of(p: Path) -> set:
+        if p not in slug_cache:
+            slug_cache[p] = heading_slugs(p.read_text(encoding="utf-8"))
+        return slug_cache[p]
+
+    def line_of(fragment: str) -> int:
+        pos = text.find(fragment)
+        return text.count("\n", 0, pos) + 1 if pos >= 0 else 0
+
+    for m in LINK_RE.finditer(rendered):
         target = m.group(1)
         if target.startswith(SKIP_PREFIXES) or "://" in target:
             continue
-        rel = target.split("#", 1)[0]
-        if not rel:
+        rel, _, anchor = target.partition("#")
+        if rel:
+            dest = (path.parent / rel).resolve()
+            if not dest.exists():
+                broken.append((path, line_of(f"({target})"),
+                               f"missing file ({target})"))
+                continue
+        else:
+            dest = path  # pure in-page anchor
+        if anchor and dest.suffix == ".md":
+            if anchor not in slugs_of(dest):
+                broken.append((path, line_of(f"({target})"),
+                               f"missing anchor ({target})"))
+
+    for m in CODE_SPAN_RE.finditer(rendered):
+        span = m.group(1).split("::", 1)[0].strip()
+        if not SRC_PATH_RE.match(span):
             continue
-        if not (path.parent / rel).exists():
-            line = text.count("\n", 0, m.start()) + 1
-            broken.append((path, line, target))
+        if not (root / span).exists():
+            broken.append((path, line_of(f"`{m.group(1)}`"),
+                           f"missing source path (`{span}`)"))
     return broken
 
 
 def main() -> int:
     root = Path(__file__).resolve().parent.parent
     files = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    slug_cache: dict = {}
     broken = []
     for f in files:
         if f.exists():
-            broken.extend(check_file(f))
+            broken.extend(check_file(f, root, slug_cache))
     if broken:
-        for path, line, target in broken:
-            print(f"BROKEN LINK {path.relative_to(root)}:{line}: ({target})")
+        for path, line, what in broken:
+            print(f"BROKEN {path.relative_to(root)}:{line}: {what}")
         return 1
     print(f"docs links OK ({len(files)} files)")
     return 0

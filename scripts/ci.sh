@@ -34,7 +34,40 @@ if [ -z "${CI_SKIP_SMOKE:-}" ]; then
 
   echo "== smoke: streaming service =="
   $PY -m repro.launch.serve --safl-stream --updates 120 --trigger kbuffer
-  $PY benchmarks/bench_serve.py --quick
+
+  echo "== smoke: telemetry record -> report =="
+  # record a 50-client stream, assert every JSONL event parses against the
+  # documented taxonomy, and render the experiment report from it
+  TELEDIR=$(mktemp -d)
+  $PY -m repro.launch.serve --safl-stream --clients 50 --updates 200 \
+      --telemetry "$TELEDIR/run.jsonl" --report "$TELEDIR/report.md"
+  $PY - "$TELEDIR" <<'EOF'
+import json, sys, os
+d = sys.argv[1]
+sys.path.insert(0, "src")
+from repro.telemetry import EVENT_TYPES
+records = [json.loads(l) for l in open(os.path.join(d, "run.jsonl")) if l.strip()]
+assert records, "telemetry smoke recorded no events"
+unknown = {r["e"] for r in records} - set(EVENT_TYPES)
+assert not unknown, f"events outside the documented taxonomy: {unknown}"
+assert records[-1]["e"] == "metrics-snapshot", "missing final metrics snapshot"
+report = open(os.path.join(d, "report.md")).read()
+for section in ("## Run overview", "## Staleness distribution",
+                "## Participation fairness", "## Metrics snapshot"):
+    assert section in report, f"report missing section {section!r}"
+print(f"telemetry smoke OK ({len(records)} events, "
+      f"{len(report.splitlines())} report lines)")
+EOF
+  rm -rf "$TELEDIR"
+
+  echo "== bench artifacts: serve suite (--fast) =="
+  # the --fast serve suite doubles as the telemetry overhead/parity gate
+  # and leaves BENCH_serve.json at the repo root as the uploadable artifact
+  $PY -m benchmarks.run --only serve --fast
+  test -s BENCH_serve.json
+  $PY -c "import json; rows = json.load(open('BENCH_serve.json'))['results']; \
+assert rows, 'BENCH_serve.json has no results'; \
+print('BENCH_serve.json OK:', len(rows), 'rows')"
 
   echo "== smoke: simulator launcher =="
   $PY -m repro.launch.train --task rwd --algo fedqs-sgd --rounds 4 \

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import AggregationStrategy, Update
+from repro.telemetry import BYTES_BUCKETS, CodecEncoded
 
 from .codec import (
     Chain,
@@ -97,6 +98,13 @@ class ClientCompressor:
         self.error_feedback = bool(error_feedback)
         self.residual: Optional[np.ndarray] = None  # f32[n_clients, D], lazy
         self.stats = CompressorStats()
+        # telemetry hub (docs/OBSERVABILITY.md), attached by the engine /
+        # launcher that owns the run; None = no events, zero overhead.
+        # Metric handles bind lazily (the hub arrives post-construction)
+        # and are cached per hub so the per-upload path skips the
+        # registry's string lookups.
+        self.telemetry = None
+        self._tm_handles = None
         self._key = jax.random.PRNGKey(seed)
         self._encode_batch = jax.jit(jax.vmap(self.codec.encode))
         self._decode_batch = jax.jit(jax.vmap(decode))
@@ -123,6 +131,35 @@ class ClientCompressor:
     def _account(self, enc: Encoded, d: int) -> None:
         self.stats.payload_bytes += enc.nbytes
         self.stats.dense_bytes += 4 * d
+
+    def _emit_encoded(self, cid: int, dense_bytes: int, wire_bytes: int) -> None:
+        """One ``codec-encoded`` telemetry event + byte metrics (no-op
+        without a hub).  ``cid=-1`` marks unattributed payloads (the
+        cohort's cid-less params batch)."""
+        tel = self.telemetry
+        if tel is None:
+            return
+        handles = self._tm_handles
+        if handles is None or handles[0] is not tel:
+            m = tel.metrics
+            handles = (
+                tel,
+                m.counter("compress.wire_bytes", unit="bytes",
+                          layer="compress"),
+                m.counter("compress.dense_bytes", unit="bytes",
+                          layer="compress"),
+                m.histogram("compress.update_bytes", BYTES_BUCKETS,
+                            unit="bytes", layer="compress"),
+            )
+            self._tm_handles = handles
+        _, wire_counter, dense_counter, update_hist = handles
+        wire_counter.inc(int(wire_bytes))
+        dense_counter.inc(int(dense_bytes))
+        update_hist.observe(int(wire_bytes))
+        tel.emit(CodecEncoded(
+            t=None, cid=int(cid), spec=self.codec.spec,
+            dense_bytes=int(dense_bytes), wire_bytes=int(wire_bytes),
+        ))
 
     # ------------------------------------------------------- single update
     def encode_delta(self, cid: int, flat: jnp.ndarray) -> Encoded:
@@ -163,11 +200,15 @@ class ClientCompressor:
             None, AggregationStrategy.GRADIENT)
         want_params = update.params is not None and strategy in (
             None, AggregationStrategy.MODEL)
+        wire0 = self.stats.payload_bytes
+        dense0 = self.stats.dense_bytes
         if want_delta:
             delta = self.encode_delta(update.cid, ravel_flat(update.delta))
         if want_params:
             params = self.encode_params(ravel_flat(update.params))
         self.stats.updates += 1
+        self._emit_encoded(update.cid, self.stats.dense_bytes - dense0,
+                           self.stats.payload_bytes - wire0)
         return CompressedUpdate(
             cid=update.cid,
             n_samples=update.n_samples,
@@ -204,8 +245,9 @@ class ClientCompressor:
         encs = [
             jax.tree_util.tree_map(lambda a, i=i: a[i], batched) for i in range(B)
         ]
-        for enc in encs:
+        for cid, enc in zip(cids, encs):
             self._account(enc, int(d))
+            self._emit_encoded(int(cid), 4 * int(d), enc.nbytes)
         self.stats.updates += B
         return encs
 
@@ -221,6 +263,7 @@ class ClientCompressor:
         ]
         for enc in encs:
             self._account(enc, int(d))
+            self._emit_encoded(-1, 4 * int(d), enc.nbytes)
         self.stats.updates += B
         return encs
 

@@ -43,11 +43,14 @@ from repro.data.pipeline import FederatedData
 from repro.optim.sgd import local_train_epochs
 from .aggregation import server_aggregate
 from .similarity import local_global_similarity, pseudo_global_gradient
+from repro.telemetry import ClientClassified, RoundMetricsEvent
+
 from .types import (
     AggregationStrategy,
     ClientState,
     FedQSHyperParams,
     Params,
+    Quadrant,
     RoundMetrics,
     ServerTable,
     Update,
@@ -101,6 +104,19 @@ class EngineResult:
         acc = [m.accuracy for m in self.metrics]
         return sum(1 for a, b in zip(acc, acc[1:]) if a - b > threshold)
 
+    def stability_score(self, threshold: float = 0.15) -> float:
+        """Fraction of round-to-round transitions that are NOT an
+        oscillation (an accuracy drop deeper than ``threshold``), in
+        [0, 1]: 1.0 = monotone-stable learning, lower = choppier
+        (paper Fig. 4's oscillation phenomenon).  Monotone
+        non-increasing in the number of oscillation events for a fixed
+        history length; fewer than two recorded rounds score 1.0.
+        """
+        transitions = len(self.metrics) - 1
+        if transitions <= 0:
+            return 1.0
+        return 1.0 - self.oscillations(threshold) / transitions
+
     def virtual_time(self) -> float:
         return self.metrics[-1].virtual_time if self.metrics else 0.0
 
@@ -124,6 +140,7 @@ class SAFLEngine:
         sync_mode: bool = False,
         compress: Optional[str] = None,
         topology=None,
+        telemetry=None,
     ):
         self.data = data
         self.spec = spec
@@ -197,7 +214,19 @@ class SAFLEngine:
             trigger=KBuffer(hp.buffer_k),
             context=self,
             speeds=self.speeds,
+            telemetry=telemetry,
         )
+        # telemetry (docs/OBSERVABILITY.md): the service publishes the
+        # serve-layer events; the engine adds Mod-2 classifications and
+        # per-round evaluation metrics.  None = fully disabled.
+        self.telemetry = telemetry
+        if telemetry is not None:
+            self._tm_quadrants = {
+                int(q): telemetry.metrics.gauge(
+                    f"engine.quadrant_{q.name.lower()}",
+                    unit="clients", layer="core")
+                for q in Quadrant
+            }
 
         # compressed uplink (docs/COMPRESSION.md): each client's upload is
         # encoded at the submit boundary — exactly where the wire would be —
@@ -207,6 +236,7 @@ class SAFLEngine:
             from repro.compress import ClientCompressor
 
             self.compressor = ClientCompressor(compress, n, seed=seed)
+            self.compressor.telemetry = telemetry
             self.service.compressor = self.compressor
 
         # client-side Mod-1 storage: the last two global models seen
@@ -254,7 +284,7 @@ class SAFLEngine:
         f = counts / total
         return f, float(f.mean()), float(np.asarray(self.table.sims).mean())
 
-    def _client_train(self, cid: int) -> Update:
+    def _client_train(self, cid: int, now: float = 0.0) -> Update:
         """One autonomous local-training burst → an Update for the buffer."""
         fetched_round, w_start, w_prev = self._client_globals[cid]
         c = self.clients[cid]
@@ -267,6 +297,12 @@ class SAFLEngine:
         c.lr, c.momentum = float(decision[0]), float(decision[1])
         feedback = bool(decision[2])
         c.quadrant = int(decision[3])
+        if self.telemetry is not None:
+            self.telemetry.emit(ClientClassified(
+                t=float(now), round=self.round, cid=cid,
+                quadrant=c.quadrant, lr=c.lr, momentum=c.momentum,
+                feedback=feedback,
+            ))
 
         batches = ds.batches(
             self.spec.batch_size,
@@ -329,7 +365,7 @@ class SAFLEngine:
         qc: Dict[str, int] = {}
         for c in self.clients:
             qc[str(c.quadrant)] = qc.get(str(c.quadrant), 0) + 1
-        return RoundMetrics(
+        m = RoundMetrics(
             round=self.round,
             virtual_time=vt,
             loss=float(loss),
@@ -338,6 +374,15 @@ class SAFLEngine:
             mean_staleness=float(np.mean(stale)) if stale else 0.0,
             quadrant_counts=qc,
         )
+        if self.telemetry is not None:
+            for q, gauge in self._tm_quadrants.items():
+                gauge.set(qc.get(str(q), 0))
+            self.telemetry.emit(RoundMetricsEvent(
+                t=float(vt), round=m.round, loss=m.loss, accuracy=m.accuracy,
+                n_stale=m.n_stale, mean_staleness=m.mean_staleness,
+                quadrant_counts=dict(qc),
+            ))
+        return m
 
     # ---------------------------------------------------------------- driver
     def run(self, n_rounds: int) -> EngineResult:
@@ -366,7 +411,7 @@ class SAFLEngine:
             vt, _, cid, gen = heapq.heappop(heap)
             if not self.alive[cid] or gen != self._gen[cid]:
                 continue
-            update = self._client_train(cid)
+            update = self._client_train(cid, now=vt)
             # client immediately checks for a fresh global model, then keeps
             # going — the fetch deliberately precedes the submit so the
             # uploader trains on the pre-aggregation model (upload/fetch race)
@@ -421,7 +466,7 @@ class SAFLEngine:
                 heapq.heappush(heap, (vt + float(compute), seq, cid, self._FINISH, gen))
                 seq += 1
                 continue
-            update = self._client_train(cid)
+            update = self._client_train(cid, now=vt)
             result = self._submit(update, now=vt)
             nxt = arr.next_start(cid, vt, self.rng)
             if np.isfinite(nxt):
@@ -482,7 +527,7 @@ class SAFLEngine:
             report = None
             for cid in sel:
                 self._client_fetch(cid)
-                res = self._submit(self._client_train(cid), now=vt)
+                res = self._submit(self._client_train(cid, now=vt), now=vt)
                 if res.fired:
                     report = res.report
             if report is None:  # fewer live clients than K: force the round

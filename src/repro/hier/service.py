@@ -52,6 +52,7 @@ from repro.core.types import (
 from repro.kernels import weighted_agg_auto_op, weighted_agg_op
 from repro.serve.service import RoundReport, StreamingAggregator, SubmitResult
 from repro.serve.triggers import KBuffer, TriggerPolicy
+from repro.telemetry import Telemetry, TierMerged
 
 from .partial import MemberView, PartialAggregate, materialize
 from .tier import EdgeAggregator, RegionAggregator
@@ -91,6 +92,7 @@ class HierarchicalService(StreamingAggregator):
         on_round=None,
         speeds: Optional[np.ndarray] = None,
         clock: Callable[[], float] = _time.monotonic,
+        telemetry: Optional[Telemetry] = None,
     ):
         if not isinstance(algo, FedQS) and (
             type(algo).server_aggregate is not Algorithm.server_aggregate
@@ -111,6 +113,7 @@ class HierarchicalService(StreamingAggregator):
             trigger=trigger, admission=admission, context=context,
             batched=True, use_kernel=use_kernel, async_agg=async_agg,
             on_round=on_round, speeds=speeds, clock=clock,
+            telemetry=telemetry,
         )
         self.topology = topology
         self._use_kernel = use_kernel
@@ -130,6 +133,15 @@ class HierarchicalService(StreamingAggregator):
         # K-buffer check is O(1) per submit instead of re-summing every
         # buffered partial
         self._ingest_members = 0
+        if telemetry is not None:
+            m = telemetry.metrics
+            self._tm_edge_fires = m.counter("hier.edge_fires",
+                                            unit="fires", layer="hier")
+            self._tm_region_fires = m.counter("hier.region_fires",
+                                              unit="fires", layer="hier")
+            self._tm_partial_members = m.histogram(
+                "hier.partial_members", (1, 2, 4, 8, 16, 32, 64, 128, 256),
+                unit="updates", layer="hier")
 
     # ------------------------------------------------------------- ingestion
     def submit(self, update, now: Optional[float] = None) -> SubmitResult:
@@ -137,7 +149,7 @@ class HierarchicalService(StreamingAggregator):
         emitted by firing tiers bubble up to the global buffer, where the
         global trigger sees the flat member count."""
         now = self._clock() if now is None else now
-        update, verdict = self._admit(update)
+        update, verdict = self._admit(update, now)
         if update is None:
             return SubmitResult(False, False, self.round, verdict.reason)
 
@@ -154,15 +166,32 @@ class HierarchicalService(StreamingAggregator):
     def _forward(self, partial: PartialAggregate, now: float) -> None:
         """One tier hop: edge partials go to their region (3-tier) or the
         global buffer (2-tier); regional partials go to the global buffer."""
+        self._tier_merged(partial, now)
         if partial.tier == "edge" and self.regions:
             region = self.regions[self.topology.region_of(partial.node_id)]
             merged = region.submit(partial, now)
             if merged is not None:
+                self._tier_merged(merged, now)
                 self._ingest.append(merged)
                 self._ingest_members += merged.n_members
         else:
             self._ingest.append(partial)
             self._ingest_members += partial.n_members
+
+    def _tier_merged(self, partial: PartialAggregate, now: float) -> None:
+        """Telemetry for one tier fire (no-op without a hub)."""
+        tel = self.telemetry
+        if tel is None:
+            return
+        if partial.tier == "edge":
+            self._tm_edge_fires.inc()
+        else:
+            self._tm_region_fires.inc()
+        self._tm_partial_members.observe(partial.n_members)
+        tel.emit(TierMerged(
+            t=float(now), round=self.round, tier=partial.tier,
+            node_id=int(partial.node_id), n_members=int(partial.n_members),
+        ))
 
     def _fire(self, now: float):
         self._ingest_members = 0  # the swap empties the global buffer

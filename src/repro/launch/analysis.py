@@ -1,7 +1,20 @@
-"""Compiled-artifact analysis: cost, memory, and collective-byte parsing
-for the roofline report (system prompt §ROOFLINE).
+"""Run analysis: telemetry experiment reports + compiled-artifact parsing.
 
-Two accounting paths:
+Two analysis surfaces live here:
+
+* **Experiment reports** — turn a recorded telemetry run
+  (docs/OBSERVABILITY.md) into a Markdown experiment report: accuracy/
+  loss curves as tables, the member-level staleness histogram, a
+  participation-fairness summary, per-tier throughput, codec byte
+  accounting, and the final metrics snapshot.  The rendering lives in
+  ``repro.telemetry.report``; this module is its CLI::
+
+      PYTHONPATH=src python -m repro.launch.analysis --events run.jsonl --out report.md
+
+* **Compiled-artifact analysis** — cost, memory, and collective-byte
+  parsing for the roofline report (system prompt §ROOFLINE).
+
+Two accounting paths for the compiled artifacts:
 
 * ``cost_summary`` — XLA's HloCostAnalysis numbers, recorded for
   reference.  CAVEAT (measured, see EXPERIMENTS §Dry-run): XLA counts
@@ -298,3 +311,42 @@ def roofline_terms(flops: float, hlo_bytes: float, coll_bytes: float,
     )[0]
     return {"compute_s": compute_s, "memory_s": memory_s,
             "collective_s": collective_s, "dominant": dominant}
+
+
+# ---------------------------------------------------------------------------
+# telemetry experiment reports (docs/OBSERVABILITY.md)
+# ---------------------------------------------------------------------------
+# Re-exported so callers can keep importing everything analysis-shaped
+# from one module; the implementation lives in repro.telemetry.report.
+from repro.telemetry.report import (  # noqa: E402
+    experiment_report,
+    load_events,
+    report_from_jsonl,
+)
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="Render a recorded telemetry run (JSONL event log) "
+                    "as a Markdown experiment report.")
+    ap.add_argument("--events", required=True,
+                    help="JSONL event log recorded by a Telemetry hub "
+                         "(e.g. --telemetry on launch/train, launch/serve)")
+    ap.add_argument("--out", default=None,
+                    help="write the report here (default: stdout)")
+    ap.add_argument("--title", default=None)
+    args = ap.parse_args(argv)
+
+    report = report_from_jsonl(args.events, title=args.title)
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as fh:
+            fh.write(report)
+        print(f"report ({len(report.splitlines())} lines) -> {args.out}")
+    else:
+        print(report, end="")
+
+
+if __name__ == "__main__":
+    main()

@@ -49,6 +49,14 @@ def run_safl_stream(args):
     spec = make_mlp_spec()
     params = spec.init(jax.random.PRNGKey(args.seed))
     algo = make_algorithm(args.algo, hp)
+    if args.report and not args.telemetry:
+        raise SystemExit("--report needs --telemetry (the recorded JSONL "
+                         "log is what the report renders)")
+    telemetry = None
+    if args.telemetry:
+        from repro.telemetry import Telemetry
+
+        telemetry = Telemetry.to_jsonl(args.telemetry)
 
     trigger = {
         "kbuffer": lambda: make_trigger("kbuffer", k=args.buffer_k),
@@ -70,11 +78,13 @@ def run_safl_stream(args):
             trigger=trigger, admission=admission,
             edge_trigger=(lambda e: KBuffer(args.edge_k)) if args.edge_k > 1
             else None,
+            telemetry=telemetry,
         )
     else:
         service = StreamingAggregator(
             algo, hp, params, args.clients,
             trigger=trigger, admission=admission, batched=args.batched,
+            telemetry=telemetry,
         )
     if args.scenario:
         from repro.scenarios import get_scenario
@@ -93,6 +103,7 @@ def run_safl_stream(args):
 
         compressor = ClientCompressor(args.compress, args.clients,
                                       seed=args.seed)
+        compressor.telemetry = telemetry
         service.compressor = compressor
         stream = list(compress_stream(iter(stream), compressor,
                                       strategy=algo.strategy))
@@ -129,6 +140,15 @@ def run_safl_stream(args):
     if args.ckpt:
         service.save(args.ckpt)
         print("checkpoint →", args.ckpt)
+    if telemetry is not None:
+        telemetry.close()
+        print(f"telemetry → {args.telemetry}")
+        if args.report:
+            from repro.launch.analysis import report_from_jsonl
+
+            with open(args.report, "w", encoding="utf-8") as fh:
+                fh.write(report_from_jsonl(args.telemetry))
+            print(f"experiment report → {args.report}")
 
 
 def main():
@@ -166,6 +186,12 @@ def main():
     ap.add_argument("--compress", default=None, metavar="SPEC",
                     help="encode the stream through the compressed transport "
                          "(docs/COMPRESSION.md), e.g. int8, 'topk:0.05|int8'")
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="record structured events to a JSONL log "
+                         "(docs/OBSERVABILITY.md)")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="render the recorded telemetry as a Markdown "
+                         "experiment report (requires --telemetry)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 

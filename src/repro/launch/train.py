@@ -38,15 +38,41 @@ import os
 import time
 
 
+def _make_telemetry(args):
+    if not getattr(args, "report", None) and not args.telemetry:
+        return None
+    if args.report and not args.telemetry:
+        raise SystemExit("--report needs --telemetry (the recorded JSONL "
+                         "log is what the report renders)")
+    from repro.telemetry import Telemetry
+
+    return Telemetry.to_jsonl(args.telemetry)
+
+
+def _finish_telemetry(args, telemetry):
+    if telemetry is None:
+        return
+    telemetry.close()
+    print(f"telemetry → {args.telemetry}")
+    if args.report:
+        from repro.launch.analysis import report_from_jsonl
+
+        with open(args.report, "w", encoding="utf-8") as fh:
+            fh.write(report_from_jsonl(args.telemetry))
+        print(f"experiment report → {args.report}")
+
+
 def run_cohort(args, hp, scenario):
     from repro.core import make_algorithm
     from repro.scenarios import CohortEngine
 
+    telemetry = _make_telemetry(args)
     eng = CohortEngine(scenario, args.clients, hp=hp,
                        algo=make_algorithm(args.algo, hp), seed=args.seed,
                        eval_every=args.eval_every,
                        resource_ratio=args.resource_ratio,
-                       compress=args.compress, topology=args.topology)
+                       compress=args.compress, topology=args.topology,
+                       telemetry=telemetry)
     print(f"cohort fast path: scenario={scenario.describe()} algo={args.algo} "
           f"N={args.clients} K={eng.cohort_k} task=virtual "
           + (f"topology={eng.service.describe()} " if args.topology else "")
@@ -67,6 +93,7 @@ def run_cohort(args, hp, scenario):
     if args.ckpt:
         eng.service.save(args.ckpt)
         print("service checkpoint →", args.ckpt)
+    _finish_telemetry(args, telemetry)
     return res
 
 
@@ -92,10 +119,11 @@ def run_simulation(args):
                                n_total=args.n_total)
     spec = {"cv": make_cnn_spec, "nlp": make_lstm_spec, "rwd": make_mlp_spec}[args.task]()
     algo = make_algorithm(args.algo, hp)
+    telemetry = _make_telemetry(args)
     eng = SAFLEngine(data, spec, algo, hp, resource_ratio=args.resource_ratio,
                      seed=args.seed, eval_every=args.eval_every,
                      scenario=scenario, compress=args.compress,
-                     topology=args.topology)
+                     topology=args.topology, telemetry=telemetry)
     print(f"FedQS SAFL simulation: task={args.task} algo={args.algo} "
           f"N={args.clients} K={hp.buffer_k} ratio=1:{args.resource_ratio:.0f}"
           + (f" scenario={scenario.describe()}" if scenario else "")
@@ -115,6 +143,7 @@ def run_simulation(args):
     if args.ckpt:
         save_server_state(args.ckpt, eng)
         print("checkpoint →", args.ckpt)
+    _finish_telemetry(args, telemetry)
     return res
 
 
@@ -185,6 +214,12 @@ def main():
     ap.add_argument("--topology", default=None, metavar="SPEC",
                     help="tiered aggregation plane (docs/HIERARCHY.md), "
                          "e.g. 'hier:16' or 'hier:64x16'")
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="record structured events to a JSONL log "
+                         "(docs/OBSERVABILITY.md)")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="render the recorded telemetry as a Markdown "
+                         "experiment report (requires --telemetry)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--arch", default="gemma3-1b")

@@ -45,6 +45,7 @@ from repro.core.types import (
     tree_sub,
     tree_zeros_like,
 )
+from repro.telemetry import ClientClassified, RoundMetricsEvent
 from .population import Population, UniformSpeeds
 from .scenario import Scenario
 from .virtual_data import VirtualTaskData
@@ -109,6 +110,7 @@ class CohortEngine:
         resource_ratio: float = 50.0,
         compress: Optional[str] = None,
         topology=None,
+        telemetry=None,
     ):
         if scenario.has_data_events:
             # cohort data is virtual (a generating law, not per-client
@@ -170,7 +172,21 @@ class CohortEngine:
             speeds=self.speeds,
             label_probs=self.label_probs,
             batched=True,
+            telemetry=telemetry,
         )
+        # telemetry (docs/OBSERVABILITY.md): the service publishes the
+        # serve-layer events; the cohort engine adds the vectorized Mod-2
+        # classifications and per-round evaluation metrics
+        self.telemetry = telemetry
+        if telemetry is not None:
+            from repro.core.types import Quadrant
+
+            self._tm_quadrants = {
+                int(q): telemetry.metrics.gauge(
+                    f"engine.quadrant_{q.name.lower()}",
+                    unit="clients", layer="scenarios")
+                for q in Quadrant
+            }
         # compressed transport: deltas (or models) are encoded per virtual
         # client under vmap before submission; the service's batched path
         # aggregates the quantized rows through the fused dequant_agg kernel
@@ -179,6 +195,7 @@ class CohortEngine:
             from repro.compress import ClientCompressor
 
             self.compressor = ClientCompressor(compress, n, seed=seed)
+            self.compressor.telemetry = telemetry
             self.service.compressor = self.compressor
         # Algorithm facade (server_aggregate reads ctx.data.n_clients)
         from types import SimpleNamespace
@@ -278,6 +295,16 @@ class CohortEngine:
             fb_c = np.zeros(K, bool)
         self.lr[cohort] = lr_c
         self.momentum[cohort] = mom_c
+        if self.telemetry is not None:
+            # member-level classification events, mirroring the event
+            # engine's per-fetch emission (vectorized adapt, scalar emits)
+            for i in range(K):
+                self.telemetry.emit(ClientClassified(
+                    t=float(finish[i]), round=self.round,
+                    cid=int(cohort[i]), quadrant=int(self.quadrant[cohort[i]]),
+                    lr=float(lr_c[i]), momentum=float(mom_c[i]),
+                    feedback=bool(fb_c[i]),
+                ))
 
         # vmapped local training on virtual data
         xs, ys = self.task.sample_cohort_batches(
@@ -389,7 +416,7 @@ class CohortEngine:
         for v, c in zip(vals, cnts):
             qc[str(int(v))] = int(c)
         stale = [self.round - 1 - u.stale_round for u in report.buffer]
-        return RoundMetrics(
+        m = RoundMetrics(
             round=self.round,
             virtual_time=vt,
             loss=float(loss),
@@ -398,3 +425,12 @@ class CohortEngine:
             mean_staleness=float(np.mean(stale)) if stale else 0.0,
             quadrant_counts=qc,
         )
+        if self.telemetry is not None:
+            for q, gauge in self._tm_quadrants.items():
+                gauge.set(qc.get(str(q), 0))
+            self.telemetry.emit(RoundMetricsEvent(
+                t=float(vt), round=m.round, loss=m.loss, accuracy=m.accuracy,
+                n_stale=m.n_stale, mean_staleness=m.mean_staleness,
+                quadrant_counts=dict(qc),
+            ))
+        return m

@@ -50,6 +50,14 @@ from repro.core.types import (
 import jax.numpy as jnp
 
 from repro.compress.codec import is_compressed
+from repro.telemetry import (
+    SECONDS_BUCKETS,
+    STALENESS_BUCKETS,
+    RoundFired,
+    Telemetry,
+    UpdateAdmitted,
+    UpdateRejected,
+)
 
 from .admission import AdmissionPolicy, AdmitAll
 from .batched import make_tree_sum, unravel_like
@@ -126,6 +134,7 @@ class StreamingAggregator:
         on_round: Optional[Callable[[RoundReport], None]] = None,
         speeds: Optional[np.ndarray] = None,
         clock: Callable[[], float] = _time.monotonic,
+        telemetry: Optional[Telemetry] = None,
     ):
         self.algo = algo
         self.hp = hp
@@ -152,6 +161,36 @@ class StreamingAggregator:
         # optional ClientCompressor attached by whoever encodes the stream
         # (engine / cohort / launcher); checkpointed with the service state
         self.compressor = None
+        # telemetry hook (docs/OBSERVABILITY.md): None = fully disabled —
+        # every emit site below is behind one `is not None` check, and no
+        # telemetry code ever touches tensors, so aggregation results are
+        # bit-identical either way (gated in benchmarks/bench_serve.py)
+        self.telemetry = telemetry
+        if telemetry is not None:
+            m = telemetry.metrics
+            self._tm_submitted = m.counter("serve.submitted",
+                                           unit="updates", layer="serve")
+            self._tm_accepted = m.counter("serve.accepted",
+                                          unit="updates", layer="serve")
+            self._tm_rejected = m.counter("serve.rejected",
+                                          unit="updates", layer="serve")
+            self._tm_downweighted = m.counter("serve.downweighted",
+                                              unit="updates", layer="serve")
+            self._tm_rounds = m.counter("serve.rounds",
+                                        unit="rounds", layer="serve")
+            self._tm_staleness = m.histogram("serve.staleness",
+                                             STALENESS_BUCKETS,
+                                             unit="rounds", layer="serve")
+            self._tm_admit_s = m.histogram("serve.admission_seconds",
+                                           SECONDS_BUCKETS,
+                                           unit="s", layer="serve")
+            self._tm_agg_s = m.histogram("serve.agg_seconds",
+                                         SECONDS_BUCKETS,
+                                         unit="s", layer="serve")
+            self._tm_pending = m.gauge("serve.pending",
+                                       unit="updates", layer="serve")
+            self._tm_round = m.gauge("serve.round",
+                                     unit="rounds", layer="serve")
         # the trigger arms itself lazily at the first submit — the service
         # cannot arm it here because callers may drive any clock (virtual
         # time in the simulator, wall time live)
@@ -166,7 +205,7 @@ class StreamingAggregator:
         and aggregates the frozen batch.
         """
         now = self._clock() if now is None else now
-        update, verdict = self._admit(update)
+        update, verdict = self._admit(update, now)
         if update is None:
             return SubmitResult(False, False, self.round, verdict.reason)
         self._ingest.append(update)
@@ -175,26 +214,51 @@ class StreamingAggregator:
             return SubmitResult(True, True, self.round, verdict.reason, report)
         return SubmitResult(True, False, self.round, verdict.reason)
 
-    def _admit(self, update):
+    def _admit(self, update, now: float):
         """The admission prologue every ingestion front-end shares (the
         hierarchical service routes to tiers instead of one buffer but
         must admit identically): stats, future-round clamp, policy
-        verdict, drop/downweight bookkeeping.  Returns ``(None,
-        verdict)`` on rejection."""
+        verdict, drop/downweight bookkeeping, telemetry.  Returns
+        ``(None, verdict)`` on rejection."""
+        tel = self.telemetry
+        t0 = _time.perf_counter() if tel is not None else 0.0
         self.stats.submitted += 1
         if update.stale_round > self.round:
             # no update can be trained on a future round — a live gateway
             # stamps τ against its own round registry, so clamp here
             update = replace(update, stale_round=self.round)
-        update, verdict = self.admission.apply(update, self.round)
-        if update is None:
+        tau = self.round - update.stale_round
+        admitted, verdict = self.admission.apply(update, self.round)
+        if admitted is None:
             self.stats.dropped += 1
             self._dropped_since_fire += 1
+            if tel is not None:
+                self._tm_submitted.inc()
+                self._tm_rejected.inc()
+                self._tm_admit_s.observe(_time.perf_counter() - t0)
+                tel.emit(UpdateRejected(
+                    t=float(now), round=self.round, cid=int(update.cid),
+                    stale_round=int(update.stale_round), staleness=int(tau),
+                    reason=verdict.reason,
+                ))
             return None, verdict
-        if verdict.weight_scale != 1.0:
+        downweighted = verdict.weight_scale != 1.0
+        if downweighted:
             self.stats.downweighted += 1
         self.stats.accepted += 1
-        return update, verdict
+        if tel is not None:
+            self._tm_submitted.inc()
+            self._tm_accepted.inc()
+            if downweighted:
+                self._tm_downweighted.inc()
+            self._tm_admit_s.observe(_time.perf_counter() - t0)
+            tel.emit(UpdateAdmitted(
+                t=float(now), round=self.round, cid=int(admitted.cid),
+                n_samples=int(admitted.n_samples),
+                stale_round=int(admitted.stale_round), staleness=int(tau),
+                downweighted=downweighted,
+            ))
+        return admitted, verdict
 
     def flush(self, now: Optional[float] = None) -> Optional[RoundReport]:
         """Force-aggregate whatever is buffered (end of stream / sync mode
@@ -233,12 +297,13 @@ class StreamingAggregator:
         self.trigger.arm(now)
         dropped, self._dropped_since_fire = self._dropped_since_fire, 0
         if self._pool is None:
-            return self._aggregate(batch, dropped)
+            return self._aggregate(batch, dropped, now)
         self.join()  # rounds serialize: at most one aggregation in flight
-        self._inflight = self._pool.submit(self._aggregate, batch, dropped)
+        self._inflight = self._pool.submit(self._aggregate, batch, dropped, now)
         return None
 
-    def _aggregate(self, batch: List[Update], dropped: int) -> RoundReport:
+    def _aggregate(self, batch: List[Update], dropped: int,
+                   now: float = 0.0) -> RoundReport:
         t0 = _time.perf_counter()
         ctx = self._context if self._context is not None else self
         new_global, new_table = self._dispatch(ctx, batch)
@@ -265,6 +330,24 @@ class StreamingAggregator:
             agg_seconds=dt,
             buffer=members,
         )
+        tel = self.telemetry
+        if tel is not None:
+            self._tm_rounds.inc()
+            self._tm_agg_s.observe(dt)
+            for s in stale:
+                self._tm_staleness.observe(s)
+            self._tm_round.set(self.round)
+            self._tm_pending.set(len(self._ingest))
+            tel.emit(RoundFired(
+                t=float(now), round=self.round,
+                n_updates=report.n_updates, n_distinct=report.n_distinct,
+                mean_staleness=report.mean_staleness,
+                max_staleness=report.max_staleness,
+                dropped_since_last=dropped, trigger=report.trigger,
+                agg_seconds=dt,
+                members=[[int(u.cid), int(u.n_samples), int(u.stale_round)]
+                         for u in members],
+            ))
         if self.on_round is not None:
             self.on_round(report)
         return report

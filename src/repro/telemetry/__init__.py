@@ -1,0 +1,114 @@
+"""Telemetry plane: structured events + metrics registry (docs/OBSERVABILITY.md).
+
+One ``Telemetry`` hub is shared by a whole run: the engines and services
+emit typed events (``repro.telemetry.events``) into its sinks and
+publish counters/gauges/histograms into its registry
+(``repro.telemetry.metrics``).  The hook point is deliberately
+*zero-overhead when disabled*: every instrumented component takes
+``telemetry=None`` and guards each emit site with one ``is not None``
+check — no hub, no work, bit-identical aggregation either way (the gate
+in ``benchmarks/bench_serve.py``).
+
+Record a run and render its experiment report::
+
+    tel = Telemetry.to_jsonl("run.jsonl")
+    eng = SAFLEngine(data, spec, algo, hp, telemetry=tel)
+    eng.run(60)
+    tel.close()          # appends the final metrics-snapshot record
+
+    # then: PYTHONPATH=src python -m repro.launch.analysis --events run.jsonl
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from .events import (
+    EVENT_TYPES,
+    ClientClassified,
+    CodecEncoded,
+    Event,
+    MetricsSnapshot,
+    RoundFired,
+    RoundMetricsEvent,
+    TierMerged,
+    UpdateAdmitted,
+    UpdateRejected,
+)
+from .metrics import (
+    BYTES_BUCKETS,
+    SECONDS_BUCKETS,
+    STALENESS_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from .sinks import JsonlSink, RingSink, Sink
+
+
+class Telemetry:
+    """The per-run hub: a metrics registry plus a fan-out of event sinks."""
+
+    def __init__(self, sinks: Optional[Sequence[Sink]] = None,
+                 registry: Optional[MetricsRegistry] = None):
+        self.sinks: List[Sink] = list(sinks or [])
+        self.metrics = registry or MetricsRegistry()
+        self._closed = False
+
+    # ------------------------------------------------------------ factories
+    @classmethod
+    def to_jsonl(cls, path: str, *, ring: bool = False,
+                 capacity: int = 65536) -> "Telemetry":
+        """Record to a JSONL file (optionally tee into a ring buffer)."""
+        sinks: List[Sink] = [JsonlSink(path)]
+        if ring:
+            sinks.append(RingSink(capacity))
+        return cls(sinks)
+
+    @classmethod
+    def in_memory(cls, capacity: int = 65536) -> "Telemetry":
+        """Ring-buffer-only hub (tests, benchmarks, live inspection)."""
+        return cls([RingSink(capacity)])
+
+    # -------------------------------------------------------------- surface
+    @property
+    def ring(self) -> Optional[RingSink]:
+        """The first ring sink, if any (convenience for tests/benchmarks)."""
+        for s in self.sinks:
+            if isinstance(s, RingSink):
+                return s
+        return None
+
+    def emit(self, event: Event) -> None:
+        rec = event.to_record()
+        for sink in self.sinks:
+            sink.write(rec)
+
+    def close(self, t: Optional[float] = None) -> None:
+        """Append the final ``metrics-snapshot`` record and close sinks."""
+        if self._closed:
+            return
+        self.emit(MetricsSnapshot(t=t, metrics=self.metrics.snapshot()))
+        for sink in self.sinks:
+            sink.close()
+        self._closed = True
+
+    def __enter__(self) -> "Telemetry":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+__all__ = [
+    "Telemetry",
+    # events
+    "EVENT_TYPES", "Event", "ClientClassified", "CodecEncoded",
+    "MetricsSnapshot", "RoundFired", "RoundMetricsEvent", "TierMerged",
+    "UpdateAdmitted", "UpdateRejected",
+    # metrics
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "STALENESS_BUCKETS", "SECONDS_BUCKETS", "BYTES_BUCKETS",
+    # sinks
+    "Sink", "JsonlSink", "RingSink",
+]

@@ -1,0 +1,169 @@
+"""Typed telemetry events — the structured-event taxonomy.
+
+Every observable state transition in the three runtimes is one of the
+event types below (docs/OBSERVABILITY.md is the schema reference).  An
+event is a plain ``__slots__`` dataclass whose fields are already plain
+Python scalars/lists — emitters cast numpy/jax scalars at construction
+so sinks can ``json.dumps`` a record without a sanitizing pass.
+
+Wire format (one JSON object per JSONL line)::
+
+    {"e": "<event name>", "t": <caller clock>, "round": <int>, ...fields}
+
+``t`` is whatever clock the emitting runtime drives — virtual time in
+the simulators, wall time in a live service — exactly like the trigger
+policies; consumers only compare differences of it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass(slots=True)
+class Event:
+    """Base event: subclasses set ``name`` and add their fields.
+
+    Events are on the per-update hot path of the overhead gate in
+    ``benchmarks/bench_serve.py``, so ``to_record`` walks the field
+    names directly instead of ``dataclasses.asdict`` (whose recursive
+    deep-copy costs ~10× more per event).
+    """
+
+    name = "event"
+
+    def to_record(self) -> dict:
+        rec = {"e": self.name}
+        for f in self.__dataclass_fields__:
+            rec[f] = getattr(self, f)
+        return rec
+
+
+@dataclass(slots=True)
+class UpdateAdmitted(Event):
+    """One client update passed admission and entered an ingest buffer."""
+
+    name = "update-admitted"
+
+    t: float
+    round: int
+    cid: int
+    n_samples: int
+    stale_round: int
+    staleness: int          # tau = round - stale_round at admission
+    downweighted: bool      # admission scaled n_samples below upload value
+
+
+@dataclass(slots=True)
+class UpdateRejected(Event):
+    """Admission control dropped one incoming update."""
+
+    name = "update-rejected"
+
+    t: float
+    round: int
+    cid: int
+    stale_round: int
+    staleness: int
+    reason: str
+
+
+@dataclass(slots=True)
+class RoundFired(Event):
+    """One global aggregation fire (the service's round boundary).
+
+    ``members`` is the member-level view of the aggregated buffer —
+    ``[cid, n_samples, stale_round]`` per client update — identical
+    between the flat and hierarchical services on an all-pass run (the
+    parity gate in ``benchmarks/bench_serve.py``).  ``agg_seconds`` is
+    host wall time of the aggregation dispatch and is the only field a
+    cross-service comparison must exclude.
+    """
+
+    name = "round-fired"
+
+    t: float
+    round: int
+    n_updates: int
+    n_distinct: int
+    mean_staleness: float
+    max_staleness: int
+    dropped_since_last: int
+    trigger: str
+    agg_seconds: float
+    members: List[List[int]] = field(default_factory=list)
+
+
+@dataclass(slots=True)
+class TierMerged(Event):
+    """A hierarchical tier node fired and forwarded one partial upward."""
+
+    name = "tier-merged"
+
+    t: float
+    round: int
+    tier: str               # "edge" | "region"
+    node_id: int
+    n_members: int
+
+
+@dataclass(slots=True)
+class CodecEncoded(Event):
+    """One client upload crossed the compressed-transport boundary."""
+
+    name = "codec-encoded"
+
+    t: Optional[float]
+    cid: int
+    spec: str               # codec spec string, e.g. "topk:0.05|int8"
+    dense_bytes: int        # fp32 bytes the payload would cost uncompressed
+    wire_bytes: int         # bytes actually crossing the wire
+
+
+@dataclass(slots=True)
+class ClientClassified(Event):
+    """Mod-2 classified one client at fetch time (paper §3.3)."""
+
+    name = "client-classified"
+
+    t: float
+    round: int
+    cid: int
+    quadrant: int           # repro.core.types.Quadrant value
+    lr: float
+    momentum: float
+    feedback: bool
+
+
+@dataclass(slots=True)
+class RoundMetricsEvent(Event):
+    """Per-round evaluation metrics (the engines' ``RoundMetrics``)."""
+
+    name = "round-metrics"
+
+    t: float                # virtual time of the evaluated round
+    round: int
+    loss: float
+    accuracy: float
+    n_stale: int
+    mean_staleness: float
+    quadrant_counts: Dict[str, int] = field(default_factory=dict)
+
+
+@dataclass(slots=True)
+class MetricsSnapshot(Event):
+    """Final registry snapshot, appended by ``Telemetry.close()``."""
+
+    name = "metrics-snapshot"
+
+    t: Optional[float]
+    metrics: dict = field(default_factory=dict)
+
+
+EVENT_TYPES = {
+    cls.name: cls
+    for cls in (
+        UpdateAdmitted, UpdateRejected, RoundFired, TierMerged,
+        CodecEncoded, ClientClassified, RoundMetricsEvent, MetricsSnapshot,
+    )
+}

@@ -1,0 +1,146 @@
+"""Metrics registry: counters, gauges, and bounded histograms.
+
+Host-side, allocation-free on the hot path (a counter ``inc`` is one
+int add; a histogram ``observe`` is one bisect + two adds), and fully
+snapshot-able to plain JSON — the registry is what the benchmarks and
+the experiment report read after a run.  Metric names are dotted
+``<layer>.<metric>`` strings; the canonical schema table lives in
+docs/OBSERVABILITY.md.
+"""
+from __future__ import annotations
+
+from bisect import bisect_left
+from typing import Dict, Optional, Sequence, Tuple
+
+# Default bucket ladders (upper bounds; the last bucket is +inf).
+STALENESS_BUCKETS: Tuple[float, ...] = (0, 1, 2, 3, 5, 8, 13, 21, 34)
+SECONDS_BUCKETS: Tuple[float, ...] = (
+    1e-5, 1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 0.1, 0.3, 1.0, 3.0, 10.0)
+BYTES_BUCKETS: Tuple[float, ...] = (
+    256, 1024, 4096, 16384, 65536, 262144, 1048576, 4194304, 16777216)
+
+
+class Counter:
+    """Monotone event count."""
+
+    __slots__ = ("name", "unit", "layer", "value")
+
+    def __init__(self, name: str, unit: str = "", layer: str = ""):
+        self.name, self.unit, self.layer = name, unit, layer
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+    def snapshot(self) -> dict:
+        return {"type": "counter", "unit": self.unit, "layer": self.layer,
+                "value": self.value}
+
+
+class Gauge:
+    """Last-written level (buffer depth, per-quadrant population, ...)."""
+
+    __slots__ = ("name", "unit", "layer", "value")
+
+    def __init__(self, name: str, unit: str = "", layer: str = ""):
+        self.name, self.unit, self.layer = name, unit, layer
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = v
+
+    def snapshot(self) -> dict:
+        return {"type": "gauge", "unit": self.unit, "layer": self.layer,
+                "value": self.value}
+
+
+class Histogram:
+    """Bounded histogram: fixed bucket upper bounds plus an overflow
+    bucket, with running count/sum/min/max — O(log #buckets) per
+    observation and a few dozen ints of state however long the run."""
+
+    __slots__ = ("name", "unit", "layer", "bounds", "counts",
+                 "count", "total", "vmin", "vmax")
+
+    def __init__(self, name: str, bounds: Sequence[float],
+                 unit: str = "", layer: str = ""):
+        self.name, self.unit, self.layer = name, unit, layer
+        self.bounds = tuple(float(b) for b in bounds)
+        if list(self.bounds) != sorted(self.bounds):
+            raise ValueError(f"histogram bounds must be sorted: {bounds}")
+        self.counts = [0] * (len(self.bounds) + 1)  # last = overflow
+        self.count = 0
+        self.total = 0.0
+        self.vmin = float("inf")
+        self.vmax = float("-inf")
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        # upper-bound-inclusive buckets (Prometheus "le" semantics):
+        # bucket i counts v <= bounds[i]; the last bucket is the overflow
+        self.counts[bisect_left(self.bounds, v)] += 1
+        self.count += 1
+        self.total += v
+        if v < self.vmin:
+            self.vmin = v
+        if v > self.vmax:
+            self.vmax = v
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def snapshot(self) -> dict:
+        return {
+            "type": "histogram", "unit": self.unit, "layer": self.layer,
+            "bounds": list(self.bounds), "counts": list(self.counts),
+            "count": self.count, "sum": self.total,
+            "min": self.vmin if self.count else None,
+            "max": self.vmax if self.count else None,
+        }
+
+
+class MetricsRegistry:
+    """Name → metric store with get-or-create semantics.
+
+    Re-requesting an existing name returns the same instance (so every
+    layer can bind its handles independently); requesting it as a
+    different metric type raises.
+    """
+
+    def __init__(self):
+        self._metrics: Dict[str, object] = {}
+
+    def _get_or_create(self, cls, name: str, *args, **kw):
+        m = self._metrics.get(name)
+        if m is None:
+            m = cls(name, *args, **kw)
+            self._metrics[name] = m
+        elif not isinstance(m, cls):
+            raise TypeError(
+                f"metric {name!r} already registered as "
+                f"{type(m).__name__}, requested {cls.__name__}")
+        return m
+
+    def counter(self, name: str, *, unit: str = "", layer: str = "") -> Counter:
+        return self._get_or_create(Counter, name, unit, layer)
+
+    def gauge(self, name: str, *, unit: str = "", layer: str = "") -> Gauge:
+        return self._get_or_create(Gauge, name, unit, layer)
+
+    def histogram(self, name: str, bounds: Sequence[float], *,
+                  unit: str = "", layer: str = "") -> Histogram:
+        return self._get_or_create(Histogram, name, bounds, unit, layer)
+
+    def get(self, name: str) -> Optional[object]:
+        return self._metrics.get(name)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._metrics
+
+    def names(self):
+        return sorted(self._metrics)
+
+    def snapshot(self) -> dict:
+        """Plain-JSON view of every registered metric."""
+        return {name: self._metrics[name].snapshot() for name in self.names()}

@@ -1,0 +1,265 @@
+"""Experiment-report generator: recorded telemetry → Markdown.
+
+Consumes the JSONL event log a ``Telemetry`` hub recorded (or the raw
+record list from a ring sink) and renders the run as a Markdown
+experiment report: accuracy/loss curves as tables, the staleness
+histogram, a participation-fairness summary, per-tier throughput, codec
+byte accounting, and the final metrics snapshot.  This is the read side
+of docs/OBSERVABILITY.md; the CLI lives in ``repro.launch.analysis``::
+
+    PYTHONPATH=src python -m repro.launch.analysis --events run.jsonl --out report.md
+"""
+from __future__ import annotations
+
+import json
+from collections import Counter as _TallyCounter
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.types import Quadrant
+
+from .metrics import STALENESS_BUCKETS
+
+
+def load_events(path: str) -> List[dict]:
+    """Parse one recorded JSONL event log (skips blank lines, raises on
+    malformed ones — a truncated log should fail loudly, not silently)."""
+    records = []
+    with open(path, encoding="utf-8") as fh:
+        for i, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                records.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{i}: malformed JSONL record: {e}")
+    return records
+
+
+def _by_name(records: Sequence[dict]) -> Dict[str, List[dict]]:
+    out: Dict[str, List[dict]] = defaultdict(list)
+    for rec in records:
+        out[rec.get("e", "?")].append(rec)
+    return out
+
+
+def _sample(rows: List, limit: int) -> List:
+    """At most ``limit`` rows, evenly spaced, always keeping the last."""
+    if len(rows) <= limit:
+        return list(rows)
+    step = -(-len(rows) // limit)  # ceiling: len(out) <= limit
+    out = rows[::step]
+    if out[-1] is not rows[-1]:
+        out[-1] = rows[-1]
+    return out
+
+
+def gini(counts: Sequence[float]) -> float:
+    """Gini coefficient of the per-client participation distribution
+    (0 = perfectly even, →1 = one client dominates)."""
+    xs = sorted(float(c) for c in counts)
+    n = len(xs)
+    total = sum(xs)
+    if n == 0 or total <= 0:
+        return 0.0
+    cum = 0.0
+    for i, x in enumerate(xs, 1):
+        cum += i * x
+    return (2.0 * cum) / (n * total) - (n + 1.0) / n
+
+
+def _bar(count: int, peak: int, width: int = 30) -> str:
+    if peak <= 0:
+        return ""
+    return "#" * max(1 if count else 0, round(count / peak * width))
+
+
+def staleness_counts(fired: Sequence[dict],
+                     bounds: Sequence[float] = STALENESS_BUCKETS):
+    """Member-level staleness histogram from round-fired events: each
+    member's tau is (round − 1) − stale_round (the pre-fire round basis
+    the RoundReport uses)."""
+    from bisect import bisect_left
+
+    counts = [0] * (len(bounds) + 1)
+    total = 0
+    for rec in fired:
+        basis = int(rec.get("round", 0)) - 1
+        for member in rec.get("members", []):
+            tau = basis - int(member[2])
+            counts[bisect_left(bounds, tau)] += 1  # le-bucket semantics
+            total += 1
+    return counts, total
+
+
+def _fmt_bucket(bounds: Sequence[float], i: int) -> str:
+    if i == 0:
+        return f"<= {bounds[0]:g}"
+    if i == len(bounds):
+        return f"> {bounds[-1]:g}"
+    return f"({bounds[i - 1]:g}, {bounds[i]:g}]"
+
+
+def experiment_report(records: Sequence[dict], *,
+                      title: str = "Experiment report",
+                      curve_rows: int = 20) -> str:
+    """Render a recorded run as Markdown (see module docstring)."""
+    groups = _by_name(records)
+    lines: List[str] = [f"# {title}", ""]
+
+    # ------------------------------------------------------------- overview
+    admitted = groups.get("update-admitted", [])
+    rejected = groups.get("update-rejected", [])
+    fired = groups.get("round-fired", [])
+    lines += ["## Run overview", ""]
+    lines += ["| quantity | value |", "|---|---|"]
+    lines.append(f"| events recorded | {len(records)} |")
+    for name in ("update-admitted", "update-rejected", "round-fired",
+                 "tier-merged", "codec-encoded", "client-classified",
+                 "round-metrics"):
+        if groups.get(name):
+            lines.append(f"| `{name}` events | {len(groups[name])} |")
+    if fired:
+        lines.append(f"| rounds fired | {fired[-1]['round']} |")
+        span = fired[-1]["t"] - fired[0]["t"]
+        if span > 0:
+            lines.append(f"| rounds/clock-unit | {len(fired) / span:.3f} |")
+    if admitted:
+        distinct = len({rec["cid"] for rec in admitted})
+        lines.append(f"| distinct clients admitted | {distinct} |")
+    lines.append("")
+
+    # ------------------------------------------------- accuracy/loss curves
+    rounds = groups.get("round-metrics", [])
+    if rounds:
+        lines += ["## Accuracy / loss", ""]
+        lines += ["| round | virtual time | loss | accuracy | stale members "
+                  "| mean staleness |", "|---|---|---|---|---|---|"]
+        for rec in _sample(rounds, curve_rows):
+            lines.append(
+                f"| {rec['round']} | {rec['t']:.1f} | {rec['loss']:.4f} "
+                f"| {rec['accuracy']:.4f} | {rec['n_stale']} "
+                f"| {rec['mean_staleness']:.2f} |")
+        best = max(rec["accuracy"] for rec in rounds)
+        tail = rounds[-min(len(rounds), 20):]
+        final = sum(rec["accuracy"] for rec in tail) / len(tail)
+        lines += ["", f"Best accuracy **{best:.4f}**; tail-window mean "
+                      f"(last {len(tail)} evals) **{final:.4f}**.", ""]
+
+    # --------------------------------------------------- staleness histogram
+    if fired:
+        counts, total = staleness_counts(fired)
+        lines += ["## Staleness distribution (member-level, at fire)", ""]
+        lines += ["| tau (rounds) | members | share | |", "|---|---|---|---|"]
+        peak = max(counts) if counts else 0
+        for i, c in enumerate(counts):
+            if c == 0:
+                continue
+            lines.append(
+                f"| {_fmt_bucket(STALENESS_BUCKETS, i)} | {c} "
+                f"| {c / max(total, 1):.1%} | `{_bar(c, peak)}` |")
+        lines.append("")
+
+    # ------------------------------------------------------ fairness summary
+    if fired or admitted:
+        participation: _TallyCounter = _TallyCounter()
+        for rec in fired:
+            for member in rec.get("members", []):
+                participation[int(member[0])] += 1
+        if not participation:  # no fires recorded: fall back to admissions
+            for rec in admitted:
+                participation[int(rec["cid"])] += 1
+        if participation:
+            counts = list(participation.values())
+            top = participation.most_common(1)[0]
+            lines += ["## Participation fairness", ""]
+            lines += ["| quantity | value |", "|---|---|"]
+            lines.append(f"| participating clients | {len(counts)} |")
+            lines.append(f"| aggregated client updates | {sum(counts)} |")
+            lines.append(
+                f"| mean updates/client | {sum(counts) / len(counts):.2f} |")
+            lines.append(f"| max share (client {top[0]}) "
+                         f"| {top[1] / sum(counts):.1%} |")
+            lines.append(f"| Gini coefficient | {gini(counts):.3f} |")
+            if rejected:
+                lines.append(
+                    f"| admission drop rate "
+                    f"| {len(rejected) / (len(rejected) + len(admitted)):.1%} |")
+            lines.append("")
+
+    # --------------------------------------------------- per-tier throughput
+    tiers = groups.get("tier-merged", [])
+    if tiers or fired:
+        lines += ["## Per-tier throughput", ""]
+        lines += ["| tier | nodes | fires | client updates | "
+                  "mean members/fire |", "|---|---|---|---|---|"]
+        for tier in ("edge", "region"):
+            recs = [rec for rec in tiers if rec["tier"] == tier]
+            if not recs:
+                continue
+            members = sum(rec["n_members"] for rec in recs)
+            nodes = len({rec["node_id"] for rec in recs})
+            lines.append(f"| {tier} | {nodes} | {len(recs)} | {members} "
+                         f"| {members / len(recs):.1f} |")
+        if fired:
+            members = sum(rec["n_updates"] for rec in fired)
+            lines.append(f"| global | 1 | {len(fired)} | {members} "
+                         f"| {members / len(fired):.1f} |")
+        lines.append("")
+
+    # ------------------------------------------------------- codec accounting
+    encoded = groups.get("codec-encoded", [])
+    if encoded:
+        wire = sum(rec["wire_bytes"] for rec in encoded)
+        dense = sum(rec["dense_bytes"] for rec in encoded)
+        lines += ["## Compressed transport", ""]
+        lines += ["| quantity | value |", "|---|---|"]
+        lines.append(f"| codec | `{encoded[0]['spec']}` |")
+        lines.append(f"| encoded uploads | {len(encoded)} |")
+        lines.append(f"| bytes on wire | {wire} |")
+        lines.append(f"| dense fp32 bytes | {dense} |")
+        lines.append(f"| compression ratio | {dense / max(wire, 1):.1f}x |")
+        lines.append("")
+
+    # ---------------------------------------------------------- quadrant mix
+    classified = groups.get("client-classified", [])
+    if classified:
+        last: Dict[int, int] = {}
+        for rec in classified:
+            last[int(rec["cid"])] = int(rec["quadrant"])
+        tally = _TallyCounter(last.values())
+        lines += ["## Mod-2 quadrant mix (last classification per client)", ""]
+        lines += ["| quadrant | clients |", "|---|---|"]
+        for q in Quadrant:
+            if tally.get(int(q)):
+                lines.append(f"| {q.name} | {tally[int(q)]} |")
+        lines.append("")
+
+    # ------------------------------------------------------- metrics snapshot
+    snaps = groups.get("metrics-snapshot", [])
+    if snaps:
+        metrics = snaps[-1].get("metrics", {})
+        if metrics:
+            lines += ["## Metrics snapshot", ""]
+            lines += ["| metric | type | unit | value |", "|---|---|---|---|"]
+            for name in sorted(metrics):
+                m = metrics[name]
+                if m["type"] == "histogram":
+                    mean = m["sum"] / m["count"] if m["count"] else 0.0
+                    value = (f"n={m['count']} mean={mean:.4g} "
+                             f"min={m['min']} max={m['max']}")
+                else:
+                    value = f"{m['value']:g}"
+                lines.append(
+                    f"| `{name}` | {m['type']} | {m.get('unit') or '—'} "
+                    f"| {value} |")
+            lines.append("")
+
+    return "\n".join(lines).rstrip() + "\n"
+
+
+def report_from_jsonl(path: str, *, title: Optional[str] = None) -> str:
+    """One-call convenience: JSONL event log → Markdown report."""
+    return experiment_report(load_events(path),
+                             title=title or f"Experiment report — {path}")

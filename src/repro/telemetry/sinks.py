@@ -1,0 +1,88 @@
+"""Event sinks: where emitted records go.
+
+Two shipped sinks cover the two consumption modes:
+
+* ``JsonlSink`` — append one JSON object per line to a file; the durable
+  record a report is generated from (``repro.launch.analysis``);
+* ``RingSink`` — a bounded in-memory deque; what tests, benchmarks, and
+  live dashboards read without touching the filesystem.
+
+A sink is anything with ``write(record: dict)`` and ``close()``; the
+``Telemetry`` hub fans every event out to all of its sinks.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from collections import deque
+from typing import IO, Iterator, List, Optional
+
+
+class Sink:
+    def write(self, record: dict) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        """Flush and release resources (idempotent)."""
+
+
+def _json_default(o):
+    # emitters cast to plain Python types, but be forgiving about the odd
+    # numpy scalar that slips through a field dict
+    try:
+        return o.item()
+    except AttributeError:
+        return str(o)
+
+
+class JsonlSink(Sink):
+    """Append-only JSONL file sink (the documented wire format)."""
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        self._fh: Optional[IO[str]] = open(self.path, "w", encoding="utf-8")
+        self.written = 0
+        # an async_agg service emits round-fired from its worker thread
+        # while the ingest thread emits admissions — one locked write per
+        # record keeps lines whole
+        self._lock = threading.Lock()
+
+    def write(self, record: dict) -> None:
+        line = json.dumps(record, default=_json_default) + "\n"
+        with self._lock:
+            if self._fh is None:
+                raise ValueError(f"JsonlSink({self.path}) is closed")
+            self._fh.write(line)
+            self.written += 1
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None
+
+
+class RingSink(Sink):
+    """Bounded in-memory sink: keeps the most recent ``capacity`` records."""
+
+    def __init__(self, capacity: int = 65536):
+        self._ring: deque = deque(maxlen=int(capacity))
+
+    def write(self, record: dict) -> None:
+        self._ring.append(record)
+
+    @property
+    def records(self) -> List[dict]:
+        return list(self._ring)
+
+    def events(self, name: Optional[str] = None) -> Iterator[dict]:
+        """Iterate buffered records, optionally filtered by event name."""
+        for rec in self._ring:
+            if name is None or rec.get("e") == name:
+                yield rec
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    def clear(self) -> None:
+        self._ring.clear()

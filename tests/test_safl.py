@@ -86,6 +86,16 @@ class TestDynamics:
         assert len(res.metrics) == 8
 
 
+def _result(accs):
+    from repro.core.safl import EngineResult
+    from repro.core.types import RoundMetrics
+
+    ms = [RoundMetrics(round=i + 1, virtual_time=float(i), loss=1.0 - a,
+                       accuracy=a, n_stale=0, mean_staleness=0.0)
+          for i, a in enumerate(accs)]
+    return EngineResult(ms, 0.0, None)
+
+
 class TestResultHelpers:
     def test_metrics_api(self, rwd_data, spec):
         _, res = _run(rwd_data, spec, rounds=6)
@@ -93,6 +103,54 @@ class TestResultHelpers:
         assert res.oscillations(threshold=0.0) >= 0
         t = res.rounds_to_accuracy(0.0)
         assert t == 1  # trivially reached at first eval
+
+    @pytest.mark.parametrize("last", [0, -1, -20])
+    def test_final_accuracy_nonpositive_window_raises(self, last):
+        with pytest.raises(ValueError):
+            _result([0.5, 0.6]).final_accuracy(last)
+
+    def test_final_accuracy_window_longer_than_history(self):
+        # a too-long tail window averages whatever exists, never raises
+        res = _result([0.2, 0.4, 0.6])
+        assert res.final_accuracy(3) == pytest.approx(0.4)
+        assert res.final_accuracy(4) == pytest.approx(0.4)
+        assert res.final_accuracy(10_000) == pytest.approx(0.4)
+
+    def test_empty_metrics_accessors(self):
+        res = _result([])
+        assert res.best_accuracy() == 0.0
+        assert res.final_accuracy() == 0.0
+        assert res.final_accuracy(1) == 0.0
+        assert res.rounds_to_accuracy(0.5) is None
+        assert res.oscillations() == 0
+        assert res.stability_score() == 1.0
+        assert res.virtual_time() == 0.0
+
+    def test_stability_score_bounds_and_degenerate(self):
+        assert _result([0.7]).stability_score() == 1.0      # no transitions
+        assert _result([0.1, 0.2, 0.3]).stability_score() == 1.0
+        # every transition is a deep drop -> the floor of the score
+        assert _result([0.9, 0.1]).stability_score() == 0.0
+        # sawtooth: drops at 2 of 3 transitions
+        assert _result([0.9, 0.1, 0.9, 0.1]).stability_score() == \
+            pytest.approx(1 - 2 / 3)
+
+    def test_stability_score_monotone_in_oscillations(self):
+        # histories of equal length with 0, 1, 2, 3 deep drops: the score
+        # must be non-increasing as the oscillation count grows
+        base = [0.5] * 8
+        histories = []
+        for k in range(4):
+            acc = list(base)
+            for j in range(k):
+                acc[2 * j + 1] = 0.9   # up...
+                acc[2 * j + 2] = 0.1   # ...then a deep drop
+            histories.append(_result(acc))
+        counts = [r.oscillations() for r in histories]
+        scores = [r.stability_score() for r in histories]
+        assert counts == sorted(counts)
+        assert scores == sorted(scores, reverse=True)
+        assert all(0.0 <= s <= 1.0 for s in scores)
 
 
 class TestAllAlgorithmsRun:

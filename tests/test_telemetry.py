@@ -1,0 +1,307 @@
+"""Telemetry plane: events, metrics, sinks, runtime instrumentation,
+and the experiment-report generator (docs/OBSERVABILITY.md)."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import FedQSHyperParams, SAFLEngine, make_algorithm
+from repro.data import make_federated_data
+from repro.models import make_mlp_spec
+from repro.serve import (
+    KBuffer,
+    StalenessAdmission,
+    StreamingAggregator,
+    replay,
+    synthetic_stream,
+)
+from repro.telemetry import (
+    EVENT_TYPES,
+    JsonlSink,
+    MetricsRegistry,
+    RingSink,
+    Telemetry,
+    UpdateAdmitted,
+)
+from repro.telemetry.report import (
+    experiment_report,
+    gini,
+    load_events,
+    report_from_jsonl,
+)
+
+
+@pytest.fixture(scope="module")
+def mlp_params():
+    return make_mlp_spec().init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def stream(mlp_params):
+    return list(synthetic_stream(mlp_params, 16, 60, seed=0))
+
+
+def _service(mlp_params, telemetry=None, **kw):
+    hp = FedQSHyperParams(buffer_k=5)
+    return StreamingAggregator(
+        make_algorithm("fedqs-sgd", hp), hp, mlp_params, 16,
+        trigger=KBuffer(5), telemetry=telemetry, **kw)
+
+
+class TestMetricsRegistry:
+    def test_counter_gauge_histogram(self):
+        reg = MetricsRegistry()
+        c = reg.counter("a.count", unit="updates", layer="serve")
+        c.inc()
+        c.inc(3)
+        assert c.value == 4
+        g = reg.gauge("a.level")
+        g.set(7.5)
+        assert g.value == 7.5
+        h = reg.histogram("a.hist", (1, 2, 4), unit="rounds")
+        for v in (0, 1, 3, 100):
+            h.observe(v)
+        assert h.count == 4
+        assert h.counts == [2, 0, 1, 1]  # <=1, (1,2], (2,4], overflow
+        assert h.mean == pytest.approx(26.0)
+        assert (h.vmin, h.vmax) == (0, 100)
+
+    def test_get_or_create_idempotent_and_typed(self):
+        reg = MetricsRegistry()
+        assert reg.counter("x") is reg.counter("x")
+        with pytest.raises(TypeError):
+            reg.gauge("x")
+
+    def test_histogram_bounds_must_be_sorted(self):
+        reg = MetricsRegistry()
+        with pytest.raises(ValueError):
+            reg.histogram("bad", (3, 1, 2))
+
+    def test_snapshot_is_json_serializable(self):
+        reg = MetricsRegistry()
+        reg.counter("c", unit="u", layer="l").inc(2)
+        reg.histogram("h", (1, 10)).observe(5)
+        snap = json.loads(json.dumps(reg.snapshot()))
+        assert snap["c"] == {"type": "counter", "unit": "u", "layer": "l",
+                             "value": 2}
+        assert snap["h"]["counts"] == [0, 1, 0]
+
+
+class TestSinksAndHub:
+    def test_ring_sink_bounded(self):
+        ring = RingSink(capacity=3)
+        for i in range(10):
+            ring.write({"e": "x", "i": i})
+        assert [r["i"] for r in ring.records] == [7, 8, 9]
+
+    def test_jsonl_round_trip_and_snapshot_on_close(self, tmp_path):
+        path = str(tmp_path / "run.jsonl")
+        tel = Telemetry.to_jsonl(path, ring=True)
+        tel.metrics.counter("serve.rounds").inc(2)
+        tel.emit(UpdateAdmitted(t=1.0, round=0, cid=4, n_samples=10,
+                                stale_round=0, staleness=0,
+                                downweighted=False))
+        tel.close(t=2.0)
+        tel.close()  # idempotent
+        records = load_events(path)
+        assert [r["e"] for r in records] == ["update-admitted",
+                                            "metrics-snapshot"]
+        assert records[0]["cid"] == 4
+        assert records[1]["metrics"]["serve.rounds"]["value"] == 2
+        assert tel.ring is not None and len(tel.ring) == 2
+
+    def test_load_events_rejects_malformed(self, tmp_path):
+        path = tmp_path / "bad.jsonl"
+        path.write_text('{"e": "x"}\nnot json\n')
+        with pytest.raises(ValueError, match="malformed"):
+            load_events(str(path))
+
+    def test_event_records_match_taxonomy(self):
+        # every typed event's record carries its registered name
+        for name, cls in EVENT_TYPES.items():
+            assert cls.name == name
+
+
+class TestServiceInstrumentation:
+    def test_admitted_and_round_fired_events(self, mlp_params, stream):
+        tel = Telemetry.in_memory()
+        svc = _service(mlp_params, telemetry=tel)
+        replay(svc, stream, flush=False)
+        admitted = list(tel.ring.events("update-admitted"))
+        fired = list(tel.ring.events("round-fired"))
+        assert len(admitted) == svc.stats.accepted == len(stream)
+        assert len(fired) == svc.stats.rounds == len(stream) // 5
+        # member-level round composition matches the admission stream
+        members = [m for rec in fired for m in rec["members"]]
+        assert [m[0] for m in members] == [rec["cid"] for rec in admitted]
+        # metrics mirror the service stats
+        snap = tel.metrics.snapshot()
+        assert snap["serve.submitted"]["value"] == svc.stats.submitted
+        assert snap["serve.rounds"]["value"] == svc.stats.rounds
+        assert snap["serve.staleness"]["count"] == len(members)
+        assert snap["serve.agg_seconds"]["count"] == svc.stats.rounds
+
+    def test_rejection_events_carry_reason(self, mlp_params, stream):
+        tel = Telemetry.in_memory()
+        svc = _service(mlp_params, telemetry=tel,
+                       admission=StalenessAdmission(tau_max=0, mode="drop"))
+        replay(svc, stream, flush=False)
+        rejected = list(tel.ring.events("update-rejected"))
+        assert len(rejected) == svc.stats.dropped > 0
+        assert all("stale" in rec["reason"] for rec in rejected)
+        assert tel.metrics.get("serve.rejected").value == svc.stats.dropped
+
+    def test_disabled_telemetry_is_bit_identical(self, mlp_params, stream):
+        plain = _service(mlp_params)
+        tele = _service(mlp_params, telemetry=Telemetry.in_memory())
+        replay(plain, stream, flush=False)
+        replay(tele, stream, flush=False)
+        for a, b in zip(jax.tree_util.tree_leaves(plain.global_params),
+                        jax.tree_util.tree_leaves(tele.global_params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_flat_and_hier_member_streams_identical(self, mlp_params, stream):
+        from repro.hier import HierarchicalService, parse_topology
+
+        hp = FedQSHyperParams(buffer_k=5)
+
+        def member_events(factory):
+            tel = Telemetry.in_memory()
+            replay(factory(tel), stream, flush=False)
+            return [{k: v for k, v in rec.items() if k != "agg_seconds"}
+                    for rec in tel.ring.records
+                    if rec["e"] in ("update-admitted", "round-fired")]
+
+        flat = member_events(lambda tel: _service(mlp_params, telemetry=tel))
+        topo = parse_topology("hier:4", 16)
+        hier = member_events(lambda tel: HierarchicalService(
+            make_algorithm("fedqs-sgd", hp), hp, mlp_params, 16, topo,
+            trigger=KBuffer(5), telemetry=tel))
+        assert flat == hier
+
+    def test_hier_emits_tier_merged(self, mlp_params, stream):
+        from repro.hier import HierarchicalService, parse_topology
+
+        hp = FedQSHyperParams(buffer_k=5)
+        tel = Telemetry.in_memory()
+        svc = HierarchicalService(
+            make_algorithm("fedqs-sgd", hp), hp, mlp_params, 16,
+            parse_topology("hier:8x2", 16), trigger=KBuffer(5),
+            telemetry=tel)
+        replay(svc, stream, flush=False)
+        tiers = list(tel.ring.events("tier-merged"))
+        assert {rec["tier"] for rec in tiers} == {"edge", "region"}
+        edge_fires = sum(1 for rec in tiers if rec["tier"] == "edge")
+        assert edge_fires == sum(e.fires for e in svc.edges)
+        assert tel.metrics.get("hier.edge_fires").value == edge_fires
+
+
+class TestEngineInstrumentation:
+    @pytest.fixture(scope="class")
+    def recorded_run(self):
+        hp = FedQSHyperParams(buffer_k=4)
+        data = make_federated_data("rwd", 10, sigma=1.0, seed=0, n_total=800)
+        tel = Telemetry.in_memory()
+        eng = SAFLEngine(data, make_mlp_spec(),
+                         make_algorithm("fedqs-sgd", hp), hp, seed=1,
+                         telemetry=tel, compress="int8")
+        res = eng.run(4)
+        tel.close()
+        return eng, res, tel
+
+    def test_engine_emits_full_taxonomy(self, recorded_run):
+        eng, _, tel = recorded_run
+        names = {rec["e"] for rec in tel.ring.records}
+        assert {"update-admitted", "round-fired", "codec-encoded",
+                "client-classified", "round-metrics",
+                "metrics-snapshot"} <= names
+
+    def test_round_metrics_match_engine_result(self, recorded_run):
+        _, res, tel = recorded_run
+        events = list(tel.ring.events("round-metrics"))
+        assert [rec["accuracy"] for rec in events] == \
+            [m.accuracy for m in res.metrics]
+        assert [rec["round"] for rec in events] == \
+            [m.round for m in res.metrics]
+
+    def test_codec_events_match_compressor_stats(self, recorded_run):
+        eng, _, tel = recorded_run
+        events = list(tel.ring.events("codec-encoded"))
+        assert len(events) == eng.compressor.stats.updates
+        assert sum(rec["wire_bytes"] for rec in events) == \
+            eng.compressor.stats.payload_bytes
+        # the event carries the parsed, self-describing spec string
+        assert all(rec["spec"] == eng.compressor.codec.spec for rec in events)
+        assert all(rec["spec"].startswith("int8") for rec in events)
+
+    def test_quadrant_gauges_cover_population(self, recorded_run):
+        eng, _, tel = recorded_run
+        total = sum(
+            tel.metrics.get(f"engine.quadrant_{q}").value
+            for q in ("fsbc", "fwbc", "swbc", "ssbc"))
+        assert total == eng.data.n_clients
+
+    def test_cohort_engine_records(self):
+        from repro.scenarios import CohortEngine, get_scenario
+
+        tel = Telemetry.in_memory()
+        eng = CohortEngine(get_scenario("static"), 64,
+                           hp=FedQSHyperParams(buffer_k=8), seed=0,
+                           telemetry=tel)
+        eng.run(3)
+        names = {rec["e"] for rec in tel.ring.records}
+        assert {"update-admitted", "round-fired", "client-classified",
+                "round-metrics"} <= names
+        fired = list(tel.ring.events("round-fired"))
+        assert len(fired) == 3
+        assert all(rec["n_updates"] == 8 for rec in fired)
+
+
+class TestReportGenerator:
+    def test_gini(self):
+        assert gini([]) == 0.0
+        assert gini([5, 5, 5, 5]) == pytest.approx(0.0)
+        assert gini([0, 0, 0, 12]) == pytest.approx(0.75)
+
+    def test_report_sections_from_service_run(self, mlp_params, stream):
+        tel = Telemetry.in_memory()
+        replay(_service(mlp_params, telemetry=tel), stream, flush=False)
+        tel.close()
+        report = experiment_report(tel.ring.records, title="unit run")
+        assert report.startswith("# unit run")
+        for section in ("## Run overview", "## Staleness distribution",
+                        "## Participation fairness",
+                        "## Per-tier throughput", "## Metrics snapshot"):
+            assert section in report
+        assert "`update-admitted` events | 60" in report
+
+    def test_report_from_jsonl_and_cli(self, mlp_params, stream, tmp_path,
+                                       capsys):
+        path = str(tmp_path / "run.jsonl")
+        tel = Telemetry.to_jsonl(path)
+        replay(_service(mlp_params, telemetry=tel), stream, flush=False)
+        tel.close()
+        report = report_from_jsonl(path)
+        assert "## Staleness distribution" in report
+
+        from repro.launch.analysis import main as analysis_main
+
+        out = str(tmp_path / "report.md")
+        analysis_main(["--events", path, "--out", out, "--title", "cli run"])
+        assert "report" in capsys.readouterr().out
+        assert open(out).read().startswith("# cli run")
+
+    def test_report_with_engine_curves(self):
+        hp = FedQSHyperParams(buffer_k=4)
+        data = make_federated_data("rwd", 8, sigma=1.0, seed=0, n_total=600)
+        tel = Telemetry.in_memory()
+        SAFLEngine(data, make_mlp_spec(), make_algorithm("fedqs-sgd", hp),
+                   hp, seed=0, telemetry=tel).run(3)
+        report = experiment_report(tel.ring.records)
+        assert "## Accuracy / loss" in report
+        assert "## Mod-2 quadrant mix" in report
+
+    def test_empty_records_render(self):
+        report = experiment_report([])
+        assert report.startswith("# Experiment report")
