@@ -1,0 +1,233 @@
+"""Fused-ingestion suite: the ``ingest_agg`` kernel and the fused serve
+round it powers, with three CI gates (docs/KERNELS.md):
+
+1. **oracle parity** — the interpret-mode kernel must be bit-exact
+   against its jitted ``ingest_agg_ref`` oracle, and agree to ≤1e-5
+   (relative) with the unfused composition it replaces: dequantize →
+   host-side §3.4 weight fold → ``weighted_agg``;
+2. **serve speedup** — the fused batched FedQS round must beat the
+   unfused batched path by ≥1.5× on mean aggregation latency while
+   landing ≤1e-5 (relative) from its global params;
+3. **autotune sweep** — the block-size sweep runs end to end, persists
+   the winner in the on-disk config cache, and reports achieved GB/s
+   against the HBM roofline.
+
+    PYTHONPATH=src python benchmarks/bench_ingest.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+try:
+    from .common import emit, make_suite_run
+except ImportError:  # run as a script: python benchmarks/bench_ingest.py
+    from common import emit, make_suite_run
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compress import ClientCompressor, compress_stream
+from repro.core import FedQSHyperParams, make_algorithm
+from repro.core.types import AggregationStrategy
+from repro.kernels import autotune
+from repro.kernels.ingest_agg import ingest_agg
+from repro.kernels.ref import ingest_agg_ref, ingest_weights, weighted_agg_ref
+from repro.models import make_mlp_spec
+from repro.serve import KBuffer, StreamingAggregator, replay, synthetic_stream
+
+SPEEDUP_GATE = 1.5   # fused vs unfused batched mean_agg_ms, dense stream
+PARITY_GATE = 1e-5   # relative gap, kernel-vs-composition and serve params
+
+
+def _meta(rng, K, n_clients, ratio_clip=3.0):
+    """Random §3.4 metadata in the ranges the serve plane produces."""
+    n = rng.integers(1, 200, K).astype(np.float32)
+    F = rng.uniform(1.0 / ratio_clip, ratio_clip, K).astype(np.float32)
+    G = rng.uniform(1.0 / ratio_clip, ratio_clip, K).astype(np.float32)
+    fb = (rng.random(K) < 0.5).astype(np.float32)
+    return n, F, G, fb
+
+
+def _composition(rows, n, F, G, fb, k, n_clients):
+    """The unfused reference: host-side weight fold, dense reduction."""
+    col = lambda v: np.asarray(v, np.float32).reshape(-1, 1)
+    p = ingest_weights(col(n), col(F), col(G), col(fb), np.float32(k),
+                       n_clients=n_clients, normalize=True, xp=np)
+    return weighted_agg_ref(jnp.asarray(rows), jnp.asarray(p[:, 0]))
+
+
+def bench_parity(args):
+    """Gate 1: interpret kernel ≡ jitted oracle (bitwise) and ≤1e-5 vs
+    the dequant → host-decay → weighted_agg composition."""
+    rng = np.random.default_rng(args.seed)
+    n_clients = 64
+    shapes = [(8, 1 << 14)] if args.quick else [(10, 1 << 16), (7, 1000)]
+    for K, D in shapes:
+        x = rng.standard_normal((K, D)).astype(np.float32)
+        n, F, G, fb = _meta(rng, K, n_clients)
+        k = float(K)
+        t0 = time.perf_counter()
+        got = jax.block_until_ready(ingest_agg(
+            jnp.asarray(x), None, jnp.asarray(n), jnp.asarray(F),
+            jnp.asarray(G), jnp.asarray(fb), jnp.float32(k),
+            n_clients=n_clients, interpret=True))
+        dt = time.perf_counter() - t0
+        ref = ingest_agg_ref(jnp.asarray(x), None, jnp.asarray(n),
+                             jnp.asarray(F), jnp.asarray(G), jnp.asarray(fb),
+                             jnp.float32(k), n_clients=n_clients)
+        bitexact = bool(jnp.array_equal(got, ref))
+        want = _composition(x, n, F, G, fb, k, n_clients)
+        rel = float(jnp.abs(got - want).max()) / max(
+            float(jnp.abs(want).max()), 1e-12)
+        emit(f"ingest_parity_dense_K{K}_D{D}", dt * 1e6,
+             bitexact_vs_oracle=bitexact, rel_gap_vs_composition=f"{rel:.2e}")
+        if not bitexact:
+            raise SystemExit(
+                f"ingest_agg K{K}_D{D}: interpret kernel != jitted oracle")
+        if rel > PARITY_GATE:
+            raise SystemExit(
+                f"ingest_agg K{K}_D{D}: {rel:.3e} from composition "
+                f"(> {PARITY_GATE:.0e})")
+
+    # int8 path: saturated codes included, chunked scales
+    K, chunk, nc = 8, 256, 8 if args.quick else 32
+    D = chunk * nc
+    q = rng.integers(-127, 128, (K, D)).astype(np.int8)
+    q[0, :chunk] = 127  # saturation edge
+    scales = (rng.random((K, nc)).astype(np.float32) + 0.1) * 1e-2
+    n, F, G, fb = _meta(rng, K, n_clients)
+    k = float(K)
+    t0 = time.perf_counter()
+    got = jax.block_until_ready(ingest_agg(
+        jnp.asarray(q), jnp.asarray(scales), jnp.asarray(n), jnp.asarray(F),
+        jnp.asarray(G), jnp.asarray(fb), jnp.float32(k), chunk=chunk,
+        n_clients=n_clients, interpret=True))
+    dt = time.perf_counter() - t0
+    ref = ingest_agg_ref(jnp.asarray(q), jnp.asarray(scales), jnp.asarray(n),
+                         jnp.asarray(F), jnp.asarray(G), jnp.asarray(fb),
+                         jnp.float32(k), n_clients=n_clients)
+    bitexact = bool(jnp.array_equal(got, ref))
+    dense = (q.astype(np.float32).reshape(K, nc, chunk)
+             * scales[:, :, None]).reshape(K, D)
+    want = _composition(dense, n, F, G, fb, k, n_clients)
+    rel = float(jnp.abs(got - want).max()) / max(
+        float(jnp.abs(want).max()), 1e-12)
+    emit(f"ingest_parity_int8_K{K}_D{D}_c{chunk}", dt * 1e6,
+         bitexact_vs_oracle=bitexact, rel_gap_vs_composition=f"{rel:.2e}",
+         int8_hbm_bytes=K * D + 4 * K * nc, dense_hbm_bytes=4 * K * D)
+    if not bitexact:
+        raise SystemExit("ingest_agg int8: interpret kernel != jitted oracle")
+    if rel > PARITY_GATE:
+        raise SystemExit(
+            f"ingest_agg int8: {rel:.3e} from composition (> {PARITY_GATE:.0e})")
+
+
+def _replay_batched(params, stream, args, *, fused):
+    hp = FedQSHyperParams(buffer_k=args.buffer_k)
+    # warm-up service compiles the round for this (shape, K-bucket) so the
+    # measured service reports steady-state latency, not jit tracing
+    for svc in (
+        StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp, params,
+                            args.clients, batched=True, fused=fused),
+        StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp, params,
+                            args.clients, batched=True, fused=fused),
+    ):
+        replay(svc, stream, flush=False)
+    return svc
+
+
+def bench_serve(args):
+    """Gate 2: fused vs unfused batched FedQS rounds on the same stream."""
+    spec = make_mlp_spec()
+    params = spec.init(jax.random.PRNGKey(args.seed))
+    n_up = 150 if args.quick else 400
+    base = list(synthetic_stream(params, args.clients, n_up, seed=args.seed))
+
+    for label, cspec in (("dense", None), ("int8", "int8")):
+        if cspec is None:
+            stream = base
+        else:
+            comp = ClientCompressor(cspec, args.clients, seed=args.seed)
+            stream = list(compress_stream(
+                iter(base), comp, strategy=AggregationStrategy.GRADIENT))
+        fused = _replay_batched(params, stream, args, fused=True)
+        unfused = _replay_batched(params, stream, args, fused=False)
+
+        gap = max(
+            float(np.abs(np.asarray(a) - np.asarray(b)).max())
+            for a, b in zip(jax.tree_util.tree_leaves(fused.global_params),
+                            jax.tree_util.tree_leaves(unfused.global_params)))
+        scale = max(
+            float(np.abs(np.asarray(l)).max())
+            for l in jax.tree_util.tree_leaves(unfused.global_params))
+        rel = gap / max(scale, 1e-12)
+        f_ms = fused.stats.agg_seconds / max(fused.stats.rounds, 1) * 1e3
+        u_ms = unfused.stats.agg_seconds / max(unfused.stats.rounds, 1) * 1e3
+        ratio = u_ms / max(f_ms, 1e-12)
+        emit(f"ingest_serve_{label}", f_ms * 1e3,
+             fused_mean_agg_ms=f"{f_ms:.2f}",
+             unfused_mean_agg_ms=f"{u_ms:.2f}",
+             speedup=f"{ratio:.2f}", rounds=fused.stats.rounds,
+             rel_param_gap=f"{rel:.2e}")
+        if rel > PARITY_GATE:
+            raise SystemExit(
+                f"fused {label} serve diverged from unfused: rel gap "
+                f"{rel:.3e} (> {PARITY_GATE:.0e})")
+        if label == "dense" and ratio < SPEEDUP_GATE:
+            raise SystemExit(
+                f"fused serve speedup gate: {ratio:.2f}x vs unfused "
+                f"(< {SPEEDUP_GATE}x): fused={f_ms:.2f}ms unfused={u_ms:.2f}ms")
+
+
+def bench_autotune(args):
+    """Gate 3: the sweep itself — measure candidates on the interpret
+    kernel, persist the winner, and report it against the HBM roofline.
+    On this CPU container the µs measure Pallas emulation, so the chosen
+    block is only meaningful as proof the sweep/cache machinery works."""
+    rng = np.random.default_rng(args.seed)
+    n_clients = 64
+    K, D = (8, 1 << 13) if args.quick else (8, 1 << 15)
+    x = jnp.asarray(rng.standard_normal((K, D)).astype(np.float32))
+    n, F, G, fb = map(jnp.asarray, _meta(rng, K, n_clients))
+    k = jnp.float32(K)
+
+    def make_call(block_d):
+        return lambda: ingest_agg(x, None, n, F, G, fb, k,
+                                  n_clients=n_clients, block_d=block_d,
+                                  interpret=True)
+
+    path = autotune.default_cache_path()
+    autotune.reload_cache(path)
+    cfg = autotune.autotune(
+        "ingest_agg", make_call, x.shape, x.dtype,
+        candidates=(2048, 4096) if args.quick else (1024, 2048, 4096),
+        bytes_moved=(K * D + 1) * 4, path=path)
+    emit("ingest_autotune_sweep", cfg.us or 0.0,
+         block_d=cfg.block_d, source=cfg.source,
+         gbps=f"{cfg.gbps:.3f}" if cfg.gbps else "n/a", cache=path)
+    for row in autotune.roofline_rows(path):
+        emit(f"ingest_roofline.{row['kernel']}", row["us"] or 0.0,
+             key=row["key"], block_d=row["block_d"],
+             gbps=row["gbps"], pct_roofline=row["pct_roofline"])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=64)
+    ap.add_argument("--buffer-k", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+
+    bench_parity(args)
+    bench_serve(args)
+    bench_autotune(args)
+
+
+run = make_suite_run(main)  # harness entry: python -m benchmarks.run
+
+
+if __name__ == "__main__":
+    main()

@@ -8,9 +8,13 @@ carries updates/sec, rounds fired, and admission drops.
 Reading the numbers: the K-buffer trigger aggregates fixed-shape [K, D]
 batches, so XLA compiles the round once and steady state is a few ms per
 round.  Variable-K triggers (time-window; quorum grace fires; end-of-stream
-flushes) pay a per-shape compile on every new buffer size — their mean
-aggregation latency is compile-dominated on short streams.  A production
-deployment would pad variable buffers up to K_max to keep shapes static.
+flushes) used to pay a per-shape compile on every new buffer size — a
+profile of serve_timewindow showed ~5.5 s of its aggregate wall time was
+backend_compile across 364 pjit cache misses, 626 ms/round mean.  The
+time-window row therefore runs the batched *fused* ingestion path, whose
+``bucket_rows`` power-of-two row padding caps compiles at log2(K_max)
+per payload shape (repro/serve/batched.py); the sequential variable-K
+rows are kept for contrast.
 
     PYTHONPATH=src python benchmarks/bench_serve.py [--updates 400] [--quick]
 """
@@ -254,7 +258,7 @@ def main(argv=None):
     k, q = args.buffer_k, max(2, args.buffer_k // 2)
     bench_trigger("serve_kbuffer", KBuffer(k), params, args)
     bench_trigger("serve_timewindow", TimeWindow(args.window, min_updates=2),
-                  params, args)
+                  params, args, batched=True)
     bench_trigger("serve_quorum", Quorum(k, q, grace=args.window), params, args)
     bench_trigger("serve_kbuffer_batched", KBuffer(k), params, args, batched=True)
     bench_trigger("serve_kbuffer_admission", KBuffer(k), params, args,

@@ -64,7 +64,22 @@ def rows(recs):
     return out
 
 
+def kernel_rows():
+    """Measured Pallas-kernel configs from the autotune cache → roofline
+    rows (achieved GB/s vs the HBM ceiling).  Empty until a sweep has
+    run (benchmarks/bench_ingest.py or any ``*_auto_op`` tuning pass)."""
+    from repro.kernels import autotune
+
+    for row in autotune.roofline_rows():
+        print(
+            f"roofline.kernel.{row['key'].replace('|', '.')},"
+            f"{row['us']:.1f},block_d={row['block_d']}|gbps={row['gbps']}|"
+            f"pct_roofline={row['pct_roofline']}"
+        )
+
+
 def run(dir_=DEF_DIR):
+    kernel_rows()
     recs = load(dir_)
     if not recs:
         print("roofline.no_dryrun_data,0.0,hint=run repro.launch.dryrun first")

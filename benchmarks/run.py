@@ -45,6 +45,7 @@ SUITES = {
     "dynamic": _suite("bench_dynamic"),
     "hparams": _suite("bench_hparams"),
     "kernels": _suite("bench_kernels"),
+    "ingest": _suite("bench_ingest"),
     "roofline": _suite("roofline"),
     "serve": _suite("bench_serve"),
     "scenarios": _suite("bench_scenarios"),

@@ -28,6 +28,17 @@ $PY scripts/check_docs_links.py
 echo "== tier-1 tests =="
 $PY -m pytest -x -q
 
+echo "== kernel parity fuzz =="
+# the property-based oracle harness (docs/KERNELS.md) under the pinned
+# derandomized profile: every run draws the same examples, so a red gate
+# is a real kernel regression, never an unlucky draw
+if $PY -c "import hypothesis" 2>/dev/null; then
+  $PY -m pytest tests/test_kernel_parity.py -q --hypothesis-profile kernel-ci
+else
+  echo "hypothesis absent — parity fuzz skipped (interpret-mode parity"
+  echo "is still pinned by tests/test_kernels.py grids in tier-1)"
+fi
+
 if [ -z "${CI_SKIP_SMOKE:-}" ]; then
   echo "== smoke: quickstart =="
   $PY examples/quickstart.py --rounds 8 --clients 10
@@ -68,6 +79,15 @@ EOF
   $PY -c "import json; rows = json.load(open('BENCH_serve.json'))['results']; \
 assert rows, 'BENCH_serve.json has no results'; \
 print('BENCH_serve.json OK:', len(rows), 'rows')"
+
+  echo "== bench artifacts: ingest suite (--fast) =="
+  # fused-ingestion gates: kernel ≡ oracle bit-exact, fused serve rounds
+  # ≤1e-5 vs unfused and ≥1.5× faster, autotune cache sweep + roofline
+  $PY -m benchmarks.run --only ingest --fast
+  test -s BENCH_ingest.json
+  $PY -c "import json; rows = json.load(open('BENCH_ingest.json'))['results']; \
+assert rows, 'BENCH_ingest.json has no results'; \
+print('BENCH_ingest.json OK:', len(rows), 'rows')"
 
   echo "== smoke: simulator launcher =="
   $PY -m repro.launch.train --task rwd --algo fedqs-sgd --rounds 4 \

@@ -34,7 +34,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import segment_agg_auto_op, segment_agg_op
+from repro.kernels import (
+    ingest_segment_agg_auto_op,
+    ingest_segment_agg_op,
+    segment_agg_auto_op,
+    segment_agg_op,
+)
 
 
 @dataclass
@@ -54,9 +59,13 @@ class PartialAggregate:
     """One tier node's aggregated contribution (see module docstring).
 
     ``sum_wx`` is Σ_i n_i·x_i over the members (x = the strategy payload:
-    delta for GRADIENT, params for MODEL), ``sum_w`` = Σ_i n_i.  Either
-    ``sum_wx`` is materialized, or ``rows``/``row_weights`` hold the
-    frozen member rows for a later batched reduction — never both.
+    delta for GRADIENT, params for MODEL), ``sum_w`` = Σ_i n_i.  Exactly
+    one tensor form is populated: ``sum_wx`` materialized, or frozen
+    member rows for a later batched reduction — dense f32
+    (``rows``/``row_weights``) or still-quantized int8
+    (``qrows``/``qscales``/``row_weights``, the fused-ingestion edge:
+    the int8 bytes are deferred too, and dequantization happens inside
+    the one ``ingest_segment_agg`` launch that reduces the whole fire).
     """
 
     tier: str                     # "edge" | "region"
@@ -71,6 +80,10 @@ class PartialAggregate:
     sum_wx: Optional[jnp.ndarray] = None          # f32[D], materialized
     rows: Optional[jnp.ndarray] = field(default=None, repr=False)  # f32[M, D]
     row_weights: Optional[jnp.ndarray] = None     # f32[M]
+    qrows: Optional[jnp.ndarray] = field(default=None, repr=False)  # i8[M, Dp]
+    qscales: Optional[jnp.ndarray] = field(default=None, repr=False)  # f32[M, nc]
+    chunk: int = 0                # int8 scale granularity (0 = not quantized)
+    enc_d: int = 0                # decoded length of a qrows row
 
     @property
     def n_members(self) -> int:
@@ -106,6 +119,67 @@ def _weighted_row_sum(rows: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
     return jnp.einsum("k,kd->d", weights, rows)
 
 
+@jax.jit
+def _dequant_row_sum(q: jnp.ndarray, scales: jnp.ndarray,
+                     weights: jnp.ndarray) -> jnp.ndarray:
+    K, Dp = q.shape
+    nc = scales.shape[1]
+    x = (q.astype(jnp.float32).reshape(K, nc, Dp // nc)
+         * scales[:, :, None]).reshape(K, Dp)
+    return jnp.einsum("k,kd->d", weights, x)
+
+
+def _materialize_quant(lazy: Sequence[PartialAggregate], *,
+                       use_kernel: Optional[bool]) -> None:
+    """Reduce int8-lazy partials (fused edges defer even the dequantize).
+
+    On TPU every buffer sharing one (chunk, row-width) layout reduces in
+    ONE ``ingest_segment_agg`` launch with ``fb = 0, normalize=False`` —
+    the weight fold then degenerates to exactly w = row_weights, so this
+    is ``dequant_agg`` per segment; off-TPU each buffer takes a jitted
+    dequantize-einsum (same flops argument as the dense path)."""
+    if not lazy:
+        return
+    if use_kernel is None and jax.default_backend() != "tpu":
+        for p in lazy:
+            p.sum_wx = _dequant_row_sum(p.qrows, p.qscales,
+                                        p.row_weights)[:p.enc_d]
+            p.qrows = p.qscales = p.row_weights = None
+        return
+    by_layout = {}
+    for p in lazy:
+        by_layout.setdefault((p.chunk, p.qrows.shape[1]), []).append(p)
+    for (chunk, _), group in by_layout.items():
+        q = jnp.concatenate([p.qrows for p in group], axis=0)
+        scales = jnp.concatenate([p.qscales for p in group], axis=0)
+        weights = jnp.concatenate([p.row_weights for p in group])
+        seg = np.repeat(np.arange(len(group), dtype=np.int32),
+                        [p.qrows.shape[0] for p in group])
+        K = q.shape[0]
+        bucket = max(8, 1 << (K - 1).bit_length())
+        if bucket != K:
+            q = jnp.pad(q, ((0, bucket - K), (0, 0)))
+            scales = jnp.pad(scales, ((0, bucket - K), (0, 0)))
+            weights = jnp.pad(weights, (0, bucket - K))
+            seg = np.pad(seg, (0, bucket - K))
+        zeros = jnp.zeros_like(weights)
+        G = max(8, 1 << (len(group) - 1).bit_length())
+        if use_kernel is None:     # auto on TPU: the compiled fused kernel
+            op = ingest_segment_agg_auto_op
+        elif use_kernel:           # force the kernel body (interpreted off-TPU)
+            op = ingest_segment_agg_op
+        else:
+            from repro.kernels.ref import ingest_segment_agg_ref
+
+            def op(*a, chunk=0, **kw):  # the oracle needs no chunk layout
+                return ingest_segment_agg_ref(*a, **kw)
+        sums = op(q, scales, jnp.asarray(seg), weights, zeros, zeros, zeros,
+                  num_segments=G, chunk=chunk, n_clients=1, normalize=False)
+        for j, p in enumerate(group):
+            p.sum_wx = sums[j][:p.enc_d]
+            p.qrows = p.qscales = p.row_weights = None
+
+
 def materialize(partials: Sequence[PartialAggregate], *,
                 use_kernel: Optional[bool] = None) -> None:
     """Reduce every lazy partial's frozen rows and store the results in
@@ -114,11 +188,15 @@ def materialize(partials: Sequence[PartialAggregate], *,
     On TPU (or with ``use_kernel=True``) all lazy buffers reduce in ONE
     ``segment_agg`` kernel launch — segment id = partial index, one
     [ΣM, D] VMEM pass instead of one launch per edge; this is the fused
-    path the hierarchy exists for.  Off-TPU the auto path reduces each
-    buffer with a jitted einsum instead: interpret-mode Pallas and the
-    one-hot matmul oracle both do G× the flops of the plain reductions,
-    which is the wrong trade on a host simulating thousands of clients.
+    path the hierarchy exists for.  Int8-lazy buffers (fused edges) take
+    the analogous ``ingest_segment_agg`` launch instead, dequantizing in
+    VMEM during the reduce.  Off-TPU the auto path reduces each buffer
+    with a jitted einsum instead: interpret-mode Pallas and the one-hot
+    matmul oracle both do G× the flops of the plain reductions, which is
+    the wrong trade on a host simulating thousands of clients.
     """
+    _materialize_quant([p for p in partials if p.pending and p.qrows is not None],
+                       use_kernel=use_kernel)
     lazy = [p for p in partials if p.pending]
     if not lazy:
         return

@@ -34,12 +34,14 @@ partials, so a ``KBuffer(K)`` still fires after K client updates and a
 """
 from __future__ import annotations
 
+import functools
 import time as _time
 from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.flatten_util import ravel_pytree
 
 from repro.core.aggregation import feedback_weight
 from repro.core.algorithms import Algorithm, FedQS
@@ -50,6 +52,8 @@ from repro.core.types import (
     ServerTable,
 )
 from repro.kernels import weighted_agg_auto_op, weighted_agg_op
+from repro.kernels.ref import ingest_weights
+from repro.serve.batched import _round_meta, bucket_rows
 from repro.serve.service import RoundReport, StreamingAggregator, SubmitResult
 from repro.serve.triggers import KBuffer, TriggerPolicy
 from repro.telemetry import Telemetry, TierMerged
@@ -63,6 +67,31 @@ def _default_edge_trigger(node_id: int) -> TriggerPolicy:
     # all-pass: each update becomes its own partial — zero added latency,
     # exact flat parity; pass a factory to actually buffer at the edge
     return KBuffer(1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_clients", "grad"))
+def _fused_partial_combine(rows, counts, tsims, cids, sims, n, fb, k,
+                           onehot, inv_sum_w, flat_g, eta_g, ratio_clip,
+                           *, n_clients, grad):
+    """The fused global-stage combine: member-level Eq. §3.4 weights →
+    per-partial fold → Σw·rows → global step, in ONE jitted dispatch.
+
+    Same algebra as the host-side ``_member_weights`` + ``weighted_agg``
+    pair it replaces, but the staleness/feedback weighting runs on-device
+    (``kernels/ref.ingest_weights``, shared with the ingest kernels) and
+    the member→partial fold is a one-hot [Pb, Kb] matmul.  Both axes
+    arrive shape-bucketed — member rows padded with ``n = fb = 0``
+    (weight exactly 0) and partial rows with zeros — so the variable
+    member/partial counts of time-window fires never recompile."""
+    F, G = _round_meta(counts, tsims, cids, sims, ratio_clip)
+    Kb = cids.shape[0]
+    col = lambda v: v.reshape(Kb, 1)
+    p = ingest_weights(col(n), col(F), col(G), col(fb), k,
+                       n_clients=n_clients, normalize=True)
+    w_part = jnp.dot(onehot, p)[:, 0] * inv_sum_w
+    flat = jnp.dot(w_part[None, :], rows,
+                   preferred_element_type=jnp.float32)[0]
+    return flat_g - eta_g * flat if grad else flat
 
 
 class HierarchicalService(StreamingAggregator):
@@ -87,6 +116,7 @@ class HierarchicalService(StreamingAggregator):
         edge_trigger: Optional[Callable[[int], TriggerPolicy]] = None,
         region_trigger: Optional[Callable[[int], TriggerPolicy]] = None,
         use_kernel: Optional[bool] = None,
+        fused: Optional[bool] = None,
         context=None,
         async_agg: bool = False,
         on_round=None,
@@ -111,7 +141,8 @@ class HierarchicalService(StreamingAggregator):
         super().__init__(
             algo, hp, init_params, n_clients,
             trigger=trigger, admission=admission, context=context,
-            batched=True, use_kernel=use_kernel, async_agg=async_agg,
+            batched=True, use_kernel=use_kernel, fused=fused,
+            async_agg=async_agg,
             on_round=on_round, speeds=speeds, clock=clock,
             telemetry=telemetry,
         )
@@ -122,7 +153,7 @@ class HierarchicalService(StreamingAggregator):
         strategy = getattr(algo, "strategy", AggregationStrategy.MODEL)
         self.edges = [
             EdgeAggregator(e, edge_trigger(e), strategy=strategy,
-                           use_kernel=use_kernel)
+                           use_kernel=use_kernel, fused=self._fused)
             for e in range(topology.n_edges)
         ]
         self.regions = [
@@ -283,6 +314,9 @@ class HierarchicalService(StreamingAggregator):
         new_table = ServerTable(counts=jnp.asarray(counts, jnp.int32),
                                 sims=jnp.asarray(table_sims, jnp.float32))
 
+        if self._fused and isinstance(self.algo, FedQS):
+            return self._fused_global(batch, new_table, cids, sims)
+
         p_members = self._member_weights(batch, counts, table_sims, cids)
         part_idx = np.repeat(np.arange(len(batch)),
                              [p.n_members for p in batch])
@@ -320,6 +354,46 @@ class HierarchicalService(StreamingAggregator):
         else:
             new_global = step
         return new_global, new_table
+
+    def _fused_global(self, batch: List[PartialAggregate], new_table,
+                      cids: np.ndarray, sims: np.ndarray):
+        """FedQS global stage via ``_fused_partial_combine`` — flat global
+        in/out (cached between fused rounds, like the flat service)."""
+        K, P = len(cids), len(batch)
+        Kb = bucket_rows(K)
+        Pb = max(8, 1 << (P - 1).bit_length())
+        n = np.zeros(Kb, np.float32)
+        n[:K] = np.concatenate([p.n_samples for p in batch])
+        fb = np.zeros(Kb, np.float32)
+        fb[:K] = (np.concatenate([p.feedback for p in batch])
+                  & self.hp.use_feedback)
+        cids_b = np.zeros(Kb, np.int64)
+        cids_b[:K] = cids
+        sims_b = np.ones(Kb, np.float32)
+        sims_b[:K] = sims
+        part_idx = np.repeat(np.arange(P), [p.n_members for p in batch])
+        onehot = np.zeros((Pb, Kb), np.float32)
+        onehot[part_idx, np.arange(K)] = 1.0
+        inv_sum_w = np.zeros(Pb, np.float32)
+        inv_sum_w[:P] = 1.0 / np.maximum(
+            np.asarray([p.sum_w for p in batch], np.float32), 1e-12)
+        rows = jnp.stack([p.sum_wx for p in batch])
+        if Pb != P:
+            rows = jnp.pad(rows, ((0, Pb - P), (0, 0)))
+        if (self.global_params is self._flat_src
+                and self._flat_cache is not None):
+            flat_g = self._flat_cache
+        else:
+            flat_g, _ = ravel_pytree(self.global_params)
+        strategy = getattr(self.algo, "strategy", AggregationStrategy.MODEL)
+        new_flat = _fused_partial_combine(
+            rows, new_table.counts, new_table.sims, cids_b, sims_b, n, fb,
+            jnp.float32(K), onehot, inv_sum_w, flat_g,
+            jnp.float32(self.hp.eta_g), jnp.float32(self.hp.ratio_clip),
+            n_clients=self.n_clients,
+            grad=strategy is AggregationStrategy.GRADIENT)
+        self._pending_flat = new_flat
+        return self._unravel()(new_flat), new_table
 
     # ------------------------------------------------------------ checkpoint
     def save(self, path: str) -> None:

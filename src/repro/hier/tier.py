@@ -88,10 +88,15 @@ class EdgeAggregator(TierAggregator):
 
     def __init__(self, node_id: int, trigger: TriggerPolicy, *,
                  strategy: AggregationStrategy,
-                 use_kernel: Optional[bool] = None):
+                 use_kernel: Optional[bool] = None,
+                 fused: bool = False):
         super().__init__(node_id, trigger)
         self.strategy = strategy
         self.use_kernel = use_kernel
+        # fused ingestion: int8 buffers freeze *quantized* — the bytes
+        # stay int8 until the parent's single ingest_segment_agg launch
+        # dequantizes them in VMEM during the reduce
+        self.fused = bool(fused)
 
     def _payload(self, u):
         if self.strategy is AggregationStrategy.GRADIENT:
@@ -121,6 +126,11 @@ class EdgeAggregator(TierAggregator):
 
             q, scales = stack_encoded(payloads)
             chunk, d = payloads[0].chunk, payloads[0].d
+            if self.fused:
+                partial.qrows, partial.qscales = q, scales
+                partial.chunk, partial.enc_d = chunk, d
+                partial.row_weights = w
+                return partial
             if self.use_kernel is None:
                 flat = dequant_agg_auto_op(q, scales, w, chunk=chunk)
             elif self.use_kernel:

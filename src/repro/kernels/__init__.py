@@ -5,15 +5,25 @@
   (compressed-transport aggregation, ``repro.compress``);
 * ``segment_agg``       — per-group segment-reduce Σw·x over stacked
   client rows (hierarchical aggregation plane, ``repro.hier``);
+* ``ingest_agg``        — fused ingestion: int8 dequantize + Eq. §3.4
+  staleness-decay weight fold + Σw·x in one pass (``repro.serve``),
+  with an ``ingest_segment_agg`` variant for hierarchical edges;
 * ``similarity``        — Mod-1 fused <a,b>/|a|^2/|b|^2 one-pass statistics;
 * ``window_attention``  — sliding-window decode attention (long_500k path).
 
+Block sizes for the ``*_auto_op`` compiled dispatch come from the
+persistent autotuner cache (``autotune.py``; see docs/KERNELS.md).
 Validated against ``ref.py`` oracles with ``interpret=True`` on CPU.
 """
+from .autotune import get_config
 from .ops import (
     cosine_op,
     dequant_agg_auto_op,
     dequant_agg_op,
+    ingest_agg_auto_op,
+    ingest_agg_op,
+    ingest_segment_agg_auto_op,
+    ingest_segment_agg_op,
     segment_agg_auto_op,
     segment_agg_op,
     similarity_stats_op,
@@ -26,6 +36,11 @@ __all__ = [
     "cosine_op",
     "dequant_agg_auto_op",
     "dequant_agg_op",
+    "get_config",
+    "ingest_agg_auto_op",
+    "ingest_agg_op",
+    "ingest_segment_agg_auto_op",
+    "ingest_segment_agg_op",
     "segment_agg_auto_op",
     "segment_agg_op",
     "similarity_stats_op",

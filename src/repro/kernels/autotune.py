@@ -1,0 +1,233 @@
+"""Block-size autotuner for the Pallas kernel suite.
+
+Every kernel in ``repro.kernels`` tiles the model dimension D into
+VMEM-resident blocks; the fastest block size depends on (kernel, buffer
+shape, dtype, backend) — K rows share VMEM with the output tile, so a
+K=256 segment reduce wants smaller blocks than a K=10 flat reduce.  In
+the spirit of xformers' Triton config sweeps, this module measures each
+candidate once, persists the winner in an on-disk JSON cache, and the
+``*_auto_op`` dispatchers in ``repro.kernels.ops`` consult the cache on
+every call (a dict lookup — no measurement ever happens on a serving
+hot path).
+
+Cache contract (docs/KERNELS.md):
+
+* keyed by ``<kernel>|k<Kb>xd<Db>|<dtype>|<backend>`` where Kb/Db round
+  the buffer shape up to powers of two (shape *buckets*, so a stream
+  whose K jitters by one does not re-tune);
+* written atomically (tmp file + ``os.replace``) so a crash mid-write
+  never corrupts it;
+* a missing or corrupt cache degrades to the built-in defaults with a
+  single warning — never an exception;
+* deterministic: ties break toward the smaller block, and any process
+  that finds a cached entry returns it verbatim, so one sweep fixes the
+  config fleet-wide.
+
+Results are bit-identical regardless of which config wins: block size
+only partitions the output axis, and every out[d] is one K-length dot
+whichever tile it lands in (pinned by ``tests/test_autotune.py``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import warnings
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+
+DEFAULT_BLOCKS: Dict[str, int] = {
+    "weighted_agg": 4096,
+    "dequant_agg": 4096,
+    "segment_agg": 2048,
+    "ingest_agg": 4096,
+    "ingest_segment_agg": 2048,
+}
+
+CANDIDATE_BLOCKS: Dict[str, Tuple[int, ...]] = {
+    "weighted_agg": (512, 1024, 2048, 4096, 8192),
+    "dequant_agg": (512, 1024, 2048, 4096, 8192),
+    "segment_agg": (256, 512, 1024, 2048, 4096),
+    "ingest_agg": (512, 1024, 2048, 4096, 8192),
+    "ingest_segment_agg": (256, 512, 1024, 2048, 4096),
+}
+
+ENV_CACHE = "REPRO_AUTOTUNE_CACHE"
+
+
+@dataclass(frozen=True)
+class KernelConfig:
+    block_d: int
+    source: str = "default"  # "default" | "cache" | "measured"
+    us: Optional[float] = None       # measured wall-µs per call (winner)
+    gbps: Optional[float] = None     # achieved HBM GB/s, when bytes known
+
+
+def _pow2_ceil(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length() if x > 1 else 1
+
+
+def shape_bucket(shape: Sequence[int]) -> Tuple[int, ...]:
+    """Round every dim up to a power of two — the cache granularity."""
+    return tuple(_pow2_ceil(int(d)) for d in shape)
+
+
+def cache_key(kernel: str, shape: Sequence[int], dtype,
+              backend: Optional[str] = None) -> str:
+    kb, db = shape_bucket(shape[:2]) if len(shape) >= 2 else (1, *shape_bucket(shape))
+    backend = backend or jax.default_backend()
+    return f"{kernel}|k{kb}xd{db}|{jax.numpy.dtype(dtype).name}|{backend}"
+
+
+def default_cache_path(backend: Optional[str] = None) -> str:
+    path = os.environ.get(ENV_CACHE)
+    if path:
+        return path
+    backend = backend or jax.default_backend()
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                        "..", "..", ".."))
+    return os.path.join(root, "experiments", "autotune", f"{backend}.json")
+
+
+def load_cache(path: Optional[str] = None) -> Dict[str, dict]:
+    """Read the config cache; missing → {} silently, corrupt → {} with a
+    warning.  Autotuning must never be able to take the service down."""
+    path = path or default_cache_path()
+    if not os.path.exists(path):
+        return {}
+    try:
+        with open(path, encoding="utf-8") as fh:
+            cache = json.load(fh)
+        if not isinstance(cache, dict):
+            raise ValueError(f"expected a JSON object, got {type(cache).__name__}")
+        return cache
+    except Exception as exc:  # corrupt file, partial write, bad perms, ...
+        warnings.warn(
+            f"autotune cache {path} unreadable ({exc}); "
+            "falling back to default kernel configs", RuntimeWarning)
+        return {}
+
+
+def save_cache(cache: Dict[str, dict], path: Optional[str] = None) -> str:
+    """Atomic write (tmp + rename): a crash never leaves a torn cache."""
+    path = path or default_cache_path()
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w", encoding="utf-8") as fh:
+        json.dump(cache, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
+# process-wide view of the on-disk cache, loaded once per path
+_LOADED: Dict[str, Dict[str, dict]] = {}
+
+
+def reload_cache(path: Optional[str] = None) -> None:
+    """Drop the in-process view (tests; or after an external sweep)."""
+    if path is None:
+        _LOADED.clear()
+    else:
+        _LOADED.pop(path, None)
+
+
+def get_config(kernel: str, shape: Sequence[int], dtype,
+               backend: Optional[str] = None,
+               path: Optional[str] = None) -> KernelConfig:
+    """Cache lookup → ``KernelConfig``; never measures, never raises.
+    The ``*_auto_op`` hot-path entry: a couple of dict probes."""
+    path = path or default_cache_path(backend)
+    if path not in _LOADED:
+        _LOADED[path] = load_cache(path)
+    entry = _LOADED[path].get(cache_key(kernel, shape, dtype, backend))
+    default = DEFAULT_BLOCKS.get(kernel, 4096)
+    if not isinstance(entry, dict) or not isinstance(entry.get("block_d"), int):
+        return KernelConfig(block_d=default)
+    return KernelConfig(block_d=entry["block_d"], source="cache",
+                        us=entry.get("us"), gbps=entry.get("gbps"))
+
+
+def _default_timer(fn: Callable[[], object], repeats: int) -> float:
+    """Best-of-N wall time in µs; blocks on the result each call."""
+    fn()  # compile / warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def autotune(kernel: str, make_call: Callable[[int], Callable[[], object]],
+             shape: Sequence[int], dtype, *,
+             candidates: Optional[Sequence[int]] = None,
+             repeats: int = 3, timer=None,
+             bytes_moved: Optional[int] = None,
+             backend: Optional[str] = None,
+             path: Optional[str] = None) -> KernelConfig:
+    """Measure every candidate block size and persist the winner.
+
+    ``make_call(block_d)`` returns a zero-arg callable running the kernel
+    at that block size; ``timer(fn, repeats) -> µs`` is injectable so
+    tests can pin a deterministic cost model.  A cached entry short-
+    circuits the sweep — determinism across processes comes from the
+    shared cache, and ties break toward the smaller block so even a
+    degenerate timer chooses reproducibly.
+    """
+    cached = get_config(kernel, shape, dtype, backend=backend, path=path)
+    if cached.source == "cache":
+        return cached
+    timer = timer or _default_timer
+    measured: Dict[int, float] = {}
+    for block_d in candidates or CANDIDATE_BLOCKS.get(kernel, (2048, 4096)):
+        try:
+            measured[block_d] = float(timer(make_call(block_d), repeats))
+        except Exception as exc:
+            warnings.warn(f"autotune {kernel} block_d={block_d} failed: {exc}",
+                          RuntimeWarning)
+    if not measured:
+        return KernelConfig(block_d=DEFAULT_BLOCKS.get(kernel, 4096))
+    best_block = min(measured, key=lambda b: (measured[b], b))
+    us = measured[best_block]
+    gbps = (bytes_moved / (us * 1e-6) / 1e9) if bytes_moved and us > 0 else None
+    path = path or default_cache_path(backend)
+    cache = load_cache(path)
+    cache[cache_key(kernel, shape, dtype, backend)] = {
+        "kernel": kernel,
+        "block_d": best_block,
+        "us": round(us, 2),
+        "gbps": round(gbps, 3) if gbps is not None else None,
+        "bytes": bytes_moved,
+        "candidates_us": {str(b): round(u, 2) for b, u in sorted(measured.items())},
+    }
+    save_cache(cache, path)
+    reload_cache(path)
+    return KernelConfig(block_d=best_block, source="measured", us=us, gbps=gbps)
+
+
+def roofline_rows(path: Optional[str] = None,
+                  hbm_bw: Optional[float] = None) -> list:
+    """Cache entries → per-kernel roofline rows: these kernels are pure
+    HBM streamers (≈2 flops/byte), so %-of-roofline is achieved GB/s
+    against the HBM bandwidth ceiling (``repro.launch.analysis.HBM_BW``).
+    Consumed by ``benchmarks/roofline.py`` and the ``ingest`` suite."""
+    if hbm_bw is None:
+        from repro.launch.analysis import HBM_BW
+        hbm_bw = HBM_BW
+    rows = []
+    for key, entry in sorted(load_cache(path).items()):
+        if not isinstance(entry, dict) or entry.get("gbps") is None:
+            continue
+        rows.append({
+            "key": key,
+            "kernel": entry.get("kernel", key.split("|")[0]),
+            "block_d": entry.get("block_d"),
+            "us": entry.get("us"),
+            "gbps": entry["gbps"],
+            "pct_roofline": round(100.0 * entry["gbps"] * 1e9 / hbm_bw, 2),
+        })
+    return rows

@@ -1,0 +1,236 @@
+"""Pallas TPU kernel: the fused ingestion pass — int8 dequantize +
+Eq. §3.4 staleness-decay weighting + Σw·x in ONE double-buffered VMEM
+sweep.
+
+    p   = fold(n, F, G, fb)                 # feedback_weight on-device
+    out[d] = Σ_k p[k] · q[k,d] · s[k, d // chunk]
+
+The streaming service's hot loop used to run three stages per fire:
+dequantize (``dequant_agg``), the Mod-3 weight algebra host-side /
+as a dozen tiny XLA dispatches, then the weighted reduce
+(``weighted_agg``).  This kernel folds the §3.4 ``feedback_weight``
+term into the reduction weights *inside* the kernel: the per-row
+metadata columns (n_samples, F, G, feedback mask — a few f32 per row)
+ride along in VMEM, the weight vector is rebuilt per grid step from a
+handful of VPU ops (negligible against the K×BLOCK matmul it feeds),
+and every int8 payload byte still crosses HBM exactly once.  Pallas's
+grid pipeline double-buffers the tile DMAs against compute, exactly as
+in ``weighted_agg``/``dequant_agg``.
+
+The logical member count ``k`` arrives as a (1, 1) operand rather than
+a static — the serving path pads the row axis to a shape bucket so
+variable-K triggers (time-window, quorum grace) stop paying a per-shape
+compile, and padding rows (n = fb = 0) weigh exactly 0.
+
+``ingest_segment_agg`` is the tier-edge variant: per-group Σw·x̂ over a
+stacked buffer with per-row segment ids, so every int8 edge buffer of a
+hierarchical fire reduces in one launch (cf. ``segment_agg``).
+
+Weight algebra lives in ``repro.kernels.ref.ingest_weights`` and is
+shared verbatim with the oracles, so interpret-mode runs are bit-exact
+(the contract ``tests/test_kernel_parity.py`` fuzzes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import ingest_weights
+
+BLOCK_D = 4096          # dense f32 tiles: matches weighted_agg
+BLOCK_D_SEGMENT = 2048  # segment variant carries a [G, blk] output tile too
+
+
+def _fold(k_ref, n_ref, F_ref, G_ref, fb_ref, *, n_clients, normalize):
+    # [K, 1] metadata columns → [K, 1] reduction weights, recomputed per
+    # grid step (K-length VPU ops — free next to the K×blk matmul)
+    return ingest_weights(
+        n_ref[...], F_ref[...], G_ref[...], fb_ref[...], k_ref[0, 0],
+        n_clients=n_clients, normalize=normalize,
+    )
+
+
+def _ingest_dense_kernel(k_ref, n_ref, F_ref, G_ref, fb_ref, x_ref, o_ref,
+                         *, n_clients, normalize):
+    p = _fold(k_ref, n_ref, F_ref, G_ref, fb_ref,
+              n_clients=n_clients, normalize=normalize)
+    o_ref[...] = jnp.dot(
+        p.T, x_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _ingest_quant_kernel(k_ref, n_ref, F_ref, G_ref, fb_ref, s_ref, q_ref,
+                         o_ref, *, n_clients, normalize):
+    p = _fold(k_ref, n_ref, F_ref, G_ref, fb_ref,
+              n_clients=n_clients, normalize=normalize)
+    K, blk = q_ref.shape
+    nc = s_ref.shape[1]
+    x = q_ref[...].astype(jnp.float32).reshape(K, nc, blk // nc)
+    x = (x * s_ref[...][:, :, None]).reshape(K, blk)
+    o_ref[...] = jnp.dot(p.T, x, preferred_element_type=jnp.float32)
+
+
+def _meta_cols(q, n_samples, F, G, fb, k):
+    K = q.shape[0]
+    col = lambda v: jnp.asarray(v, jnp.float32).reshape(K, 1)
+    k = jnp.float32(K) if k is None else jnp.asarray(k, jnp.float32)
+    return k.reshape(1, 1), col(n_samples), col(F), col(G), col(fb)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "chunk", "n_clients", "normalize", "block_d", "interpret"))
+def ingest_agg(q: jax.Array, scales, n_samples, F, G, fb, k=None, *,
+               chunk: int = 0, n_clients: int, normalize: bool = True,
+               block_d: int = BLOCK_D, interpret: bool = False) -> jax.Array:
+    """Fused ingestion reduce → [D] f32 (see module docstring).
+
+    ``q`` is [K, D] int8 with per-chunk f32 ``scales`` [K, D/chunk]
+    (``chunk`` required, D a multiple of it), or [K, D] dense rows with
+    ``scales=None``.  ``n_samples``/``F``/``G``/``fb`` are [K] f32 rows
+    of per-member metadata; ``k`` the logical member count (defaults to
+    the row count; pass the unpadded count when the row axis is
+    bucketed).  Padding up to the kernel block adds zero columns that
+    reduce to exactly 0.
+    """
+    K, D = q.shape
+    kcol, ncol, Fcol, Gcol, fbcol = _meta_cols(q, n_samples, F, G, fb, k)
+    meta_specs = [pl.BlockSpec((1, 1), lambda i: (0, 0))] + [
+        pl.BlockSpec((K, 1), lambda i: (0, 0)) for _ in range(4)
+    ]
+    if scales is None:
+        blk = block_d
+        pad = (-D) % blk
+        x = jnp.pad(q, ((0, 0), (0, pad))) if pad else q
+        out = pl.pallas_call(
+            functools.partial(_ingest_dense_kernel, n_clients=n_clients,
+                              normalize=normalize),
+            grid=((D + pad) // blk,),
+            in_specs=meta_specs + [pl.BlockSpec((K, blk), lambda i: (0, i))],
+            out_specs=pl.BlockSpec((1, blk), lambda i: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((1, D + pad), jnp.float32),
+            interpret=interpret,
+        )(kcol, ncol, Fcol, Gcol, fbcol, x.astype(jnp.float32))
+        return out[0, :D]
+    if chunk <= 0:
+        raise ValueError("quantized rows need chunk > 0")
+    if D % chunk:
+        raise ValueError(f"D={D} must be a multiple of chunk={chunk}")
+    if scales.shape != (K, D // chunk):
+        raise ValueError(
+            f"scales shape {scales.shape} != {(K, D // chunk)} for chunk={chunk}")
+    blk = max(chunk, block_d - block_d % chunk)  # whole chunks per tile
+    pad = (-D) % blk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad)))
+        scales = jnp.pad(scales, ((0, 0), (0, pad // chunk)))
+    nc_blk = blk // chunk
+    out = pl.pallas_call(
+        functools.partial(_ingest_quant_kernel, n_clients=n_clients,
+                          normalize=normalize),
+        grid=((D + pad) // blk,),
+        in_specs=meta_specs + [
+            pl.BlockSpec((K, nc_blk), lambda i: (0, i)),
+            pl.BlockSpec((K, blk), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, blk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, D + pad), jnp.float32),
+        interpret=interpret,
+    )(kcol, ncol, Fcol, Gcol, fbcol, scales.astype(jnp.float32),
+      q.astype(jnp.int8))
+    return out[0, :D]
+
+
+def _ingest_segment_dense_kernel(k_ref, seg_ref, n_ref, F_ref, G_ref, fb_ref,
+                                 x_ref, o_ref, *, n_clients, normalize):
+    p = _fold(k_ref, n_ref, F_ref, G_ref, fb_ref,
+              n_clients=n_clients, normalize=normalize)
+    G_out, K = o_ref.shape[0], x_ref.shape[0]
+    groups = jax.lax.broadcasted_iota(jnp.int32, (G_out, K), 0)
+    selector = (groups == seg_ref[...].T).astype(jnp.float32) * p.T
+    o_ref[...] = jnp.dot(
+        selector, x_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _ingest_segment_quant_kernel(k_ref, seg_ref, n_ref, F_ref, G_ref, fb_ref,
+                                 s_ref, q_ref, o_ref, *, n_clients, normalize):
+    p = _fold(k_ref, n_ref, F_ref, G_ref, fb_ref,
+              n_clients=n_clients, normalize=normalize)
+    G_out, (K, blk) = o_ref.shape[0], q_ref.shape
+    nc = s_ref.shape[1]
+    x = q_ref[...].astype(jnp.float32).reshape(K, nc, blk // nc)
+    x = (x * s_ref[...][:, :, None]).reshape(K, blk)
+    groups = jax.lax.broadcasted_iota(jnp.int32, (G_out, K), 0)
+    selector = (groups == seg_ref[...].T).astype(jnp.float32) * p.T
+    o_ref[...] = jnp.dot(selector, x, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "chunk", "num_segments", "n_clients", "normalize", "block_d", "interpret"))
+def ingest_segment_agg(q: jax.Array, scales, seg, n_samples, F, G, fb,
+                       k=None, *, num_segments: int, chunk: int = 0,
+                       n_clients: int, normalize: bool = False,
+                       block_d: int = BLOCK_D_SEGMENT,
+                       interpret: bool = False) -> jax.Array:
+    """Per-group fused ingestion reduce → [G, D] f32.
+
+    Same payload/metadata contract as ``ingest_agg`` plus a [K] i32
+    segment id per row; rows whose id falls outside [0, num_segments)
+    contribute to no group (the padding convention the tier plane uses).
+    ``normalize`` defaults to False — edges forward raw Σw·x̂ with Σw
+    carried beside the partial; True normalizes over the WHOLE buffer
+    (not per group).
+    """
+    K, D = q.shape
+    if seg.shape != (K,):
+        raise ValueError(f"seg {seg.shape} must be [{K}] to match rows")
+    if num_segments < 1:
+        raise ValueError(f"num_segments must be >= 1, got {num_segments}")
+    kcol, ncol, Fcol, Gcol, fbcol = _meta_cols(q, n_samples, F, G, fb, k)
+    segcol = seg.astype(jnp.int32)[:, None]
+    meta_specs = [pl.BlockSpec((1, 1), lambda i: (0, 0))] + [
+        pl.BlockSpec((K, 1), lambda i: (0, 0)) for _ in range(5)
+    ]
+    if scales is None:
+        blk = block_d
+        pad = (-D) % blk
+        x = jnp.pad(q, ((0, 0), (0, pad))) if pad else q
+        out = pl.pallas_call(
+            functools.partial(_ingest_segment_dense_kernel,
+                              n_clients=n_clients, normalize=normalize),
+            grid=((D + pad) // blk,),
+            in_specs=meta_specs + [pl.BlockSpec((K, blk), lambda i: (0, i))],
+            out_specs=pl.BlockSpec((num_segments, blk), lambda i: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((num_segments, D + pad), jnp.float32),
+            interpret=interpret,
+        )(kcol, segcol, ncol, Fcol, Gcol, fbcol, x.astype(jnp.float32))
+        return out[:, :D]
+    if chunk <= 0:
+        raise ValueError("quantized rows need chunk > 0")
+    if D % chunk:
+        raise ValueError(f"D={D} must be a multiple of chunk={chunk}")
+    blk = max(chunk, block_d - block_d % chunk)
+    pad = (-D) % blk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad)))
+        scales = jnp.pad(scales, ((0, 0), (0, pad // chunk)))
+    nc_blk = blk // chunk
+    out = pl.pallas_call(
+        functools.partial(_ingest_segment_quant_kernel,
+                          n_clients=n_clients, normalize=normalize),
+        grid=((D + pad) // blk,),
+        in_specs=meta_specs + [
+            pl.BlockSpec((K, nc_blk), lambda i: (0, i)),
+            pl.BlockSpec((K, blk), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((num_segments, blk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, D + pad), jnp.float32),
+        interpret=interpret,
+    )(kcol, segcol, ncol, Fcol, Gcol, fbcol, scales.astype(jnp.float32),
+      q.astype(jnp.int8))
+    return out[:, :D]

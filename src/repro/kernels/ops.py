@@ -13,7 +13,9 @@ import jax
 import jax.numpy as jnp
 
 from . import ref as _ref
+from .autotune import get_config
 from .dequant_agg import dequant_agg
+from .ingest_agg import ingest_agg, ingest_segment_agg
 from .segment_agg import segment_agg
 from .similarity import cosine_from_stats, fused_similarity_stats
 from .weighted_agg import weighted_agg
@@ -22,6 +24,14 @@ from .window_attention import window_decode_attention
 _ON_TPU = jax.default_backend() == "tpu"
 _FORCE_REF = os.environ.get("REPRO_KERNEL_MODE", "") == "ref"
 _INTERPRET = not _ON_TPU
+
+
+def _tuned_block(kernel: str, shape, dtype) -> int:
+    """Autotuned block size for a compiled-TPU dispatch — a cache probe
+    (``kernels/autotune.py``), never a measurement.  Bit-identical
+    results whichever config wins: block size only partitions the
+    output axis, and each out[d] is one K-length dot either way."""
+    return get_config(kernel, shape, dtype).block_d
 
 
 def weighted_agg_op(x, w):
@@ -36,7 +46,8 @@ def weighted_agg_auto_op(x, w):
     (which exercises the kernel body under interpret=True for validation),
     this never pays interpret-mode cost on a serving hot path."""
     if _ON_TPU and not _FORCE_REF:
-        return weighted_agg(x, w)
+        return weighted_agg(x, w,
+                            block_d=_tuned_block("weighted_agg", x.shape, x.dtype))
     return _ref.weighted_agg_ref(x, w)
 
 
@@ -51,7 +62,8 @@ def dequant_agg_auto_op(q, scales, w, *, chunk):
     fused Pallas kernel on TPU, the jnp decode-then-reduce oracle
     elsewhere (interpret-mode Pallas is too slow for an ingest loop)."""
     if _ON_TPU and not _FORCE_REF:
-        return dequant_agg(q, scales, w, chunk=chunk)
+        return dequant_agg(q, scales, w, chunk=chunk,
+                           block_d=_tuned_block("dequant_agg", q.shape, q.dtype))
     return _ref.dequant_agg_ref(q, scales, w)
 
 
@@ -67,8 +79,62 @@ def segment_agg_auto_op(x, w, seg, *, num_segments):
     compiled segment kernel on TPU, the one-hot-matmul oracle elsewhere
     (interpret-mode Pallas is too slow for an ingest loop)."""
     if _ON_TPU and not _FORCE_REF:
-        return segment_agg(x, w, seg, num_segments=num_segments)
+        return segment_agg(x, w, seg, num_segments=num_segments,
+                           block_d=_tuned_block("segment_agg", x.shape, x.dtype))
     return _ref.segment_agg_ref(x, w, seg, num_segments)
+
+
+def ingest_agg_op(q, scales, n_samples, F, G, fb, k=None, *,
+                  chunk=0, n_clients, normalize=True):
+    """Fused ingestion reduce, interpret-mode kernel body (validation)."""
+    if _FORCE_REF:
+        return _ref.ingest_agg_ref(q, scales, n_samples, F, G, fb, k,
+                                   n_clients=n_clients, normalize=normalize)
+    return ingest_agg(q, scales, n_samples, F, G, fb, k, chunk=chunk,
+                      n_clients=n_clients, normalize=normalize,
+                      interpret=_INTERPRET)
+
+
+def ingest_agg_auto_op(q, scales, n_samples, F, G, fb, k=None, *,
+                       chunk=0, n_clients, normalize=True):
+    """Throughput dispatch for the fused serve ingestion path: compiled
+    kernel on TPU (autotuned block), jitted oracle elsewhere — both
+    fold the Eq. §3.4 weights on-device, so no host round-trip."""
+    if _ON_TPU and not _FORCE_REF:
+        return ingest_agg(q, scales, n_samples, F, G, fb, k, chunk=chunk,
+                          n_clients=n_clients, normalize=normalize,
+                          block_d=_tuned_block("ingest_agg", q.shape, q.dtype))
+    return _ref.ingest_agg_ref(q, scales, n_samples, F, G, fb, k,
+                               n_clients=n_clients, normalize=normalize)
+
+
+def ingest_segment_agg_op(q, scales, seg, n_samples, F, G, fb, k=None, *,
+                          num_segments, chunk=0, n_clients, normalize=False):
+    """Per-group fused ingestion reduce, interpret-mode (validation)."""
+    if _FORCE_REF:
+        return _ref.ingest_segment_agg_ref(
+            q, scales, seg, n_samples, F, G, fb, k,
+            num_segments=num_segments, n_clients=n_clients,
+            normalize=normalize)
+    return ingest_segment_agg(q, scales, seg, n_samples, F, G, fb, k,
+                              num_segments=num_segments, chunk=chunk,
+                              n_clients=n_clients, normalize=normalize,
+                              interpret=_INTERPRET)
+
+
+def ingest_segment_agg_auto_op(q, scales, seg, n_samples, F, G, fb, k=None, *,
+                               num_segments, chunk=0, n_clients,
+                               normalize=False):
+    """Throughput dispatch for the tier-edge fused ingestion path."""
+    if _ON_TPU and not _FORCE_REF:
+        return ingest_segment_agg(
+            q, scales, seg, n_samples, F, G, fb, k,
+            num_segments=num_segments, chunk=chunk, n_clients=n_clients,
+            normalize=normalize,
+            block_d=_tuned_block("ingest_segment_agg", q.shape, q.dtype))
+    return _ref.ingest_segment_agg_ref(
+        q, scales, seg, n_samples, F, G, fb, k, num_segments=num_segments,
+        n_clients=n_clients, normalize=normalize)
 
 
 def similarity_stats_op(a, b):

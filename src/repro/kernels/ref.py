@@ -1,10 +1,12 @@
 """Pure-jnp oracles for every Pallas kernel (allclose targets for tests)."""
 from __future__ import annotations
 
+import functools
 import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 NEG_INF = -1e9
 
@@ -38,6 +40,91 @@ def segment_agg_ref(x: jax.Array, w: jax.Array, seg: jax.Array,
     selector = selector * w.astype(jnp.float32)[None, :]
     return jnp.dot(selector, x.astype(jnp.float32),
                    preferred_element_type=jnp.float32)
+
+
+def ingest_weights(n_samples, F, G, fb, k, *, n_clients: int,
+                   normalize: bool = True, xp=jnp):
+    """The Mod-3 weight fold shared by the fused ingestion kernel and its
+    oracle: Eq. §3.4 feedback re-weighting applied to a buffer's per-row
+    metadata.
+
+    ``n_samples``/``F``/``G``/``fb`` are same-shaped arrays (the kernel
+    feeds [K, 1] VMEM columns; the oracle reshapes to match so every
+    elementwise op and reduction lowers identically — that is what makes
+    interpret-mode kernel runs bit-exact).  ``fb`` is a f32 0/1 mask,
+    ``k`` the *logical* member count as a scalar (may be traced — the
+    bucketed serving path pads the row axis, so the row count of the
+    arrays is not the buffer size).  Padding rows must carry
+    ``n_samples = fb = 0``: their weight is exactly 0 on either branch.
+
+    ``normalize=True`` is ``repro.core.aggregation.aggregation_weights``:
+    sample-proportional base, feedback rows swapped for the §3.4 term,
+    then 1/Σp normalization.  ``normalize=False`` keeps raw weights
+    (base rows weigh ``n_samples`` outright) — the tier-edge form, whose
+    Σw is carried beside the partial aggregate instead.
+    """
+    from repro.core.aggregation import staleness_weight
+
+    k = xp.asarray(k, jnp.float32) if xp is jnp else np.float32(k)
+    phi = k / n_clients
+    w_fb = staleness_weight(F, phi, xp=xp) * (1.0 + G) ** 2 / k
+    if not normalize:
+        return xp.where(fb > 0, w_fb, n_samples)
+    base = n_samples / xp.maximum(xp.sum(n_samples), 1.0)
+    p = xp.where(fb > 0, w_fb, base)
+    return p / xp.maximum(xp.sum(p), 1e-12)
+
+
+def _dequant_rows(q: jax.Array, scales) -> jax.Array:
+    """int8 rows → f32 rows via per-chunk scales (``scales=None`` means
+    the rows are already dense f32) — the exact per-element algebra the
+    ingest kernel applies per VMEM tile, so tiling cannot change bits."""
+    if scales is None:
+        return q.astype(jnp.float32)
+    K, D = q.shape
+    nc = scales.shape[1]
+    x = q.astype(jnp.float32).reshape(K, nc, D // nc)
+    return (x * scales.astype(jnp.float32)[:, :, None]).reshape(K, D)
+
+
+@functools.partial(jax.jit, static_argnames=("n_clients", "normalize"))
+def ingest_agg_ref(q: jax.Array, scales, n_samples, F, G, fb, k=None, *,
+                   n_clients: int, normalize: bool = True) -> jax.Array:
+    """Oracle for the fused ingestion kernel: dequantize (when ``scales``
+    is given) + Eq. §3.4 weight fold + Σw·x, sharing every op with the
+    kernel body so interpret mode is bit-exact.  Returns [D] f32.
+
+    Jitted on purpose: the kernel body runs under the interpret-mode
+    ``pallas_call`` inside a jit, where XLA fuses the exp/exp2 weight
+    chain; the oracle must compile the same subgraph to land on the
+    same bits (eager op-by-op execution differs at ~1e-8)."""
+    K = q.shape[0]
+    col = lambda v: jnp.asarray(v, jnp.float32).reshape(K, 1)
+    k = jnp.float32(K) if k is None else jnp.asarray(k, jnp.float32)
+    p = ingest_weights(col(n_samples), col(F), col(G), col(fb), k,
+                       n_clients=n_clients, normalize=normalize)
+    x = _dequant_rows(q, scales)
+    return jnp.dot(p.T, x, preferred_element_type=jnp.float32)[0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_segments", "n_clients", "normalize"))
+def ingest_segment_agg_ref(q: jax.Array, scales, seg, n_samples, F, G, fb,
+                           k=None, *, num_segments: int, n_clients: int,
+                           normalize: bool = False) -> jax.Array:
+    """Oracle for the segment variant: per-group Σw·x̂ with the weight
+    fold on-device — [G, D] f32.  Out-of-range segment ids select no
+    group (the padding convention of ``segment_agg``)."""
+    K = q.shape[0]
+    col = lambda v: jnp.asarray(v, jnp.float32).reshape(K, 1)
+    k = jnp.float32(K) if k is None else jnp.asarray(k, jnp.float32)
+    p = ingest_weights(col(n_samples), col(F), col(G), col(fb), k,
+                       n_clients=n_clients, normalize=normalize)
+    groups = jnp.arange(num_segments, dtype=jnp.int32)[:, None]
+    selector = (groups == seg.astype(jnp.int32)[None, :]).astype(jnp.float32)
+    selector = selector * p.T
+    x = _dequant_rows(q, scales)
+    return jnp.dot(selector, x, preferred_element_type=jnp.float32)
 
 
 def fused_similarity_stats_ref(a: jax.Array, b: jax.Array) -> jax.Array:

@@ -23,23 +23,34 @@ and the streaming service opts in.
 """
 from __future__ import annotations
 
+import functools
+
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.flatten_util import ravel_pytree
 
 from repro.compress.codec import Encoded, decode
-from repro.core.types import Params
+from repro.core.types import AggregationStrategy, Params
 from repro.kernels import dequant_agg_auto_op, weighted_agg_auto_op
+from repro.kernels.autotune import get_config
 from repro.kernels.dequant_agg import dequant_agg
-from repro.kernels.ref import dequant_agg_ref, weighted_agg_ref
+from repro.kernels.ingest_agg import ingest_agg
+from repro.kernels.ref import dequant_agg_ref, ingest_agg_ref, weighted_agg_ref
 from repro.kernels.weighted_agg import weighted_agg
 
 # unravel closures keyed by (treedef, leaf avals): the buffer carries the
 # same model structure round after round, so the closure (and the ravel
 # bookkeeping inside it) is built once, not per fire
 _UNRAVEL_CACHE: Dict[tuple, Callable[[jnp.ndarray], Params]] = {}
+
+# stack-call observability: every [K, D] stacking of a frozen buffer bumps
+# one of these.  A trigger fire must build its stacked matrix exactly once
+# (pinned by tests/test_ingest.py) — re-stacking per fire was the
+# serve_timewindow regression this guards against.
+STACK_CALLS: Dict[str, int] = {"trees": 0, "encoded": 0}
 
 
 def _tree_key(leaves, treedef) -> tuple:
@@ -57,29 +68,44 @@ def unravel_like(tree: Params) -> Callable[[jnp.ndarray], Params]:
     return unravel
 
 
+@jax.jit
+def _stack_rows(all_leaves):
+    # one fused ravel+cast+concat+stack over the whole buffer; jax caches
+    # the compilation per (treedef, avals) of the nested leaf list so
+    # steady state is a single dispatch
+    return jnp.stack([
+        jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+        for leaves in all_leaves])
+
+
 def stack_trees(trees: List[Params]) -> Tuple[jnp.ndarray, Callable[[jnp.ndarray], Params]]:
     """Ravel each pytree to a row of a [K, D] f32 matrix; returns the matrix
     and the (cached) unravel closure mapping a flat [D] vector back to the
     pytree.  All trees must share one structure — a buffer mixing model
     shapes is a caller bug and raises instead of silently unraveling rows
-    with the first tree's closure."""
+    with the first tree's closure.
+
+    The stacking is ONE jitted ravel/cast/concat/stack dispatch over the
+    whole buffer — not per-tree eager ops.  Profiling the serve round
+    showed the old per-tree form cost ~90 host dispatches per fire
+    (K=10 × 4 leaves × ravel/astype/concat), several ms/round on CPU,
+    dwarfing the aggregation math itself."""
     if not trees:
         raise ValueError("cannot stack an empty buffer")
+    STACK_CALLS["trees"] += 1
     leaves0, treedef0 = jax.tree_util.tree_flatten(trees[0])
     unravel = unravel_like(trees[0])
-    flats = []
-    for t in trees:
+    all_leaves = [leaves0]
+    for t in trees[1:]:
         leaves, treedef = jax.tree_util.tree_flatten(t)
         if treedef != treedef0:
             raise ValueError(
                 f"buffer mixes pytree structures: {treedef} vs {treedef0}"
             )
-        parts = [
-            p if p.dtype == jnp.float32 else p.astype(jnp.float32)
-            for p in (jnp.ravel(l) for l in leaves)
-        ]
-        flats.append(jnp.concatenate(parts) if parts else jnp.zeros((0,), jnp.float32))
-    return jnp.stack(flats), unravel
+        all_leaves.append(leaves)
+    if not leaves0:
+        return jnp.zeros((len(trees), 0), jnp.float32), unravel
+    return _stack_rows(all_leaves), unravel
 
 
 def batched_weighted_sum(
@@ -126,6 +152,7 @@ def stack_encoded(encs: Sequence[Encoded]) -> Tuple[jnp.ndarray, jnp.ndarray]:
     fused kernel.  Sparse payloads scatter into zeros — their per-chunk
     scales are already defined over the decoded axis (``repro.compress``),
     so the scattered row dequantizes identically."""
+    STACK_CALLS["encoded"] += 1
     nc = encs[0].scales.shape[0]
     dp = nc * encs[0].chunk
     rows, srows = [], []
@@ -175,6 +202,152 @@ def compressed_weighted_sum(
     else:
         flat = weighted_agg_ref(x, w)
     return unravel(flat)
+
+
+# --------------------------------------------------------------- fused round
+def bucket_rows(k: int) -> int:
+    """Row-axis shape bucket: K padded up to a power of two (≥ 4).
+
+    Variable-K triggers (time-window, quorum grace) produce a different
+    buffer length every fire; without bucketing every length is a fresh
+    XLA compile — profiling the serve_timewindow benchmark showed ~5.5 s
+    of its 9.4 s aggregate wall time was backend_compile across 364 pjit
+    cache misses.  Bucketing caps compiles at log2(K_max) per payload
+    shape; padding rows carry ``n_samples = fb = 0`` and weigh exactly 0.
+    """
+    return max(4, 1 << max(int(k) - 1, 0).bit_length())
+
+
+def _round_meta(counts, tsims, cids, sims, ratio_clip):
+    # the §3.4 F/G ratios against the post-update table — same algebra as
+    # repro.core.aggregation.server_aggregate, folded into the round jit
+    total = jnp.maximum(jnp.sum(counts), 1)
+    f = counts.astype(jnp.float32) / total
+    f_bar = jnp.mean(f)
+    s_bar = jnp.mean(tsims)
+    F = jnp.clip(f_bar / jnp.maximum(f[cids], 1e-12),
+                 1.0 / ratio_clip, ratio_clip)
+    s_i = jnp.maximum(sims, 1e-6)
+    G = jnp.clip(jnp.maximum(s_bar, 1e-6) / s_i, 1.0 / ratio_clip, ratio_clip)
+    return F, G
+
+
+def _finish(flat, flat_g, eta_g, grad):
+    # GRADIENT: w − η_g·Σp·δ on the flat vector; MODEL: Σp·w directly
+    return flat_g - eta_g * flat if grad else flat
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_clients", "grad", "mode", "block_d"))
+def _fused_dense_round(x, counts, tsims, cids, sims, n, fb, k, flat_g,
+                       eta_g, ratio_clip, *, n_clients, grad,
+                       mode="auto", block_d=0):
+    F, G = _round_meta(counts, tsims, cids, sims, ratio_clip)
+    if mode == "kernel":  # interpret-mode kernel body (validation only)
+        flat = ingest_agg(x, None, n, F, G, fb, k, n_clients=n_clients,
+                          interpret=jax.default_backend() != "tpu")
+    elif mode == "tpu":
+        flat = ingest_agg(x, None, n, F, G, fb, k, n_clients=n_clients,
+                          **({"block_d": block_d} if block_d else {}))
+    else:
+        flat = ingest_agg_ref(x, None, n, F, G, fb, k, n_clients=n_clients)
+    return _finish(flat, flat_g, eta_g, grad)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "chunk", "d_out", "n_clients", "grad", "mode", "block_d"))
+def _fused_quant_round(q, scales, counts, tsims, cids, sims, n, fb, k,
+                       flat_g, eta_g, ratio_clip, *, chunk, d_out,
+                       n_clients, grad, mode="auto", block_d=0):
+    F, G = _round_meta(counts, tsims, cids, sims, ratio_clip)
+    if mode == "kernel":
+        flat = ingest_agg(q, scales, n, F, G, fb, k, chunk=chunk,
+                          n_clients=n_clients,
+                          interpret=jax.default_backend() != "tpu")
+    elif mode == "tpu":
+        flat = ingest_agg(q, scales, n, F, G, fb, k, chunk=chunk,
+                          n_clients=n_clients,
+                          **({"block_d": block_d} if block_d else {}))
+    else:
+        flat = ingest_agg_ref(q, scales, n, F, G, fb, k, n_clients=n_clients)
+    return _finish(flat[:d_out], flat_g, eta_g, grad)
+
+
+def fused_ingest_round(batch, table, flat_g, hp, n_clients: int,
+                       strategy, *, mode: Optional[str] = None):
+    """One fused FedQS round over a frozen buffer → (new flat global,
+    new table).
+
+    The whole Mod-3 pass — Eq. 1/2 table-derived F/G ratios, Eq. §3.4
+    feedback weight fold, Σp·x, and the global step — runs as ONE jitted
+    dispatch per (payload-shape, K-bucket), with the weight algebra
+    folded into the ``ingest_agg`` kernel so no staleness math happens
+    host-side.  Host work per fire: the status-table scatter (kept in
+    ``update_table`` so bookkeeping is bit-identical to the unfused
+    path) and one payload stack.
+
+    ``batch`` mixes dense ``Update`` and ``CompressedUpdate`` items only
+    through the caller's densify; here it must be homogeneous.  ``mode``:
+    None → compiled kernel on TPU / jitted oracle elsewhere; ``"kernel"``
+    forces the interpret-mode kernel body (validation).
+    """
+    from repro.core.aggregation import update_table
+
+    grad = strategy is AggregationStrategy.GRADIENT
+    attr = "delta" if grad else "params"
+    payloads = [getattr(u, attr) for u in batch]
+    if any(p is None for p in payloads):
+        return None  # caller falls back to the unfused dispatch
+
+    K = len(batch)
+    cids = np.asarray([u.cid for u in batch], np.int32)
+    sims = np.asarray([u.similarity for u in batch], np.float32)
+    new_table = update_table(table, jnp.asarray(cids), jnp.asarray(sims))
+
+    Kb = bucket_rows(K)
+    pad = Kb - K
+    meta = dict(
+        cids=np.pad(cids, (0, pad)),
+        sims=np.pad(sims, (0, pad), constant_values=1.0),
+        n=np.pad(np.asarray([u.n_samples for u in batch], np.float32),
+                 (0, pad)),
+        fb=np.pad(np.asarray(
+            [float(bool(u.feedback) and hp.use_feedback) for u in batch],
+            np.float32), (0, pad)),
+    )
+    k = jnp.float32(K)
+    eta_g = jnp.float32(hp.eta_g)
+    ratio_clip = jnp.float32(hp.ratio_clip)
+    mode = mode or ("tpu" if jax.default_backend() == "tpu" else "ref")
+
+    encoded = isinstance(payloads[0], Encoded)
+    if encoded and fused_eligible(payloads):
+        q, scales = stack_encoded(payloads)
+        if pad:
+            q = jnp.pad(q, ((0, pad), (0, 0)))
+            scales = jnp.pad(scales, ((0, pad), (0, 0)))
+        block = (get_config("ingest_agg", q.shape, q.dtype).block_d
+                 if mode == "tpu" else 0)
+        new_flat = _fused_quant_round(
+            q, scales, new_table.counts, new_table.sims, meta["cids"],
+            meta["sims"], meta["n"], meta["fb"], k, flat_g, eta_g,
+            ratio_clip, chunk=payloads[0].chunk, d_out=payloads[0].d,
+            n_clients=n_clients, grad=grad, mode=mode, block_d=block)
+        return new_flat, new_table
+    if encoded:
+        # raw-f32 top-k (or heterogeneous chunks): decode to dense rows
+        x = jnp.stack([decode(e) for e in payloads])
+    else:
+        x, _ = stack_trees(payloads)
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    block = (get_config("ingest_agg", x.shape, x.dtype).block_d
+             if mode == "tpu" else 0)
+    new_flat = _fused_dense_round(
+        x, new_table.counts, new_table.sims, meta["cids"], meta["sims"],
+        meta["n"], meta["fb"], k, flat_g, eta_g, ratio_clip,
+        n_clients=n_clients, grad=grad, mode=mode, block_d=block)
+    return new_flat, new_table
 
 
 def make_tree_sum(use_kernel: Optional[bool] = None,

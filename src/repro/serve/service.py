@@ -35,6 +35,7 @@ from typing import Callable, List, Optional, Sequence
 
 import jax
 import numpy as np
+from jax.flatten_util import ravel_pytree
 
 from repro.core.aggregation import server_aggregate as fedqs_server_aggregate
 from repro.core.aggregation import update_table
@@ -60,7 +61,7 @@ from repro.telemetry import (
 )
 
 from .admission import AdmissionPolicy, AdmitAll
-from .batched import make_tree_sum, unravel_like
+from .batched import fused_ingest_round, make_tree_sum, unravel_like
 from .triggers import KBuffer, TriggerPolicy
 
 
@@ -130,6 +131,7 @@ class StreamingAggregator:
         context=None,
         batched: bool = False,
         use_kernel: Optional[bool] = None,
+        fused: Optional[bool] = None,
         async_agg: bool = False,
         on_round: Optional[Callable[[RoundReport], None]] = None,
         speeds: Optional[np.ndarray] = None,
@@ -156,6 +158,16 @@ class StreamingAggregator:
         self._tree_sum = (
             make_tree_sum(use_kernel, unravel_fn=self._unravel) if batched else None
         )
+        # fused ingestion (kernels/ingest_agg): one jitted dispatch per
+        # fire with the §3.4 weight fold on-device and the row axis
+        # bucketed (batched.bucket_rows).  None → on whenever batched;
+        # False → the pre-fusion batched path, bit-identical bookkeeping.
+        # use_kernel=True forces the interpret-mode kernel body here too.
+        self._fused = batched if fused is None else bool(fused)
+        self._fused_mode = {True: "kernel", False: "ref"}.get(use_kernel)
+        self._flat_cache = None   # flat [D] of global_params, if current...
+        self._flat_src = None     # ...for exactly this params object
+        self._pending_flat = None # handed from _dispatch to _aggregate
         self._pool = ThreadPoolExecutor(max_workers=1) if async_agg else None
         self._inflight: Optional[Future] = None
         # optional ClientCompressor attached by whoever encodes the stream
@@ -316,6 +328,11 @@ class StreamingAggregator:
         stale = [self.round - u.stale_round for u in members]
         self.global_params = new_global
         self.table = new_table
+        if self._pending_flat is not None:
+            # the fused round produced new_global by unraveling this very
+            # vector, so caching it skips the re-ravel on the next fire
+            self._flat_cache, self._flat_src = self._pending_flat, new_global
+            self._pending_flat = None
         self.round += 1
         self.stats.rounds += 1
         self.stats.agg_seconds += dt
@@ -393,6 +410,10 @@ class StreamingAggregator:
             # the stacked tree_sum needs a homogeneous buffer; a stream
             # mixing wire formats decodes the compressed minority
             batch = self._densify(batch)
+        if self._batched and self._fused and isinstance(self.algo, FedQS):
+            out = self._fused_round(ctx, batch)
+            if out is not None:
+                return out
         if self._batched and isinstance(self.algo, FedQS):
             new_global, new_table, _ = fedqs_server_aggregate(
                 self.algo.strategy, ctx.global_params, batch, ctx.table,
@@ -416,6 +437,27 @@ class StreamingAggregator:
             return new_global, new_table
         return self.algo.server_aggregate(ctx, self._densify(batch))
 
+    def _fused_round(self, ctx, batch):
+        """The fused-ingestion round (``repro.serve.batched``): flat
+        global in, flat global out — so successive fused rounds never
+        re-ravel the model, and the §3.4 weighting runs inside the
+        ``ingest_agg`` kernel.  Returns None when the batch shape cannot
+        fuse (missing payloads); the caller then falls through to the
+        unfused batched dispatch."""
+        if ctx.global_params is self._flat_src and self._flat_cache is not None:
+            flat_g = self._flat_cache
+        else:
+            flat_g, _ = ravel_pytree(ctx.global_params)
+        out = fused_ingest_round(
+            batch, ctx.table, flat_g, self.hp, ctx.data.n_clients,
+            self.algo.strategy, mode=self._fused_mode,
+        )
+        if out is None:
+            return None
+        new_flat, new_table = out
+        self._pending_flat = new_flat
+        return self._unravel()(new_flat), new_table
+
     # ------------------------------------------------------------ checkpoint
     def save(self, path: str) -> None:
         from repro.checkpoint.ckpt import save_service_state
@@ -427,4 +469,5 @@ class StreamingAggregator:
         from repro.checkpoint.ckpt import load_service_state
 
         self.join()
+        self._flat_cache = self._flat_src = self._pending_flat = None
         load_service_state(path, self)

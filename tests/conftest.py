@@ -12,6 +12,11 @@ except ModuleNotFoundError:
     settings = None
 else:
     settings.register_profile("ci", deadline=None, max_examples=25)
+    # the kernel-parity fuzz gate (scripts/ci.sh): derandomized so every
+    # run draws the same examples — a red CI is a real regression, never
+    # an unlucky draw; sized to keep the interpret-mode sweep ~30 s
+    settings.register_profile("kernel-ci", deadline=None, max_examples=20,
+                              derandomize=True)
     settings.load_profile("ci")
 
 collect_ignore: list = []

@@ -1,0 +1,207 @@
+"""Autotuner determinism and crash-safety (docs/KERNELS.md cache contract):
+
+* same inputs → same chosen config, within a process and across fresh
+  processes reading the same cache file;
+* corrupt or missing cache → defaults with a warning, never an exception;
+* kernel results are bit-identical whichever block size wins;
+* the cache write is atomic (no torn file, no leftover tmp).
+"""
+import json
+import os
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune
+from repro.kernels.autotune import (
+    DEFAULT_BLOCKS,
+    KernelConfig,
+    autotune as run_autotune,
+    cache_key,
+    default_cache_path,
+    get_config,
+    load_cache,
+    reload_cache,
+    save_cache,
+    shape_bucket,
+)
+from repro.kernels.ingest_agg import ingest_agg
+from repro.kernels.weighted_agg import weighted_agg
+
+
+def fake_timer(costs):
+    """Deterministic cost model: µs per block_d, no measurement noise."""
+    def timer(fn, repeats):
+        block = fn()
+        return costs[block]
+    return timer
+
+
+def make_call_stub(block_d):
+    return lambda: block_d  # the "kernel" just reports its block
+
+
+class TestCacheContract:
+    def test_missing_cache_is_silent_default(self, tmp_path):
+        path = str(tmp_path / "nope.json")
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            assert load_cache(path) == {}
+        cfg = get_config("ingest_agg", (8, 4096), jnp.float32, path=path)
+        assert cfg.block_d == DEFAULT_BLOCKS["ingest_agg"]
+        assert cfg.source == "default"
+
+    @pytest.mark.parametrize("garbage", [
+        "{not json", "[1, 2, 3]", "\x00\x01binary", ""])
+    def test_corrupt_cache_warns_never_raises(self, tmp_path, garbage):
+        path = str(tmp_path / "cache.json")
+        with open(path, "w") as fh:
+            fh.write(garbage)
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            assert load_cache(path) == {}
+        assert any(issubclass(w.category, RuntimeWarning) for w in caught)
+        reload_cache(path)
+        cfg = get_config("weighted_agg", (10, 1 << 20), jnp.float32, path=path)
+        assert cfg.block_d == DEFAULT_BLOCKS["weighted_agg"]
+
+    def test_entry_with_bad_block_degrades_to_default(self, tmp_path):
+        path = str(tmp_path / "cache.json")
+        key = cache_key("ingest_agg", (8, 4096), jnp.float32, backend="cpu")
+        save_cache({key: {"block_d": "huge"}}, path)
+        reload_cache(path)
+        cfg = get_config("ingest_agg", (8, 4096), jnp.float32,
+                         backend="cpu", path=path)
+        assert cfg.block_d == DEFAULT_BLOCKS["ingest_agg"]
+
+    def test_atomic_write_leaves_no_tmp(self, tmp_path):
+        path = str(tmp_path / "sub" / "cache.json")
+        save_cache({"k": {"block_d": 512}}, path)
+        assert json.load(open(path)) == {"k": {"block_d": 512}}
+        assert [f for f in os.listdir(os.path.dirname(path))
+                if ".tmp" in f] == []
+
+    def test_env_override_selects_path(self, tmp_path, monkeypatch):
+        path = str(tmp_path / "env.json")
+        monkeypatch.setenv(autotune.ENV_CACHE, path)
+        assert default_cache_path() == path
+
+    def test_shape_bucketing_shares_entries(self):
+        assert shape_bucket((300,)) == shape_bucket((303,)) == (512,)
+        key_a = cache_key("ingest_agg", (9, 300), jnp.float32, backend="cpu")
+        key_b = cache_key("ingest_agg", (16, 303), jnp.float32, backend="cpu")
+        assert key_a == key_b  # K 9→16, D 300/303→512
+
+
+class TestDeterminism:
+    COSTS = {512: 9.0, 1024: 3.0, 2048: 3.0, 4096: 7.0}
+
+    def _tune(self, path):
+        return run_autotune(
+            "ingest_agg", make_call_stub, (8, 4096), jnp.float32,
+            candidates=tuple(self.COSTS), timer=fake_timer(self.COSTS),
+            bytes_moved=8 * 4096 * 4, backend="cpu", path=path)
+
+    def test_tie_breaks_toward_smaller_block(self, tmp_path):
+        cfg = self._tune(str(tmp_path / "c.json"))
+        assert cfg.block_d == 1024  # 1024 and 2048 tie at 3.0 µs
+        assert cfg.source == "measured"
+
+    def test_repeat_run_hits_cache_verbatim(self, tmp_path):
+        path = str(tmp_path / "c.json")
+        first = self._tune(path)
+        again = self._tune(path)
+        assert again.source == "cache"
+        assert again.block_d == first.block_d
+        assert again.us == pytest.approx(first.us, rel=1e-6)
+
+    def test_fresh_process_reads_same_config(self, tmp_path):
+        """Cross-process determinism: a brand-new interpreter consulting
+        the same cache file lands on the identical block."""
+        path = str(tmp_path / "c.json")
+        mine = self._tune(path)
+        src = os.path.join(os.path.dirname(__file__), "..", "src")
+        out = subprocess.run(
+            [sys.executable, "-c",
+             "import jax.numpy as jnp\n"
+             "from repro.kernels.autotune import get_config\n"
+             f"cfg = get_config('ingest_agg', (8, 4096), jnp.float32, "
+             f"backend='cpu', path={path!r})\n"
+             "print(cfg.block_d, cfg.source)"],
+            env={**os.environ, "PYTHONPATH": src},
+            capture_output=True, text=True, check=True)
+        block, source = out.stdout.split()
+        assert int(block) == mine.block_d
+        assert source == "cache"
+
+    def test_failed_candidate_is_skipped_with_warning(self, tmp_path):
+        def timer(fn, repeats):
+            block = fn()
+            if block == 512:
+                raise RuntimeError("vmem overflow")
+            return float(block)
+        with pytest.warns(RuntimeWarning, match="block_d=512 failed"):
+            cfg = run_autotune(
+                "ingest_agg", make_call_stub, (8, 4096), jnp.float32,
+                candidates=(512, 1024), timer=timer, backend="cpu",
+                path=str(tmp_path / "c.json"))
+        assert cfg.block_d == 1024
+
+    def test_all_candidates_failing_degrades_to_default(self, tmp_path):
+        def timer(fn, repeats):
+            raise RuntimeError("no")
+        with pytest.warns(RuntimeWarning):
+            cfg = run_autotune(
+                "ingest_agg", make_call_stub, (8, 4096), jnp.float32,
+                candidates=(512,), timer=timer, backend="cpu",
+                path=str(tmp_path / "c.json"))
+        assert cfg.block_d == DEFAULT_BLOCKS["ingest_agg"]
+        assert cfg.source == "default"
+
+
+class TestBlockSizeInvariance:
+    """Results are bit-identical whichever config wins: block size only
+    partitions the output axis."""
+
+    def test_ingest_agg_bitwise_across_blocks(self):
+        rng = np.random.default_rng(0)
+        K, D = 6, 1000
+        x = jnp.asarray(rng.standard_normal((K, D)).astype(np.float32))
+        n = jnp.asarray(rng.integers(1, 50, K).astype(np.float32))
+        F = jnp.asarray(rng.uniform(0.5, 2.0, K).astype(np.float32))
+        G = jnp.asarray(rng.uniform(0.5, 2.0, K).astype(np.float32))
+        fb = jnp.asarray((rng.random(K) < 0.5).astype(np.float32))
+        outs = [
+            np.asarray(ingest_agg(x, None, n, F, G, fb, n_clients=32,
+                                  block_d=b, interpret=True))
+            for b in (128, 512, 4096)
+        ]
+        assert all((o == outs[0]).all() for o in outs[1:])
+
+    def test_weighted_agg_bitwise_across_blocks(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.standard_normal((5, 700)).astype(np.float32))
+        w = jnp.asarray(rng.uniform(0, 1, 5).astype(np.float32))
+        outs = [np.asarray(weighted_agg(x, w, block_d=b, interpret=True))
+                for b in (128, 1024)]
+        assert (outs[0] == outs[1]).all()
+
+
+class TestRooflineRows:
+    def test_rows_from_cache(self, tmp_path):
+        path = str(tmp_path / "c.json")
+        save_cache({
+            "ingest_agg|k8xd4096|float32|cpu": {
+                "kernel": "ingest_agg", "block_d": 1024, "us": 10.0,
+                "gbps": 100.0},
+            "no_gbps|k1xd1|float32|cpu": {"block_d": 512},
+        }, path)
+        rows = autotune.roofline_rows(path, hbm_bw=1e12)
+        assert len(rows) == 1
+        assert rows[0]["kernel"] == "ingest_agg"
+        assert rows[0]["pct_roofline"] == pytest.approx(10.0)

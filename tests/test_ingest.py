@@ -1,0 +1,204 @@
+"""Fused-ingestion regression gates (docs/KERNELS.md):
+
+* a fused serve round tracks the unfused batched round to ≤1e-5 on the
+  global model, for both FedQS strategies, dense and int8 streams, flat
+  and hierarchical services;
+* round *bookkeeping* — the §3.4 status table — is bit-identical with
+  fusion toggled off;
+* the fused path stacks the buffer exactly once per fire and reuses the
+  flat global between rounds (the ``_flat_cache`` handshake).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compress import ClientCompressor, compress_stream
+from repro.core import FedQSHyperParams, make_algorithm
+from repro.core.types import AggregationStrategy
+from repro.hier import HierarchicalService, Topology
+from repro.models import make_mlp_spec
+from repro.serve import KBuffer, StreamingAggregator, replay, synthetic_stream
+from repro.serve import batched as serve_batched
+
+KEY = jax.random.PRNGKey(0)
+REL_GATE = 1e-5
+
+
+def _rel_gap(a_tree, b_tree):
+    a = jnp.concatenate([l.reshape(-1) for l in jax.tree_util.tree_leaves(a_tree)])
+    b = jnp.concatenate([l.reshape(-1) for l in jax.tree_util.tree_leaves(b_tree)])
+    return float(jnp.linalg.norm(a - b) / jnp.maximum(jnp.linalg.norm(b), 1e-12))
+
+
+def _svc(algo, hp, params, n, *, fused, **kw):
+    return StreamingAggregator(make_algorithm(algo, hp), hp, params, n,
+                               batched=True, fused=fused, **kw)
+
+
+def _run_pair(algo, stream, params, n, *, hp=None, **kw):
+    hp = hp or FedQSHyperParams(buffer_k=8)
+    fused = _svc(algo, hp, params, n, fused=True, **kw)
+    plain = _svc(algo, hp, params, n, fused=False, **kw)
+    replay(fused, stream, flush=False)
+    replay(plain, stream, flush=False)
+    return fused, plain
+
+
+class TestServeFusedParity:
+    @pytest.mark.parametrize("algo", ["fedqs-sgd", "fedqs-avg"])
+    def test_dense_rounds_match_unfused(self, algo):
+        params = make_mlp_spec().init(KEY)
+        stream = list(synthetic_stream(params, 16, 48, seed=0))
+        fused, plain = _run_pair(algo, stream, params, 16)
+        assert fused.round == plain.round >= 6
+        gap = _rel_gap(fused.global_params, plain.global_params)
+        assert gap <= REL_GATE, f"{algo}: fused/unfused rel gap {gap:.3e}"
+
+    @pytest.mark.parametrize("algo", ["fedqs-sgd", "fedqs-avg"])
+    def test_table_bookkeeping_bitexact(self, algo):
+        """Fusion must not perturb Eq. 1/2: counts and sims bit-identical
+        with the toggle off — the table feeds client selection (Mod-1),
+        so even 1-ulp drift would fork the two services' futures."""
+        params = make_mlp_spec().init(KEY)
+        stream = list(synthetic_stream(params, 16, 48, seed=1))
+        fused, plain = _run_pair(algo, stream, params, 16)
+        np.testing.assert_array_equal(np.asarray(fused.table.counts),
+                                      np.asarray(plain.table.counts))
+        np.testing.assert_array_equal(np.asarray(fused.table.sims),
+                                      np.asarray(plain.table.sims))
+
+    def test_int8_stream_matches_unfused(self):
+        params = make_mlp_spec().init(KEY)
+        comp = ClientCompressor("int8", 16, seed=0)
+        base = list(synthetic_stream(params, 16, 48, seed=2))
+        stream = list(compress_stream(iter(base), comp,
+                                      strategy=AggregationStrategy.GRADIENT))
+        fused, plain = _run_pair("fedqs-sgd", stream, params, 16)
+        assert fused.round == plain.round >= 6
+        gap = _rel_gap(fused.global_params, plain.global_params)
+        assert gap <= REL_GATE, f"int8 fused/unfused rel gap {gap:.3e}"
+        np.testing.assert_array_equal(np.asarray(fused.table.counts),
+                                      np.asarray(plain.table.counts))
+
+    def test_interpret_kernel_matches_ref_mode(self):
+        """use_kernel=True routes the fused round through the interpret
+        Pallas body; it must agree with the jnp ref mode to the gate."""
+        params = make_mlp_spec().init(KEY)
+        stream = list(synthetic_stream(params, 8, 16, seed=3))
+        hp = FedQSHyperParams(buffer_k=8)
+        kern = _svc("fedqs-sgd", hp, params, 8, fused=True, use_kernel=True)
+        ref = _svc("fedqs-sgd", hp, params, 8, fused=True, use_kernel=False)
+        replay(kern, stream, flush=False)
+        replay(ref, stream, flush=False)
+        gap = _rel_gap(kern.global_params, ref.global_params)
+        assert gap <= REL_GATE
+
+
+class TestFusedMechanics:
+    def test_stacks_once_per_fire(self):
+        """The fused round makes exactly ONE stacked dispatch per fire —
+        the serve_timewindow regression (90 eager dispatches/fire) stays
+        fixed.  ``STACK_CALLS`` counts entries into stack_trees/encoded."""
+        params = make_mlp_spec().init(KEY)
+        stream = list(synthetic_stream(params, 16, 48, seed=4))
+        svc = _svc("fedqs-sgd", FedQSHyperParams(buffer_k=8), params, 16,
+                   fused=True)
+        before = dict(serve_batched.STACK_CALLS)
+        replay(svc, stream, flush=False)
+        calls = sum(serve_batched.STACK_CALLS.values()) - sum(before.values())
+        assert svc.round == 6
+        assert calls == svc.round, (
+            f"{calls} stack dispatches over {svc.round} rounds — "
+            "the fused path must stack each buffer exactly once")
+
+    def test_flat_cache_handshake(self):
+        params = make_mlp_spec().init(KEY)
+        stream = list(synthetic_stream(params, 8, 16, seed=5))
+        svc = _svc("fedqs-sgd", FedQSHyperParams(buffer_k=8), params, 8,
+                   fused=True)
+        assert svc._flat_cache is None and svc._pending_flat is None
+        replay(svc, stream, flush=False)
+        assert svc.round == 2
+        # after a fire: pending consumed, cache points at the *current*
+        # global (identity, not equality — a new params object must miss)
+        assert svc._pending_flat is None
+        assert svc._flat_cache is not None
+        assert svc._flat_src is svc.global_params
+        flat, _ = jax.flatten_util.ravel_pytree(svc.global_params)
+        np.testing.assert_array_equal(np.asarray(svc._flat_cache),
+                                      np.asarray(flat))
+
+    def test_restore_clears_flat_cache(self, tmp_path):
+        params = make_mlp_spec().init(KEY)
+        stream = list(synthetic_stream(params, 8, 24, seed=6))
+        svc = _svc("fedqs-sgd", FedQSHyperParams(buffer_k=8), params, 8,
+                   fused=True)
+        replay(svc, stream[:16], flush=False)
+        path = str(tmp_path / "ckpt")
+        svc.save(path)
+        replay(svc, stream[16:], flush=False)
+        assert svc._flat_cache is not None
+        svc.restore(path)
+        # the cache must not survive restore: global_params was replaced
+        # under it, and a stale flat would silently corrupt every
+        # subsequent fused round
+        assert svc._flat_cache is None and svc._flat_src is None
+        assert svc._pending_flat is None
+        # and the service still rounds correctly post-restore
+        fresh = _svc("fedqs-sgd", FedQSHyperParams(buffer_k=8), params, 8,
+                     fused=True)
+        replay(fresh, stream, flush=False)
+        replay(svc, stream[16:], flush=False)
+        gap = _rel_gap(svc.global_params, fresh.global_params)
+        assert gap <= REL_GATE
+
+    def test_fused_toggle_default_follows_batched(self):
+        params = make_mlp_spec().init(KEY)
+        hp = FedQSHyperParams(buffer_k=4)
+        assert StreamingAggregator(
+            make_algorithm("fedqs-sgd", hp), hp, params, 8,
+            batched=True)._fused
+        assert not StreamingAggregator(
+            make_algorithm("fedqs-sgd", hp), hp, params, 8)._fused
+
+
+class TestHierFusedParity:
+    def _hier(self, params, hp, *, fused):
+        return HierarchicalService(
+            make_algorithm("fedqs-sgd", hp), hp, params, 16,
+            Topology.from_spec("hier:4", 16),
+            edge_trigger=lambda e: KBuffer(2), fused=fused)
+
+    def test_int8_edge_rounds_match_unfused(self):
+        """The int8 edge keeps rows quantized up to the fused global
+        combine; toggling fusion off (eager dequant + host weights) must
+        land within the serve gate."""
+        params = make_mlp_spec().init(KEY)
+        hp = FedQSHyperParams(buffer_k=8)
+        comp = ClientCompressor("int8", 16, seed=0)
+        base = list(synthetic_stream(params, 16, 64, seed=7))
+        stream = list(compress_stream(iter(base), comp,
+                                      strategy=AggregationStrategy.GRADIENT))
+        fused = self._hier(params, hp, fused=True)
+        plain = self._hier(params, hp, fused=False)
+        fused.compressor = comp
+        plain.compressor = comp
+        replay(fused, stream)
+        replay(plain, stream)
+        assert fused.round == plain.round >= 4
+        gap = _rel_gap(fused.global_params, plain.global_params)
+        assert gap <= REL_GATE, f"hier int8 fused/unfused rel gap {gap:.3e}"
+        np.testing.assert_array_equal(np.asarray(fused.table.counts),
+                                      np.asarray(plain.table.counts))
+
+    def test_dense_rounds_match_unfused(self):
+        params = make_mlp_spec().init(KEY)
+        hp = FedQSHyperParams(buffer_k=8)
+        stream = list(synthetic_stream(params, 16, 64, seed=8))
+        fused = self._hier(params, hp, fused=True)
+        plain = self._hier(params, hp, fused=False)
+        replay(fused, stream)
+        replay(plain, stream)
+        gap = _rel_gap(fused.global_params, plain.global_params)
+        assert gap <= REL_GATE, f"hier dense fused/unfused rel gap {gap:.3e}"

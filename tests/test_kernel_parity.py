@@ -1,0 +1,236 @@
+"""Property-based kernel-parity harness: every ``repro.kernels.ops``
+dispatcher fuzzed against its ``repro.kernels.ref`` oracle in interpret
+mode (docs/KERNELS.md — the oracle contract).
+
+Strategies draw shapes from small curated grids (every distinct shape is
+a fresh interpret-mode compile, so an unbounded integer strategy would
+spend the whole budget tracing) and randomize *contents* through seeded
+numpy generators: zero and extreme weights, saturated int8 codes,
+out-of-range and empty segment ids, D far from any block multiple, K=1.
+
+Tolerance contract:
+
+* the fused ingestion ops are BIT-EXACT against their jitted oracles —
+  kernel body and oracle share the ``ingest_weights`` algebra and both
+  run under jit, so XLA lowers the same subgraph (see ref.py);
+* the older kernels keep their established allclose gates (their refs
+  are eager, so op-by-op rounding differs at ~1e-7).
+
+Run explicitly (the conftest guard skips collection when hypothesis is
+absent):  python -m pytest tests/test_kernel_parity.py -q \
+              --hypothesis-profile kernel-ci
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.ops import (
+    cosine_op,
+    dequant_agg_op,
+    ingest_agg_op,
+    ingest_segment_agg_op,
+    segment_agg_op,
+    similarity_stats_op,
+    weighted_agg_op,
+    window_decode_attention_op,
+)
+
+# shape grids: interesting, cheap, and few enough that interpret-mode
+# compiles stay bounded.  D values straddle nothing-special (64), odd
+# primes (257), and D ≫/≪ any block multiple boundary for the default
+# 2048/4096 blocks (every D here exercises the partial-block path).
+KS = st.sampled_from([1, 2, 3, 4, 7, 8, 12])
+DS = st.sampled_from([1, 5, 64, 100, 257, 500, 700])
+SEEDS = st.integers(0, 2**31 - 1)
+WEIGHT_REGIMES = st.sampled_from(["normal", "zero", "extreme"])
+
+
+def _weights(rng, k, regime):
+    if regime == "zero":
+        return np.zeros(k, np.float32)
+    if regime == "extreme":
+        return rng.choice([1e-6, 1e6, 0.0], k).astype(np.float32)
+    return rng.uniform(0.0, 2.0, k).astype(np.float32)
+
+
+def _meta(rng, k, regime, n_clients=64):
+    """Eq. §3.4 per-row metadata in (and beyond) serving ranges."""
+    if regime == "zero":
+        n = np.zeros(k, np.float32)          # all-padding buffer
+        fb = np.zeros(k, np.float32)
+    elif regime == "extreme":
+        n = rng.choice([0.0, 1.0, 1e6], k).astype(np.float32)
+        fb = (rng.random(k) < 0.8).astype(np.float32)
+    else:
+        n = rng.integers(1, 200, k).astype(np.float32)
+        fb = (rng.random(k) < 0.5).astype(np.float32)
+    F = rng.uniform(0.2, 5.0, k).astype(np.float32)
+    G = rng.uniform(0.2, 5.0, k).astype(np.float32)
+    return n, F, G, fb
+
+
+class TestWeightedAggFuzz:
+    @given(KS, DS, SEEDS, WEIGHT_REGIMES)
+    @settings(deadline=None)
+    def test_matches_ref(self, K, D, seed, regime):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((K, D)).astype(np.float32))
+        w = jnp.asarray(_weights(rng, K, regime))
+        got = weighted_agg_op(x, w)
+        want = ref.weighted_agg_ref(x, w)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+class TestDequantAggFuzz:
+    @given(KS, st.sampled_from([(1, 8), (2, 64), (4, 100), (3, 257)]),
+           SEEDS, WEIGHT_REGIMES, st.booleans())
+    @settings(deadline=None)
+    def test_matches_ref(self, K, layout, seed, regime, saturate):
+        nc, chunk = layout
+        D = nc * chunk
+        rng = np.random.default_rng(seed)
+        q = rng.integers(-128, 128, (K, D)).astype(np.int8)
+        if saturate:
+            q[:, : min(chunk, D)] = rng.choice([-128, 127])
+        scales = (rng.random((K, nc)).astype(np.float32)) * 1e-2
+        w = jnp.asarray(_weights(rng, K, regime))
+        got = dequant_agg_op(jnp.asarray(q), jnp.asarray(scales), w,
+                             chunk=chunk)
+        want = ref.dequant_agg_ref(jnp.asarray(q), jnp.asarray(scales), w)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+class TestSegmentAggFuzz:
+    @given(KS, DS, st.sampled_from([1, 2, 4, 8]), SEEDS, WEIGHT_REGIMES)
+    @settings(deadline=None)
+    def test_matches_ref(self, K, D, G, seed, regime):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((K, D)).astype(np.float32))
+        w = jnp.asarray(_weights(rng, K, regime))
+        # ids may hit G (out of range → dropped); some segments stay empty
+        seg = jnp.asarray(rng.integers(0, G + 1, K).astype(np.int32))
+        got = segment_agg_op(x, w, seg, num_segments=G)
+        want = ref.segment_agg_ref(x, w, seg, G)
+        assert got.shape == (G, D)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+class TestIngestAggFuzz:
+    """The fused ingestion op is bit-exact against its jitted oracle."""
+
+    @given(KS, DS, SEEDS, WEIGHT_REGIMES, st.booleans(), st.booleans())
+    @settings(deadline=None)
+    def test_dense_bitexact(self, K, D, seed, regime, normalize, bucketed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((K, D)).astype(np.float32))
+        n, F, G, fb = _meta(rng, K, regime)
+        # bucketed: trailing rows are padding (n = fb = 0), logical k < K
+        k = None
+        if bucketed and K > 1:
+            n[-1] = fb[-1] = 0.0
+            k = jnp.float32(K - 1)
+        args = (x, None, jnp.asarray(n), jnp.asarray(F), jnp.asarray(G),
+                jnp.asarray(fb), k)
+        got = ingest_agg_op(*args, n_clients=64, normalize=normalize)
+        want = ref.ingest_agg_ref(*args, n_clients=64, normalize=normalize)
+        assert got.shape == (D,)
+        assert jnp.array_equal(got, want), (
+            f"ingest_agg diverged from oracle: K={K} D={D} seed={seed} "
+            f"regime={regime} normalize={normalize} "
+            f"max|Δ|={float(jnp.abs(got - want).max()):.3e}")
+
+    @given(KS, st.sampled_from([(1, 8), (2, 64), (4, 100)]), SEEDS,
+           WEIGHT_REGIMES, st.booleans())
+    @settings(deadline=None)
+    def test_int8_bitexact(self, K, layout, seed, regime, saturate):
+        nc, chunk = layout
+        D = nc * chunk
+        rng = np.random.default_rng(seed)
+        q = rng.integers(-128, 128, (K, D)).astype(np.int8)
+        if saturate:
+            q[:, : min(chunk, D)] = rng.choice([-128, 127])
+        scales = rng.random((K, nc)).astype(np.float32) * 1e-2
+        n, F, G, fb = _meta(rng, K, regime)
+        args = (jnp.asarray(q), jnp.asarray(scales), jnp.asarray(n),
+                jnp.asarray(F), jnp.asarray(G), jnp.asarray(fb), None)
+        got = ingest_agg_op(*args, chunk=chunk, n_clients=64)
+        want = ref.ingest_agg_ref(*args, n_clients=64)
+        assert jnp.array_equal(got, want), (
+            f"ingest_agg int8 diverged: K={K} nc={nc} chunk={chunk} "
+            f"seed={seed} regime={regime}")
+
+
+class TestIngestSegmentAggFuzz:
+    @given(KS, DS, st.sampled_from([1, 2, 4, 8]), SEEDS, WEIGHT_REGIMES)
+    @settings(deadline=None)
+    def test_dense_bitexact(self, K, D, G, seed, regime):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((K, D)).astype(np.float32))
+        n, F, Gr, fb = _meta(rng, K, regime)
+        seg = jnp.asarray(rng.integers(0, G + 1, K).astype(np.int32))
+        args = (x, None, seg, jnp.asarray(n), jnp.asarray(F),
+                jnp.asarray(Gr), jnp.asarray(fb), None)
+        got = ingest_segment_agg_op(*args, num_segments=G, n_clients=64)
+        want = ref.ingest_segment_agg_ref(*args, num_segments=G,
+                                          n_clients=64)
+        assert got.shape == (G, D)
+        assert jnp.array_equal(got, want), (
+            f"ingest_segment_agg diverged: K={K} D={D} G={G} seed={seed} "
+            f"regime={regime}")
+
+    @given(st.sampled_from([2, 4, 8]), st.sampled_from([(2, 64), (4, 100)]),
+           SEEDS)
+    @settings(deadline=None)
+    def test_int8_fb_zero_equals_plain_weights(self, K, layout, seed):
+        """fb=0 + normalize=False ⇒ weights are exactly n_samples — the
+        tier-edge contract ``hier.partial._materialize_quant`` relies on."""
+        nc, chunk = layout
+        D = nc * chunk
+        rng = np.random.default_rng(seed)
+        q = rng.integers(-128, 128, (K, D)).astype(np.int8)
+        scales = rng.random((K, nc)).astype(np.float32) * 1e-2
+        w = rng.uniform(0.5, 3.0, K).astype(np.float32)
+        z = jnp.zeros(K, jnp.float32)
+        seg = jnp.asarray(rng.integers(0, 2, K).astype(np.int32))
+        got = ingest_segment_agg_op(
+            jnp.asarray(q), jnp.asarray(scales), seg, jnp.asarray(w),
+            z, z, z, None, num_segments=2, chunk=chunk, n_clients=1,
+            normalize=False)
+        want = ref.ingest_segment_agg_ref(
+            jnp.asarray(q), jnp.asarray(scales), seg, jnp.asarray(w),
+            z, z, z, None, num_segments=2, n_clients=1, normalize=False)
+        assert jnp.array_equal(got, want)
+
+
+class TestWindowAttentionFuzz:
+    @given(st.sampled_from([(1, 4, 4, 32, 16), (2, 8, 2, 64, 32),
+                            (3, 4, 1, 32, 16)]),
+           st.integers(1, 32), SEEDS)
+    @settings(deadline=None)
+    def test_matches_ref(self, dims, valid, seed):
+        B, H, KV, W, dh = dims
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.standard_normal((B, H, dh)).astype(np.float32))
+        k = jnp.asarray(rng.standard_normal((B, W, KV, dh)).astype(np.float32))
+        v = jnp.asarray(rng.standard_normal((B, W, KV, dh)).astype(np.float32))
+        vl = jnp.asarray(min(valid, W))
+        got = window_decode_attention_op(q, k, v, vl)
+        want = ref.window_decode_attention_ref(q, k, v, vl)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+class TestSimilarityFuzz:
+    @given(DS, SEEDS)
+    @settings(deadline=None)
+    def test_stats_match_ref(self, D, seed):
+        rng = np.random.default_rng(seed)
+        a = jnp.asarray(rng.standard_normal(D).astype(np.float32))
+        b = jnp.asarray(rng.standard_normal(D).astype(np.float32))
+        np.testing.assert_allclose(similarity_stats_op(a, b),
+                                   ref.fused_similarity_stats_ref(a, b),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(cosine_op(a, b),
+                                   ref.cosine_from_stats_ref(a, b),
+                                   rtol=1e-4, atol=1e-5)
