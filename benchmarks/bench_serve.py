@@ -239,6 +239,59 @@ def bench_telemetry(params, args):
             f"first diff at {diff})")
 
 
+def bench_straggler_adaptive(params, args):
+    """Adaptive-deadline gate (docs/ROBUSTNESS.md): the same
+    straggler-heavy stream replays through a fixed ``TimeWindow`` and an
+    ``AdaptiveTimeWindow`` under drop-mode staleness admission; the
+    adaptive service must drop **≥30% fewer** updates.
+
+    The adaptive trigger runs with ``min_window = window`` here: the
+    point of adaptation on this workload is *stretching* the deadline so
+    straggler deliveries land inside their round — allowing it to also
+    contract below the operator deadline early on (before any slow
+    delivery has physically arrived to be observed) would race the round
+    counter ahead on fast-only history, the failure mode the gate exists
+    to catch.
+    """
+    from repro.scenarios import get_scenario
+    from repro.serve import AdaptiveTimeWindow, scenario_stream
+
+    hp = FedQSHyperParams(buffer_k=args.buffer_k)
+    n_clients, n_updates = 64, max(args.updates, 600)
+    stream = list(scenario_stream(params, get_scenario("straggler-heavy"),
+                                  n_clients, n_updates, seed=args.seed))
+
+    def run(trigger):
+        svc = StreamingAggregator(
+            make_algorithm("fedqs-sgd", hp), hp, params, n_clients,
+            trigger=trigger,
+            admission=StalenessAdmission(tau_max=2, mode="drop"),
+            batched=True)
+        t0 = time.perf_counter()
+        replay(svc, iter(stream))
+        return svc, time.perf_counter() - t0
+
+    fixed, _ = run(TimeWindow(args.window, min_updates=2))
+    adaptive, dt = run(AdaptiveTimeWindow(args.window, min_updates=2,
+                                          min_window=args.window))
+    reduction = 1.0 - adaptive.stats.dropped / max(fixed.stats.dropped, 1)
+    emit(
+        "serve_straggler_adaptive",
+        dt / max(adaptive.stats.submitted, 1) * 1e6,
+        fixed_dropped=fixed.stats.dropped,
+        adaptive_dropped=adaptive.stats.dropped,
+        drop_reduction_pct=f"{reduction * 100:.1f}",
+        fixed_rounds=fixed.stats.rounds,
+        adaptive_rounds=adaptive.stats.rounds,
+        gate=bool(reduction >= 0.30),
+    )
+    if reduction < 0.30:
+        raise SystemExit(
+            f"adaptive-deadline gate: drop reduction {reduction * 100:.1f}% "
+            f"< 30% (fixed={fixed.stats.dropped}, "
+            f"adaptive={adaptive.stats.dropped})")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--updates", type=int, default=400)
@@ -263,6 +316,7 @@ def main(argv=None):
     bench_trigger("serve_kbuffer_batched", KBuffer(k), params, args, batched=True)
     bench_trigger("serve_kbuffer_admission", KBuffer(k), params, args,
                   admission=StalenessAdmission(tau_max=2, mode="drop"))
+    bench_straggler_adaptive(params, args)
     bench_parity(args)
     bench_telemetry(params, args)
 

@@ -103,6 +103,41 @@ print('BENCH_ingest.json OK:', len(rows), 'rows')"
   $PY examples/compressed_stream.py --smoke
   $PY benchmarks/bench_compress.py --fast
 
+  echo "== smoke: chaos / straggler-adaptive serving =="
+  # a seeded 200-client straggler-heavy stream through the adaptive-
+  # deadline service, and a flaky-battery stream that kills devices
+  # mid-round: both must terminate (no deadlock) and every robustness
+  # event must parse against the documented taxonomy
+  CHAOSDIR=$(mktemp -d)
+  $PY -m repro.launch.serve --safl-stream --scenario straggler-heavy \
+      --clients 200 --updates 400 --trigger adaptive --tau-max 2 \
+      --telemetry "$CHAOSDIR/straggler.jsonl"
+  $PY -m repro.launch.serve --safl-stream --scenario flaky-battery \
+      --clients 64 --updates 150 --telemetry "$CHAOSDIR/flaky.jsonl"
+  $PY - "$CHAOSDIR" <<'EOF'
+import json, sys, os
+d = sys.argv[1]
+sys.path.insert(0, "src")
+from repro.telemetry import EVENT_TYPES
+for ev in ("client-dropped", "partial-admitted", "deadline-adapted"):
+    assert ev in EVENT_TYPES, f"{ev} missing from the event taxonomy"
+def load(name):
+    recs = [json.loads(l) for l in open(os.path.join(d, name)) if l.strip()]
+    unknown = {r["e"] for r in recs} - set(EVENT_TYPES)
+    assert not unknown, f"{name}: events outside the taxonomy: {unknown}"
+    return recs
+strag = load("straggler.jsonl")
+kinds = {r["e"] for r in strag}
+assert "partial-admitted" in kinds, "straggler run admitted no partial work"
+assert "deadline-adapted" in kinds, "adaptive trigger never re-planned"
+flaky = load("flaky.jsonl")
+drops = [r for r in flaky if r["e"] == "client-dropped"]
+assert drops, "flaky-battery run dropped no clients"
+print(f"chaos smoke OK ({len(strag)} straggler events, "
+      f"{len(drops)} mid-round drops)")
+EOF
+  rm -rf "$CHAOSDIR"
+
   echo "== smoke: hierarchical aggregation plane =="
   # 2-tier, 200 clients: segment-kernel exactness + trigger parity vs
   # the flat service (the gates exit non-zero on divergence)

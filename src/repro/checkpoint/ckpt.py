@@ -136,6 +136,7 @@ def save_service_state(path: str, service) -> None:
             "accepted": service.stats.accepted,
             "dropped": service.stats.dropped,
             "downweighted": service.stats.downweighted,
+            "partial": getattr(service.stats, "partial", 0),
             "rounds": service.stats.rounds,
         },
         "trigger": service.trigger.describe(),
@@ -200,6 +201,14 @@ def save_hier_state(path: str, service) -> None:
                 [getattr(u, name) for u in edge.buffer], np.float32)
         arrays[f"edge{e}_feedback"] = np.asarray(
             [bool(u.feedback) for u in edge.buffer], bool)
+        # device-state extensions (docs/ROBUSTNESS.md): partial-work scale
+        # and pre-latency send time ride the buffered updates
+        arrays[f"edge{e}_completed_fraction"] = np.asarray(
+            [float(getattr(u, "completed_fraction", 1.0)) for u in edge.buffer],
+            np.float32)
+        arrays[f"edge{e}_sent_at"] = np.asarray(
+            [float(getattr(u, "sent_at", -1.0)) for u in edge.buffer],
+            np.float64)
         manifest["edges"][str(e)] = len(edge.buffer)
 
     pending = [("global", -1, p) for p in service._ingest]
@@ -213,6 +222,8 @@ def save_hier_state(path: str, service) -> None:
         arrays[f"p{j}_sims"] = p.sims
         arrays[f"p{j}_feedback"] = p.feedback
         arrays[f"p{j}_stale_rounds"] = p.stale_rounds
+        if p.completed is not None:
+            arrays[f"p{j}_completed"] = p.completed
         manifest["partials"].append({
             "where": where, "node": node, "tier": p.tier,
             "node_id": p.node_id, "sum_w": p.sum_w, "fired_at": p.fired_at,
@@ -280,6 +291,12 @@ def load_hier_state(path: str, service) -> None:
                 speed_f=float(arrays[f"edge{e}_speed_f"][i]),
                 delta=tree if strategy is AggregationStrategy.GRADIENT else None,
                 params=tree if strategy is not AggregationStrategy.GRADIENT else None,
+                # pre-device-state checkpoints lack these keys: all-complete
+                completed_fraction=(
+                    float(arrays[f"edge{e}_completed_fraction"][i])
+                    if f"edge{e}_completed_fraction" in arrays else 1.0),
+                sent_at=(float(arrays[f"edge{e}_sent_at"][i])
+                         if f"edge{e}_sent_at" in arrays else -1.0),
             ))
     service._ingest = []
     service._ingest_members = 0
@@ -295,6 +312,8 @@ def load_hier_state(path: str, service) -> None:
             sims=np.asarray(arrays[f"p{j}_sims"], np.float32),
             feedback=np.asarray(arrays[f"p{j}_feedback"], bool),
             stale_rounds=np.asarray(arrays[f"p{j}_stale_rounds"], np.int64),
+            completed=(np.asarray(arrays[f"p{j}_completed"], np.float32)
+                       if f"p{j}_completed" in arrays else None),
             fired_at=float(meta["fired_at"]),
             sum_wx=jnp.asarray(arrays[f"p{j}_sum_wx"]),
         )

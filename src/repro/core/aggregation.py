@@ -99,11 +99,21 @@ def aggregation_weights(
     G: jnp.ndarray,           # f32[K] — s̄/s_i
     K: int,
     N: int,
+    completed: jnp.ndarray = None,  # f32[K] — completed_fraction ∈ (0,1]
 ) -> jnp.ndarray:
-    """Normalized p over the buffer (vector form usable inside jit)."""
+    """Normalized p over the buffer (vector form usable inside jit).
+
+    ``completed`` scales each row's (pre-normalization) weight by the
+    fraction of local work the client actually finished (partial-update
+    admission, docs/ROBUSTNESS.md).  ``None`` skips the multiply — since
+    ``x * 1.0`` is IEEE-exact, passing all-ones is bit-identical, but the
+    ``None`` path keeps legacy callers on the original op sequence.
+    """
     n = jnp.maximum(jnp.sum(n_samples), 1)
     p = n_samples.astype(jnp.float32) / n
     p = jnp.where(feedback, feedback_weight(F, G, K, N), p)
+    if completed is not None:
+        p = p * completed.astype(jnp.float32)
     return p / jnp.maximum(jnp.sum(p), 1e-12)
 
 
@@ -167,7 +177,11 @@ def server_aggregate(
 
     n_samples = jnp.asarray([u.n_samples for u in buffer], jnp.int32)
     fb = jnp.asarray([bool(u.feedback) and hp.use_feedback for u in buffer])
-    p = aggregation_weights(n_samples, fb, F, G, K, n_clients)
+    cfs = [float(getattr(u, "completed_fraction", 1.0)) for u in buffer]
+    completed = (jnp.asarray(cfs, jnp.float32)
+                 if any(c != 1.0 for c in cfs) else None)
+    p = aggregation_weights(n_samples, fb, F, G, K, n_clients,
+                            completed=completed)
 
     if strategy is AggregationStrategy.GRADIENT:
         new_global = aggregate_gradients(

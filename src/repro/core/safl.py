@@ -170,6 +170,15 @@ class SAFLEngine:
                 "are fine); dynamic events and arrival processes are "
                 "semi-asynchronous features"
             )
+        if getattr(scenario, "device", None) is not None:
+            # the per-client event loop has no schedule-time outcome hook —
+            # refuse rather than silently run the scenario minus its device
+            # model (docs/ROBUSTNESS.md)
+            raise ValueError(
+                f"scenario {scenario.name!r} carries a device-state model, "
+                "which the event-driven engine does not simulate — run it "
+                "through CohortEngine or serve.scenario_stream instead"
+            )
         self.scenario = scenario
         self.dynamics = dynamics  # kept for introspection/back-compat
 

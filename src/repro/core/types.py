@@ -114,6 +114,13 @@ class Update:
     speed_f: float                    # f_i at upload time
     delta: Params = None              # Σ_e ΔF (momentum-augmented pseudo-gradient)
     params: Params = None             # w_i (model aggregation payload)
+    # device-state extensions (docs/ROBUSTNESS.md).  completed_fraction is
+    # the share of local work actually finished before upload (1.0 = the
+    # classic complete update; admission rejects <= 0); sent_at is the
+    # client-side upload timestamp on the service's virtual clock (-1 =
+    # unknown), letting adaptive triggers observe true delivery latency.
+    completed_fraction: float = 1.0
+    sent_at: float = -1.0
 
 
 @dataclass

@@ -52,6 +52,7 @@ class MemberRef:
     stale_round: int
     similarity: float
     feedback: bool
+    completed_fraction: float = 1.0
 
 
 @dataclass
@@ -76,6 +77,9 @@ class PartialAggregate:
     sims: np.ndarray              # f32[M]
     feedback: np.ndarray          # bool[M]
     stale_rounds: np.ndarray      # i64[M]
+    # per-member completed_fraction (partial local work); None = all 1.0 —
+    # the legacy wire format, kept so old checkpoints restore unchanged
+    completed: Optional[np.ndarray] = None  # f32[M]
     fired_at: float = 0.0
     sum_wx: Optional[jnp.ndarray] = None          # f32[D], materialized
     rows: Optional[jnp.ndarray] = field(default=None, repr=False)  # f32[M, D]
@@ -98,12 +102,18 @@ class PartialAggregate:
             return 0
         return int(current_round - int(self.stale_rounds.min()))
 
+    def completed_or_ones(self) -> np.ndarray:
+        if self.completed is None:
+            return np.ones(len(self.cids), np.float32)
+        return self.completed
+
     def members(self) -> List[MemberRef]:
         return [
-            MemberRef(int(c), int(n), int(t), float(s), bool(f))
-            for c, n, t, s, f in zip(self.cids, self.n_samples,
-                                     self.stale_rounds, self.sims,
-                                     self.feedback)
+            MemberRef(int(c), int(n), int(t), float(s), bool(f), float(cf))
+            for c, n, t, s, f, cf in zip(self.cids, self.n_samples,
+                                         self.stale_rounds, self.sims,
+                                         self.feedback,
+                                         self.completed_or_ones())
         ]
 
     def materialized(self) -> jnp.ndarray:
@@ -244,6 +254,11 @@ def merge(partials: Sequence[PartialAggregate], *, tier: str, node_id: int,
         raise ValueError("cannot merge an empty partial buffer")
     materialize(partials, use_kernel=use_kernel)
     stack = jnp.stack([p.sum_wx for p in partials])
+    # keep the legacy None form unless some member actually reported
+    # partial work — associativity and old-checkpoint parity both hold
+    completed = None
+    if any(p.completed is not None for p in partials):
+        completed = np.concatenate([p.completed_or_ones() for p in partials])
     return PartialAggregate(
         tier=tier,
         node_id=node_id,
@@ -253,6 +268,7 @@ def merge(partials: Sequence[PartialAggregate], *, tier: str, node_id: int,
         sims=np.concatenate([p.sims for p in partials]),
         feedback=np.concatenate([p.feedback for p in partials]),
         stale_rounds=np.concatenate([p.stale_rounds for p in partials]),
+        completed=completed,
         fired_at=fired_at,
         sum_wx=jnp.sum(stack, axis=0),
     )
@@ -283,9 +299,11 @@ class MemberView(Sequence):
         # generator over the metadata arrays — no per-partial list
         # materialization on the trigger-evaluation hot path
         for p in self._partials:
-            for c, n, t, s, f in zip(p.cids, p.n_samples, p.stale_rounds,
-                                     p.sims, p.feedback):
-                yield MemberRef(int(c), int(n), int(t), float(s), bool(f))
+            for c, n, t, s, f, cf in zip(p.cids, p.n_samples, p.stale_rounds,
+                                         p.sims, p.feedback,
+                                         p.completed_or_ones()):
+                yield MemberRef(int(c), int(n), int(t), float(s), bool(f),
+                                float(cf))
 
     def __getitem__(self, idx):
         if isinstance(idx, slice):

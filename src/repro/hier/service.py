@@ -70,7 +70,7 @@ def _default_edge_trigger(node_id: int) -> TriggerPolicy:
 
 
 @functools.partial(jax.jit, static_argnames=("n_clients", "grad"))
-def _fused_partial_combine(rows, counts, tsims, cids, sims, n, fb, k,
+def _fused_partial_combine(rows, counts, tsims, cids, sims, n, fb, cf, k,
                            onehot, inv_sum_w, flat_g, eta_g, ratio_clip,
                            *, n_clients, grad):
     """The fused global-stage combine: member-level Eq. §3.4 weights →
@@ -87,7 +87,7 @@ def _fused_partial_combine(rows, counts, tsims, cids, sims, n, fb, k,
     Kb = cids.shape[0]
     col = lambda v: v.reshape(Kb, 1)
     p = ingest_weights(col(n), col(F), col(G), col(fb), k,
-                       n_clients=n_clients, normalize=True)
+                       n_clients=n_clients, normalize=True, cf=col(cf))
     w_part = jnp.dot(onehot, p)[:, 0] * inv_sum_w
     flat = jnp.dot(w_part[None, :], rows,
                    preferred_element_type=jnp.float32)[0]
@@ -274,11 +274,16 @@ class HierarchicalService(StreamingAggregator):
         """
         n_samples = np.concatenate(
             [p.n_samples for p in batch]).astype(np.float32)
+        has_partial = any(p.completed is not None for p in batch)
+        cf = (np.concatenate([p.completed_or_ones() for p in batch])
+              if has_partial else None)
         if not isinstance(self.algo, FedQS):
             # the algorithm's own weighting over the member view —
             # n-proportional for the base class, uniform for DeFedAvg
             p = np.asarray(self.algo._base_weights(list(MemberView(batch))),
                            np.float32)
+            if cf is not None:
+                p = p * cf
             return p / max(p.sum(), np.float32(1e-12))
         hp = self.hp
         sims = np.concatenate([p.sims for p in batch]).astype(np.float32)
@@ -290,11 +295,14 @@ class HierarchicalService(StreamingAggregator):
                     1.0 / hp.ratio_clip, hp.ratio_clip).astype(np.float32)
         G = np.clip(max(s_bar, 1e-6) / np.maximum(sims, 1e-6),
                     1.0 / hp.ratio_clip, hp.ratio_clip).astype(np.float32)
-        # aggregation_weights (Eq. §3.4) on the numpy backend
+        # aggregation_weights (Eq. §3.4) on the numpy backend; cf scales
+        # the pre-normalization weight exactly as on the flat service
         K, N = len(cids), self.n_clients
         p = n_samples / max(n_samples.sum(), 1)
         w_fb = feedback_weight(F, G, K, N, xp=np)
         p = np.where(fb, w_fb.astype(np.float32), p)
+        if cf is not None:
+            p = p * cf
         return p / max(p.sum(), np.float32(1e-12))
 
     def _dispatch_partials(self, batch: List[PartialAggregate]):
@@ -371,6 +379,8 @@ class HierarchicalService(StreamingAggregator):
         cids_b[:K] = cids
         sims_b = np.ones(Kb, np.float32)
         sims_b[:K] = sims
+        cf_b = np.ones(Kb, np.float32)  # pad rows carry cf = 1.0
+        cf_b[:K] = np.concatenate([p.completed_or_ones() for p in batch])
         part_idx = np.repeat(np.arange(P), [p.n_members for p in batch])
         onehot = np.zeros((Pb, Kb), np.float32)
         onehot[part_idx, np.arange(K)] = 1.0
@@ -388,7 +398,7 @@ class HierarchicalService(StreamingAggregator):
         strategy = getattr(self.algo, "strategy", AggregationStrategy.MODEL)
         new_flat = _fused_partial_combine(
             rows, new_table.counts, new_table.sims, cids_b, sims_b, n, fb,
-            jnp.float32(K), onehot, inv_sum_w, flat_g,
+            cf_b, jnp.float32(K), onehot, inv_sum_w, flat_g,
             jnp.float32(self.hp.eta_g), jnp.float32(self.hp.ratio_clip),
             n_clients=self.n_clients,
             grad=strategy is AggregationStrategy.GRADIENT)

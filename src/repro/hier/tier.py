@@ -105,6 +105,16 @@ class EdgeAggregator(TierAggregator):
 
     def _reduce(self, batch: List[Update], now: float) -> PartialAggregate:
         weights = np.asarray([u.n_samples for u in batch], np.float32)
+        cfs = np.asarray(
+            [float(getattr(u, "completed_fraction", 1.0)) for u in batch],
+            np.float32)
+        has_partial = bool((cfs != 1.0).any())
+        if has_partial:
+            # partial local work scales the member's row weight: the edge
+            # reduces with w = n_i·cf_i, so Σw·x and Σw both carry the
+            # attenuation upward (docs/ROBUSTNESS.md); all-complete
+            # batches keep the legacy arrays bit-identical
+            weights = weights * cfs
         partial = PartialAggregate(
             tier=self.tier,
             node_id=self.node_id,
@@ -114,6 +124,7 @@ class EdgeAggregator(TierAggregator):
             sims=np.asarray([u.similarity for u in batch], np.float32),
             feedback=np.asarray([bool(u.feedback) for u in batch], bool),
             stale_rounds=np.asarray([u.stale_round for u in batch], np.int64),
+            completed=cfs if has_partial else None,
             fired_at=now,
         )
         payloads = [self._payload(u) for u in batch]

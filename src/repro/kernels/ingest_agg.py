@@ -44,18 +44,21 @@ BLOCK_D = 4096          # dense f32 tiles: matches weighted_agg
 BLOCK_D_SEGMENT = 2048  # segment variant carries a [G, blk] output tile too
 
 
-def _fold(k_ref, n_ref, F_ref, G_ref, fb_ref, *, n_clients, normalize):
+def _fold(k_ref, n_ref, F_ref, G_ref, fb_ref, cf_ref, *, n_clients,
+          normalize):
     # [K, 1] metadata columns → [K, 1] reduction weights, recomputed per
-    # grid step (K-length VPU ops — free next to the K×blk matmul)
+    # grid step (K-length VPU ops — free next to the K×blk matmul).  The
+    # completed-fraction column is always carried: all-ones for complete
+    # updates (``x * 1.0`` is IEEE-exact, so legacy bits are unchanged).
     return ingest_weights(
         n_ref[...], F_ref[...], G_ref[...], fb_ref[...], k_ref[0, 0],
-        n_clients=n_clients, normalize=normalize,
+        n_clients=n_clients, normalize=normalize, cf=cf_ref[...],
     )
 
 
-def _ingest_dense_kernel(k_ref, n_ref, F_ref, G_ref, fb_ref, x_ref, o_ref,
-                         *, n_clients, normalize):
-    p = _fold(k_ref, n_ref, F_ref, G_ref, fb_ref,
+def _ingest_dense_kernel(k_ref, n_ref, F_ref, G_ref, fb_ref, cf_ref, x_ref,
+                         o_ref, *, n_clients, normalize):
+    p = _fold(k_ref, n_ref, F_ref, G_ref, fb_ref, cf_ref,
               n_clients=n_clients, normalize=normalize)
     o_ref[...] = jnp.dot(
         p.T, x_ref[...].astype(jnp.float32),
@@ -63,9 +66,9 @@ def _ingest_dense_kernel(k_ref, n_ref, F_ref, G_ref, fb_ref, x_ref, o_ref,
     )
 
 
-def _ingest_quant_kernel(k_ref, n_ref, F_ref, G_ref, fb_ref, s_ref, q_ref,
-                         o_ref, *, n_clients, normalize):
-    p = _fold(k_ref, n_ref, F_ref, G_ref, fb_ref,
+def _ingest_quant_kernel(k_ref, n_ref, F_ref, G_ref, fb_ref, cf_ref, s_ref,
+                         q_ref, o_ref, *, n_clients, normalize):
+    p = _fold(k_ref, n_ref, F_ref, G_ref, fb_ref, cf_ref,
               n_clients=n_clients, normalize=normalize)
     K, blk = q_ref.shape
     nc = s_ref.shape[1]
@@ -74,16 +77,17 @@ def _ingest_quant_kernel(k_ref, n_ref, F_ref, G_ref, fb_ref, s_ref, q_ref,
     o_ref[...] = jnp.dot(p.T, x, preferred_element_type=jnp.float32)
 
 
-def _meta_cols(q, n_samples, F, G, fb, k):
+def _meta_cols(q, n_samples, F, G, fb, k, cf):
     K = q.shape[0]
     col = lambda v: jnp.asarray(v, jnp.float32).reshape(K, 1)
     k = jnp.float32(K) if k is None else jnp.asarray(k, jnp.float32)
-    return k.reshape(1, 1), col(n_samples), col(F), col(G), col(fb)
+    cf_col = jnp.ones((K, 1), jnp.float32) if cf is None else col(cf)
+    return k.reshape(1, 1), col(n_samples), col(F), col(G), col(fb), cf_col
 
 
 @functools.partial(jax.jit, static_argnames=(
     "chunk", "n_clients", "normalize", "block_d", "interpret"))
-def ingest_agg(q: jax.Array, scales, n_samples, F, G, fb, k=None, *,
+def ingest_agg(q: jax.Array, scales, n_samples, F, G, fb, k=None, cf=None, *,
                chunk: int = 0, n_clients: int, normalize: bool = True,
                block_d: int = BLOCK_D, interpret: bool = False) -> jax.Array:
     """Fused ingestion reduce → [D] f32 (see module docstring).
@@ -93,13 +97,15 @@ def ingest_agg(q: jax.Array, scales, n_samples, F, G, fb, k=None, *,
     ``scales=None``.  ``n_samples``/``F``/``G``/``fb`` are [K] f32 rows
     of per-member metadata; ``k`` the logical member count (defaults to
     the row count; pass the unpadded count when the row axis is
-    bucketed).  Padding up to the kernel block adds zero columns that
-    reduce to exactly 0.
+    bucketed); ``cf`` the per-row completed fraction (``None`` → all
+    complete; padding rows must carry 1.0).  Padding up to the kernel
+    block adds zero columns that reduce to exactly 0.
     """
     K, D = q.shape
-    kcol, ncol, Fcol, Gcol, fbcol = _meta_cols(q, n_samples, F, G, fb, k)
+    kcol, ncol, Fcol, Gcol, fbcol, cfcol = _meta_cols(
+        q, n_samples, F, G, fb, k, cf)
     meta_specs = [pl.BlockSpec((1, 1), lambda i: (0, 0))] + [
-        pl.BlockSpec((K, 1), lambda i: (0, 0)) for _ in range(4)
+        pl.BlockSpec((K, 1), lambda i: (0, 0)) for _ in range(5)
     ]
     if scales is None:
         blk = block_d
@@ -113,7 +119,7 @@ def ingest_agg(q: jax.Array, scales, n_samples, F, G, fb, k=None, *,
             out_specs=pl.BlockSpec((1, blk), lambda i: (0, i)),
             out_shape=jax.ShapeDtypeStruct((1, D + pad), jnp.float32),
             interpret=interpret,
-        )(kcol, ncol, Fcol, Gcol, fbcol, x.astype(jnp.float32))
+        )(kcol, ncol, Fcol, Gcol, fbcol, cfcol, x.astype(jnp.float32))
         return out[0, :D]
     if chunk <= 0:
         raise ValueError("quantized rows need chunk > 0")
@@ -139,14 +145,15 @@ def ingest_agg(q: jax.Array, scales, n_samples, F, G, fb, k=None, *,
         out_specs=pl.BlockSpec((1, blk), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, D + pad), jnp.float32),
         interpret=interpret,
-    )(kcol, ncol, Fcol, Gcol, fbcol, scales.astype(jnp.float32),
+    )(kcol, ncol, Fcol, Gcol, fbcol, cfcol, scales.astype(jnp.float32),
       q.astype(jnp.int8))
     return out[0, :D]
 
 
 def _ingest_segment_dense_kernel(k_ref, seg_ref, n_ref, F_ref, G_ref, fb_ref,
-                                 x_ref, o_ref, *, n_clients, normalize):
-    p = _fold(k_ref, n_ref, F_ref, G_ref, fb_ref,
+                                 cf_ref, x_ref, o_ref, *, n_clients,
+                                 normalize):
+    p = _fold(k_ref, n_ref, F_ref, G_ref, fb_ref, cf_ref,
               n_clients=n_clients, normalize=normalize)
     G_out, K = o_ref.shape[0], x_ref.shape[0]
     groups = jax.lax.broadcasted_iota(jnp.int32, (G_out, K), 0)
@@ -158,8 +165,9 @@ def _ingest_segment_dense_kernel(k_ref, seg_ref, n_ref, F_ref, G_ref, fb_ref,
 
 
 def _ingest_segment_quant_kernel(k_ref, seg_ref, n_ref, F_ref, G_ref, fb_ref,
-                                 s_ref, q_ref, o_ref, *, n_clients, normalize):
-    p = _fold(k_ref, n_ref, F_ref, G_ref, fb_ref,
+                                 cf_ref, s_ref, q_ref, o_ref, *, n_clients,
+                                 normalize):
+    p = _fold(k_ref, n_ref, F_ref, G_ref, fb_ref, cf_ref,
               n_clients=n_clients, normalize=normalize)
     G_out, (K, blk) = o_ref.shape[0], q_ref.shape
     nc = s_ref.shape[1]
@@ -173,7 +181,7 @@ def _ingest_segment_quant_kernel(k_ref, seg_ref, n_ref, F_ref, G_ref, fb_ref,
 @functools.partial(jax.jit, static_argnames=(
     "chunk", "num_segments", "n_clients", "normalize", "block_d", "interpret"))
 def ingest_segment_agg(q: jax.Array, scales, seg, n_samples, F, G, fb,
-                       k=None, *, num_segments: int, chunk: int = 0,
+                       k=None, cf=None, *, num_segments: int, chunk: int = 0,
                        n_clients: int, normalize: bool = False,
                        block_d: int = BLOCK_D_SEGMENT,
                        interpret: bool = False) -> jax.Array:
@@ -191,10 +199,11 @@ def ingest_segment_agg(q: jax.Array, scales, seg, n_samples, F, G, fb,
         raise ValueError(f"seg {seg.shape} must be [{K}] to match rows")
     if num_segments < 1:
         raise ValueError(f"num_segments must be >= 1, got {num_segments}")
-    kcol, ncol, Fcol, Gcol, fbcol = _meta_cols(q, n_samples, F, G, fb, k)
+    kcol, ncol, Fcol, Gcol, fbcol, cfcol = _meta_cols(
+        q, n_samples, F, G, fb, k, cf)
     segcol = seg.astype(jnp.int32)[:, None]
     meta_specs = [pl.BlockSpec((1, 1), lambda i: (0, 0))] + [
-        pl.BlockSpec((K, 1), lambda i: (0, 0)) for _ in range(5)
+        pl.BlockSpec((K, 1), lambda i: (0, 0)) for _ in range(6)
     ]
     if scales is None:
         blk = block_d
@@ -208,7 +217,8 @@ def ingest_segment_agg(q: jax.Array, scales, seg, n_samples, F, G, fb,
             out_specs=pl.BlockSpec((num_segments, blk), lambda i: (0, i)),
             out_shape=jax.ShapeDtypeStruct((num_segments, D + pad), jnp.float32),
             interpret=interpret,
-        )(kcol, segcol, ncol, Fcol, Gcol, fbcol, x.astype(jnp.float32))
+        )(kcol, segcol, ncol, Fcol, Gcol, fbcol, cfcol,
+          x.astype(jnp.float32))
         return out[:, :D]
     if chunk <= 0:
         raise ValueError("quantized rows need chunk > 0")
@@ -231,6 +241,6 @@ def ingest_segment_agg(q: jax.Array, scales, seg, n_samples, F, G, fb,
         out_specs=pl.BlockSpec((num_segments, blk), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((num_segments, D + pad), jnp.float32),
         interpret=interpret,
-    )(kcol, segcol, ncol, Fcol, Gcol, fbcol, scales.astype(jnp.float32),
-      q.astype(jnp.int8))
+    )(kcol, segcol, ncol, Fcol, Gcol, fbcol, cfcol,
+      scales.astype(jnp.float32), q.astype(jnp.int8))
     return out[:, :D]

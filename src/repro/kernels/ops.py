@@ -84,57 +84,58 @@ def segment_agg_auto_op(x, w, seg, *, num_segments):
     return _ref.segment_agg_ref(x, w, seg, num_segments)
 
 
-def ingest_agg_op(q, scales, n_samples, F, G, fb, k=None, *,
+def ingest_agg_op(q, scales, n_samples, F, G, fb, k=None, cf=None, *,
                   chunk=0, n_clients, normalize=True):
     """Fused ingestion reduce, interpret-mode kernel body (validation)."""
     if _FORCE_REF:
-        return _ref.ingest_agg_ref(q, scales, n_samples, F, G, fb, k,
+        return _ref.ingest_agg_ref(q, scales, n_samples, F, G, fb, k, cf,
                                    n_clients=n_clients, normalize=normalize)
-    return ingest_agg(q, scales, n_samples, F, G, fb, k, chunk=chunk,
+    return ingest_agg(q, scales, n_samples, F, G, fb, k, cf, chunk=chunk,
                       n_clients=n_clients, normalize=normalize,
                       interpret=_INTERPRET)
 
 
-def ingest_agg_auto_op(q, scales, n_samples, F, G, fb, k=None, *,
+def ingest_agg_auto_op(q, scales, n_samples, F, G, fb, k=None, cf=None, *,
                        chunk=0, n_clients, normalize=True):
     """Throughput dispatch for the fused serve ingestion path: compiled
     kernel on TPU (autotuned block), jitted oracle elsewhere — both
     fold the Eq. §3.4 weights on-device, so no host round-trip."""
     if _ON_TPU and not _FORCE_REF:
-        return ingest_agg(q, scales, n_samples, F, G, fb, k, chunk=chunk,
+        return ingest_agg(q, scales, n_samples, F, G, fb, k, cf, chunk=chunk,
                           n_clients=n_clients, normalize=normalize,
                           block_d=_tuned_block("ingest_agg", q.shape, q.dtype))
-    return _ref.ingest_agg_ref(q, scales, n_samples, F, G, fb, k,
+    return _ref.ingest_agg_ref(q, scales, n_samples, F, G, fb, k, cf,
                                n_clients=n_clients, normalize=normalize)
 
 
-def ingest_segment_agg_op(q, scales, seg, n_samples, F, G, fb, k=None, *,
-                          num_segments, chunk=0, n_clients, normalize=False):
+def ingest_segment_agg_op(q, scales, seg, n_samples, F, G, fb, k=None,
+                          cf=None, *, num_segments, chunk=0, n_clients,
+                          normalize=False):
     """Per-group fused ingestion reduce, interpret-mode (validation)."""
     if _FORCE_REF:
         return _ref.ingest_segment_agg_ref(
-            q, scales, seg, n_samples, F, G, fb, k,
+            q, scales, seg, n_samples, F, G, fb, k, cf,
             num_segments=num_segments, n_clients=n_clients,
             normalize=normalize)
-    return ingest_segment_agg(q, scales, seg, n_samples, F, G, fb, k,
+    return ingest_segment_agg(q, scales, seg, n_samples, F, G, fb, k, cf,
                               num_segments=num_segments, chunk=chunk,
                               n_clients=n_clients, normalize=normalize,
                               interpret=_INTERPRET)
 
 
-def ingest_segment_agg_auto_op(q, scales, seg, n_samples, F, G, fb, k=None, *,
-                               num_segments, chunk=0, n_clients,
+def ingest_segment_agg_auto_op(q, scales, seg, n_samples, F, G, fb, k=None,
+                               cf=None, *, num_segments, chunk=0, n_clients,
                                normalize=False):
     """Throughput dispatch for the tier-edge fused ingestion path."""
     if _ON_TPU and not _FORCE_REF:
         return ingest_segment_agg(
-            q, scales, seg, n_samples, F, G, fb, k,
+            q, scales, seg, n_samples, F, G, fb, k, cf,
             num_segments=num_segments, chunk=chunk, n_clients=n_clients,
             normalize=normalize,
             block_d=_tuned_block("ingest_segment_agg", q.shape, q.dtype))
     return _ref.ingest_segment_agg_ref(
-        q, scales, seg, n_samples, F, G, fb, k, num_segments=num_segments,
-        n_clients=n_clients, normalize=normalize)
+        q, scales, seg, n_samples, F, G, fb, k, cf,
+        num_segments=num_segments, n_clients=n_clients, normalize=normalize)
 
 
 def similarity_stats_op(a, b):

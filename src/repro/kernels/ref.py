@@ -43,7 +43,7 @@ def segment_agg_ref(x: jax.Array, w: jax.Array, seg: jax.Array,
 
 
 def ingest_weights(n_samples, F, G, fb, k, *, n_clients: int,
-                   normalize: bool = True, xp=jnp):
+                   normalize: bool = True, xp=jnp, cf=None):
     """The Mod-3 weight fold shared by the fused ingestion kernel and its
     oracle: Eq. §3.4 feedback re-weighting applied to a buffer's per-row
     metadata.
@@ -62,6 +62,13 @@ def ingest_weights(n_samples, F, G, fb, k, *, n_clients: int,
     then 1/Σp normalization.  ``normalize=False`` keeps raw weights
     (base rows weigh ``n_samples`` outright) — the tier-edge form, whose
     Σw is carried beside the partial aggregate instead.
+
+    ``cf`` is the per-row ``completed_fraction`` column (partial local
+    work, docs/ROBUSTNESS.md): it scales the pre-normalization weight of
+    either branch.  ``None`` skips the multiply entirely, keeping legacy
+    callers on the original op sequence; an all-ones column is
+    bit-identical because ``x * 1.0`` is IEEE-exact.  Padding rows must
+    carry ``cf = 1`` (their weight is already exactly 0).
     """
     from repro.core.aggregation import staleness_weight
 
@@ -69,9 +76,12 @@ def ingest_weights(n_samples, F, G, fb, k, *, n_clients: int,
     phi = k / n_clients
     w_fb = staleness_weight(F, phi, xp=xp) * (1.0 + G) ** 2 / k
     if not normalize:
-        return xp.where(fb > 0, w_fb, n_samples)
+        w = xp.where(fb > 0, w_fb, n_samples)
+        return w if cf is None else w * cf
     base = n_samples / xp.maximum(xp.sum(n_samples), 1.0)
     p = xp.where(fb > 0, w_fb, base)
+    if cf is not None:
+        p = p * cf
     return p / xp.maximum(xp.sum(p), 1e-12)
 
 
@@ -88,11 +98,16 @@ def _dequant_rows(q: jax.Array, scales) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("n_clients", "normalize"))
-def ingest_agg_ref(q: jax.Array, scales, n_samples, F, G, fb, k=None, *,
-                   n_clients: int, normalize: bool = True) -> jax.Array:
+def ingest_agg_ref(q: jax.Array, scales, n_samples, F, G, fb, k=None,
+                   cf=None, *, n_clients: int,
+                   normalize: bool = True) -> jax.Array:
     """Oracle for the fused ingestion kernel: dequantize (when ``scales``
     is given) + Eq. §3.4 weight fold + Σw·x, sharing every op with the
     kernel body so interpret mode is bit-exact.  Returns [D] f32.
+
+    ``cf=None`` materializes an all-ones completed-fraction column — the
+    kernel always carries the column, and ``x * 1.0`` is IEEE-exact, so
+    legacy callers see unchanged bits.
 
     Jitted on purpose: the kernel body runs under the interpret-mode
     ``pallas_call`` inside a jit, where XLA fuses the exp/exp2 weight
@@ -101,8 +116,9 @@ def ingest_agg_ref(q: jax.Array, scales, n_samples, F, G, fb, k=None, *,
     K = q.shape[0]
     col = lambda v: jnp.asarray(v, jnp.float32).reshape(K, 1)
     k = jnp.float32(K) if k is None else jnp.asarray(k, jnp.float32)
+    cf_col = jnp.ones((K, 1), jnp.float32) if cf is None else col(cf)
     p = ingest_weights(col(n_samples), col(F), col(G), col(fb), k,
-                       n_clients=n_clients, normalize=normalize)
+                       n_clients=n_clients, normalize=normalize, cf=cf_col)
     x = _dequant_rows(q, scales)
     return jnp.dot(p.T, x, preferred_element_type=jnp.float32)[0]
 
@@ -110,7 +126,8 @@ def ingest_agg_ref(q: jax.Array, scales, n_samples, F, G, fb, k=None, *,
 @functools.partial(jax.jit,
                    static_argnames=("num_segments", "n_clients", "normalize"))
 def ingest_segment_agg_ref(q: jax.Array, scales, seg, n_samples, F, G, fb,
-                           k=None, *, num_segments: int, n_clients: int,
+                           k=None, cf=None, *, num_segments: int,
+                           n_clients: int,
                            normalize: bool = False) -> jax.Array:
     """Oracle for the segment variant: per-group Σw·x̂ with the weight
     fold on-device — [G, D] f32.  Out-of-range segment ids select no
@@ -118,8 +135,9 @@ def ingest_segment_agg_ref(q: jax.Array, scales, seg, n_samples, F, G, fb,
     K = q.shape[0]
     col = lambda v: jnp.asarray(v, jnp.float32).reshape(K, 1)
     k = jnp.float32(K) if k is None else jnp.asarray(k, jnp.float32)
+    cf_col = jnp.ones((K, 1), jnp.float32) if cf is None else col(cf)
     p = ingest_weights(col(n_samples), col(F), col(G), col(fb), k,
-                       n_clients=n_clients, normalize=normalize)
+                       n_clients=n_clients, normalize=normalize, cf=cf_col)
     groups = jnp.arange(num_segments, dtype=jnp.int32)[:, None]
     selector = (groups == seg.astype(jnp.int32)[None, :]).astype(jnp.float32)
     selector = selector * p.T

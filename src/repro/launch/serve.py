@@ -62,6 +62,8 @@ def run_safl_stream(args):
         "kbuffer": lambda: make_trigger("kbuffer", k=args.buffer_k),
         "timewindow": lambda: make_trigger("timewindow", window=args.window,
                                            min_updates=2),
+        "adaptive": lambda: make_trigger("adaptive", window=args.window,
+                                         min_updates=2),
         "quorum": lambda: make_trigger("quorum", k=args.buffer_k,
                                        quorum=max(2, args.buffer_k // 2),
                                        grace=args.window),
@@ -91,7 +93,8 @@ def run_safl_stream(args):
 
         scenario = get_scenario(args.scenario)
         stream = list(scenario_stream(params, scenario, args.clients,
-                                      args.updates, seed=args.seed))
+                                      args.updates, seed=args.seed,
+                                      telemetry=telemetry))
         source = f"scenario[{scenario.describe()}]"
     else:
         stream = list(synthetic_stream(params, args.clients, args.updates,
@@ -129,7 +132,7 @@ def run_safl_stream(args):
         print(f"  uplink {cs.bytes_per_update:.0f} bytes/update "
               f"({cs.ratio:.1f}x smaller than dense fp32)")
     print(f"  {s.submitted} updates → {s.accepted} admitted, {s.dropped} dropped, "
-          f"{s.downweighted} downweighted, {s.rounds} rounds")
+          f"{s.downweighted} downweighted, {s.partial} partial, {s.rounds} rounds")
     print(f"  sustained {s.submitted / dt:.1f} updates/s "
           f"({dt / max(s.rounds, 1) * 1e3:.2f} ms/round wall, "
           f"{s.agg_seconds / max(s.rounds, 1) * 1e3:.2f} ms/round aggregation)")
@@ -163,7 +166,10 @@ def main():
     ap.add_argument("--safl-stream", action="store_true",
                     help="serve a streaming SAFL update stream instead of decoding")
     ap.add_argument("--trigger", default="kbuffer",
-                    choices=["kbuffer", "timewindow", "quorum"])
+                    choices=["kbuffer", "timewindow", "adaptive", "quorum"],
+                    help="'adaptive' is a time-window whose deadline tracks "
+                         "a running delivery-latency quantile "
+                         "(docs/ROBUSTNESS.md)")
     ap.add_argument("--scenario", default=None,
                     help="drive the stream from a named scenario (docs/SCENARIOS.md)")
     ap.add_argument("--algo", default="fedqs-sgd")

@@ -30,6 +30,13 @@ from .arrivals import (
 )
 from .catalog import SCENARIOS, get_scenario, list_scenarios
 from .cohort import CohortEngine, make_cohort_trainer
+from .device import (
+    BimodalLatency,
+    DeviceStateModel,
+    LatencyModel,
+    LognormalLatency,
+    MarkovAvailability,
+)
 from .events import (
     CallbackEvent,
     Churn,
@@ -59,6 +66,8 @@ __all__ = [
     "PoissonArrivals", "TraceReplay",
     "SCENARIOS", "get_scenario", "list_scenarios",
     "CohortEngine", "make_cohort_trainer",
+    "BimodalLatency", "DeviceStateModel", "LatencyModel",
+    "LognormalLatency", "MarkovAvailability",
     "CallbackEvent", "Churn", "Dropout", "DynamicEvent", "LabelDrift",
     "ResourceScale", "SpeedJitter", "SpeedShift",
     "BimodalSpeeds", "Cohort", "DirichletLabelSkew", "LognormalSpeeds",

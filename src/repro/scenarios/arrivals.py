@@ -176,9 +176,20 @@ class TraceReplay(ArrivalProcess):
     def __post_init__(self):
         by: Dict[int, List[Tuple[float, float]]] = {}
         for cid, t_arr, t_cmp in self.events:
-            by.setdefault(int(cid), []).append((float(t_arr), float(t_cmp)))
+            t_arr = float(t_arr)
+            if not np.isfinite(t_arr) or t_arr < 0.0:
+                # a bad stamp would silently produce negative inter-arrival
+                # gaps (or an event the cursor can never reach) — reject it
+                # loudly and name the offending row
+                raise ValueError(
+                    f"trace event for client {int(cid)} has invalid "
+                    f"t_arrival={t_arr!r} (must be finite and >= 0)")
+            by.setdefault(int(cid), []).append((t_arr, float(t_cmp)))
         for cid in by:
-            by[cid].sort()
+            # stable sort on t_arrival ONLY: out-of-order rows are ordered
+            # deterministically, and same-timestamp rows keep their trace
+            # order instead of being reshuffled by the compute-time column
+            by[cid].sort(key=lambda ev: ev[0])
         self._by_client = by
         self._cursor = {cid: 0 for cid in by}
 

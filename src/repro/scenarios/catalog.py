@@ -11,6 +11,12 @@ from __future__ import annotations
 from typing import Callable, Dict, List
 
 from .arrivals import BurstArrivals, DiurnalArrivals, PoissonArrivals, TraceReplay
+from .device import (
+    BimodalLatency,
+    DeviceStateModel,
+    LognormalLatency,
+    MarkovAvailability,
+)
 from .events import Churn, Dropout, LabelDrift, ResourceScale, SpeedJitter, SpeedShift
 from .population import (
     BimodalSpeeds,
@@ -118,6 +124,51 @@ def _degrade(at_round: int = 15, factor: float = 3.0) -> Scenario:
     )
 
 
+def _straggler_heavy(slow_prob: float = 0.25, slow: float = 40.0,
+                     partial_prob: float = 0.15) -> Scenario:
+    return Scenario(
+        name="straggler-heavy",
+        population=Population(speeds=LognormalSpeeds()),
+        device=DeviceStateModel(
+            partial_prob=partial_prob,
+            latency=BimodalLatency(fast=1.0, slow=slow, slow_prob=slow_prob),
+        ),
+        description=(f"bimodal uplinks ({slow_prob:.0%} on a {slow:g}× slower"
+                     " path) plus occasional partial local work — the"
+                     " adaptive-deadline stress test (docs/ROBUSTNESS.md)"),
+    )
+
+
+def _mobile_markov(mean_on: float = 80.0, mean_off: float = 40.0,
+                   median_lat: float = 2.0) -> Scenario:
+    return Scenario(
+        name="mobile-markov",
+        population=Population(speeds=LognormalSpeeds()),
+        arrivals=MarkovAvailability(mean_on=mean_on, mean_off=mean_off),
+        device=DeviceStateModel(
+            partial_prob=0.2,
+            latency=LognormalLatency(median=median_lat, sigma=0.8),
+        ),
+        description=("phones on an on/off Markov availability chain with"
+                     " heavy-tailed uplink latency and partial local work"),
+    )
+
+
+def _flaky_battery(drop_prob: float = 0.1, recovery_gap: float = 25.0) -> Scenario:
+    return Scenario(
+        name="flaky-battery",
+        population=Population(speeds=LognormalSpeeds()),
+        device=DeviceStateModel(
+            drop_prob=drop_prob,
+            partial_prob=0.1,
+            recovery_gap=recovery_gap,
+        ),
+        description=(f"{drop_prob:.0%} of local rounds die mid-round"
+                     f" (battery/network), clients recover after"
+                     f" {recovery_gap:g} time units"),
+    )
+
+
 SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "static": _static,
     "resource-shift": _resource_shift,
@@ -130,6 +181,9 @@ SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "zipf-poisson": _zipf_poisson,
     "drift": _drift,
     "degrade": _degrade,
+    "straggler-heavy": _straggler_heavy,
+    "mobile-markov": _mobile_markov,
+    "flaky-battery": _flaky_battery,
 }
 
 

@@ -231,6 +231,21 @@ class CohortEngine:
                 )
         self.next_finish = self.started_at + defaults
         self.next_finish[~np.isfinite(self.started_at)] = np.inf
+        # device-state layer (docs/ROBUSTNESS.md): each scheduled local
+        # round's outcome — mid-round death, partial work, uplink latency —
+        # is drawn once at schedule time and folded into next_finish, so the
+        # virtual clock stays monotone; a trivial model draws nothing and
+        # the run is bit-identical to a device-free one
+        self.device = getattr(scenario, "device", None)
+        self._pending_drop = np.zeros(n, bool)
+        self._pending_cf = np.ones(n, np.float32)
+        self._pending_sent = np.full(n, -1.0)
+        if self.device is not None:
+            for cid in np.flatnonzero(np.isfinite(self.started_at)):
+                cid = int(cid)
+                compute = float(self.next_finish[cid] - self.started_at[cid])
+                self.next_finish[cid] = self._device_finish(
+                    cid, float(self.started_at[cid]), compute)
         self._fire_times: List[float] = []
 
     # --------------------------------------------------- server-state facade
@@ -252,7 +267,9 @@ class CohortEngine:
         metrics: List[RoundMetrics] = []
         K = self.cohort_k
         while self.round < n_rounds:
-            ready = self.alive & np.isfinite(self.next_finish)
+            self._drain_drops()
+            ready = (self.alive & np.isfinite(self.next_finish)
+                     & ~self._pending_drop)
             if ready.sum() < K:
                 break
             vt, report = self._one_round(np.flatnonzero(ready), K)
@@ -354,6 +371,14 @@ class CohortEngine:
                 feedback=bool(fb_c[i]),
                 speed_f=float(f_all[cid]),
             )
+            if self.device is not None:
+                # partial work scales the server-side weight only — the
+                # vmapped trainer still ran full local epochs (documented
+                # cohort approximation, docs/ROBUSTNESS.md)
+                meta.update(
+                    completed_fraction=float(self._pending_cf[cid]),
+                    sent_at=float(self._pending_sent[cid]),
+                )
             if self.compressor is not None:
                 u = CompressedUpdate(
                     **meta,
@@ -388,7 +413,53 @@ class CohortEngine:
         default = float(self.speeds[cid]) * self.rng.uniform(0.9, 1.1)
         compute = arr.compute_time(cid, start, default, self.rng) if arr is not None else default
         self.started_at[cid] = start
-        self.next_finish[cid] = start + compute
+        if self.device is None:
+            self.next_finish[cid] = start + compute
+        else:
+            self.next_finish[cid] = self._device_finish(cid, start, compute)
+
+    def _device_finish(self, cid: int, start: float, compute: float) -> float:
+        """Draw the device outcome for a planned round; returns the event's
+        pop time (death time for a drop, delivery time otherwise)."""
+        dev = self.device
+        dropped, cf = dev.round_outcome(cid, self.rng)
+        self._pending_drop[cid] = dropped
+        self._pending_cf[cid] = cf
+        if dropped:
+            t_death = start + self.rng.uniform(0.0, 1.0) * compute
+            self._pending_sent[cid] = t_death
+            return t_death
+        sent = start + cf * compute
+        self._pending_sent[cid] = sent
+        return sent + dev.sample_latency(cid, self.rng)
+
+    def _drain_drops(self) -> None:
+        """Process every pending mid-round death before cohort selection:
+        emit the drop event at its death time and reschedule the client
+        through recovery + its arrival law (re-drawn rounds may drop again,
+        hence the loop; a bound guards drop_prob≈1 pathologies)."""
+        dev = self.device
+        if dev is None:
+            return
+        arr = self.scenario.arrivals
+        from repro.telemetry import ClientDropped
+
+        for _ in range(64):
+            idx = np.flatnonzero(
+                self.alive & np.isfinite(self.next_finish) & self._pending_drop)
+            if idx.size == 0:
+                return
+            for cid in idx:
+                cid = int(cid)
+                t_death = float(self.next_finish[cid])
+                if self.telemetry is not None:
+                    self.telemetry.emit(ClientDropped(
+                        t=t_death, round=self.round, cid=cid, reason="battery"))
+                self._pending_drop[cid] = False
+                restart = t_death + dev.recovery_gap
+                nxt = (arr.next_start(cid, restart, self.rng)
+                       if arr is not None else restart)
+                self._schedule(cid, nxt, arr)
 
     def _apply_events(self, vt: float) -> None:
         new_speeds = self.scenario.apply_events(self.round, self.speeds, self.rng)

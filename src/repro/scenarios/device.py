@@ -1,0 +1,234 @@
+"""Device-state layer: availability, latency, battery, partial work.
+
+The arrival processes (``repro.scenarios.arrivals``) say *when* a client
+starts training; this module models what the device does to the update
+after that (docs/ROBUSTNESS.md):
+
+* **availability** — ``MarkovAvailability`` is a continuous-time on/off
+  chain (FLGo's system-simulator idiom): exponentially distributed on-
+  and off-periods, clients started in the stationary distribution.
+  Recorded availability windows replay through the existing
+  ``TraceReplay`` / ``trace:<path>`` grammar unchanged;
+* **network latency** — a ``LatencyModel`` delays the *delivery* of a
+  finished update, so staleness becomes latency-coupled: a straggling
+  uplink can push an update into the next round.  The pre-latency finish
+  time is stamped as ``Update.sent_at``, which is what the adaptive
+  deadline trigger (``serve.triggers.AdaptiveTimeWindow``) learns from;
+* **battery / dropout mid-round** — with probability ``drop_prob`` a
+  scheduled local round dies before uploading; the stream emits a
+  ``client-dropped`` telemetry event and the client returns after
+  ``recovery_gap`` plus its arrival process's think time;
+* **partial local work** — with probability ``partial_prob`` the client
+  finishes only ``completed_fraction ∈ partial_range`` of its local
+  epochs; the update uploads early, flagged so the server can scale its
+  Eq. §3.4 weight by the completed share.
+
+RNG contract (the bit-identity parity gate in ``tests/test_device.py``
+rests on it): a ``DeviceStateModel`` with ``drop_prob = partial_prob =
+0`` and ``latency = None`` consumes **zero** draws from the caller's
+Generator, so an all-complete device-state run replays the exact RNG
+stream — and therefore the exact update stream — of a run with no
+device model at all.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .arrivals import ArrivalProcess
+
+
+# ------------------------------------------------------------------ latency
+class LatencyModel:
+    """Uplink delivery-latency distribution; draws only from the caller's
+    Generator (same purity contract as ``ArrivalProcess``)."""
+
+    def sample(self, cid: int, rng: np.random.Generator) -> float:
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        return type(self).__name__
+
+
+@dataclass
+class LognormalLatency(LatencyModel):
+    """Heavy-tailed uplink latency: ``median · exp(sigma·Z)``, Z ~ N(0,1).
+
+    The classic wireless-uplink shape — most deliveries cluster near the
+    median with a long slow tail (the stragglers adaptive deadlines are
+    for).
+    """
+
+    median: float = 1.0
+    sigma: float = 0.5
+
+    def __post_init__(self):
+        if self.median < 0:
+            raise ValueError(f"median must be >= 0, got {self.median}")
+        if self.sigma < 0:
+            raise ValueError(f"sigma must be >= 0, got {self.sigma}")
+
+    def sample(self, cid, rng):
+        return self.median * float(np.exp(self.sigma * rng.standard_normal()))
+
+    def describe(self):
+        return f"lognormal(median={self.median:g},sigma={self.sigma:g})"
+
+
+@dataclass
+class BimodalLatency(LatencyModel):
+    """Two-population latency: WiFi-fast vs cellular-slow uplinks.
+
+    A fraction ``slow_prob`` of deliveries draw around ``slow``, the rest
+    around ``fast``; both modes carry multiplicative U(1−jitter, 1+jitter)
+    noise.
+    """
+
+    fast: float = 0.5
+    slow: float = 8.0
+    slow_prob: float = 0.2
+    jitter: float = 0.3
+
+    def __post_init__(self):
+        if not 0.0 <= self.slow_prob <= 1.0:
+            raise ValueError(f"slow_prob must be in [0,1], got {self.slow_prob}")
+        if not 0.0 <= self.jitter < 1.0:
+            raise ValueError(f"jitter must be in [0,1), got {self.jitter}")
+        if self.fast < 0 or self.slow < 0:
+            raise ValueError("latency modes must be >= 0")
+
+    def sample(self, cid, rng):
+        base = self.slow if rng.random() < self.slow_prob else self.fast
+        return base * float(rng.uniform(1.0 - self.jitter, 1.0 + self.jitter))
+
+    def describe(self):
+        return (f"bimodal(fast={self.fast:g},slow={self.slow:g},"
+                f"p_slow={self.slow_prob:g})")
+
+
+# ------------------------------------------------------------- availability
+@dataclass
+class MarkovAvailability(ArrivalProcess):
+    """Continuous-time on/off availability chain.
+
+    Each client alternates Exp(``mean_on``) available periods with
+    Exp(``mean_off``) unavailable ones; first states draw from the
+    stationary distribution P(on) = mean_on / (mean_on + mean_off), so
+    the population is statistically steady from t = 0.  While inside an
+    on-period a client behaves always-on (restarts immediately); once the
+    period ends, the chain walks off/on alternations until an on-period
+    reaches past the finish time.
+    """
+
+    mean_on: float = 50.0
+    mean_off: float = 20.0
+    _until: Dict[int, float] = field(default_factory=dict, repr=False)
+
+    def __post_init__(self):
+        if self.mean_on <= 0 or self.mean_off <= 0:
+            raise ValueError(
+                f"mean_on/mean_off must be > 0, got "
+                f"({self.mean_on}, {self.mean_off})")
+
+    def start(self, n, rng):
+        p_on = self.mean_on / (self.mean_on + self.mean_off)
+        on = rng.random(n) < p_on
+        # a fixed draw count regardless of the state vector keeps the
+        # trace a pure function of the seed (replay determinism)
+        off_residual = rng.exponential(self.mean_off, n)
+        starts = np.where(on, 0.0, off_residual)
+        untils = starts + rng.exponential(self.mean_on, n)
+        self._until = {cid: float(untils[cid]) for cid in range(n)}
+        return starts
+
+    def next_start(self, cid, finished_at, rng):
+        until = self._until.get(cid, 0.0)
+        if finished_at < until:
+            return finished_at  # still inside the on-period
+        t = until
+        while True:  # walk the chain: off-period, then on-period
+            t += rng.exponential(self.mean_off)
+            on_end = t + rng.exponential(self.mean_on)
+            if on_end > finished_at:
+                self._until[cid] = on_end
+                return max(t, finished_at)
+            t = on_end
+
+    def describe(self):
+        return f"markov(on={self.mean_on:g},off={self.mean_off:g})"
+
+
+# ------------------------------------------------------------- device state
+@dataclass
+class DeviceStateModel:
+    """Per-round device behavior attached to a ``Scenario`` (tentpole of
+    docs/ROBUSTNESS.md; see the module docstring for the semantics and
+    the zero-draw RNG contract).
+
+    ``round_outcome`` is drawn once per *scheduled* local round, at
+    schedule time — the engines fold the outcome into the round's finish
+    time so event ordering stays monotone.
+    """
+
+    drop_prob: float = 0.0          # P(device dies mid-round)
+    partial_prob: float = 0.0       # P(update uploads with cf < 1)
+    partial_range: Tuple[float, float] = (0.3, 0.9)
+    latency: Optional[LatencyModel] = None
+    recovery_gap: float = 0.0       # extra off-time after a mid-round death
+
+    def __post_init__(self):
+        if not 0.0 <= self.drop_prob <= 1.0:
+            raise ValueError(f"drop_prob must be in [0,1], got {self.drop_prob}")
+        if not 0.0 <= self.partial_prob <= 1.0:
+            raise ValueError(
+                f"partial_prob must be in [0,1], got {self.partial_prob}")
+        lo, hi = self.partial_range
+        if not 0.0 < lo <= hi <= 1.0:
+            raise ValueError(
+                f"partial_range must satisfy 0 < lo <= hi <= 1, "
+                f"got {self.partial_range}")
+        if self.recovery_gap < 0:
+            raise ValueError(
+                f"recovery_gap must be >= 0, got {self.recovery_gap}")
+
+    @property
+    def trivial(self) -> bool:
+        """True when the model cannot alter a run (the zero-draw case)."""
+        return (self.drop_prob == 0.0 and self.partial_prob == 0.0
+                and self.latency is None)
+
+    def round_outcome(self, cid: int,
+                      rng: np.random.Generator) -> Tuple[bool, float]:
+        """(dropped, completed_fraction) for one scheduled local round.
+
+        Guarded so that a zero probability consumes zero draws — the
+        bit-identity contract above.
+        """
+        if self.drop_prob > 0.0 and rng.random() < self.drop_prob:
+            return True, 0.0
+        if self.partial_prob > 0.0 and rng.random() < self.partial_prob:
+            lo, hi = self.partial_range
+            return False, float(lo + (hi - lo) * rng.random())
+        return False, 1.0
+
+    def sample_latency(self, cid: int, rng: np.random.Generator) -> float:
+        """Uplink delivery latency for one finished round (0 without a
+        latency model — and no draw, per the contract)."""
+        if self.latency is None:
+            return 0.0
+        return max(0.0, float(self.latency.sample(cid, rng)))
+
+    def describe(self) -> str:
+        parts = []
+        if self.drop_prob > 0:
+            parts.append(f"drop={self.drop_prob:g}")
+        if self.partial_prob > 0:
+            lo, hi = self.partial_range
+            parts.append(f"partial={self.partial_prob:g}@[{lo:g},{hi:g}]")
+        if self.latency is not None:
+            parts.append(f"lat={self.latency.describe()}")
+        if self.recovery_gap > 0:
+            parts.append(f"recover={self.recovery_gap:g}")
+        return "device(" + ",".join(parts) + ")" if parts else "device(off)"

@@ -22,6 +22,7 @@ from typing import Callable, Optional, Sequence, Tuple
 import numpy as np
 
 from .arrivals import ArrivalProcess
+from .device import DeviceStateModel
 from .events import CallbackEvent, DynamicEvent
 from .population import Population
 
@@ -32,6 +33,9 @@ class Scenario:
     population: Optional[Population] = None
     arrivals: Optional[ArrivalProcess] = None
     events: Sequence[DynamicEvent] = ()
+    # how devices misbehave after they start a round: mid-round dropout,
+    # partial local work, uplink latency (docs/ROBUSTNESS.md)
+    device: Optional[DeviceStateModel] = None
     description: str = ""
 
     # ------------------------------------------------------------- factories
@@ -82,6 +86,8 @@ class Scenario:
             parts.append(f"pop[{self.population.describe()}]")
         if self.arrivals is not None:
             parts.append(f"arr[{self.arrivals.describe()}]")
+        if self.device is not None:
+            parts.append(self.device.describe())
         if self.events:
             parts.append("ev[" + ", ".join(e.describe() for e in self.events) + "]")
         return " ".join(parts)

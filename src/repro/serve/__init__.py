@@ -17,7 +17,14 @@ from .batched import (
 )
 from .service import RoundReport, ServiceStats, StreamingAggregator, SubmitResult
 from .stream import CaptureStream, replay, scenario_stream, synthetic_stream
-from .triggers import KBuffer, Quorum, TimeWindow, TriggerPolicy, make_trigger
+from .triggers import (
+    AdaptiveTimeWindow,
+    KBuffer,
+    Quorum,
+    TimeWindow,
+    TriggerPolicy,
+    make_trigger,
+)
 
 __all__ = [
     "Admission", "AdmissionPolicy", "AdmitAll", "StalenessAdmission",
@@ -25,5 +32,6 @@ __all__ = [
     "stack_encoded", "stack_trees", "unravel_like",
     "RoundReport", "ServiceStats", "StreamingAggregator", "SubmitResult",
     "CaptureStream", "replay", "scenario_stream", "synthetic_stream",
-    "KBuffer", "Quorum", "TimeWindow", "TriggerPolicy", "make_trigger",
+    "AdaptiveTimeWindow", "KBuffer", "Quorum", "TimeWindow", "TriggerPolicy",
+    "make_trigger",
 ]

@@ -44,7 +44,19 @@ class AdmissionPolicy:
 
         The returned update carries any down-weighting baked into its
         ``n_samples`` (floored at 1 so an admitted update never vanishes).
+
+        Before any policy logic, the ``completed_fraction`` invariant is
+        enforced for every policy: an update reporting no completed local
+        work (cf ≤ 0) is rejected outright — it carries no gradient
+        signal, and the Eq. §3.4 weight would vanish or flip sign — and
+        cf > 1 is clamped (a client cannot over-complete its epochs).
         """
+        cf = float(getattr(update, "completed_fraction", 1.0))
+        if cf <= 0.0:
+            return None, Admission(
+                False, reason=f"no completed work: completed_fraction={cf}")
+        if cf > 1.0:
+            update = replace(update, completed_fraction=1.0)
         verdict = self.admit(update, current_round)
         if not verdict.accepted:
             return None, verdict

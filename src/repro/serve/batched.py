@@ -239,37 +239,39 @@ def _finish(flat, flat_g, eta_g, grad):
 
 @functools.partial(jax.jit, static_argnames=(
     "n_clients", "grad", "mode", "block_d"))
-def _fused_dense_round(x, counts, tsims, cids, sims, n, fb, k, flat_g,
+def _fused_dense_round(x, counts, tsims, cids, sims, n, fb, cf, k, flat_g,
                        eta_g, ratio_clip, *, n_clients, grad,
                        mode="auto", block_d=0):
     F, G = _round_meta(counts, tsims, cids, sims, ratio_clip)
     if mode == "kernel":  # interpret-mode kernel body (validation only)
-        flat = ingest_agg(x, None, n, F, G, fb, k, n_clients=n_clients,
+        flat = ingest_agg(x, None, n, F, G, fb, k, cf, n_clients=n_clients,
                           interpret=jax.default_backend() != "tpu")
     elif mode == "tpu":
-        flat = ingest_agg(x, None, n, F, G, fb, k, n_clients=n_clients,
+        flat = ingest_agg(x, None, n, F, G, fb, k, cf, n_clients=n_clients,
                           **({"block_d": block_d} if block_d else {}))
     else:
-        flat = ingest_agg_ref(x, None, n, F, G, fb, k, n_clients=n_clients)
+        flat = ingest_agg_ref(x, None, n, F, G, fb, k, cf,
+                              n_clients=n_clients)
     return _finish(flat, flat_g, eta_g, grad)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "chunk", "d_out", "n_clients", "grad", "mode", "block_d"))
-def _fused_quant_round(q, scales, counts, tsims, cids, sims, n, fb, k,
+def _fused_quant_round(q, scales, counts, tsims, cids, sims, n, fb, cf, k,
                        flat_g, eta_g, ratio_clip, *, chunk, d_out,
                        n_clients, grad, mode="auto", block_d=0):
     F, G = _round_meta(counts, tsims, cids, sims, ratio_clip)
     if mode == "kernel":
-        flat = ingest_agg(q, scales, n, F, G, fb, k, chunk=chunk,
+        flat = ingest_agg(q, scales, n, F, G, fb, k, cf, chunk=chunk,
                           n_clients=n_clients,
                           interpret=jax.default_backend() != "tpu")
     elif mode == "tpu":
-        flat = ingest_agg(q, scales, n, F, G, fb, k, chunk=chunk,
+        flat = ingest_agg(q, scales, n, F, G, fb, k, cf, chunk=chunk,
                           n_clients=n_clients,
                           **({"block_d": block_d} if block_d else {}))
     else:
-        flat = ingest_agg_ref(q, scales, n, F, G, fb, k, n_clients=n_clients)
+        flat = ingest_agg_ref(q, scales, n, F, G, fb, k, cf,
+                              n_clients=n_clients)
     return _finish(flat[:d_out], flat_g, eta_g, grad)
 
 
@@ -314,6 +316,11 @@ def fused_ingest_round(batch, table, flat_g, hp, n_clients: int,
         fb=np.pad(np.asarray(
             [float(bool(u.feedback) and hp.use_feedback) for u in batch],
             np.float32), (0, pad)),
+        # padding rows carry cf = 1.0 (their weight is already exactly 0);
+        # all-complete buffers multiply by exactly 1.0, which is IEEE-exact
+        cf=np.pad(np.asarray(
+            [float(getattr(u, "completed_fraction", 1.0)) for u in batch],
+            np.float32), (0, pad), constant_values=1.0),
     )
     k = jnp.float32(K)
     eta_g = jnp.float32(hp.eta_g)
@@ -330,8 +337,8 @@ def fused_ingest_round(batch, table, flat_g, hp, n_clients: int,
                  if mode == "tpu" else 0)
         new_flat = _fused_quant_round(
             q, scales, new_table.counts, new_table.sims, meta["cids"],
-            meta["sims"], meta["n"], meta["fb"], k, flat_g, eta_g,
-            ratio_clip, chunk=payloads[0].chunk, d_out=payloads[0].d,
+            meta["sims"], meta["n"], meta["fb"], meta["cf"], k, flat_g,
+            eta_g, ratio_clip, chunk=payloads[0].chunk, d_out=payloads[0].d,
             n_clients=n_clients, grad=grad, mode=mode, block_d=block)
         return new_flat, new_table
     if encoded:
@@ -345,7 +352,7 @@ def fused_ingest_round(batch, table, flat_g, hp, n_clients: int,
              if mode == "tpu" else 0)
     new_flat = _fused_dense_round(
         x, new_table.counts, new_table.sims, meta["cids"], meta["sims"],
-        meta["n"], meta["fb"], k, flat_g, eta_g, ratio_clip,
+        meta["n"], meta["fb"], meta["cf"], k, flat_g, eta_g, ratio_clip,
         n_clients=n_clients, grad=grad, mode=mode, block_d=block)
     return new_flat, new_table
 

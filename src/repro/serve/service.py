@@ -54,6 +54,8 @@ from repro.compress.codec import is_compressed
 from repro.telemetry import (
     SECONDS_BUCKETS,
     STALENESS_BUCKETS,
+    DeadlineAdapted,
+    PartialAdmitted,
     RoundFired,
     Telemetry,
     UpdateAdmitted,
@@ -104,6 +106,7 @@ class ServiceStats:
     accepted: int = 0
     dropped: int = 0
     downweighted: int = 0
+    partial: int = 0           # accepted with completed_fraction < 1
     rounds: int = 0
     agg_seconds: float = 0.0
 
@@ -240,6 +243,14 @@ class StreamingAggregator:
             # stamps τ against its own round registry, so clamp here
             update = replace(update, stale_round=self.round)
         tau = self.round - update.stale_round
+        # adaptive triggers learn the deadline from delivery latencies;
+        # they must see every arrival, admitted or not — conditioning on
+        # admission would bias the history toward survivors (fast
+        # clients) and collapse the window exactly when stragglers are
+        # being dropped, the case the adaptation exists to fix
+        observe = getattr(self.trigger, "observe", None)
+        if observe is not None:
+            observe(update, now)
         admitted, verdict = self.admission.apply(update, self.round)
         if admitted is None:
             self.stats.dropped += 1
@@ -258,6 +269,10 @@ class StreamingAggregator:
         if downweighted:
             self.stats.downweighted += 1
         self.stats.accepted += 1
+        cf = float(getattr(admitted, "completed_fraction", 1.0))
+        partial = cf < 1.0
+        if partial:
+            self.stats.partial += 1
         if tel is not None:
             self._tm_submitted.inc()
             self._tm_accepted.inc()
@@ -270,6 +285,11 @@ class StreamingAggregator:
                 stale_round=int(admitted.stale_round), staleness=int(tau),
                 downweighted=downweighted,
             ))
+            if partial:
+                tel.emit(PartialAdmitted(
+                    t=float(now), round=self.round, cid=int(admitted.cid),
+                    completed_fraction=cf,
+                ))
         return admitted, verdict
 
     def flush(self, now: Optional[float] = None) -> Optional[RoundReport]:
@@ -349,6 +369,15 @@ class StreamingAggregator:
         )
         tel = self.telemetry
         if tel is not None:
+            adapted = getattr(self.trigger, "consume_adaptation", None)
+            adapted = adapted() if adapted is not None else None
+            if adapted is not None:
+                old_w, new_w, q_lat = adapted
+                tel.emit(DeadlineAdapted(
+                    t=float(now), round=self.round,
+                    old_window=float(old_w), new_window=float(new_w),
+                    quantile_latency=float(q_lat),
+                ))
             self._tm_rounds.inc()
             self._tm_agg_s.observe(dt)
             for s in stale:

@@ -106,6 +106,7 @@ def scenario_stream(
     delta_scale: float = 1e-3,
     distinct_deltas: int = 8,
     updates_per_round: int = 10,
+    telemetry=None,
 ) -> Iterator[Tuple[Update, float]]:
     """Yield ``(update, arrival_time)`` pairs driven by a ``Scenario``.
 
@@ -117,6 +118,19 @@ def scenario_stream(
     clients stop uploading, revived ones come back.  ``stale_round``
     is the virtual round at each burst's start, so arrival gaps map to
     staleness the way they do in the engine.
+
+    A ``scenario.device`` model (docs/ROBUSTNESS.md) acts at *schedule*
+    time so the event queue stays time-sorted: each planned local round
+    draws its outcome once — a mid-round death pops as a ``client-dropped``
+    telemetry event instead of an update (the client returns after
+    ``recovery_gap`` + its arrival law's think time), partial work
+    finishes early at ``start + cf·compute`` with ``completed_fraction``
+    stamped on the update, and uplink latency is folded into the
+    delivery time while the pre-latency finish rides along as
+    ``Update.sent_at`` for the adaptive-deadline trigger to learn from.
+    All device draws happen *after* the legacy compute-time draws and a
+    trivial model draws nothing, so an all-complete device run replays
+    the no-device stream bit-for-bit.
     """
     from repro.scenarios.arrivals import AlwaysOn
 
@@ -127,6 +141,7 @@ def scenario_stream(
     else:
         n_samples = rng.integers(20, 200, n_clients)
     arr = scenario.arrivals if scenario.arrivals is not None else AlwaysOn()
+    dev = getattr(scenario, "device", None)
 
     deltas, models = _noise_trees(params, distinct_deltas, delta_scale, seed)
 
@@ -134,20 +149,63 @@ def scenario_stream(
     burst_start = arr.start(n_clients, rng)
     next_finish = np.full(n_clients, np.inf)
     fetch_round = np.zeros(n_clients, np.int64)
+    # per-client outcome of the *planned* round, decided at schedule time
+    pending_cf = np.ones(n_clients, np.float32)
+    pending_drop = np.zeros(n_clients, bool)
+    pending_sent = np.full(n_clients, -1.0)
+
+    def _plan(cid: int, start: float) -> float:
+        """Delivery time of the round starting at ``start`` (device-aware)."""
+        default = speeds[cid] * rng.uniform(0.9, 1.1)
+        compute = arr.compute_time(cid, start, default, rng)
+        if dev is None:
+            return start + compute
+        dropped, cf = dev.round_outcome(cid, rng)
+        pending_drop[cid] = dropped
+        pending_cf[cid] = cf
+        if dropped:
+            # the battery dies somewhere inside the local round
+            pending_sent[cid] = start + rng.uniform(0.0, 1.0) * compute
+            return float(pending_sent[cid])
+        pending_sent[cid] = start + cf * compute
+        return float(pending_sent[cid]) + dev.sample_latency(cid, rng)
+
     for cid in range(n_clients):
         if np.isfinite(burst_start[cid]):
-            default = speeds[cid] * rng.uniform(0.9, 1.1)
-            next_finish[cid] = burst_start[cid] + arr.compute_time(
-                cid, burst_start[cid], default, rng
-            )
+            next_finish[cid] = _plan(cid, float(burst_start[cid]))
 
     virtual_round = 0
-    for i in range(n_updates):
+    i = 0  # updates emitted
+    pops = 0
+    # liveness guard: a pathological device model (drop_prob≈1 over an
+    # always-on arrival law) would pop drop events forever without ever
+    # emitting an update — bound total pops instead of looping blind
+    max_pops = n_updates * 20 + 10 * n_clients
+    while i < n_updates and pops < max_pops:
         ready = alive & np.isfinite(next_finish)
         if not ready.any():
             return
         cid = int(np.flatnonzero(ready)[np.argmin(next_finish[ready])])
         now = float(next_finish[cid])
+        pops += 1
+
+        if dev is not None and pending_drop[cid]:
+            # mid-round death: no upload; recover, then rejoin through the
+            # arrival law so availability semantics keep holding
+            if telemetry is not None:
+                from repro.telemetry import ClientDropped
+
+                telemetry.emit(ClientDropped(
+                    t=now, round=virtual_round, cid=cid, reason="battery"))
+            nxt = arr.next_start(cid, now + dev.recovery_gap, rng)
+            burst_start[cid] = nxt
+            if np.isfinite(nxt):
+                next_finish[cid] = _plan(cid, float(nxt))
+                fetch_round[cid] = virtual_round
+            else:
+                next_finish[cid] = np.inf
+            continue
+
         yield Update(
             cid=cid,
             n_samples=int(n_samples[cid]),
@@ -158,18 +216,20 @@ def scenario_stream(
             speed_f=float(1.0 / speeds[cid]),
             delta=deltas[i % distinct_deltas],
             params=models[i % distinct_deltas],
+            completed_fraction=float(pending_cf[cid]) if dev is not None else 1.0,
+            sent_at=float(pending_sent[cid]) if dev is not None else -1.0,
         ), now
+        i += 1
 
         nxt = arr.next_start(cid, now, rng)
         burst_start[cid] = nxt
         if np.isfinite(nxt):
-            default = speeds[cid] * rng.uniform(0.9, 1.1)
-            next_finish[cid] = nxt + arr.compute_time(cid, nxt, default, rng)
+            next_finish[cid] = _plan(cid, float(nxt))
             fetch_round[cid] = virtual_round
         else:
             next_finish[cid] = np.inf
 
-        if (i + 1) % updates_per_round == 0:
+        if i % updates_per_round == 0:
             virtual_round += 1
             # clients whose next burst has not yet begun keep fetching: their
             # stale_round tracks the round at burst *start* (the engine's
@@ -187,8 +247,7 @@ def scenario_stream(
                     t = arr.next_start(int(rcid), now, rng)
                     burst_start[rcid] = t
                     if np.isfinite(t):
-                        default = speeds[rcid] * rng.uniform(0.9, 1.1)
-                        next_finish[rcid] = t + arr.compute_time(int(rcid), t, default, rng)
+                        next_finish[rcid] = _plan(int(rcid), float(t))
                         fetch_round[rcid] = virtual_round
 
 

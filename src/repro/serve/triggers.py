@@ -14,7 +14,8 @@ in a live service) — policies only compare differences of it.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from collections import deque
+from typing import List, Optional, Sequence, Tuple
 
 from repro.core.types import Update
 
@@ -82,6 +83,77 @@ class TimeWindow(TriggerPolicy):
         return f"timewindow(w={self.window},min={self.min_updates})"
 
 
+class AdaptiveTimeWindow(TimeWindow):
+    """SEAFL-style adaptive deadline: the window tracks a running quantile
+    of observed client delivery latencies instead of staying fixed.
+
+    Every accepted update whose ``sent_at`` stamp is known contributes one
+    latency sample ``now − sent_at`` (the service calls ``observe`` on
+    admission).  At each fire the deadline is re-planned to
+    ``clip(quantile_q(latencies) · slack, min_window, max_window)``: when
+    stragglers dominate the stream the window stretches so their updates
+    land inside the round instead of arriving one round stale (and being
+    dropped by staleness admission); when the population speeds up the
+    window contracts back toward ``min_window``.  With no latency
+    observations (legacy streams never stamp ``sent_at``) the trigger
+    degrades to the plain fixed ``TimeWindow`` it inherits from.
+    """
+
+    name = "adaptive"
+
+    def __init__(self, window: float, min_updates: int = 1, *,
+                 q: float = 0.9, slack: float = 1.25,
+                 min_window: Optional[float] = None,
+                 max_window: Optional[float] = None,
+                 history: int = 256, warmup: int = 8):
+        super().__init__(window, min_updates)
+        if not 0.0 < q <= 1.0:
+            raise ValueError(f"quantile must be in (0, 1], got {q}")
+        if slack <= 0:
+            raise ValueError(f"slack must be > 0, got {slack}")
+        self.q = float(q)
+        self.slack = float(slack)
+        self.min_window = float(min_window if min_window is not None
+                                else window * 0.25)
+        self.max_window = float(max_window if max_window is not None
+                                else window * 16.0)
+        self.warmup = int(warmup)
+        self._lats: deque = deque(maxlen=int(history))
+        self._adaptation: Optional[Tuple[float, float, float]] = None
+
+    def observe(self, update: Update, now: float) -> None:
+        """Record one delivery-latency sample from an accepted update."""
+        sent = float(getattr(update, "sent_at", -1.0))
+        if sent >= 0.0 and now > sent:
+            self._lats.append(now - sent)
+
+    def _quantile(self) -> float:
+        # nearest-rank on the sorted history — tiny (≤ history) and only
+        # run once per fire, so no numpy dependency needed here
+        lats = sorted(self._lats)
+        idx = min(len(lats) - 1, max(0, int(self.q * len(lats)) ))
+        return lats[idx]
+
+    def arm(self, now):
+        if len(self._lats) >= self.warmup:
+            target = min(self.max_window,
+                         max(self.min_window, self._quantile() * self.slack))
+            if target != self.window:
+                self._adaptation = (self.window, target, self._quantile())
+                self.window = target
+        super().arm(now)
+
+    def consume_adaptation(self) -> Optional[Tuple[float, float, float]]:
+        """(old_window, new_window, quantile_latency) of the last re-plan,
+        once — the service turns it into a ``deadline-adapted`` event."""
+        a, self._adaptation = self._adaptation, None
+        return a
+
+    def describe(self):
+        return (f"adaptive(w={self.window:.3g},min={self.min_updates},"
+                f"q={self.q},slack={self.slack})")
+
+
 class Quorum(TriggerPolicy):
     """Hybrid trigger: K updates from at least ``quorum`` distinct clients.
 
@@ -121,8 +193,10 @@ class Quorum(TriggerPolicy):
 
 
 def make_trigger(name: str, **kw) -> TriggerPolicy:
-    """Factory used by launch/bench CLIs: kbuffer | timewindow | quorum."""
-    table = {"kbuffer": KBuffer, "timewindow": TimeWindow, "quorum": Quorum}
+    """Factory used by launch/bench CLIs:
+    kbuffer | timewindow | adaptive | quorum."""
+    table = {"kbuffer": KBuffer, "timewindow": TimeWindow,
+             "adaptive": AdaptiveTimeWindow, "quorum": Quorum}
     try:
         return table[name](**kw)
     except KeyError:

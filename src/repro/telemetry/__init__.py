@@ -25,9 +25,12 @@ from typing import List, Optional, Sequence
 from .events import (
     EVENT_TYPES,
     ClientClassified,
+    ClientDropped,
     CodecEncoded,
+    DeadlineAdapted,
     Event,
     MetricsSnapshot,
+    PartialAdmitted,
     RoundFired,
     RoundMetricsEvent,
     TierMerged,
@@ -103,8 +106,9 @@ class Telemetry:
 __all__ = [
     "Telemetry",
     # events
-    "EVENT_TYPES", "Event", "ClientClassified", "CodecEncoded",
-    "MetricsSnapshot", "RoundFired", "RoundMetricsEvent", "TierMerged",
+    "EVENT_TYPES", "Event", "ClientClassified", "ClientDropped",
+    "CodecEncoded", "DeadlineAdapted", "MetricsSnapshot", "PartialAdmitted",
+    "RoundFired", "RoundMetricsEvent", "TierMerged",
     "UpdateAdmitted", "UpdateRejected",
     # metrics
     "Counter", "Gauge", "Histogram", "MetricsRegistry",

@@ -136,6 +136,46 @@ class ClientClassified(Event):
 
 
 @dataclass(slots=True)
+class ClientDropped(Event):
+    """A simulated device died mid-round (battery / availability loss) —
+    its local work for this round is lost and never reaches admission."""
+
+    name = "client-dropped"
+
+    t: float
+    round: int
+    cid: int
+    reason: str             # "battery" | "availability" | "chaos"
+
+
+@dataclass(slots=True)
+class PartialAdmitted(Event):
+    """An update carrying incomplete local work was admitted; its Eq. §3.4
+    weight is scaled by ``completed_fraction`` (docs/ROBUSTNESS.md)."""
+
+    name = "partial-admitted"
+
+    t: float
+    round: int
+    cid: int
+    completed_fraction: float
+
+
+@dataclass(slots=True)
+class DeadlineAdapted(Event):
+    """The adaptive trigger re-planned its deadline from the running
+    latency quantile (``serve.triggers.AdaptiveTimeWindow``)."""
+
+    name = "deadline-adapted"
+
+    t: float
+    round: int
+    old_window: float
+    new_window: float
+    quantile_latency: float
+
+
+@dataclass(slots=True)
 class RoundMetricsEvent(Event):
     """Per-round evaluation metrics (the engines' ``RoundMetrics``)."""
 
@@ -164,6 +204,7 @@ EVENT_TYPES = {
     cls.name: cls
     for cls in (
         UpdateAdmitted, UpdateRejected, RoundFired, TierMerged,
-        CodecEncoded, ClientClassified, RoundMetricsEvent, MetricsSnapshot,
+        CodecEncoded, ClientClassified, ClientDropped, PartialAdmitted,
+        DeadlineAdapted, RoundMetricsEvent, MetricsSnapshot,
     )
 }

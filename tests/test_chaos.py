@@ -1,0 +1,262 @@
+"""Deterministic fault-injection harness (docs/ROBUSTNESS.md, "Chaos
+testing"): seeded chaos schedules — mid-round battery death, duplicate and
+out-of-order deliveries, checkpoint/restore with half-full buffers, edge
+death between fires — driven through the serving plane.  Every schedule is
+a pure function of its seed, so each test both exercises the failure mode
+and doubles as a replay-determinism pin."""
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FedQSHyperParams, make_algorithm
+from repro.models import make_mlp_spec
+from repro.scenarios import DeviceStateModel, get_scenario
+from repro.scenarios.scenario import Scenario
+from repro.serve import (
+    AdaptiveTimeWindow,
+    KBuffer,
+    StalenessAdmission,
+    StreamingAggregator,
+    replay,
+    scenario_stream,
+    synthetic_stream,
+)
+from repro.telemetry import Telemetry
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _leaves_equal(a, b):
+    return all(bool(jnp.array_equal(x, y)) for x, y in
+               zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+def _chaos_stream(params, n=24, updates=48, seed=7, telemetry=None):
+    sc = Scenario(name="chaos", device=DeviceStateModel(
+        drop_prob=0.15, partial_prob=0.4, partial_range=(0.2, 0.8)))
+    return list(scenario_stream(params, sc, n, updates, seed=seed,
+                                telemetry=telemetry))
+
+
+# ---------------------------------------------------------------------------
+# (a) a seeded chaos schedule through the adaptive service: terminates,
+#     fires, and every admitted update is aggregated exactly once
+# ---------------------------------------------------------------------------
+class TestSeededChaosStream:
+    SEED = 123
+
+    def _run(self, seed):
+        hp = FedQSHyperParams(buffer_k=8)
+        params = make_mlp_spec().init(KEY)
+        tel = Telemetry.in_memory()
+        stream = list(scenario_stream(params, get_scenario("flaky-battery"),
+                                      64, 160, seed=seed, telemetry=tel))
+        svc = StreamingAggregator(
+            make_algorithm("fedqs-sgd", hp), hp, params, 64,
+            trigger=AdaptiveTimeWindow(window=3.0, min_updates=2),
+            admission=StalenessAdmission(3), batched=True, telemetry=tel)
+        reports = replay(svc, iter(stream))
+        return svc, reports, tel, stream
+
+    def test_terminates_and_counts_balance(self):
+        svc, reports, tel, stream = self._run(self.SEED)
+        s = svc.stats
+        assert len(stream) == 160, "drops must not consume update slots"
+        assert s.submitted == 160
+        assert s.rounds == len(reports) > 0
+        assert s.accepted == s.submitted - s.dropped
+        assert svc.pending == 0  # replay() flushes: nothing may linger
+        # per-cid ledger: occurrences across fires == admitted occurrences
+        agg = Counter(int(m.cid) for rep in reports for m in rep.buffer)
+        admitted = Counter(int(r["cid"])
+                           for r in tel.ring.events("update-admitted"))
+        assert agg == admitted
+        # the chaos actually happened
+        kinds = Counter(r["e"] for r in tel.ring.records)
+        assert kinds["client-dropped"] > 0
+        assert kinds["partial-admitted"] > 0
+
+
+# ---------------------------------------------------------------------------
+# (b) duplicate + out-of-order deliveries: the service counts occurrences,
+#     never identities, and a count trigger cannot deadlock on a bad clock
+# ---------------------------------------------------------------------------
+class TestDuplicateAndOutOfOrder:
+    def test_duplicates_counted_per_occurrence(self):
+        hp = FedQSHyperParams(buffer_k=4)
+        params = make_mlp_spec().init(KEY)
+        base = list(synthetic_stream(params, 8, 24, seed=5))
+        rng = np.random.default_rng(0)
+        chaos = []
+        for u, t in base:
+            chaos.append((u, t))
+            if rng.random() < 0.5:
+                chaos.append((u, t))  # at-least-once transport re-delivery
+        assert len(chaos) > len(base)
+        svc = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp,
+                                  params, 8, trigger=KBuffer(4))
+        reports = replay(svc, iter(chaos))
+        agg = Counter(int(m.cid) for rep in reports for m in rep.buffer)
+        assert agg == Counter(int(u.cid) for u, _ in chaos)
+        assert sum(agg.values()) == svc.stats.accepted == len(chaos)
+
+    def test_out_of_order_delivery_no_deadlock(self):
+        hp = FedQSHyperParams(buffer_k=5)
+        params = make_mlp_spec().init(KEY)
+        base = list(synthetic_stream(params, 12, 30, seed=6))
+        shuffled = [base[i] for i in np.random.default_rng(1).permutation(
+            len(base))]  # timestamps now arrive non-monotonically
+        svc = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp,
+                                  params, 12, trigger=KBuffer(5))
+        reports = replay(svc, iter(shuffled))
+        assert svc.stats.rounds == len(reports) > 0
+        assert sum(rep.n_updates for rep in reports) == len(base)
+        assert svc.pending == 0
+
+
+# ---------------------------------------------------------------------------
+# (c) crash / restore with half-full buffers
+# ---------------------------------------------------------------------------
+class TestCheckpointUnderChaos:
+    def test_hier_restore_half_full_buffer_bit_exact(self, tmp_path):
+        from repro.hier import HierarchicalService, Topology
+
+        hp = FedQSHyperParams(buffer_k=10)
+        params = make_mlp_spec().init(KEY)
+
+        def build():
+            return HierarchicalService(
+                make_algorithm("fedqs-sgd", hp), hp, params, 24,
+                Topology.from_spec("hier:4", 24),
+                edge_trigger=lambda e: KBuffer(3))
+
+        stream = _chaos_stream(params)
+        ref = build()
+        for u, t in stream:
+            ref.submit(u, now=t)
+        a = build()
+        for u, t in stream[:24]:
+            a.submit(u, now=t)
+        assert a.pending > 0, "the crash must land mid-buffer"
+        d = str(tmp_path / "ck")
+        a.save(d)
+        b = build()
+        b.restore(d)
+        assert b.pending == a.pending  # tier buffers ARE persisted
+        for u, t in stream[24:]:
+            b.submit(u, now=t)
+        assert b.round == ref.round
+        assert _leaves_equal(b.global_params, ref.global_params)
+
+    def test_flat_restore_drops_volatile_buffer_but_serves_on(self, tmp_path):
+        # the flat service deliberately does NOT persist its ingest buffer
+        # (docs/ROBUSTNESS.md): in-flight updates are lost at a crash, but
+        # the restored service must keep firing and never double-count
+        hp = FedQSHyperParams(buffer_k=6)
+        params = make_mlp_spec().init(KEY)
+        stream = _chaos_stream(params)
+        half = len(stream) // 2
+        a = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp,
+                                params, 24, trigger=KBuffer(6))
+        for u, t in stream[:half]:
+            a.submit(u, now=t)
+        d = str(tmp_path / "ck")
+        a.save(d)
+        b = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp,
+                                params, 24, trigger=KBuffer(6))
+        b.restore(d)
+        assert b.pending == 0  # volatile buffer gone by design
+        before_round, before_accepted = b.round, b.stats.accepted
+        assert before_accepted == a.stats.accepted
+        reports = replay(b, iter(stream[half:]))
+        assert b.round > before_round, "restored service must keep firing"
+        # exactly the post-restore admissions aggregate — lost buffer rows
+        # are not resurrected, new ones are not double-counted
+        assert sum(rep.n_updates for rep in reports) == \
+            b.stats.accepted - before_accepted
+
+
+# ---------------------------------------------------------------------------
+# (d) edge death between fires: the plane keeps serving, loses exactly the
+#     dead edge's buffered rows, and double-counts nothing
+# ---------------------------------------------------------------------------
+class TestEdgeDeath:
+    def test_edge_buffer_wipe_loses_only_buffered_members(self):
+        from repro.hier import HierarchicalService, Topology
+
+        hp = FedQSHyperParams(buffer_k=8)
+        params = make_mlp_spec().init(KEY)
+        reports = []
+        svc = HierarchicalService(
+            make_algorithm("fedqs-sgd", hp), hp, params, 24,
+            Topology.from_spec("hier:4", 24),
+            edge_trigger=lambda e: KBuffer(3), on_round=reports.append)
+        stream = _chaos_stream(params, seed=11)
+        for u, t in stream[:24]:
+            svc.submit(u, now=t)
+        victim = max(svc.edges, key=lambda e: e.pending)
+        lost = victim.pending
+        assert lost > 0, "need a victim edge with buffered updates"
+        victim.buffer.clear()  # the edge dies; its RAM buffer is gone
+        last = 0.0
+        for u, t in stream[24:]:
+            svc.submit(u, now=t)
+            last = t
+        svc.flush(now=last)
+        assert svc.pending == 0
+        total = sum(rep.n_updates for rep in reports)
+        assert total == svc.stats.accepted - lost
+
+
+# ---------------------------------------------------------------------------
+# (e) replay determinism: the whole chaos schedule is a function of its seed
+# ---------------------------------------------------------------------------
+class TestReplayDeterminism:
+    def _run(self, seed):
+        hp = FedQSHyperParams(buffer_k=8)
+        params = make_mlp_spec().init(KEY)
+        tel = Telemetry.in_memory()
+        stream = list(scenario_stream(params, get_scenario("straggler-heavy"),
+                                      64, 200, seed=seed, telemetry=tel))
+        svc = StreamingAggregator(
+            make_algorithm("fedqs-sgd", hp), hp, params, 64,
+            trigger=AdaptiveTimeWindow(window=2.0, min_updates=2),
+            admission=StalenessAdmission(2), batched=True, telemetry=tel)
+        replay(svc, iter(stream))
+        return svc, tel
+
+    @staticmethod
+    def _scrub(records):
+        # metrics snapshots fold wall-clock histograms and RoundFired
+        # carries host aggregation timing — everything else must replay
+        out = []
+        for r in records:
+            if r.get("e") == "metrics-snapshot":
+                continue
+            r = dict(r)
+            r.pop("agg_seconds", None)
+            out.append(r)
+        return out
+
+    def test_same_seed_bit_identical(self):
+        a, ta = self._run(17)
+        b, tb = self._run(17)
+        assert _leaves_equal(a.global_params, b.global_params)
+        for f in ("submitted", "accepted", "dropped", "downweighted",
+                  "partial", "rounds"):
+            assert getattr(a.stats, f) == getattr(b.stats, f)
+        assert self._scrub(ta.ring.records) == self._scrub(tb.ring.records)
+
+    def test_straggler_run_adapts_deadline(self):
+        _, tel = self._run(17)
+        kinds = Counter(r["e"] for r in tel.ring.records)
+        assert kinds["deadline-adapted"] > 0
+        assert kinds["partial-admitted"] > 0
+
+    def test_different_seed_diverges(self):
+        a, _ = self._run(17)
+        b, _ = self._run(18)
+        assert not _leaves_equal(a.global_params, b.global_params)

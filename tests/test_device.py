@@ -1,0 +1,396 @@
+"""Device-state layer (docs/ROBUSTNESS.md): availability chains, latency
+models, mid-round dropout, partial local work, and the adaptive deadline
+trigger — plus the bit-identity parity gates that pin the all-complete
+device path to the legacy engine."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FedQSHyperParams, make_algorithm
+from repro.core.types import Update
+from repro.models import make_mlp_spec
+from repro.scenarios import (
+    BimodalLatency,
+    CohortEngine,
+    DeviceStateModel,
+    LognormalLatency,
+    MarkovAvailability,
+    get_scenario,
+)
+from repro.scenarios.arrivals import TraceReplay
+from repro.scenarios.scenario import Scenario
+from repro.serve import (
+    AdaptiveTimeWindow,
+    AdmitAll,
+    StalenessAdmission,
+    StreamingAggregator,
+    TimeWindow,
+    make_trigger,
+    replay,
+    scenario_stream,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mk_update(cid=0, completed_fraction=1.0, sent_at=-1.0, stale_round=0):
+    return Update(cid=cid, n_samples=50, stale_round=stale_round, lr=0.1,
+                  similarity=0.5, feedback=False, speed_f=0.1,
+                  completed_fraction=completed_fraction, sent_at=sent_at)
+
+
+def _leaves_equal(a, b):
+    return all(bool(jnp.array_equal(x, y)) for x, y in
+               zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# the model itself
+# ---------------------------------------------------------------------------
+class TestDeviceStateModel:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            DeviceStateModel(drop_prob=1.5)
+        with pytest.raises(ValueError):
+            DeviceStateModel(partial_prob=-0.1)
+        with pytest.raises(ValueError):
+            DeviceStateModel(partial_range=(0.0, 0.5))   # lo must be > 0
+        with pytest.raises(ValueError):
+            DeviceStateModel(partial_range=(0.9, 0.3))
+        with pytest.raises(ValueError):
+            DeviceStateModel(recovery_gap=-1.0)
+        with pytest.raises(ValueError):
+            LognormalLatency(median=-1.0)
+        with pytest.raises(ValueError):
+            BimodalLatency(slow_prob=2.0)
+        with pytest.raises(ValueError):
+            MarkovAvailability(mean_on=0.0)
+
+    def test_trivial_model_draws_nothing(self):
+        """The bit-identity contract: an inactive model must not consume
+        RNG draws, so all-complete runs replay the device-free stream."""
+        dev = DeviceStateModel()
+        assert dev.trivial
+        rng = np.random.default_rng(7)
+        state = rng.bit_generator.state
+        for cid in range(16):
+            assert dev.round_outcome(cid, rng) == (False, 1.0)
+            assert dev.sample_latency(cid, rng) == 0.0
+        assert rng.bit_generator.state == state
+
+    def test_outcomes_in_range(self):
+        dev = DeviceStateModel(drop_prob=0.3, partial_prob=0.5,
+                               partial_range=(0.2, 0.8),
+                               latency=LognormalLatency(median=2.0))
+        rng = np.random.default_rng(0)
+        saw_drop = saw_partial = saw_full = False
+        for _ in range(300):
+            dropped, cf = dev.round_outcome(0, rng)
+            if dropped:
+                saw_drop = True
+                assert cf == 0.0
+            elif cf < 1.0:
+                saw_partial = True
+                assert 0.2 <= cf <= 0.8
+            else:
+                saw_full = True
+            assert dev.sample_latency(0, rng) >= 0.0
+        assert saw_drop and saw_partial and saw_full
+
+    def test_latency_models_sample_positive(self):
+        rng = np.random.default_rng(1)
+        for m in (LognormalLatency(median=3.0, sigma=1.0),
+                  BimodalLatency(fast=1.0, slow=20.0, slow_prob=0.5)):
+            xs = [m.sample(0, rng) for _ in range(200)]
+            assert min(xs) >= 0.0
+            assert m.describe()
+
+
+class TestMarkovAvailability:
+    def test_start_stationary_and_deterministic(self):
+        arr = MarkovAvailability(mean_on=50.0, mean_off=20.0)
+        a = arr.start(64, np.random.default_rng(3))
+        b = MarkovAvailability(mean_on=50.0, mean_off=20.0).start(
+            64, np.random.default_rng(3))
+        np.testing.assert_array_equal(a, b)
+        assert (a >= 0).all()
+        # stationary: a healthy majority starts inside an on-period (t=0)
+        assert (a == 0.0).mean() > 0.4
+
+    def test_next_start_monotone(self):
+        arr = MarkovAvailability(mean_on=10.0, mean_off=5.0)
+        rng = np.random.default_rng(0)
+        arr.start(4, rng)
+        t = 0.0
+        for _ in range(200):
+            nxt = arr.next_start(2, t + 0.5, rng)
+            assert nxt >= t
+            t = nxt
+
+
+# ---------------------------------------------------------------------------
+# admission invariant + adaptive deadline trigger
+# ---------------------------------------------------------------------------
+class TestPartialAdmission:
+    def test_nonpositive_fraction_rejected(self):
+        for policy in (AdmitAll(), StalenessAdmission(5)):
+            u, adm = policy.apply(_mk_update(completed_fraction=0.0), 0)
+            assert u is None and not adm.accepted
+            assert "completed_fraction" in adm.reason
+            u, adm = policy.apply(_mk_update(completed_fraction=-0.5), 0)
+            assert u is None and not adm.accepted
+
+    def test_overfull_fraction_clamped(self):
+        u, adm = AdmitAll().apply(_mk_update(completed_fraction=1.7), 0)
+        assert adm.accepted and u.completed_fraction == 1.0
+
+    def test_full_fraction_untouched(self):
+        orig = _mk_update(completed_fraction=1.0)
+        u, adm = AdmitAll().apply(orig, 0)
+        assert adm.accepted and u is orig
+
+
+class TestAdaptiveTimeWindow:
+    def test_without_observations_matches_fixed_window(self):
+        fixed, adaptive = TimeWindow(window=10.0), AdaptiveTimeWindow(window=10.0)
+        buf = [_mk_update(0)]
+        for t in (0.0, 5.0, 10.0):
+            assert fixed.should_fire(list(buf), t) == \
+                adaptive.should_fire(list(buf), t)
+        assert adaptive.consume_adaptation() is None
+
+    def test_deadline_tracks_latency_quantile(self):
+        trig = AdaptiveTimeWindow(window=2.0, q=0.9, slack=1.25, warmup=8)
+        now = 0.0
+        for i in range(16):
+            now += 1.0
+            trig.observe(_mk_update(i, sent_at=now - 8.0), now)  # 8.0 latency
+        trig.arm(now)
+        adapted = trig.consume_adaptation()
+        assert adapted is not None
+        old_w, new_w, q_lat = adapted
+        assert old_w == 2.0
+        assert q_lat == pytest.approx(8.0)
+        assert new_w == pytest.approx(8.0 * 1.25)
+        assert trig.consume_adaptation() is None  # one-shot
+        assert "adaptive" in trig.describe()
+
+    def test_window_clamped(self):
+        trig = AdaptiveTimeWindow(window=2.0, warmup=4)
+        for i in range(8):
+            trig.observe(_mk_update(i, sent_at=0.0), 1e6 + i)  # ~1e6 latency
+        trig.arm(1e6 + 8.0)
+        _, new_w, _ = trig.consume_adaptation()
+        assert new_w <= 2.0 * 16  # max_window default: window · 16
+
+    def test_negative_sentinel_not_observed(self):
+        trig = AdaptiveTimeWindow(window=2.0, warmup=1)
+        trig.observe(_mk_update(0, sent_at=-1.0), 5.0)
+        trig.arm(5.0)
+        assert trig.consume_adaptation() is None
+
+    def test_factory(self):
+        assert isinstance(make_trigger("adaptive", window=3.0),
+                          AdaptiveTimeWindow)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity parity: all-complete device runs == legacy runs
+# ---------------------------------------------------------------------------
+class TestAllCompleteParity:
+    def test_stream_bit_identical(self):
+        params = make_mlp_spec().init(KEY)
+        plain = Scenario(name="p")
+        device = Scenario(name="p", device=DeviceStateModel())
+        a = list(scenario_stream(params, plain, 24, 80, seed=11))
+        b = list(scenario_stream(params, device, 24, 80, seed=11))
+        assert len(a) == len(b) == 80
+        for (ua, ta), (ub, tb) in zip(a, b):
+            assert ta == tb
+            assert (ua.cid, ua.n_samples, ua.stale_round, ua.similarity,
+                    ua.feedback) == (ub.cid, ub.n_samples, ub.stale_round,
+                                     ub.similarity, ub.feedback)
+            assert ub.completed_fraction == 1.0
+
+    @pytest.mark.parametrize("batched", [False, True])
+    def test_flat_service_bit_identical(self, batched):
+        hp = FedQSHyperParams(buffer_k=6)
+        spec = make_mlp_spec()
+        params = spec.init(KEY)
+
+        def run(scenario):
+            svc = StreamingAggregator(
+                make_algorithm("fedqs-sgd", hp), hp, params, 24,
+                batched=batched)
+            stream = scenario_stream(params, scenario, 24, 60, seed=4)
+            replay(svc, stream)
+            return svc
+
+        a = run(Scenario(name="p"))
+        b = run(Scenario(name="p", device=DeviceStateModel()))
+        assert a.round == b.round
+        assert _leaves_equal(a.global_params, b.global_params)
+
+    def test_cohort_engine_bit_identical(self):
+        a = CohortEngine(Scenario(name="p"), 48, seed=3, cohort_k=8).run(5)
+        b = CohortEngine(Scenario(name="p", device=DeviceStateModel()),
+                         48, seed=3, cohort_k=8).run(5)
+        assert _leaves_equal(a.final_params, b.final_params)
+        assert [(m.loss, m.accuracy) for m in a.metrics] == \
+            [(m.loss, m.accuracy) for m in b.metrics]
+
+
+# ---------------------------------------------------------------------------
+# partial-work weighting end to end (flat vs hier member-exactness)
+# ---------------------------------------------------------------------------
+class TestPartialWeighting:
+    def _stream_with_partials(self, params, n=36, updates=72, seed=9):
+        sc = Scenario(name="partial",
+                      device=DeviceStateModel(partial_prob=0.5,
+                                              partial_range=(0.2, 0.9)))
+        return list(scenario_stream(params, sc, n, updates, seed=seed))
+
+    def test_partial_updates_counted_and_weighted(self):
+        hp = FedQSHyperParams(buffer_k=6)
+        spec = make_mlp_spec()
+        params = spec.init(KEY)
+        stream = self._stream_with_partials(params)
+        assert any(u.completed_fraction < 1.0 for u, _ in stream)
+        svc = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp,
+                                  params, 36, batched=True)
+        replay(svc, stream)
+        assert svc.stats.partial > 0
+        # partial work changes the aggregate relative to full-work credit
+        full = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp,
+                                   params, 36, batched=True)
+        from dataclasses import replace
+
+        replay(full, ((replace(u, completed_fraction=1.0), t)
+                      for u, t in stream))
+        assert not _leaves_equal(svc.global_params, full.global_params)
+
+    def test_flat_vs_hier_all_pass_parity_with_partials(self):
+        from repro.hier import HierarchicalService, Topology
+
+        hp = FedQSHyperParams(buffer_k=6)
+        spec = make_mlp_spec()
+        params = spec.init(KEY)
+        stream = self._stream_with_partials(params)
+        algo = make_algorithm("fedqs-sgd", hp)
+        flat = StreamingAggregator(algo, hp, params, 36, batched=True)
+        replay(flat, iter(stream))
+        hier = HierarchicalService(
+            make_algorithm("fedqs-sgd", hp), hp, params, 36,
+            Topology.from_spec("hier:6", 36))
+        replay(hier, iter(stream))
+        assert flat.round == hier.round
+        fa = np.concatenate([np.ravel(l) for l in
+                             jax.tree_util.tree_leaves(flat.global_params)])
+        ha = np.concatenate([np.ravel(l) for l in
+                             jax.tree_util.tree_leaves(hier.global_params)])
+        gap = float(np.max(np.abs(fa - ha)) / max(np.max(np.abs(fa)), 1e-12))
+        assert gap <= 1e-5, f"flat/hier partial-work gap {gap:.2e}"
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip with device fields
+# ---------------------------------------------------------------------------
+class TestDeviceCheckpoint:
+    def test_hier_buffers_keep_partial_fields(self, tmp_path):
+        from repro.hier import HierarchicalService, Topology
+        from repro.serve import KBuffer
+
+        hp = FedQSHyperParams(buffer_k=12)
+        spec = make_mlp_spec()
+        params = spec.init(KEY)
+
+        def build():
+            return HierarchicalService(
+                make_algorithm("fedqs-sgd", hp), hp, params, 24,
+                Topology.from_spec("hier:4", 24),
+                edge_trigger=lambda e: KBuffer(3))
+
+        a = build()
+        stream = self._partial_stream(params)
+        for u, t in stream[:20]:
+            a.submit(u, now=t)
+        assert a.pending > 0
+        d = str(tmp_path / "ckpt")
+        a.save(d)
+        b = build()
+        b.restore(d)
+        cfs_a = sorted(float(getattr(u, "completed_fraction", 1.0))
+                       for e in a.edges for u in e.buffer)
+        cfs_b = sorted(float(getattr(u, "completed_fraction", 1.0))
+                       for e in b.edges for u in e.buffer)
+        assert cfs_a == cfs_b
+        assert any(c < 1.0 for c in cfs_b), \
+            "partial fractions must survive the round trip"
+        for u, t in stream[20:]:
+            a.submit(u, now=t)
+            b.submit(u, now=t)
+        assert a.round == b.round
+        assert _leaves_equal(a.global_params, b.global_params)
+
+    def _partial_stream(self, params):
+        sc = Scenario(name="partial",
+                      device=DeviceStateModel(partial_prob=0.6,
+                                              partial_range=(0.3, 0.9)))
+        return list(scenario_stream(params, sc, 24, 40, seed=2))
+
+    def test_flat_stats_partial_persisted(self, tmp_path):
+        hp = FedQSHyperParams(buffer_k=4)
+        spec = make_mlp_spec()
+        params = spec.init(KEY)
+        svc = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp,
+                                  params, 24)
+        replay(svc, iter(self._partial_stream(params)))
+        assert svc.stats.partial > 0
+        d = str(tmp_path / "ckpt")
+        svc.save(d)
+        with open(os.path.join(d, "service.json")) as f:
+            meta = json.load(f)
+        assert meta["stats"]["partial"] == svc.stats.partial
+        restored = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp,
+                                       params, 24)
+        restored.restore(d)
+        assert restored.stats.partial == svc.stats.partial
+
+
+# ---------------------------------------------------------------------------
+# engine guards + trace validation (the arrivals fix pin)
+# ---------------------------------------------------------------------------
+class TestGuards:
+    def test_safl_engine_rejects_device_scenarios(self):
+        from repro.core import SAFLEngine
+        from repro.data import make_federated_data
+
+        data = make_federated_data("rwd", 8, sigma=1.0, seed=0, n_total=400)
+        with pytest.raises(ValueError, match="device-state"):
+            SAFLEngine(data, make_mlp_spec(),
+                       make_algorithm("fedqs-sgd", FedQSHyperParams()),
+                       FedQSHyperParams(),
+                       scenario=get_scenario("flaky-battery"))
+
+
+class TestTraceValidation:
+    def test_out_of_order_rows_sorted_stably(self):
+        tr = TraceReplay([(0, 30.0, 1.0), (0, 10.0, 2.0), (0, 20.0, 3.0),
+                          (0, 10.0, 9.0)])
+        rng = np.random.default_rng(0)
+        starts = tr.start(1, rng)
+        assert starts[0] == 10.0
+        # stable on equal timestamps: trace order preserved, so the first
+        # t=10 row's compute time (2.0) wins
+        assert tr.compute_time(0, 10.0, 99.0, rng) == 2.0
+        assert tr.next_start(0, 10.5, rng) == 20.0
+        assert tr.next_start(0, 20.5, rng) == 30.0
+
+    @pytest.mark.parametrize("bad", [-1.0, float("nan"), float("inf")])
+    def test_invalid_timestamps_rejected(self, bad):
+        with pytest.raises(ValueError, match="t_arrival"):
+            TraceReplay([(3, bad, 1.0)])

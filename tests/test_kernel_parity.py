@@ -204,6 +204,104 @@ class TestIngestSegmentAggFuzz:
         assert jnp.array_equal(got, want)
 
 
+class TestPartialWorkWeights:
+    """Partial-work (completed_fraction) weight algebra, fuzzed.
+
+    The device-state layer (docs/ROBUSTNESS.md) scales each row's
+    pre-normalization Eq. §3.4 weight by its completed fraction.  Three
+    contracts: cf of exactly 1 is a bit-identical no-op (×1.0 is IEEE
+    exact, and the cf=None fast path skips the multiply entirely); any
+    cf < 1 strictly attenuates a positive weight; and the fused kernels
+    stay bit-exact against their oracles with a cf column in play.
+    """
+
+    @given(KS, DS, SEEDS, WEIGHT_REGIMES, st.booleans(), st.booleans())
+    @settings(deadline=None)
+    def test_cf_ones_is_identity(self, K, D, seed, regime, normalize, int8):
+        rng = np.random.default_rng(seed)
+        n, F, G, fb = _meta(rng, K, regime)
+        if int8:
+            chunk = 64
+            D = 2 * chunk
+            q = jnp.asarray(rng.integers(-128, 128, (K, D)).astype(np.int8))
+            scales = jnp.asarray(rng.random((K, 2)).astype(np.float32) * 1e-2)
+        else:
+            chunk = 0
+            q = jnp.asarray(rng.standard_normal((K, D)).astype(np.float32))
+            scales = None
+        meta = (jnp.asarray(n), jnp.asarray(F), jnp.asarray(G),
+                jnp.asarray(fb))
+        base = ingest_agg_op(q, scales, *meta, None, None,
+                             chunk=chunk, n_clients=64, normalize=normalize)
+        ones = ingest_agg_op(q, scales, *meta, None, jnp.ones(K, jnp.float32),
+                             chunk=chunk, n_clients=64, normalize=normalize)
+        assert jnp.array_equal(base, ones), (
+            f"cf=1 not a no-op: K={K} D={D} seed={seed} regime={regime} "
+            f"normalize={normalize} int8={int8}")
+
+    @given(KS, SEEDS, st.floats(0.05, 0.95))
+    @settings(deadline=None)
+    def test_partial_weight_strictly_below_full(self, K, seed, cf_val):
+        rng = np.random.default_rng(seed)
+        n = rng.integers(1, 200, K).astype(np.float32)
+        F = rng.uniform(0.2, 5.0, K).astype(np.float32)
+        G = rng.uniform(0.2, 5.0, K).astype(np.float32)
+        fb = (rng.random(K) < 0.5).astype(np.float32)
+        full = ref.ingest_weights(
+            jnp.asarray(n), jnp.asarray(F), jnp.asarray(G), jnp.asarray(fb),
+            jnp.float32(K), n_clients=64, normalize=False)
+        part = ref.ingest_weights(
+            jnp.asarray(n), jnp.asarray(F), jnp.asarray(G), jnp.asarray(fb),
+            jnp.float32(K), n_clients=64, normalize=False,
+            cf=jnp.full(K, cf_val, jnp.float32))
+        assert bool((part < full).all()), (
+            f"cf={cf_val} did not strictly attenuate: seed={seed}")
+        np.testing.assert_allclose(np.asarray(part),
+                                   np.asarray(full) * np.float32(cf_val),
+                                   rtol=1e-6)
+
+    @given(KS, DS, SEEDS, WEIGHT_REGIMES, st.booleans())
+    @settings(deadline=None)
+    def test_dense_cf_bitexact(self, K, D, seed, regime, normalize):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((K, D)).astype(np.float32))
+        n, F, G, fb = _meta(rng, K, regime)
+        cf = jnp.asarray(rng.uniform(0.05, 1.0, K).astype(np.float32))
+        args = (x, None, jnp.asarray(n), jnp.asarray(F), jnp.asarray(G),
+                jnp.asarray(fb), None, cf)
+        got = ingest_agg_op(*args, n_clients=64, normalize=normalize)
+        want = ref.ingest_agg_ref(*args, n_clients=64, normalize=normalize)
+        assert jnp.array_equal(got, want), (
+            f"ingest_agg+cf diverged: K={K} D={D} seed={seed} "
+            f"regime={regime} normalize={normalize}")
+
+    @given(KS, st.sampled_from([1, 2, 4]), SEEDS, st.booleans())
+    @settings(deadline=None)
+    def test_segment_cf_bitexact(self, K, G, seed, int8):
+        rng = np.random.default_rng(seed)
+        n, F, Gr, fb = _meta(rng, K, "normal")
+        if int8:
+            chunk = 64
+            D = 2 * chunk
+            q = jnp.asarray(rng.integers(-128, 128, (K, D)).astype(np.int8))
+            scales = jnp.asarray(rng.random((K, 2)).astype(np.float32) * 1e-2)
+        else:
+            chunk = 0
+            q = jnp.asarray(rng.standard_normal((K, 100)).astype(np.float32))
+            scales = None
+        seg = jnp.asarray(rng.integers(0, G + 1, K).astype(np.int32))
+        cf = jnp.asarray(rng.uniform(0.05, 1.0, K).astype(np.float32))
+        args = (q, scales, seg, jnp.asarray(n), jnp.asarray(F),
+                jnp.asarray(Gr), jnp.asarray(fb), None, cf)
+        got = ingest_segment_agg_op(*args, num_segments=G, chunk=chunk,
+                                    n_clients=64)
+        want = ref.ingest_segment_agg_ref(*args, num_segments=G,
+                                          n_clients=64)
+        assert jnp.array_equal(got, want), (
+            f"ingest_segment_agg+cf diverged: K={K} G={G} seed={seed} "
+            f"int8={int8}")
+
+
 class TestWindowAttentionFuzz:
     @given(st.sampled_from([(1, 4, 4, 32, 16), (2, 8, 2, 64, 32),
                             (3, 4, 1, 32, 16)]),
