@@ -21,6 +21,7 @@ rows are kept for contrast.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 try:
@@ -239,6 +240,103 @@ def bench_telemetry(params, args):
             f"first diff at {diff})")
 
 
+def bench_trace(params, args):
+    """Trace-plane gates (docs/OBSERVABILITY.md):
+
+    1. **overhead** — span tracing + kernel timing hooks may cost at most
+       5% sustained updates/sec vs the same service with telemetry=None;
+    2. **bit-identity** — tracing never touches tensors: traced and
+       untraced services must land on bit-identical global params;
+    3. **coverage** — the critical-path analyzer must explain the round
+       wall with measured stages (coverage in [0.9, 1.1]).
+
+    Same chunk-interleaved paired methodology as the telemetry overhead
+    gate above: both services advance through the SAME stream in
+    alternating ~50-update chunks, repeated over several passes, with
+    independent re-measurement on a breach so only a persistent
+    regression fails the gate.
+    """
+    from repro.telemetry import Telemetry, profile
+    from repro.telemetry.critical_path import stage_summary
+
+    hp = FedQSHyperParams(buffer_k=args.buffer_k)
+    stream = list(synthetic_stream(params, args.clients,
+                                   max(args.updates, 800), seed=args.seed))
+
+    def make_flat(telemetry=None):
+        return StreamingAggregator(
+            make_algorithm("fedqs-sgd", hp), hp, params, args.clients,
+            trigger=KBuffer(args.buffer_k), telemetry=telemetry)
+
+    replay(make_flat(), stream[: args.buffer_k], flush=True)
+
+    passes, chunk = (3, 50) if args.quick else (5, 50)
+    services = {}
+    tracers = {}
+
+    def measure():
+        total = {"plain": 0.0, "trace": 0.0}
+        for rep in range(passes):
+            tel = Telemetry.in_memory(trace=True)
+            pair = [("plain", make_flat(), None),
+                    ("trace", make_flat(tel), tel)]
+            for key, svc, _ in pair:
+                services[key] = svc
+            tracers["trace"] = tel.tracer
+            for ci, start in enumerate(range(0, len(stream), chunk)):
+                part = stream[start:start + chunk]
+                for key, svc, t in (pair if (rep + ci) % 2 == 0 else pair[::-1]):
+                    scope = (profile.activate(t) if t is not None
+                             else contextlib.nullcontext())
+                    with scope:
+                        t0 = time.perf_counter()
+                        replay(svc, part, flush=False)
+                        total[key] += time.perf_counter() - t0
+        return total
+
+    attempts = []
+    for _ in range(3):
+        total = measure()
+        attempts.append((total["trace"] / total["plain"] - 1.0, total))
+        if attempts[-1][0] <= 0.05:
+            break
+    overhead, total = min(attempts, key=lambda a: a[0])
+    n_updates = passes * len(stream)
+    plain_ups = n_updates / total["plain"]
+    trace_ups = n_updates / total["trace"]
+
+    gap = max(
+        float(np.abs(np.asarray(a) - np.asarray(b)).max())
+        for a, b in zip(
+            jax.tree_util.tree_leaves(services["plain"].global_params),
+            jax.tree_util.tree_leaves(services["trace"].global_params))
+    )
+    summary = stage_summary(tracers["trace"].spans)
+    coverage = summary["coverage"]
+    emit(
+        "serve_trace_overhead",
+        1e6 / max(trace_ups, 1e-9),
+        plain_updates_per_sec=f"{plain_ups:.1f}",
+        traced_updates_per_sec=f"{trace_ups:.1f}",
+        overhead_pct=f"{overhead * 100:.1f}",
+        measurements=len(attempts),
+        bit_identical=(gap == 0.0),
+        spans=summary["spans"],
+        rounds=summary["rounds"],
+        coverage=f"{coverage:.4f}",
+    )
+    if gap != 0.0:
+        raise SystemExit(f"tracing changed aggregation results: gap={gap:.3e}")
+    if overhead > 0.05:
+        raise SystemExit(
+            f"trace overhead gate: {overhead * 100:.1f}% updates/sec "
+            f"regression (> 5%): plain={plain_ups:.1f}, traced={trace_ups:.1f}")
+    if not 0.9 <= coverage <= 1.1:
+        raise SystemExit(
+            f"critical-path coverage gate: measured stages explain "
+            f"{coverage:.1%} of round wall (outside [90%, 110%])")
+
+
 def bench_straggler_adaptive(params, args):
     """Adaptive-deadline gate (docs/ROBUSTNESS.md): the same
     straggler-heavy stream replays through a fixed ``TimeWindow`` and an
@@ -319,6 +417,7 @@ def main(argv=None):
     bench_straggler_adaptive(params, args)
     bench_parity(args)
     bench_telemetry(params, args)
+    bench_trace(params, args)
 
 
 run = make_suite_run(main)  # harness entry: python -m benchmarks.run

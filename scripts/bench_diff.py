@@ -1,0 +1,144 @@
+#!/usr/bin/env python
+"""Perf-regression detector over the committed BENCH_*.json artifacts.
+
+Diffs a current benchmark artifact against a baseline (by default the
+committed copy at ``git show HEAD:BENCH_<suite>.json``) row by row on
+``us_per_call`` and flags any benchmark that slowed down beyond the
+threshold.  Wired into scripts/ci.sh in ``--report-only`` mode — CPU CI
+hosts are too noisy to hard-gate wall times, so CI prints the table and
+a regression note without failing; run without ``--report-only`` on a
+quiet host (or TPU CI) to enforce the gate.
+
+    PYTHONPATH=src python scripts/bench_diff.py BENCH_serve.json
+    PYTHONPATH=src python scripts/bench_diff.py BENCH_serve.json \
+        --baseline old/BENCH_serve.json --threshold 1.5
+    PYTHONPATH=src python scripts/bench_diff.py BENCH_*.json --report-only
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from typing import List, Optional
+
+# Rows whose us_per_call is a pure pass/fail marker, not a wall time
+# (e.g. serve_telemetry_hier_parity records 0.0): a zero baseline makes
+# every ratio infinite, so they are skipped, not gated.
+_EPS = 1e-9
+
+
+def compare(baseline: dict, current: dict, *, threshold: float = 2.0) -> dict:
+    """Row-by-row us_per_call diff of two benchmark artifacts.
+
+    Returns ``{"suite", "rows": [...], "regressions": [...], "added",
+    "removed"}`` where each row carries the baseline/current timings and
+    the slowdown ratio.  A row regresses when
+    ``current >= baseline * threshold``; zero-baseline rows (pass/fail
+    markers) and rows missing from either side are reported but never
+    gated.
+    """
+    base_rows = {r["name"]: r for r in baseline.get("results", [])}
+    cur_rows = {r["name"]: r for r in current.get("results", [])}
+    rows: List[dict] = []
+    regressions: List[dict] = []
+    for name, cur in cur_rows.items():
+        base = base_rows.get(name)
+        if base is None:
+            continue
+        b, c = float(base["us_per_call"]), float(cur["us_per_call"])
+        if b <= _EPS:  # pass/fail marker row, not a timing
+            rows.append({"name": name, "baseline_us": b, "current_us": c,
+                         "ratio": None, "regressed": False})
+            continue
+        ratio = c / b
+        row = {"name": name, "baseline_us": b, "current_us": c,
+               "ratio": ratio, "regressed": ratio >= threshold}
+        rows.append(row)
+        if row["regressed"]:
+            regressions.append(row)
+    return {
+        "suite": current.get("suite", "?"),
+        "threshold": threshold,
+        "rows": rows,
+        "regressions": regressions,
+        "added": sorted(set(cur_rows) - set(base_rows)),
+        "removed": sorted(set(base_rows) - set(cur_rows)),
+    }
+
+
+def format_diff(diff: dict) -> str:
+    lines = [f"bench_diff: suite={diff['suite']} "
+             f"threshold={diff['threshold']:.2f}x"]
+    for row in diff["rows"]:
+        if row["ratio"] is None:
+            lines.append(f"  {row['name']:<34} (pass/fail marker, skipped)")
+            continue
+        flag = "  << REGRESSION" if row["regressed"] else ""
+        lines.append(f"  {row['name']:<34} {row['baseline_us']:>10.1f} -> "
+                     f"{row['current_us']:>10.1f} us/call "
+                     f"({row['ratio']:.2f}x){flag}")
+    if diff["added"]:
+        lines.append(f"  new rows (no baseline): {', '.join(diff['added'])}")
+    if diff["removed"]:
+        lines.append(f"  rows gone from current: {', '.join(diff['removed'])}")
+    return "\n".join(lines)
+
+
+def _git_baseline(path: str) -> Optional[dict]:
+    """The committed copy of ``path`` at HEAD, or None if untracked."""
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:{path}"],
+            capture_output=True, text=True, check=True, cwd=".").stdout
+        return json.loads(out)
+    except (subprocess.CalledProcessError, json.JSONDecodeError):
+        return None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("artifacts", nargs="+",
+                    help="current BENCH_<suite>.json artifact(s)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline artifact path (default: the committed "
+                         "copy, git show HEAD:<artifact>)")
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="slowdown ratio that counts as a regression "
+                         "(default 2.0x — CPU wall times jitter)")
+    ap.add_argument("--report-only", action="store_true",
+                    help="print the diff but always exit 0 (CI on noisy "
+                         "hosts)")
+    args = ap.parse_args(argv)
+    if args.baseline and len(args.artifacts) > 1:
+        ap.error("--baseline only makes sense with a single artifact")
+
+    failed = False
+    for path in args.artifacts:
+        with open(path, encoding="utf-8") as fh:
+            current = json.load(fh)
+        if args.baseline:
+            with open(args.baseline, encoding="utf-8") as fh:
+                baseline = json.load(fh)
+        else:
+            baseline = _git_baseline(path)
+            if baseline is None:
+                print(f"bench_diff: {path}: no committed baseline at HEAD, "
+                      "skipping")
+                continue
+        diff = compare(baseline, current, threshold=args.threshold)
+        print(format_diff(diff))
+        if diff["regressions"]:
+            names = ", ".join(r["name"] for r in diff["regressions"])
+            print(f"bench_diff: {len(diff['regressions'])} regression(s) "
+                  f"in {path}: {names}")
+            failed = True
+    if failed and not args.report_only:
+        return 1
+    if failed:
+        print("bench_diff: --report-only, not failing the build")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,99 @@
+#!/usr/bin/env python
+"""Schema validator for the committed BENCH_*.json benchmark artifacts.
+
+``bench_diff.py`` and the experiment tooling parse these artifacts, so a
+row that drifts shape (a string us_per_call, a numeric derived value, a
+missing key) would break the perf-regression gate silently.  This check
+fails CI loudly instead.  Validated shape (benchmarks/common.py):
+
+    {"suite": str, "fast": bool, "generated_unix": int, "wall_s": number,
+     "results": [{"name": str, "us_per_call": number,
+                  "derived": {str: str}}, ...]}
+
+    python scripts/check_bench_schema.py            # validate ./BENCH_*.json
+    python scripts/check_bench_schema.py path.json  # validate specific files
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+from typing import List
+
+
+def validate_payload(doc: object, path: str = "<doc>") -> List[str]:
+    """All schema violations in one artifact (empty list = valid)."""
+    errors: List[str] = []
+    if not isinstance(doc, dict):
+        return [f"{path}: top level must be an object, got {type(doc).__name__}"]
+    if not isinstance(doc.get("suite"), str):
+        errors.append(f"{path}: 'suite' must be a string")
+    if not isinstance(doc.get("fast"), bool):
+        errors.append(f"{path}: 'fast' must be a bool")
+    if not isinstance(doc.get("generated_unix"), int) \
+            or isinstance(doc.get("generated_unix"), bool):
+        errors.append(f"{path}: 'generated_unix' must be an int")
+    if not isinstance(doc.get("wall_s"), (int, float)) \
+            or isinstance(doc.get("wall_s"), bool):
+        errors.append(f"{path}: 'wall_s' must be numeric")
+    results = doc.get("results")
+    if not isinstance(results, list):
+        errors.append(f"{path}: 'results' must be a list")
+        return errors
+    seen = set()
+    for i, row in enumerate(results):
+        where = f"{path}: results[{i}]"
+        if not isinstance(row, dict):
+            errors.append(f"{where}: must be an object")
+            continue
+        name = row.get("name")
+        if not isinstance(name, str) or not name:
+            errors.append(f"{where}: 'name' must be a non-empty string")
+        elif name in seen:
+            errors.append(f"{where}: duplicate row name {name!r}")
+        else:
+            seen.add(name)
+        us = row.get("us_per_call")
+        if not isinstance(us, (int, float)) or isinstance(us, bool):
+            errors.append(f"{where}: 'us_per_call' must be numeric, "
+                          f"got {type(us).__name__}")
+        derived = row.get("derived")
+        if not isinstance(derived, dict):
+            errors.append(f"{where}: 'derived' must be an object")
+            continue
+        for k, v in derived.items():
+            if not isinstance(k, str):
+                errors.append(f"{where}: derived key {k!r} must be a string")
+            if not isinstance(v, str):
+                errors.append(f"{where}: derived[{k!r}] must be a string "
+                              f"(emit() stringifies), got {type(v).__name__}")
+    return errors
+
+
+def main(argv=None) -> int:
+    paths = list(argv if argv is not None else sys.argv[1:])
+    if not paths:
+        paths = sorted(glob.glob("BENCH_*.json"))
+    if not paths:
+        print("check_bench_schema: no BENCH_*.json artifacts found")
+        return 1
+    errors: List[str] = []
+    for path in paths:
+        try:
+            with open(path, encoding="utf-8") as fh:
+                doc = json.load(fh)
+        except (OSError, json.JSONDecodeError) as e:
+            errors.append(f"{path}: unreadable: {e}")
+            continue
+        errs = validate_payload(doc, path)
+        errors.extend(errs)
+        if not errs:
+            n = len(doc.get("results", []))
+            print(f"check_bench_schema: {path}: OK ({n} rows)")
+    for e in errors:
+        print(f"check_bench_schema: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

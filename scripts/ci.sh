@@ -89,6 +89,45 @@ print('BENCH_serve.json OK:', len(rows), 'rows')"
 assert rows, 'BENCH_ingest.json has no results'; \
 print('BENCH_ingest.json OK:', len(rows), 'rows')"
 
+  echo "== bench artifacts: schema + perf diff =="
+  # every BENCH_*.json must match the documented artifact shape (the
+  # perf-diff tooling parses them), then diff the fresh artifacts against
+  # the committed baselines; report-only on CI hosts — wall times jitter
+  # too much to hard-gate, a quiet host runs bench_diff without the flag
+  $PY scripts/check_bench_schema.py
+  $PY scripts/bench_diff.py BENCH_serve.json BENCH_ingest.json --report-only
+
+  echo "== smoke: distributed tracing =="
+  # a 200-client traced stream: the exported file must load as Chrome
+  # trace-event JSON and the critical-path analyzer must explain >=90%
+  # of the round wall with measured stages (docs/OBSERVABILITY.md)
+  TRACEDIR=$(mktemp -d)
+  $PY -m repro.launch.serve --safl-stream --clients 200 --updates 400 \
+      --trigger kbuffer --trace "$TRACEDIR/run.trace.json"
+  $PY - "$TRACEDIR" <<'EOF'
+import json, sys, os
+d = sys.argv[1]
+doc = json.load(open(os.path.join(d, "run.trace.json")))
+evs = doc["traceEvents"]
+assert evs, "trace smoke exported no events"
+for e in evs:
+    assert e["ph"] in ("X", "M"), f"unexpected phase {e['ph']!r}"
+    if e["ph"] == "X":
+        assert isinstance(e["ts"], (int, float)) and e["dur"] >= 0
+xs = [e for e in evs if e["ph"] == "X"]
+rounds = [e for e in xs if e["name"] == "round"]
+assert rounds, "trace smoke fired no rounds"
+wall = sum(e["dur"] for e in rounds)
+staged = sum(e["dur"] for e in xs
+             if e["name"] in ("dispatch", "finalize"))
+assert 0.9 <= staged / wall <= 1.1, \
+    f"stage times cover {staged / wall:.1%} of round wall (outside 90-110%)"
+assert doc.get("metadata", {}).get("spans_dropped", 0) == 0, "spans dropped"
+print(f"trace smoke OK ({len(xs)} spans, {len(rounds)} rounds, "
+      f"coverage {staged / wall:.1%})")
+EOF
+  rm -rf "$TRACEDIR"
+
   echo "== smoke: simulator launcher =="
   $PY -m repro.launch.train --task rwd --algo fedqs-sgd --rounds 4 \
       --clients 10 --eval-every 2 --n-total 1000

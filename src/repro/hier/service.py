@@ -164,6 +164,10 @@ class HierarchicalService(StreamingAggregator):
         # K-buffer check is O(1) per submit instead of re-summing every
         # buffered partial
         self._ingest_members = 0
+        if self._tracer is not None:
+            # tier nodes record their _reduce time as hier/tier-fire spans
+            for node in self.edges + self.regions:
+                node.tracer = self._tracer
         if telemetry is not None:
             m = telemetry.metrics
             self._tm_edge_fires = m.counter("hier.edge_fires",
@@ -183,6 +187,10 @@ class HierarchicalService(StreamingAggregator):
         update, verdict = self._admit(update, now)
         if update is None:
             return SubmitResult(False, False, self.round, verdict.reason)
+        if self._tracer is not None:
+            # residency spans measure admission → global fire, however
+            # many tier hops the update's partial takes in between
+            self._ingest_t.append((self._last_tid, _time.perf_counter()))
 
         edge = self.edges[self.topology.edge_of(update.cid)]
         partial = edge.submit(update, now)
@@ -313,6 +321,8 @@ class HierarchicalService(StreamingAggregator):
 
         # status table (Eq. 1/2) from the exact member metadata, host-side
         # (duplicate cids: each occurrence counts, last similarity wins)
+        tr = self._tracer
+        t_tab = _time.perf_counter() if tr is not None else 0.0
         cids = np.concatenate([p.cids for p in batch])
         sims = np.concatenate([p.sims for p in batch]).astype(np.float32)
         counts = np.asarray(self.table.counts).copy()
@@ -321,10 +331,14 @@ class HierarchicalService(StreamingAggregator):
         table_sims[cids] = sims
         new_table = ServerTable(counts=jnp.asarray(counts, jnp.int32),
                                 sims=jnp.asarray(table_sims, jnp.float32))
+        if tr is not None:
+            tr.record("table", "serve", t_tab,
+                      _time.perf_counter() - t_tab, round=self._span_round)
 
         if self._fused and isinstance(self.algo, FedQS):
             return self._fused_global(batch, new_table, cids, sims)
 
+        t_stk = _time.perf_counter() if tr is not None else 0.0
         p_members = self._member_weights(batch, counts, table_sims, cids)
         part_idx = np.repeat(np.arange(len(batch)),
                              [p.n_members for p in batch])
@@ -345,6 +359,9 @@ class HierarchicalService(StreamingAggregator):
             rows = jnp.pad(rows, ((0, bucket - P), (0, 0)))
             w_partials = np.pad(w_partials, (0, bucket - P))
         w = jnp.asarray(w_partials)
+        if tr is not None:
+            tr.record("stack", "serve", t_stk,
+                      _time.perf_counter() - t_stk, round=self._span_round)
         if self._use_kernel is None:
             flat = weighted_agg_auto_op(rows, w)
         elif self._use_kernel:
@@ -367,6 +384,8 @@ class HierarchicalService(StreamingAggregator):
                       cids: np.ndarray, sims: np.ndarray):
         """FedQS global stage via ``_fused_partial_combine`` — flat global
         in/out (cached between fused rounds, like the flat service)."""
+        tr = self._tracer
+        t_stk = _time.perf_counter() if tr is not None else 0.0
         K, P = len(cids), len(batch)
         Kb = bucket_rows(K)
         Pb = max(8, 1 << (P - 1).bit_length())
@@ -395,6 +414,9 @@ class HierarchicalService(StreamingAggregator):
             flat_g = self._flat_cache
         else:
             flat_g, _ = ravel_pytree(self.global_params)
+        if tr is not None:
+            tr.record("stack", "serve", t_stk,
+                      _time.perf_counter() - t_stk, round=self._span_round)
         strategy = getattr(self.algo, "strategy", AggregationStrategy.MODEL)
         new_flat = _fused_partial_combine(
             rows, new_table.counts, new_table.sims, cids_b, sims_b, n, fb,

@@ -24,6 +24,7 @@ independent of how many tiers sat in between).
 """
 from __future__ import annotations
 
+import time as _time
 from typing import List, Optional
 
 import jax.numpy as jnp
@@ -42,6 +43,9 @@ class TierAggregator:
     """Common tier-node machinery: buffer + trigger + fire bookkeeping."""
 
     tier = "base"
+    # span tracer (repro.telemetry.trace), attached by the owning
+    # HierarchicalService when its hub carries one; None costs nothing
+    tracer = None
 
     def __init__(self, node_id: int, trigger: TriggerPolicy):
         self.node_id = int(node_id)
@@ -72,7 +76,15 @@ class TierAggregator:
         batch, self.buffer = self.buffer, []
         self.trigger.arm(now)
         self.fires += 1
-        return self._reduce(batch, now)
+        tr = self.tracer
+        if tr is None:
+            return self._reduce(batch, now)
+        t0 = _time.perf_counter()
+        out = self._reduce(batch, now)
+        tr.record("tier-fire", "hier", t0, _time.perf_counter() - t0,
+                  args={"tier": self.tier, "node": self.node_id,
+                        "members": len(batch)})
+        return out
 
     def _reduce(self, batch, now: float) -> PartialAggregate:
         raise NotImplementedError

@@ -38,6 +38,8 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 
+from repro.telemetry import profile as _profile
+
 DEFAULT_BLOCKS: Dict[str, int] = {
     "weighted_agg": 4096,
     "dequant_agg": 4096,
@@ -138,13 +140,19 @@ def get_config(kernel: str, shape: Sequence[int], dtype,
                backend: Optional[str] = None,
                path: Optional[str] = None) -> KernelConfig:
     """Cache lookup → ``KernelConfig``; never measures, never raises.
-    The ``*_auto_op`` hot-path entry: a couple of dict probes."""
+    The ``*_auto_op`` hot-path entry: a couple of dict probes.  An
+    active profiler (``repro.telemetry.profile``) counts each probe as
+    an autotune cache hit or miss."""
     path = path or default_cache_path(backend)
     if path not in _LOADED:
         _LOADED[path] = load_cache(path)
     entry = _LOADED[path].get(cache_key(kernel, shape, dtype, backend))
     default = DEFAULT_BLOCKS.get(kernel, 4096)
-    if not isinstance(entry, dict) or not isinstance(entry.get("block_d"), int):
+    hit = isinstance(entry, dict) and isinstance(entry.get("block_d"), int)
+    prof = _profile.active()
+    if prof is not None:
+        prof.config_probe(hit)
+    if not hit:
         return KernelConfig(block_d=default)
     return KernelConfig(block_d=entry["block_d"], source="cache",
                         us=entry.get("us"), gbps=entry.get("gbps"))

@@ -7,10 +7,13 @@ the pure-jnp oracles (used by A/B benchmarking).
 """
 from __future__ import annotations
 
+import functools
 import os
 
 import jax
 import jax.numpy as jnp
+
+from repro.telemetry import profile as _profile
 
 from . import ref as _ref
 from .autotune import get_config
@@ -154,3 +157,37 @@ def window_decode_attention_op(q, k, v, valid_len):
     if _FORCE_REF:
         return _ref.window_decode_attention_ref(q, k, v, valid_len)
     return window_decode_attention(q, k, v, valid_len, interpret=_INTERPRET)
+
+
+# --------------------------------------------------------------------------
+# Profiling hooks (repro.telemetry.profile): every public op funnels
+# through ``timed_call`` so an active profiler sees per-dispatch wall
+# time, ref-path fallbacks, and kernel spans; with no profiler active
+# the wrapper is one global read + ``is None`` check and the call goes
+# through untouched (no block_until_ready — async behavior and results
+# are bit-identical, gated by ``serve_trace_overhead``).
+
+def _hooked(fn, *, auto: bool):
+    mode = _profile.resolved_mode(auto)
+    name = fn.__name__
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kw):
+        return _profile.timed_call(name, mode, fn, *args, **kw)
+
+    return wrapped
+
+
+weighted_agg_op = _hooked(weighted_agg_op, auto=False)
+weighted_agg_auto_op = _hooked(weighted_agg_auto_op, auto=True)
+dequant_agg_op = _hooked(dequant_agg_op, auto=False)
+dequant_agg_auto_op = _hooked(dequant_agg_auto_op, auto=True)
+segment_agg_op = _hooked(segment_agg_op, auto=False)
+segment_agg_auto_op = _hooked(segment_agg_auto_op, auto=True)
+ingest_agg_op = _hooked(ingest_agg_op, auto=False)
+ingest_agg_auto_op = _hooked(ingest_agg_auto_op, auto=True)
+ingest_segment_agg_op = _hooked(ingest_segment_agg_op, auto=False)
+ingest_segment_agg_auto_op = _hooked(ingest_segment_agg_auto_op, auto=True)
+similarity_stats_op = _hooked(similarity_stats_op, auto=False)
+cosine_op = _hooked(cosine_op, auto=False)
+window_decode_attention_op = _hooked(window_decode_attention_op, auto=False)

@@ -325,6 +325,31 @@ from repro.telemetry.report import (  # noqa: E402
 )
 
 
+def export_trace(telemetry, path: str) -> Dict[str, Any]:
+    """Write the recorded spans as Chrome trace-event JSON (Perfetto-loadable).
+
+    Returns the critical-path stage summary so callers (launch CLIs, the
+    CI trace smoke) can print/validate coverage without re-reading the file.
+    """
+    import json as _json
+
+    from repro.telemetry.critical_path import stage_summary
+    from repro.telemetry.trace import to_chrome_trace
+
+    tracer = telemetry.tracer
+    if tracer is None:
+        raise ValueError("telemetry hub has no tracer (construct with trace=True)")
+    spans = tracer.spans
+    doc = to_chrome_trace(spans, dropped=tracer.dropped)
+    with open(path, "w", encoding="utf-8") as fh:
+        _json.dump(doc, fh)
+    summary = stage_summary(spans)
+    print(f"trace → {path} ({summary['spans']} spans, "
+          f"{summary['rounds']} rounds, "
+          f"coverage {summary['coverage'] * 100.0:.1f}%)")
+    return summary
+
+
 def main(argv=None) -> None:
     import argparse
 

@@ -56,7 +56,12 @@ def run_safl_stream(args):
     if args.telemetry:
         from repro.telemetry import Telemetry
 
-        telemetry = Telemetry.to_jsonl(args.telemetry)
+        telemetry = Telemetry.to_jsonl(args.telemetry, trace=bool(args.trace))
+    elif args.trace:
+        from repro.telemetry import Telemetry
+
+        # --trace without --telemetry: spans only, events stay in memory
+        telemetry = Telemetry.in_memory(trace=True)
 
     trigger = {
         "kbuffer": lambda: make_trigger("kbuffer", k=args.buffer_k),
@@ -110,8 +115,16 @@ def run_safl_stream(args):
         service.compressor = compressor
         stream = list(compress_stream(iter(stream), compressor,
                                       strategy=algo.strategy))
+    import contextlib
+
+    trace_scope = contextlib.nullcontext()
+    if telemetry is not None and telemetry.tracer is not None:
+        from repro.telemetry import profile
+
+        trace_scope = profile.activate(telemetry)
     t0 = time.perf_counter()
-    reports = replay(service, stream)
+    with trace_scope:
+        reports = replay(service, stream)
     dt = time.perf_counter() - t0
     s = service.stats
     # the tiered plane always runs the batched stacked path
@@ -144,8 +157,13 @@ def run_safl_stream(args):
         service.save(args.ckpt)
         print("checkpoint →", args.ckpt)
     if telemetry is not None:
+        if args.trace and telemetry.tracer is not None:
+            from repro.launch.analysis import export_trace
+
+            export_trace(telemetry, args.trace)
         telemetry.close()
-        print(f"telemetry → {args.telemetry}")
+        if args.telemetry:
+            print(f"telemetry → {args.telemetry}")
         if args.report:
             from repro.launch.analysis import report_from_jsonl
 
@@ -198,6 +216,9 @@ def main():
     ap.add_argument("--report", default=None, metavar="PATH",
                     help="render the recorded telemetry as a Markdown "
                          "experiment report (requires --telemetry)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record monotonic-clock spans and export a "
+                         "Chrome/Perfetto trace JSON (docs/OBSERVABILITY.md)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 

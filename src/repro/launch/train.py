@@ -33,27 +33,48 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
 import time
 
 
 def _make_telemetry(args):
-    if not getattr(args, "report", None) and not args.telemetry:
+    trace = bool(getattr(args, "trace", None))
+    if not getattr(args, "report", None) and not args.telemetry and not trace:
         return None
     if args.report and not args.telemetry:
         raise SystemExit("--report needs --telemetry (the recorded JSONL "
                          "log is what the report renders)")
     from repro.telemetry import Telemetry
 
-    return Telemetry.to_jsonl(args.telemetry)
+    if args.telemetry:
+        return Telemetry.to_jsonl(args.telemetry, trace=trace)
+    # --trace without --telemetry: spans only, events stay in memory
+    return Telemetry.in_memory(trace=True)
+
+
+def _trace_scope(args, telemetry):
+    """``profile.activate`` when tracing, else a no-op context — wraps
+    the run so kernel dispatches land in the trace."""
+    if telemetry is None or telemetry.tracer is None:
+        return contextlib.nullcontext()
+    from repro.telemetry import profile
+
+    return profile.activate(telemetry)
 
 
 def _finish_telemetry(args, telemetry):
     if telemetry is None:
         return
+    trace_path = getattr(args, "trace", None)
+    if trace_path and telemetry.tracer is not None:
+        from repro.launch.analysis import export_trace
+
+        export_trace(telemetry, trace_path)
     telemetry.close()
-    print(f"telemetry → {args.telemetry}")
+    if args.telemetry:
+        print(f"telemetry → {args.telemetry}")
     if args.report:
         from repro.launch.analysis import report_from_jsonl
 
@@ -78,7 +99,8 @@ def run_cohort(args, hp, scenario):
           + (f"topology={eng.service.describe()} " if args.topology else "")
           + (f"compress={eng.compressor.describe()} " if eng.compressor else "")
           + "(--task/--alpha/--sigma/--n-total apply to the event engine only)")
-    res = eng.run(args.rounds)
+    with _trace_scope(args, telemetry):
+        res = eng.run(args.rounds)
     for m in res.metrics[:: max(1, len(res.metrics) // 20)]:
         print(f"  round {m.round:4d}  t={m.virtual_time:8.1f}  "
               f"loss={m.loss:.4f}  acc={m.accuracy:.4f}  stale={m.n_stale}")
@@ -129,7 +151,8 @@ def run_simulation(args):
           + (f" scenario={scenario.describe()}" if scenario else "")
           + (f" topology={eng.service.describe()}" if args.topology else "")
           + (f" compress={eng.compressor.describe()}" if eng.compressor else ""))
-    res = eng.run(args.rounds)
+    with _trace_scope(args, telemetry):
+        res = eng.run(args.rounds)
     for m in res.metrics[:: max(1, len(res.metrics) // 20)]:
         print(f"  round {m.round:4d}  t={m.virtual_time:8.1f}  "
               f"loss={m.loss:.4f}  acc={m.accuracy:.4f}  stale={m.n_stale}")
@@ -220,6 +243,9 @@ def main():
     ap.add_argument("--report", default=None, metavar="PATH",
                     help="render the recorded telemetry as a Markdown "
                          "experiment report (requires --telemetry)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record monotonic-clock spans and export a "
+                         "Chrome/Perfetto trace JSON (docs/OBSERVABILITY.md)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--arch", default="gemma3-1b")

@@ -24,6 +24,7 @@ and the streaming service opts in.
 from __future__ import annotations
 
 import functools
+import time
 
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -276,7 +277,8 @@ def _fused_quant_round(q, scales, counts, tsims, cids, sims, n, fb, cf, k,
 
 
 def fused_ingest_round(batch, table, flat_g, hp, n_clients: int,
-                       strategy, *, mode: Optional[str] = None):
+                       strategy, *, mode: Optional[str] = None,
+                       tracer=None, span_round: int = -1):
     """One fused FedQS round over a frozen buffer → (new flat global,
     new table).
 
@@ -292,6 +294,11 @@ def fused_ingest_round(batch, table, flat_g, hp, n_clients: int,
     through the caller's densify; here it must be homogeneous.  ``mode``:
     None → compiled kernel on TPU / jitted oracle elsewhere; ``"kernel"``
     forces the interpret-mode kernel body (validation).
+
+    ``tracer``/``span_round`` (``repro.telemetry.trace``): when set, the
+    host sub-stages are recorded as ``table``/``stack`` spans of that
+    round so the critical-path analyzer can split dispatch wall time
+    into host work vs the derived kernel remainder.
     """
     from repro.core.aggregation import update_table
 
@@ -302,6 +309,7 @@ def fused_ingest_round(batch, table, flat_g, hp, n_clients: int,
         return None  # caller falls back to the unfused dispatch
 
     K = len(batch)
+    t_tab = time.perf_counter() if tracer is not None else 0.0
     cids = np.asarray([u.cid for u in batch], np.int32)
     sims = np.asarray([u.similarity for u in batch], np.float32)
     new_table = update_table(table, jnp.asarray(cids), jnp.asarray(sims))
@@ -326,6 +334,10 @@ def fused_ingest_round(batch, table, flat_g, hp, n_clients: int,
     eta_g = jnp.float32(hp.eta_g)
     ratio_clip = jnp.float32(hp.ratio_clip)
     mode = mode or ("tpu" if jax.default_backend() == "tpu" else "ref")
+    if tracer is not None:
+        tracer.record("table", "serve", t_tab,
+                      time.perf_counter() - t_tab, round=span_round)
+        t_stk = time.perf_counter()
 
     encoded = isinstance(payloads[0], Encoded)
     if encoded and fused_eligible(payloads):
@@ -333,6 +345,9 @@ def fused_ingest_round(batch, table, flat_g, hp, n_clients: int,
         if pad:
             q = jnp.pad(q, ((0, pad), (0, 0)))
             scales = jnp.pad(scales, ((0, pad), (0, 0)))
+        if tracer is not None:
+            tracer.record("stack", "serve", t_stk,
+                          time.perf_counter() - t_stk, round=span_round)
         block = (get_config("ingest_agg", q.shape, q.dtype).block_d
                  if mode == "tpu" else 0)
         new_flat = _fused_quant_round(
@@ -348,6 +363,9 @@ def fused_ingest_round(batch, table, flat_g, hp, n_clients: int,
         x, _ = stack_trees(payloads)
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0)))
+    if tracer is not None:
+        tracer.record("stack", "serve", t_stk,
+                      time.perf_counter() - t_stk, round=span_round)
     block = (get_config("ingest_agg", x.shape, x.dtype).block_d
              if mode == "tpu" else 0)
     new_flat = _fused_dense_round(

@@ -181,6 +181,13 @@ class StreamingAggregator:
         # telemetry code ever touches tensors, so aggregation results are
         # bit-identical either way (gated in benchmarks/bench_serve.py)
         self.telemetry = telemetry
+        # span tracer (docs/OBSERVABILITY.md "Tracing"): present only when
+        # the hub carries one; cached so every trace site is one `is None`
+        # check (the serve_trace_overhead gate)
+        self._tracer = telemetry.tracer if telemetry is not None else None
+        self._last_tid = -1
+        self._ingest_t: List = []  # (trace id, admit-exit perf_counter)
+        self._span_round = -1      # round id sub-stage spans attach to
         if telemetry is not None:
             m = telemetry.metrics
             self._tm_submitted = m.counter("serve.submitted",
@@ -224,6 +231,8 @@ class StreamingAggregator:
         if update is None:
             return SubmitResult(False, False, self.round, verdict.reason)
         self._ingest.append(update)
+        if self._tracer is not None:
+            self._ingest_t.append((self._last_tid, _time.perf_counter()))
         if self.trigger.should_fire(self._ingest, now):
             report = self._fire(now)
             return SubmitResult(True, True, self.round, verdict.reason, report)
@@ -236,7 +245,10 @@ class StreamingAggregator:
         verdict, drop/downweight bookkeeping, telemetry.  Returns
         ``(None, verdict)`` on rejection."""
         tel = self.telemetry
+        tr = self._tracer
         t0 = _time.perf_counter() if tel is not None else 0.0
+        if tr is not None:
+            self._last_tid = tr.new_trace()
         self.stats.submitted += 1
         if update.stale_round > self.round:
             # no update can be trained on a future round — a live gateway
@@ -264,6 +276,9 @@ class StreamingAggregator:
                     stale_round=int(update.stale_round), staleness=int(tau),
                     reason=verdict.reason,
                 ))
+            if tr is not None:
+                tr.record("admit", "update", t0,
+                          _time.perf_counter() - t0, tid=self._last_tid)
             return None, verdict
         downweighted = verdict.weight_scale != 1.0
         if downweighted:
@@ -290,6 +305,9 @@ class StreamingAggregator:
                     t=float(now), round=self.round, cid=int(admitted.cid),
                     completed_fraction=cf,
                 ))
+        if tr is not None:
+            tr.record("admit", "update", t0, _time.perf_counter() - t0,
+                      tid=self._last_tid)
         return admitted, verdict
 
     def flush(self, now: Optional[float] = None) -> Optional[RoundReport]:
@@ -326,21 +344,40 @@ class StreamingAggregator:
         # double-buffer swap: new submissions land in a fresh list while
         # the frozen batch aggregates
         batch, self._ingest = self._ingest, []
+        batch_t: Optional[List] = None
+        if self._tracer is not None:
+            batch_t, self._ingest_t = self._ingest_t, []
         self.trigger.arm(now)
         dropped, self._dropped_since_fire = self._dropped_since_fire, 0
         if self._pool is None:
-            return self._aggregate(batch, dropped, now)
+            return self._aggregate(batch, dropped, now, batch_t)
         self.join()  # rounds serialize: at most one aggregation in flight
-        self._inflight = self._pool.submit(self._aggregate, batch, dropped, now)
+        self._inflight = self._pool.submit(self._aggregate, batch, dropped,
+                                           now, batch_t)
         return None
 
     def _aggregate(self, batch: List[Update], dropped: int,
-                   now: float = 0.0) -> RoundReport:
+                   now: float = 0.0,
+                   batch_t: Optional[List] = None) -> RoundReport:
+        tr = self._tracer
+        rnd = self.round + 1  # the round this fire produces (report.round)
+        if tr is not None:
+            self._span_round = rnd
+            if batch_t:
+                # buffer residency: admission exit → aggregation start,
+                # one span per traced update in the frozen batch
+                fire_t = _time.perf_counter()
+                for tid, t_in in batch_t:
+                    tr.record("buffer", "update", t_in, fire_t - t_in,
+                              round=rnd, tid=tid)
         t0 = _time.perf_counter()
         ctx = self._context if self._context is not None else self
         new_global, new_table = self._dispatch(ctx, batch)
         jax.block_until_ready(jax.tree_util.tree_leaves(new_global))
         dt = _time.perf_counter() - t0
+        if tr is not None:
+            tr.record("dispatch", "serve", t0, dt, round=rnd)
+        f0 = _time.perf_counter() if tr is not None else 0.0
 
         # the report describes *client updates*; a subclass whose batch
         # items fold several of them (hierarchical partials) expands here
@@ -396,6 +433,10 @@ class StreamingAggregator:
             ))
         if self.on_round is not None:
             self.on_round(report)
+        if tr is not None:
+            end = _time.perf_counter()
+            tr.record("finalize", "serve", f0, end - f0, round=rnd)
+            tr.record("round", "serve", t0, end - t0, round=rnd)
         return report
 
     def _batch_members(self, batch: List[Update]) -> List[Update]:
@@ -480,6 +521,7 @@ class StreamingAggregator:
         out = fused_ingest_round(
             batch, ctx.table, flat_g, self.hp, ctx.data.n_clients,
             self.algo.strategy, mode=self._fused_mode,
+            tracer=self._tracer, span_round=self._span_round,
         )
         if out is None:
             return None
@@ -492,7 +534,11 @@ class StreamingAggregator:
         from repro.checkpoint.ckpt import save_service_state
 
         self.join()
-        save_service_state(path, self)
+        if self._tracer is not None:
+            with self._tracer.span("save", "ckpt", round=self.round):
+                save_service_state(path, self)
+        else:
+            save_service_state(path, self)
 
     def restore(self, path: str) -> None:
         from repro.checkpoint.ckpt import load_service_state

@@ -136,10 +136,11 @@ class AdaptiveTimeWindow(TimeWindow):
 
     def arm(self, now):
         if len(self._lats) >= self.warmup:
+            q_lat = self._quantile()
             target = min(self.max_window,
-                         max(self.min_window, self._quantile() * self.slack))
+                         max(self.min_window, q_lat * self.slack))
             if target != self.window:
-                self._adaptation = (self.window, target, self._quantile())
+                self._adaptation = (self.window, target, q_lat)
                 self.window = target
         super().arm(now)
 

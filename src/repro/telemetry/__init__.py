@@ -29,11 +29,13 @@ from .events import (
     CodecEncoded,
     DeadlineAdapted,
     Event,
+    KernelProfile,
     MetricsSnapshot,
     PartialAdmitted,
     RoundFired,
     RoundMetricsEvent,
     TierMerged,
+    TraceSummary,
     UpdateAdmitted,
     UpdateRejected,
 )
@@ -47,31 +49,44 @@ from .metrics import (
     MetricsRegistry,
 )
 from .sinks import JsonlSink, RingSink, Sink
+from .trace import Span, SpanRing, Tracer, to_chrome_trace
 
 
 class Telemetry:
-    """The per-run hub: a metrics registry plus a fan-out of event sinks."""
+    """The per-run hub: a metrics registry plus a fan-out of event sinks.
+
+    Pass ``tracer=Tracer()`` (or use the ``trace=True`` factory knobs)
+    to additionally record monotonic-clock spans for critical-path
+    analysis; instrumented components cache ``telemetry.tracer`` once
+    and skip all span work when it is ``None`` — the same zero-overhead
+    contract as the event plane.
+    """
 
     def __init__(self, sinks: Optional[Sequence[Sink]] = None,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         self.sinks: List[Sink] = list(sinks or [])
         self.metrics = registry or MetricsRegistry()
+        self.tracer = tracer
         self._closed = False
 
     # ------------------------------------------------------------ factories
     @classmethod
     def to_jsonl(cls, path: str, *, ring: bool = False,
-                 capacity: int = 65536) -> "Telemetry":
+                 capacity: int = 65536, trace: bool = False,
+                 trace_capacity: int = 262144) -> "Telemetry":
         """Record to a JSONL file (optionally tee into a ring buffer)."""
         sinks: List[Sink] = [JsonlSink(path)]
         if ring:
             sinks.append(RingSink(capacity))
-        return cls(sinks)
+        return cls(sinks, tracer=Tracer(trace_capacity) if trace else None)
 
     @classmethod
-    def in_memory(cls, capacity: int = 65536) -> "Telemetry":
+    def in_memory(cls, capacity: int = 65536, *, trace: bool = False,
+                  trace_capacity: int = 262144) -> "Telemetry":
         """Ring-buffer-only hub (tests, benchmarks, live inspection)."""
-        return cls([RingSink(capacity)])
+        return cls([RingSink(capacity)],
+                   tracer=Tracer(trace_capacity) if trace else None)
 
     # -------------------------------------------------------------- surface
     @property
@@ -87,10 +102,36 @@ class Telemetry:
         for sink in self.sinks:
             sink.write(rec)
 
+    def trace_summary(self, t: Optional[float] = None) -> Optional[TraceSummary]:
+        """Critical-path digest of the recorded spans (``None`` untraced)."""
+        if self.tracer is None or not len(self.tracer.ring):
+            return None
+        from .critical_path import stage_summary
+        s = stage_summary(self.tracer.spans)
+        return TraceSummary(
+            t=t, rounds=s["rounds"], spans=s["spans"],
+            spans_dropped=self.tracer.dropped, wall_s=s["wall_s"],
+            coverage=s["coverage"], stages_s=s["stages_s"],
+            outside_s=s["outside_s"])
+
     def close(self, t: Optional[float] = None) -> None:
-        """Append the final ``metrics-snapshot`` record and close sinks."""
+        """Append the final ``metrics-snapshot`` record and close sinks.
+
+        Also surfaces lossiness before snapshotting: ring-sink evictions
+        and tracer span drops land in the ``telemetry_events_dropped``
+        counter, and a traced run gets its ``trace-summary`` record.
+        """
         if self._closed:
             return
+        dropped = sum(getattr(s, "dropped", 0) for s in self.sinks)
+        if self.tracer is not None:
+            dropped += self.tracer.dropped
+        if dropped:
+            self.metrics.counter("telemetry_events_dropped",
+                                 layer="telemetry").inc(dropped)
+        summary = self.trace_summary(t)
+        if summary is not None:
+            self.emit(summary)
         self.emit(MetricsSnapshot(t=t, metrics=self.metrics.snapshot()))
         for sink in self.sinks:
             sink.close()
@@ -107,12 +148,14 @@ __all__ = [
     "Telemetry",
     # events
     "EVENT_TYPES", "Event", "ClientClassified", "ClientDropped",
-    "CodecEncoded", "DeadlineAdapted", "MetricsSnapshot", "PartialAdmitted",
-    "RoundFired", "RoundMetricsEvent", "TierMerged",
-    "UpdateAdmitted", "UpdateRejected",
+    "CodecEncoded", "DeadlineAdapted", "KernelProfile", "MetricsSnapshot",
+    "PartialAdmitted", "RoundFired", "RoundMetricsEvent", "TierMerged",
+    "TraceSummary", "UpdateAdmitted", "UpdateRejected",
     # metrics
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "STALENESS_BUCKETS", "SECONDS_BUCKETS", "BYTES_BUCKETS",
     # sinks
     "Sink", "JsonlSink", "RingSink",
+    # tracing
+    "Span", "SpanRing", "Tracer", "to_chrome_trace",
 ]

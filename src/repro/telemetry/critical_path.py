@@ -1,0 +1,172 @@
+"""Critical-path analysis over recorded spans.
+
+Reconstructs each round's causal chain from the span stream
+(``repro.telemetry.trace``) and attributes the measured round wall time
+to named stages.  The invariant the CI trace smoke gates on: the
+in-round stages must sum to the round span's wall time within 10%
+(``coverage`` in [0.9, 1.1]) on every aggregation path — flat KBuffer,
+TimeWindow, and hierarchical.
+
+Stage definitions (docs/OBSERVABILITY.md):
+
+* ``host_stack``      — payload stacking on the host (``stack`` spans)
+* ``table_update``    — client-table math (``table`` spans)
+* ``kernel_dispatch`` — device dispatch + wait: the dispatch span minus
+  its measured host sub-stages (derived, so XLA async execution never
+  double-counts)
+* ``finalize``        — post-dispatch bookkeeping (report rows, events)
+* ``other``           — round wall time outside dispatch+finalize
+  (pre-dispatch setup; small by construction)
+
+Stages measured *outside* the round wall are reported separately and do
+not count toward coverage:
+
+* ``admission_wait``   — per-update admission decision cost
+* ``buffer_residency`` — accepted updates' wait until their round fired
+* ``tier_merge``       — edge/region ``_reduce`` time (hier plane)
+* ``checkpoint``       — checkpoint serialization
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional
+
+from .trace import Span
+
+# span name -> in-round stage (attributed against the round wall)
+_IN_ROUND = {"stack": "host_stack", "table": "table_update",
+             "finalize": "finalize"}
+# span (cat, name) -> out-of-round stage (reported, not covered)
+_OUT_OF_ROUND = {("update", "admit"): "admission_wait",
+                 ("update", "buffer"): "buffer_residency",
+                 ("hier", "tier-fire"): "tier_merge",
+                 ("ckpt", "save"): "checkpoint"}
+
+STAGES = ("host_stack", "table_update", "kernel_dispatch", "finalize",
+          "other")
+OUT_OF_ROUND_STAGES = ("admission_wait", "buffer_residency", "tier_merge",
+                       "checkpoint")
+
+
+class RoundPath:
+    """One round's latency attribution."""
+
+    __slots__ = ("round", "wall", "stages", "coverage")
+
+    def __init__(self, round: int, wall: float, stages: Dict[str, float]):
+        self.round = round
+        self.wall = wall
+        self.stages = stages
+        covered = sum(stages.values())
+        self.coverage = covered / wall if wall > 0 else 0.0
+
+    def __repr__(self) -> str:
+        return (f"RoundPath(round={self.round}, wall={self.wall * 1e3:.2f}ms, "
+                f"coverage={self.coverage:.3f})")
+
+
+def analyze(spans: Iterable[Span]) -> List[RoundPath]:
+    """Attribute each round's wall time to stages; one entry per round.
+
+    Rounds are identified by ``serve``/``round`` spans.  A round's
+    dispatch time is decomposed into measured host sub-stages plus the
+    derived ``kernel_dispatch`` remainder; whatever the round wall holds
+    beyond dispatch+finalize lands in ``other`` so the stages always sum
+    to the wall exactly (coverage gates then check the decomposition is
+    dominated by *measured* stages, not the residual).
+    """
+    per_round: Dict[int, Dict[str, float]] = {}
+    walls: Dict[int, float] = {}
+    for s in spans:
+        if s.round < 0:
+            continue
+        if s.cat in ("serve", "hier") and s.name == "round":
+            walls[s.round] = walls.get(s.round, 0.0) + s.dur
+            continue
+        bucket = per_round.setdefault(s.round, {})
+        if s.name == "dispatch":
+            bucket["_dispatch"] = bucket.get("_dispatch", 0.0) + s.dur
+        elif s.name in _IN_ROUND:
+            key = _IN_ROUND[s.name]
+            bucket[key] = bucket.get(key, 0.0) + s.dur
+
+    out: List[RoundPath] = []
+    for rnd in sorted(walls):
+        wall = walls[rnd]
+        bucket = per_round.get(rnd, {})
+        dispatch = bucket.get("_dispatch", 0.0)
+        stack = bucket.get("host_stack", 0.0)
+        table = bucket.get("table_update", 0.0)
+        finalize = bucket.get("finalize", 0.0)
+        kernel = max(dispatch - stack - table, 0.0)
+        other = max(wall - dispatch - finalize, 0.0)
+        out.append(RoundPath(rnd, wall, {
+            "host_stack": stack,
+            "table_update": table,
+            "kernel_dispatch": kernel,
+            "finalize": finalize,
+            "other": other,
+        }))
+    return out
+
+
+def stage_summary(spans: Iterable[Span]) -> dict:
+    """Aggregate attribution across all rounds (the report's view).
+
+    ``coverage`` here is the wall-weighted mean of per-round coverage
+    *excluding* the ``other`` residual — i.e. the fraction of round wall
+    time explained by measured stages — which is what the trace smoke
+    gates on.
+    """
+    spans = list(spans)
+    paths = analyze(spans)
+    stages: Dict[str, float] = {k: 0.0 for k in STAGES}
+    wall = 0.0
+    measured = 0.0
+    for p in paths:
+        wall += p.wall
+        for k, v in p.stages.items():
+            stages[k] += v
+            if k != "other":
+                measured += v
+    outside: Dict[str, float] = {k: 0.0 for k in OUT_OF_ROUND_STAGES}
+    n_outside: Dict[str, int] = {k: 0 for k in OUT_OF_ROUND_STAGES}
+    for s in spans:
+        key = _OUT_OF_ROUND.get((s.cat, s.name))
+        if key is not None:
+            outside[key] += s.dur
+            n_outside[key] += 1
+    # kernel-hook spans (telemetry.profile) — reported for cross-checking
+    # the derived kernel_dispatch stage, never summed into coverage
+    kernel_hook = sum(s.dur for s in spans if s.cat == "kernel")
+    return {
+        "rounds": len(paths),
+        "spans": len(spans),
+        "wall_s": wall,
+        "coverage": (measured / wall) if wall > 0 else 0.0,
+        "stages_s": {k: stages[k] for k in STAGES},
+        "outside_s": outside,
+        "outside_n": n_outside,
+        "kernel_hook_s": kernel_hook,
+    }
+
+
+def format_summary(summary: dict) -> List[str]:
+    """Markdown table rows for the report's Critical path section."""
+    wall = summary.get("wall_s", 0.0) or 0.0
+    lines = ["| stage | total (ms) | % of round wall |",
+             "|---|---:|---:|"]
+    for k in STAGES:
+        v = summary.get("stages_s", {}).get(k, 0.0)
+        pct = 100.0 * v / wall if wall > 0 else 0.0
+        lines.append(f"| {k} | {v * 1e3:.2f} | {pct:.1f}% |")
+    for k in OUT_OF_ROUND_STAGES:
+        v = summary.get("outside_s", {}).get(k, 0.0)
+        n = summary.get("outside_n", {}).get(k, 0)
+        if n or v > 0:  # trace-summary records carry outside_s but not outside_n
+            suffix = f", n={n}" if n else ""
+            lines.append(f"| {k} (outside round{suffix}) | {v * 1e3:.2f} | — |")
+    return lines
+
+
+__all__ = ["RoundPath", "analyze", "stage_summary", "format_summary",
+           "STAGES", "OUT_OF_ROUND_STAGES"]

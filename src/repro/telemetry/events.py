@@ -191,6 +191,43 @@ class RoundMetricsEvent(Event):
 
 
 @dataclass(slots=True)
+class KernelProfile(Event):
+    """Kernel-layer visibility record, emitted when a profiled scope
+    closes (``repro.telemetry.profile``): resolved dispatch mode plus
+    autotune cache hit/miss totals, so a silent ``REPRO_KERNEL_MODE=ref``
+    fallback or a cold autotune cache shows up in the report instead of
+    only in a slower BENCH row."""
+
+    name = "kernel-profile"
+
+    t: Optional[float]
+    backend: str            # jax.default_backend() at activation
+    mode: str               # "pallas" | "interpret" | "ref"
+    dispatches: int         # timed op calls while active
+    ref_fallbacks: int      # of which served by the jnp reference path
+    autotune_hits: int
+    autotune_misses: int
+
+
+@dataclass(slots=True)
+class TraceSummary(Event):
+    """Critical-path digest of a traced run, appended by
+    ``Telemetry.close()`` when a tracer recorded spans — the single
+    record the report's Critical path section renders from."""
+
+    name = "trace-summary"
+
+    t: Optional[float]
+    rounds: int
+    spans: int
+    spans_dropped: int
+    wall_s: float           # summed round wall time (perf_counter seconds)
+    coverage: float         # fraction of wall explained by measured stages
+    stages_s: dict = field(default_factory=dict)
+    outside_s: dict = field(default_factory=dict)
+
+
+@dataclass(slots=True)
 class MetricsSnapshot(Event):
     """Final registry snapshot, appended by ``Telemetry.close()``."""
 
@@ -205,6 +242,7 @@ EVENT_TYPES = {
     for cls in (
         UpdateAdmitted, UpdateRejected, RoundFired, TierMerged,
         CodecEncoded, ClientClassified, ClientDropped, PartialAdmitted,
-        DeadlineAdapted, RoundMetricsEvent, MetricsSnapshot,
+        DeadlineAdapted, RoundMetricsEvent, KernelProfile, TraceSummary,
+        MetricsSnapshot,
     )
 }

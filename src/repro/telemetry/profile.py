@@ -1,0 +1,144 @@
+"""Kernel/dispatch profiling hooks for ``repro.kernels``.
+
+The kernel layer cannot take a ``telemetry=`` argument — its public ops
+are plain functions called from jitted code paths all over the tree —
+so profiling uses a process-global activation slot instead: a launcher
+(or benchmark) wraps the run in ``profile.activate(telemetry)`` and the
+instrumented dispatchers in ``kernels/ops.py``/``autotune.py`` check
+one module global per call.  When nothing is active the hook is a
+single ``is None`` test; when active, each op dispatch is timed
+(``jax.block_until_ready``), recorded as a ``kernel`` span, and fed
+into histogram metrics, and autotune cache probes count hits/misses.
+
+Activation is deliberately explicit rather than implied by constructing
+a ``Telemetry`` hub: the paired overhead benchmarks run a traced and an
+untraced service in the same process, and a constructor-installed
+global would bleed kernel timing into the untraced arm.
+
+Metrics published while active (docs/OBSERVABILITY.md):
+
+* ``kernels.dispatch_seconds``   — histogram of per-op wall time
+* ``kernels.autotune_hits`` / ``kernels.autotune_misses`` — cache probes
+* ``kernels.ref_fallback``       — ops served by the jnp reference path
+  (``REPRO_KERNEL_MODE=ref`` or no TPU backend for an ``auto_op``)
+"""
+from __future__ import annotations
+
+import os
+import time
+from contextlib import contextmanager
+from typing import Iterator, Optional
+
+import jax
+
+from .events import KernelProfile
+from .metrics import SECONDS_BUCKETS
+
+
+def resolved_mode(auto: bool = False) -> str:
+    """The dispatch path ``kernels/ops.py`` resolves under the current
+    env: ``ref`` when ``REPRO_KERNEL_MODE=ref``; otherwise ``pallas`` on
+    TPU; off-TPU the validation ops run the kernel body under
+    ``interpret`` while the ``*_auto_op`` throughput ops fall back to
+    ``ref``."""
+    if os.environ.get("REPRO_KERNEL_MODE", "") == "ref":
+        return "ref"
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    return "ref" if auto else "interpret"
+
+
+class Profiler:
+    """Bound metric handles + the span recorder for one activation."""
+
+    __slots__ = ("telemetry", "tracer", "_dispatch_h", "_hits", "_misses",
+                 "_fallback", "_base")
+
+    def __init__(self, telemetry):
+        self.telemetry = telemetry
+        self.tracer = getattr(telemetry, "tracer", None)
+        m = telemetry.metrics
+        self._dispatch_h = m.histogram(
+            "kernels.dispatch_seconds", SECONDS_BUCKETS,
+            unit="s", layer="kernels")
+        self._hits = m.counter("kernels.autotune_hits", layer="kernels")
+        self._misses = m.counter("kernels.autotune_misses", layer="kernels")
+        self._fallback = m.counter("kernels.ref_fallback", layer="kernels")
+        # registry handles are shared across activations; remember the
+        # entry values so the closing kernel-profile event reports this
+        # activation's deltas
+        self._base = (self._dispatch_h.count, self._fallback.value,
+                      self._hits.value, self._misses.value)
+
+    def dispatch(self, name: str, mode: str, t0: float, dur: float) -> None:
+        """One timed op call.  ``mode`` is the resolved dispatch path:
+        ``pallas`` | ``interpret`` | ``ref``."""
+        self._dispatch_h.observe(dur)
+        if mode == "ref":
+            self._fallback.inc()
+        if self.tracer is not None:
+            self.tracer.record(name, "kernel", t0, dur,
+                               args={"mode": mode})
+
+    def config_probe(self, hit: bool) -> None:
+        (self._hits if hit else self._misses).inc()
+
+    def summary_event(self, t: Optional[float] = None) -> KernelProfile:
+        """This activation's visibility record (docs/OBSERVABILITY.md)."""
+        d0, f0, h0, m0 = self._base
+        return KernelProfile(
+            t=t, backend=jax.default_backend(), mode=resolved_mode(),
+            dispatches=self._dispatch_h.count - d0,
+            ref_fallbacks=self._fallback.value - f0,
+            autotune_hits=self._hits.value - h0,
+            autotune_misses=self._misses.value - m0)
+
+
+# The process-global activation slot.  ``None`` → every hook is one
+# global read + ``is None`` check (the zero-overhead contract).
+_ACTIVE: Optional[Profiler] = None
+
+
+def active() -> Optional[Profiler]:
+    return _ACTIVE
+
+
+@contextmanager
+def activate(telemetry) -> Iterator[Profiler]:
+    """Route kernel-layer profiling into ``telemetry`` for this scope.
+
+    On exit a ``kernel-profile`` event is emitted so ref-path fallbacks
+    and autotune cache misses are visible in the run's report even when
+    nobody reads the metrics registry.
+    """
+    global _ACTIVE
+    prev = _ACTIVE
+    prof = Profiler(telemetry)
+    _ACTIVE = prof
+    try:
+        yield prof
+    finally:
+        _ACTIVE = prev
+        telemetry.emit(prof.summary_event())
+
+
+def timed_call(name: str, mode: str, fn, *args, **kw):
+    """Run ``fn`` under the active profiler (or straight through).
+
+    The instrumented dispatchers in ``kernels/ops.py`` funnel here: when
+    a profiler is active the result is blocked on so the recorded span
+    covers dispatch *and* device execution; when none is, the call is
+    returned untouched — no block, no timing, bit-identical async
+    behavior.
+    """
+    prof = _ACTIVE
+    if prof is None:
+        return fn(*args, **kw)
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    prof.dispatch(name, mode, t0, time.perf_counter() - t0)
+    return out
+
+
+__all__ = ["Profiler", "activate", "active", "timed_call", "resolved_mode"]

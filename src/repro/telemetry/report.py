@@ -130,6 +130,22 @@ def experiment_report(records: Sequence[dict], *,
         lines.append(f"| distinct clients admitted | {distinct} |")
     lines.append("")
 
+    # ----------------------------------------------------- lossiness warning
+    snaps_ = groups.get("metrics-snapshot", [])
+    dropped_events = 0
+    if snaps_:
+        m = snaps_[-1].get("metrics", {}).get("telemetry_events_dropped")
+        if m:
+            dropped_events = int(m.get("value", 0))
+    spans_dropped = sum(int(rec.get("spans_dropped", 0))
+                        for rec in groups.get("trace-summary", []))
+    if dropped_events or spans_dropped:
+        lines += ["> **Warning — lossy recording.** "
+                  f"{dropped_events} event(s) and {spans_dropped} span(s) "
+                  "were dropped at capacity-bounded sinks; histograms and "
+                  "curves below undercount. Raise the ring/trace capacity "
+                  "or record to JSONL (docs/OBSERVABILITY.md).", ""]
+
     # ------------------------------------------------- accuracy/loss curves
     rounds = groups.get("round-metrics", [])
     if rounds:
@@ -234,6 +250,35 @@ def experiment_report(records: Sequence[dict], *,
         for q in Quadrant:
             if tally.get(int(q)):
                 lines.append(f"| {q.name} | {tally[int(q)]} |")
+        lines.append("")
+
+    # --------------------------------------------------------- critical path
+    traces = groups.get("trace-summary", [])
+    if traces:
+        from .critical_path import format_summary
+
+        ts = traces[-1]
+        lines += ["## Critical path (traced run)", ""]
+        lines += [f"{ts.get('rounds', 0)} rounds, {ts.get('spans', 0)} spans; "
+                  f"round wall {ts.get('wall_s', 0.0) * 1e3:.1f} ms total, "
+                  f"**{ts.get('coverage', 0.0):.1%}** explained by measured "
+                  "stages (docs/OBSERVABILITY.md).", ""]
+        lines += format_summary(ts)
+        lines.append("")
+
+    # -------------------------------------------------------- kernel profile
+    kprofs = groups.get("kernel-profile", [])
+    if kprofs:
+        kp = kprofs[-1]
+        lines += ["## Kernel profile", ""]
+        lines += ["| quantity | value |", "|---|---|"]
+        lines.append(f"| backend / dispatch mode | {kp.get('backend', '?')} / "
+                     f"`{kp.get('mode', '?')}` |")
+        lines.append(f"| timed op dispatches | {kp.get('dispatches', 0)} |")
+        lines.append(f"| ref-path fallbacks | {kp.get('ref_fallbacks', 0)} |")
+        lines.append(f"| autotune cache hits / misses "
+                     f"| {kp.get('autotune_hits', 0)} / "
+                     f"{kp.get('autotune_misses', 0)} |")
         lines.append("")
 
     # ------------------------------------------------------- metrics snapshot

@@ -55,20 +55,38 @@ class JsonlSink(Sink):
             self._fh.write(line)
             self.written += 1
 
+    def flush(self) -> None:
+        """Push buffered lines to the OS (no-op once closed)."""
+        with self._lock:
+            if self._fh is not None:
+                self._fh.flush()
+
     def close(self) -> None:
         with self._lock:
             if self._fh is not None:
+                self._fh.flush()
                 self._fh.close()
                 self._fh = None
 
 
 class RingSink(Sink):
-    """Bounded in-memory sink: keeps the most recent ``capacity`` records."""
+    """Bounded in-memory sink: keeps the most recent ``capacity`` records.
+
+    Eviction is counted, not silent: ``dropped`` is surfaced by
+    ``Telemetry.close()`` as the ``telemetry_events_dropped`` counter and
+    warned about in the experiment report, so a run that outgrew its
+    ring reads as truncated rather than short.
+    """
 
     def __init__(self, capacity: int = 65536):
-        self._ring: deque = deque(maxlen=int(capacity))
+        self.capacity = int(capacity)
+        self._ring: deque = deque()
+        self.dropped = 0
 
     def write(self, record: dict) -> None:
+        if len(self._ring) >= self.capacity:
+            self._ring.popleft()
+            self.dropped += 1
         self._ring.append(record)
 
     @property
@@ -86,3 +104,4 @@ class RingSink(Sink):
 
     def clear(self) -> None:
         self._ring.clear()
+        self.dropped = 0

@@ -1,0 +1,191 @@
+"""Span tracing: per-update lineage on the monotonic clock.
+
+The event plane (``repro.telemetry.events``) records *what happened* on
+the run's virtual clock; this module records *where wall time went*.  A
+``Tracer`` hands out trace ids at ``submit()`` and the instrumented
+components stamp named spans — admission, buffer residency, host stack,
+kernel dispatch, tier merge, checkpoint — into a bounded ring of
+``Span`` records on ``time.perf_counter``.  The critical-path analyzer
+(``repro.telemetry.critical_path``) reconstructs each round's causal
+DAG from those spans, and ``to_chrome_trace`` exports them as Chrome
+trace-event JSON that loads directly in Perfetto / ``chrome://tracing``.
+
+The contract mirrors the event plane's ``telemetry=None`` rule: every
+instrumented site caches ``tracer = telemetry.tracer if telemetry else
+None`` and guards with one ``is None`` check, so a hub without a tracer
+costs nothing and aggregates bit-identically (gated by
+``serve_trace_overhead`` in ``benchmarks/bench_serve.py``).
+
+Span taxonomy (category / name — docs/OBSERVABILITY.md has the table):
+
+* ``update``/``admit``   — admission decision for one update (has ``tid``)
+* ``update``/``buffer``  — accepted update's residency until its round fires
+* ``serve``/``round``    — one whole ``_aggregate`` call (wall time of a round)
+* ``serve``/``dispatch`` — kernel routing + device work + block_until_ready
+* ``serve``/``stack``    — host-side payload stacking inside dispatch
+* ``serve``/``table``    — client-table math inside dispatch
+* ``serve``/``finalize`` — post-dispatch bookkeeping (report rows, events)
+* ``hier``/``tier-fire`` — one edge/region ``_reduce``
+* ``kernel``/``<op>``    — one Pallas/XLA op dispatch (``telemetry.profile``)
+* ``ckpt``/``save``      — checkpoint serialization
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from contextlib import contextmanager
+from typing import Dict, Iterator, List, Optional
+
+
+class Span:
+    """One named interval on the monotonic clock.
+
+    ``t0``/``dur`` are ``time.perf_counter`` seconds.  ``round`` and
+    ``tid`` (trace id) are -1 when not applicable; ``args`` is an
+    optional dict of small JSON-safe extras for the exported trace.
+    """
+
+    __slots__ = ("name", "cat", "t0", "dur", "round", "tid", "args")
+
+    def __init__(self, name: str, cat: str, t0: float, dur: float,
+                 round: int = -1, tid: int = -1,
+                 args: Optional[dict] = None):
+        self.name = name
+        self.cat = cat
+        self.t0 = t0
+        self.dur = dur
+        self.round = round
+        self.tid = tid
+        self.args = args
+
+    def __repr__(self) -> str:  # debugging aid only
+        return (f"Span({self.name!r}, cat={self.cat!r}, t0={self.t0:.6f}, "
+                f"dur={self.dur * 1e3:.3f}ms, round={self.round}, "
+                f"tid={self.tid})")
+
+
+class SpanRing:
+    """Bounded span store: drops the newest when full, counting drops.
+
+    Appends are a single ``list.append`` — atomic under the GIL, so the
+    async-dispatch worker thread and the ingest thread can both record
+    without a lock.  Unlike the event plane's ``RingSink`` (which keeps
+    the *most recent* records for live inspection), a trace is only
+    causally analyzable from its start, so once full we drop *new*
+    spans and surface the loss via ``dropped`` — the report and the
+    ``telemetry_events_dropped`` counter make the truncation loud.
+    """
+
+    def __init__(self, capacity: int = 262144):
+        self.capacity = int(capacity)
+        self._spans: List[Span] = []
+        self.dropped = 0
+
+    def append(self, span: Span) -> None:
+        if len(self._spans) >= self.capacity:
+            self.dropped += 1
+            return
+        self._spans.append(span)
+
+    @property
+    def spans(self) -> List[Span]:
+        return list(self._spans)
+
+    def __len__(self) -> int:
+        return len(self._spans)
+
+    def clear(self) -> None:
+        self._spans.clear()
+        self.dropped = 0
+
+
+class Tracer:
+    """Hands out trace ids and records spans into a ``SpanRing``."""
+
+    def __init__(self, capacity: int = 262144):
+        self.ring = SpanRing(capacity)
+        self._tids = itertools.count()
+
+    # ------------------------------------------------------------- recording
+    def new_trace(self) -> int:
+        """A fresh trace id; one per submitted update."""
+        return next(self._tids)
+
+    @staticmethod
+    def clock() -> float:
+        return time.perf_counter()
+
+    def record(self, name: str, cat: str, t0: float, dur: float,
+               round: int = -1, tid: int = -1,
+               args: Optional[dict] = None) -> None:
+        """Record a span whose endpoints the caller already measured."""
+        self.ring.append(Span(name, cat, t0, dur, round, tid, args))
+
+    @contextmanager
+    def span(self, name: str, cat: str, round: int = -1, tid: int = -1,
+             args: Optional[dict] = None) -> Iterator[None]:
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.ring.append(
+                Span(name, cat, t0, time.perf_counter() - t0, round, tid,
+                     args))
+
+    # ------------------------------------------------------------- consuming
+    @property
+    def spans(self) -> List[Span]:
+        return self.ring.spans
+
+    @property
+    def dropped(self) -> int:
+        return self.ring.dropped
+
+
+# Stable Chrome-trace "thread" lanes per span category, so Perfetto
+# renders admission/kernel/tier work as parallel tracks.
+_CAT_LANES: Dict[str, int] = {
+    "serve": 1, "kernel": 2, "hier": 3, "update": 4, "ckpt": 5,
+}
+
+
+def to_chrome_trace(spans: List[Span], *, dropped: int = 0) -> dict:
+    """Render spans as a Chrome trace-event JSON object.
+
+    The output is the standard ``{"traceEvents": [...]}`` wrapper with
+    complete-duration (``ph="X"``) events in microseconds, loadable by
+    Perfetto (ui.perfetto.dev) and ``chrome://tracing`` as-is.
+    """
+    events: List[dict] = []
+    for cat, lane in sorted(_CAT_LANES.items(), key=lambda kv: kv[1]):
+        events.append({
+            "ph": "M", "pid": 1, "tid": lane, "name": "thread_name",
+            "args": {"name": cat},
+        })
+    for s in spans:
+        ev = {
+            "name": s.name,
+            "cat": s.cat,
+            "ph": "X",
+            "pid": 1,
+            "tid": _CAT_LANES.get(s.cat, 0),
+            "ts": s.t0 * 1e6,
+            "dur": s.dur * 1e6,
+        }
+        args: dict = {}
+        if s.round >= 0:
+            args["round"] = s.round
+        if s.tid >= 0:
+            args["trace_id"] = s.tid
+        if s.args:
+            args.update(s.args)
+        if args:
+            ev["args"] = args
+        events.append(ev)
+    out = {"traceEvents": events, "displayTimeUnit": "ms"}
+    if dropped:
+        out["metadata"] = {"spans_dropped": int(dropped)}
+    return out
+
+
+__all__ = ["Span", "SpanRing", "Tracer", "to_chrome_trace"]

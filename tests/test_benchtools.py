@@ -1,0 +1,135 @@
+"""Benchmark-artifact tooling: the BENCH_*.json schema validator and the
+perf-regression detector (scripts/check_bench_schema.py,
+scripts/bench_diff.py)."""
+import copy
+import importlib.util
+import json
+import os
+
+import pytest
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _load(name):
+    spec = importlib.util.spec_from_file_location(
+        name, os.path.join(_ROOT, "scripts", f"{name}.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+bench_diff = _load("bench_diff")
+check_schema = _load("check_bench_schema")
+
+
+def _artifact(**rows):
+    return {
+        "suite": "serve", "fast": True, "generated_unix": 1700000000,
+        "wall_s": 1.5,
+        "results": [
+            {"name": name, "us_per_call": us,
+             "derived": {"updates_per_sec": "100.0"}}
+            for name, us in rows.items()
+        ],
+    }
+
+
+class TestBenchDiff:
+    def test_flags_synthetic_2x_regression(self):
+        base = _artifact(a=100.0, b=50.0)
+        cur = _artifact(a=210.0, b=55.0)  # a slowed 2.1x, b is noise
+        diff = bench_diff.compare(base, cur, threshold=2.0)
+        assert [r["name"] for r in diff["regressions"]] == ["a"]
+        assert diff["regressions"][0]["ratio"] == pytest.approx(2.1)
+        assert "REGRESSION" in bench_diff.format_diff(diff)
+
+    def test_passes_identical_artifacts(self):
+        base = _artifact(a=100.0, b=50.0)
+        diff = bench_diff.compare(base, copy.deepcopy(base))
+        assert diff["regressions"] == []
+        assert all(r["ratio"] == pytest.approx(1.0) for r in diff["rows"])
+
+    def test_zero_baseline_rows_are_skipped(self):
+        # pass/fail marker rows record us_per_call 0.0; any current value
+        # would be an infinite ratio, so they must never gate
+        base = _artifact(parity=0.0, a=100.0)
+        cur = _artifact(parity=0.0, a=100.0)
+        diff = bench_diff.compare(base, cur, threshold=2.0)
+        row = next(r for r in diff["rows"] if r["name"] == "parity")
+        assert row["ratio"] is None and not row["regressed"]
+
+    def test_added_and_removed_rows_reported_not_gated(self):
+        base = _artifact(a=100.0, gone=10.0)
+        cur = _artifact(a=100.0, fresh=10.0)
+        diff = bench_diff.compare(base, cur)
+        assert diff["added"] == ["fresh"]
+        assert diff["removed"] == ["gone"]
+        assert diff["regressions"] == []
+
+    def test_cli_exit_codes(self, tmp_path, capsys):
+        basep = tmp_path / "base.json"
+        curp = tmp_path / "cur.json"
+        basep.write_text(json.dumps(_artifact(a=100.0)))
+        curp.write_text(json.dumps(_artifact(a=300.0)))
+        assert bench_diff.main([str(curp), "--baseline", str(basep)]) == 1
+        assert bench_diff.main([str(curp), "--baseline", str(basep),
+                                "--report-only"]) == 0
+        out = capsys.readouterr().out
+        assert "not failing the build" in out
+        # same artifact as its own baseline: clean pass
+        assert bench_diff.main([str(curp), "--baseline", str(curp)]) == 0
+
+    def test_cli_passes_on_committed_baseline(self, capsys):
+        # the repo-root artifacts ARE the committed baselines — diffing
+        # them against HEAD must be regression-free (acceptance gate)
+        cwd = os.getcwd()
+        os.chdir(_ROOT)
+        try:
+            rc = bench_diff.main(["BENCH_serve.json", "BENCH_ingest.json"])
+        finally:
+            os.chdir(cwd)
+        assert rc == 0, capsys.readouterr().out
+
+
+class TestCheckBenchSchema:
+    def test_valid_artifact(self):
+        assert check_schema.validate_payload(_artifact(a=1.0)) == []
+
+    def test_committed_artifacts_validate(self):
+        for name in ("BENCH_serve.json", "BENCH_ingest.json"):
+            doc = json.load(open(os.path.join(_ROOT, name)))
+            assert check_schema.validate_payload(doc, name) == []
+
+    @pytest.mark.parametrize("mutate,fragment", [
+        (lambda d: d.pop("suite"), "'suite'"),
+        (lambda d: d.update(fast="yes"), "'fast'"),
+        (lambda d: d.update(generated_unix=1.5), "'generated_unix'"),
+        (lambda d: d.update(wall_s="1.5"), "'wall_s'"),
+        (lambda d: d.update(results="nope"), "'results'"),
+        (lambda d: d["results"][0].pop("name"), "'name'"),
+        (lambda d: d["results"][0].update(us_per_call="12"),
+         "'us_per_call'"),
+        (lambda d: d["results"][0].update(derived={"rounds": 12}),
+         "derived['rounds']"),
+        (lambda d: d["results"].append(dict(d["results"][0])), "duplicate"),
+    ])
+    def test_violations_are_caught(self, mutate, fragment):
+        doc = _artifact(a=1.0)
+        mutate(doc)
+        errors = check_schema.validate_payload(doc)
+        assert errors, f"mutation not caught: {fragment}"
+        assert any(fragment in e for e in errors), errors
+
+    def test_cli(self, tmp_path, capsys, monkeypatch):
+        good = tmp_path / "BENCH_ok.json"
+        good.write_text(json.dumps(_artifact(a=1.0)))
+        assert check_schema.main([str(good)]) == 0
+        bad = tmp_path / "BENCH_bad.json"
+        bad.write_text("{not json")
+        assert check_schema.main([str(bad)]) == 1
+        empty = tmp_path / "empty"
+        empty.mkdir()
+        monkeypatch.chdir(empty)
+        assert check_schema.main([]) == 1  # no artifacts found
+        capsys.readouterr()

@@ -95,6 +95,52 @@ class TestSinksAndHub:
             ring.write({"e": "x", "i": i})
         assert [r["i"] for r in ring.records] == [7, 8, 9]
 
+    def test_ring_sink_counts_evictions(self):
+        ring = RingSink(capacity=3)
+        for i in range(10):
+            ring.write({"e": "x", "i": i})
+        assert ring.dropped == 7
+        ring.clear()
+        assert ring.dropped == 0
+
+    def test_ring_evictions_surface_in_dropped_counter(self):
+        tel = Telemetry.in_memory(capacity=4)
+        for i in range(10):
+            tel.emit(UpdateAdmitted(t=float(i), round=0, cid=i, n_samples=1,
+                                    stale_round=0, staleness=0,
+                                    downweighted=False))
+        tel.close()
+        # close() itself appends the snapshot record, evicting once more
+        snap = next(r for r in reversed(tel.ring.records)
+                    if r["e"] == "metrics-snapshot")
+        assert snap["metrics"]["telemetry_events_dropped"]["value"] >= 6
+
+    def test_jsonl_flush_on_close_under_concurrent_writers(self, tmp_path):
+        import threading
+
+        path = str(tmp_path / "concurrent.jsonl")
+        sink = JsonlSink(path)
+        n_threads, per_thread = 8, 200
+
+        def writer(k):
+            for i in range(per_thread):
+                sink.write({"e": "x", "k": k, "i": i})
+
+        threads = [threading.Thread(target=writer, args=(k,))
+                   for k in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        sink.flush()
+        sink.close()
+        sink.flush()  # no-op after close, must not raise
+        records = load_events(path)
+        assert len(records) == n_threads * per_thread
+        # every record survived as one intact line per write
+        seen = {(r["k"], r["i"]) for r in records}
+        assert len(seen) == n_threads * per_thread
+
     def test_jsonl_round_trip_and_snapshot_on_close(self, tmp_path):
         path = str(tmp_path / "run.jsonl")
         tel = Telemetry.to_jsonl(path, ring=True)
@@ -305,3 +351,52 @@ class TestReportGenerator:
     def test_empty_records_render(self):
         report = experiment_report([])
         assert report.startswith("# Experiment report")
+
+    def test_empty_events_file(self, tmp_path):
+        path = tmp_path / "empty.jsonl"
+        path.write_text("")
+        assert load_events(str(path)) == []
+        report = report_from_jsonl(str(path))
+        assert "## Run overview" in report
+
+    def test_unknown_event_types_skipped(self, mlp_params, stream):
+        # forward compat: a log written by a newer build with event types
+        # this build doesn't know must still render, not crash
+        tel = Telemetry.in_memory()
+        replay(_service(mlp_params, telemetry=tel), stream, flush=False)
+        tel.close()
+        records = list(tel.ring.records)
+        records.insert(0, {"e": "from-the-future", "t": 0.0, "payload": 1})
+        records.append({"e": "also-unknown"})
+        report = experiment_report(records)
+        assert "## Staleness distribution" in report
+        assert f"events recorded | {len(records)}" in report
+
+    def test_critical_path_section_from_traced_run(self, mlp_params,
+                                                   stream):
+        tel = Telemetry.in_memory(trace=True)
+        replay(_service(mlp_params, telemetry=tel), stream, flush=False)
+        tel.close()
+        report = experiment_report(tel.ring.records)
+        assert "## Critical path (traced run)" in report
+        for stage in ("host_stack", "kernel_dispatch", "finalize",
+                      "buffer_residency"):
+            assert stage in report
+        assert "## Kernel profile" not in report  # no profiler activated
+        # untraced runs must not grow the section
+        tel2 = Telemetry.in_memory()
+        replay(_service(mlp_params, telemetry=tel2), stream, flush=False)
+        tel2.close()
+        assert "## Critical path" not in experiment_report(tel2.ring.records)
+
+    def test_dropped_events_warning(self, mlp_params, stream):
+        tel = Telemetry.in_memory(trace=True, trace_capacity=8)
+        replay(_service(mlp_params, telemetry=tel), stream, flush=False)
+        tel.close()
+        report = experiment_report(tel.ring.records)
+        assert "Warning — lossy recording" in report
+        # a lossless run carries no warning
+        tel2 = Telemetry.in_memory(trace=True)
+        replay(_service(mlp_params, telemetry=tel2), stream, flush=False)
+        tel2.close()
+        assert "lossy recording" not in experiment_report(tel2.ring.records)

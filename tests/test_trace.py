@@ -1,0 +1,331 @@
+"""Distributed tracing plane: span ring, Chrome-trace export, the
+critical-path analyzer, and the kernel-profiling hooks
+(docs/OBSERVABILITY.md)."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import FedQSHyperParams, make_algorithm
+from repro.models import make_mlp_spec
+from repro.serve import (
+    KBuffer,
+    StreamingAggregator,
+    TimeWindow,
+    replay,
+    synthetic_stream,
+)
+from repro.telemetry import Span, SpanRing, Telemetry, Tracer, to_chrome_trace
+from repro.telemetry.critical_path import (
+    OUT_OF_ROUND_STAGES,
+    STAGES,
+    analyze,
+    format_summary,
+    stage_summary,
+)
+
+
+@pytest.fixture(scope="module")
+def mlp_params():
+    return make_mlp_spec().init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def stream(mlp_params):
+    return list(synthetic_stream(mlp_params, 16, 60, seed=0))
+
+
+def _service(mlp_params, telemetry=None, *, trigger=None, **kw):
+    hp = FedQSHyperParams(buffer_k=5)
+    return StreamingAggregator(
+        make_algorithm("fedqs-sgd", hp), hp, mlp_params, 16,
+        trigger=trigger or KBuffer(5), telemetry=telemetry, **kw)
+
+
+def _traced_replay(mlp_params, stream, **kw):
+    tel = Telemetry.in_memory(trace=True)
+    svc = _service(mlp_params, telemetry=tel, **kw)
+    replay(svc, stream, flush=False)
+    return svc, tel
+
+
+class TestSpanRing:
+    def test_bounded_drops_newest(self):
+        ring = SpanRing(capacity=3)
+        for i in range(5):
+            ring.append(Span(f"s{i}", "serve", float(i), 0.1))
+        assert len(ring) == 3
+        assert [s.name for s in ring.spans] == ["s0", "s1", "s2"]
+        assert ring.dropped == 2
+
+    def test_clear_resets(self):
+        ring = SpanRing(capacity=1)
+        ring.append(Span("a", "serve", 0.0, 0.1))
+        ring.append(Span("b", "serve", 0.0, 0.1))
+        ring.clear()
+        assert len(ring) == 0 and ring.dropped == 0
+
+    def test_tracer_ids_and_span_context(self):
+        tr = Tracer()
+        assert [tr.new_trace() for _ in range(3)] == [0, 1, 2]
+        with tr.span("work", "serve", round=2, tid=1):
+            pass
+        tr.record("admit", "update", tr.clock(), 0.01, tid=7)
+        spans = tr.spans
+        assert [s.name for s in spans] == ["work", "admit"]
+        assert spans[0].round == 2 and spans[0].dur >= 0
+        assert spans[1].tid == 7
+        assert tr.dropped == 0
+
+
+class TestChromeExport:
+    def test_export_shape(self):
+        spans = [Span("round", "serve", 1.0, 0.002, round=3),
+                 Span("admit", "update", 0.5, 0.0001, tid=11),
+                 Span("weighted_agg", "kernel", 1.0, 0.001,
+                      args={"mode": "ref"})]
+        doc = to_chrome_trace(spans)
+        evs = doc["traceEvents"]
+        meta = [e for e in evs if e["ph"] == "M"]
+        xs = [e for e in evs if e["ph"] == "X"]
+        assert {e["args"]["name"] for e in meta} >= {"serve", "kernel",
+                                                     "update"}
+        assert len(xs) == 3
+        by_name = {e["name"]: e for e in xs}
+        # microsecond conversion and per-category lanes
+        assert by_name["round"]["ts"] == pytest.approx(1e6)
+        assert by_name["round"]["dur"] == pytest.approx(2000.0)
+        assert by_name["round"]["args"]["round"] == 3
+        assert by_name["admit"]["args"]["trace_id"] == 11
+        assert by_name["weighted_agg"]["args"]["mode"] == "ref"
+        assert by_name["round"]["tid"] != by_name["admit"]["tid"]
+        # the whole document must be JSON-serializable as-is
+        json.loads(json.dumps(doc))
+        assert "metadata" not in doc
+
+    def test_dropped_metadata(self):
+        doc = to_chrome_trace([], dropped=4)
+        assert doc["metadata"]["spans_dropped"] == 4
+
+
+class TestCriticalPath:
+    def test_synthetic_attribution(self):
+        # dispatch covers stack+table; kernel is the derived remainder,
+        # other the wall residual outside dispatch+finalize
+        spans = [
+            Span("stack", "serve", 0.0, 0.010, round=1),
+            Span("table", "serve", 0.010, 0.005, round=1),
+            Span("dispatch", "serve", 0.0, 0.040, round=1),
+            Span("finalize", "serve", 0.040, 0.008, round=1),
+            Span("round", "serve", 0.0, 0.050, round=1),
+        ]
+        (path,) = analyze(spans)
+        assert path.round == 1
+        assert path.stages["host_stack"] == pytest.approx(0.010)
+        assert path.stages["table_update"] == pytest.approx(0.005)
+        assert path.stages["kernel_dispatch"] == pytest.approx(0.025)
+        assert path.stages["finalize"] == pytest.approx(0.008)
+        assert path.stages["other"] == pytest.approx(0.002)
+        assert path.coverage == pytest.approx(1.0)  # stages sum to wall
+        summary = stage_summary(spans)
+        # measured coverage excludes the residual
+        assert summary["coverage"] == pytest.approx(0.048 / 0.050)
+        assert set(summary["stages_s"]) == set(STAGES)
+        assert set(summary["outside_s"]) == set(OUT_OF_ROUND_STAGES)
+
+    def test_out_of_round_stages(self):
+        spans = [
+            Span("round", "serve", 0.0, 0.010, round=1),
+            Span("dispatch", "serve", 0.0, 0.009, round=1),
+            Span("admit", "update", 0.0, 0.001, tid=0),
+            Span("buffer", "update", 0.0, 0.004, round=1, tid=0),
+            Span("tier-fire", "hier", 0.0, 0.002),
+            Span("save", "ckpt", 0.0, 0.003),
+        ]
+        s = stage_summary(spans)
+        assert s["outside_s"]["admission_wait"] == pytest.approx(0.001)
+        assert s["outside_s"]["buffer_residency"] == pytest.approx(0.004)
+        assert s["outside_s"]["tier_merge"] == pytest.approx(0.002)
+        assert s["outside_s"]["checkpoint"] == pytest.approx(0.003)
+        assert s["outside_n"]["buffer_residency"] == 1
+        # out-of-round stages never count toward coverage
+        assert s["coverage"] == pytest.approx(0.9)
+        rows = "\n".join(format_summary(s))
+        assert "admission_wait" in rows and "kernel_dispatch" in rows
+
+    def test_kbuffer_coverage_and_lineage(self, mlp_params, stream):
+        svc, tel = _traced_replay(mlp_params, stream)
+        spans = tel.tracer.spans
+        s = stage_summary(spans)
+        assert s["rounds"] == svc.stats.rounds == 12
+        assert 0.9 <= s["coverage"] <= 1.1
+        # per-update lineage: one admit span per submit, distinct trace
+        # ids, one buffer-residency span per aggregated update
+        admits = [sp for sp in spans if sp.name == "admit"]
+        buffers = [sp for sp in spans if sp.name == "buffer"]
+        assert len(admits) == svc.stats.submitted
+        assert len({sp.tid for sp in admits}) == svc.stats.submitted
+        assert len(buffers) == svc.stats.rounds * 5
+        # every buffered update's residency is attributed to the round
+        # that consumed it (1-based, matching RoundFired.round)
+        assert {sp.round for sp in buffers} == set(range(1, 13))
+
+    def test_timewindow_coverage(self, mlp_params, stream):
+        svc, tel = _traced_replay(
+            mlp_params, stream, trigger=TimeWindow(3.0, min_updates=2),
+            batched=True)
+        assert svc.stats.rounds > 0
+        s = stage_summary(tel.tracer.spans)
+        assert s["rounds"] == svc.stats.rounds
+        assert 0.9 <= s["coverage"] <= 1.1
+        # the batched fused path stamps host stack/table sub-stages
+        assert s["stages_s"]["host_stack"] > 0
+        assert s["stages_s"]["table_update"] > 0
+
+    def test_hier_coverage_and_tier_spans(self, mlp_params, stream):
+        from repro.hier import HierarchicalService, parse_topology
+
+        hp = FedQSHyperParams(buffer_k=5)
+        tel = Telemetry.in_memory(trace=True)
+        svc = HierarchicalService(
+            make_algorithm("fedqs-sgd", hp), hp, mlp_params, 16,
+            parse_topology("hier:8x2", 16), trigger=KBuffer(5),
+            telemetry=tel)
+        replay(svc, stream, flush=False)
+        spans = tel.tracer.spans
+        s = stage_summary(spans)
+        assert s["rounds"] == svc.stats.rounds > 0
+        assert 0.9 <= s["coverage"] <= 1.1
+        fires = [sp for sp in spans if sp.name == "tier-fire"]
+        assert len(fires) == sum(e.fires for e in svc.edges) + \
+            sum(r.fires for r in svc.regions)
+        assert {sp.args["tier"] for sp in fires} == {"edge", "region"}
+        assert s["outside_s"]["tier_merge"] > 0
+        assert s["outside_s"]["buffer_residency"] > 0
+
+    def test_tracing_is_bit_identical(self, mlp_params, stream):
+        plain = _service(mlp_params)
+        traced, _ = _traced_replay(mlp_params, stream)
+        replay(plain, stream, flush=False)
+        for a, b in zip(jax.tree_util.tree_leaves(plain.global_params),
+                        jax.tree_util.tree_leaves(traced.global_params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_checkpoint_span(self, mlp_params, stream, tmp_path):
+        svc, tel = _traced_replay(mlp_params, stream)
+        svc.save(str(tmp_path / "svc.ckpt"))
+        saves = [sp for sp in tel.tracer.spans if sp.cat == "ckpt"]
+        assert len(saves) == 1 and saves[0].name == "save"
+
+
+class TestProfileHooks:
+    def test_resolved_mode(self, monkeypatch):
+        from repro.telemetry import profile
+
+        monkeypatch.setenv("REPRO_KERNEL_MODE", "ref")
+        assert profile.resolved_mode() == "ref"
+        monkeypatch.delenv("REPRO_KERNEL_MODE")
+        if jax.default_backend() != "tpu":
+            assert profile.resolved_mode(auto=True) == "ref"
+            assert profile.resolved_mode(auto=False) == "interpret"
+
+    def test_timed_call_passthrough_when_inactive(self):
+        from repro.telemetry import profile
+
+        assert profile.active() is None
+        out = profile.timed_call("f", "ref", lambda x: x + 1, 2)
+        assert out == 3
+
+    def test_activation_times_kernel_dispatches(self):
+        from repro.kernels import weighted_agg_auto_op
+        from repro.telemetry import profile
+
+        tel = Telemetry.in_memory(trace=True)
+        x = jax.numpy.ones((4, 128), jax.numpy.float32)
+        w = jax.numpy.ones((4,), jax.numpy.float32)
+        with profile.activate(tel):
+            assert profile.active() is not None
+            weighted_agg_auto_op(x, w)
+        assert profile.active() is None
+        h = tel.metrics.get("kernels.dispatch_seconds")
+        assert h.count >= 1
+        kspans = [s for s in tel.tracer.spans if s.cat == "kernel"]
+        assert len(kspans) == h.count
+        assert kspans[0].name == "weighted_agg_auto_op"
+        assert kspans[0].args["mode"] in ("ref", "pallas", "interpret")
+        # closing the scope emitted the kernel-profile visibility record
+        profs = list(tel.ring.events("kernel-profile"))
+        assert len(profs) == 1
+        assert profs[0]["dispatches"] == h.count
+        assert profs[0]["backend"] == jax.default_backend()
+
+    def test_autotune_probe_counters(self):
+        from repro.kernels.autotune import get_config
+        from repro.telemetry import profile
+
+        tel = Telemetry.in_memory()
+        with profile.activate(tel):
+            get_config("ingest_agg", (8, 2048), jax.numpy.float32)
+            get_config("ingest_agg", (3, 7), jax.numpy.float32)
+        hits = tel.metrics.get("kernels.autotune_hits").value
+        misses = tel.metrics.get("kernels.autotune_misses").value
+        assert hits + misses == 2
+
+    def test_nested_activation_restores_previous(self):
+        from repro.telemetry import profile
+
+        t1, t2 = Telemetry.in_memory(), Telemetry.in_memory()
+        with profile.activate(t1):
+            outer = profile.active()
+            with profile.activate(t2):
+                assert profile.active() is not outer
+            assert profile.active() is outer
+        assert profile.active() is None
+
+
+class TestHubIntegration:
+    def test_close_emits_trace_summary(self, mlp_params, stream):
+        svc, tel = _traced_replay(mlp_params, stream)
+        tel.close()
+        recs = tel.ring.records
+        assert [r["e"] for r in recs[-2:]] == ["trace-summary",
+                                               "metrics-snapshot"]
+        ts = recs[-2]
+        assert ts["rounds"] == svc.stats.rounds
+        assert ts["spans"] == len(tel.tracer.spans)
+        assert 0.9 <= ts["coverage"] <= 1.1
+        assert ts["spans_dropped"] == 0
+
+    def test_span_drops_surface_in_counter(self, mlp_params, stream):
+        tel = Telemetry.in_memory(trace=True, trace_capacity=8)
+        svc = _service(mlp_params, telemetry=tel)
+        replay(svc, stream, flush=False)
+        assert tel.tracer.dropped > 0
+        tel.close()
+        snap = tel.metrics.snapshot()
+        assert snap["telemetry_events_dropped"]["value"] == \
+            tel.tracer.dropped
+
+    def test_export_trace(self, mlp_params, stream, tmp_path, capsys):
+        from repro.launch.analysis import export_trace
+
+        _, tel = _traced_replay(mlp_params, stream)
+        path = str(tmp_path / "run.trace.json")
+        summary = export_trace(tel, path)
+        assert "trace →" in capsys.readouterr().out
+        assert 0.9 <= summary["coverage"] <= 1.1
+        doc = json.load(open(path))
+        assert doc["traceEvents"]
+        assert export_trace.__module__  # importable symbol, not a stub
+
+    def test_export_trace_requires_tracer(self, tmp_path):
+        from repro.launch.analysis import export_trace
+
+        with pytest.raises(ValueError, match="no tracer"):
+            export_trace(Telemetry.in_memory(), str(tmp_path / "x.json"))
+
+    def test_untraced_hub_has_no_summary(self):
+        tel = Telemetry.in_memory()
+        assert tel.tracer is None
+        assert tel.trace_summary() is None
