@@ -51,6 +51,7 @@ SUITES = {
     "scenarios": _suite("bench_scenarios"),
     "compress": _suite("bench_compress"),
     "hier": _suite("bench_hier"),
+    "health": _suite("bench_health"),
 }
 
 

@@ -89,13 +89,24 @@ print('BENCH_serve.json OK:', len(rows), 'rows')"
 assert rows, 'BENCH_ingest.json has no results'; \
 print('BENCH_ingest.json OK:', len(rows), 'rows')"
 
+  echo "== bench artifacts: health suite (--fast) =="
+  # training-health gates: health plane ≤5% overhead with bit-identical
+  # params, injected norm explosion alerts within 5 rounds, healthy
+  # stream stays silent, flight dump round-trips through --postmortem
+  $PY -m benchmarks.run --only health --fast
+  test -s BENCH_health.json
+  $PY -c "import json; rows = json.load(open('BENCH_health.json'))['results']; \
+assert rows, 'BENCH_health.json has no results'; \
+print('BENCH_health.json OK:', len(rows), 'rows')"
+
   echo "== bench artifacts: schema + perf diff =="
   # every BENCH_*.json must match the documented artifact shape (the
   # perf-diff tooling parses them), then diff the fresh artifacts against
   # the committed baselines; report-only on CI hosts — wall times jitter
   # too much to hard-gate, a quiet host runs bench_diff without the flag
   $PY scripts/check_bench_schema.py
-  $PY scripts/bench_diff.py BENCH_serve.json BENCH_ingest.json --report-only
+  $PY scripts/bench_diff.py BENCH_serve.json BENCH_ingest.json \
+      BENCH_health.json --report-only
 
   echo "== smoke: distributed tracing =="
   # a 200-client traced stream: the exported file must load as Chrome
@@ -176,6 +187,59 @@ print(f"chaos smoke OK ({len(strag)} straggler events, "
       f"{len(drops)} mid-round drops)")
 EOF
   rm -rf "$CHAOSDIR"
+
+  echo "== smoke: training-health plane =="
+  # a healthy 200-client stream through the detectors must stay silent;
+  # a seeded norm explosion must raise an alert and leave a flight dump
+  # the postmortem renderer can read back (docs/OBSERVABILITY.md)
+  HEALTHDIR=$(mktemp -d)
+  $PY -m repro.launch.serve --safl-stream --clients 200 --updates 400 \
+      --batched --health --flightrec "$HEALTHDIR/flight.jsonl" \
+      --telemetry "$HEALTHDIR/healthy.jsonl"
+  $PY -m repro.launch.monitor --events "$HEALTHDIR/healthy.jsonl" \
+      --prom "$HEALTHDIR/healthy.prom" > /dev/null
+  $PY - "$HEALTHDIR" <<'EOF'
+import json, sys, os
+d = sys.argv[1]
+sys.path.insert(0, "src")
+import jax
+from repro.telemetry import EVENT_TYPES, Telemetry
+recs = [json.loads(l) for l in open(os.path.join(d, "healthy.jsonl"))
+        if l.strip()]
+unknown = {r["e"] for r in recs} - set(EVENT_TYPES)
+assert not unknown, f"events outside the taxonomy: {unknown}"
+alerts = [r for r in recs if r["e"] == "health-alert"]
+assert not alerts, f"healthy stream raised alerts: {alerts[:3]}"
+prom = open(os.path.join(d, "healthy.prom")).read()
+assert "repro_health_alerts_critical 0" in prom, "prom exposition missing"
+
+# seeded divergence: the detectors must fire and dump the black box
+from repro.core import FedQSHyperParams, make_algorithm
+from repro.models import make_mlp_spec
+from repro.serve import KBuffer, StreamingAggregator, replay, synthetic_stream
+from repro.serve.stream import inject_norm_explosion
+from repro.telemetry.report import postmortem_report
+params = make_mlp_spec().init(jax.random.PRNGKey(0))
+flight = os.path.join(d, "chaos-flight.jsonl")
+tel = Telemetry.in_memory(health=True, flightrec=flight)
+hp = FedQSHyperParams(buffer_k=5)
+svc = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp, params, 16,
+                          trigger=KBuffer(5), batched=True, telemetry=tel)
+stream = inject_norm_explosion(synthetic_stream(params, 16, 120, seed=0),
+                               after=50, scale=100.0)
+replay(svc, list(stream))
+hm = tel.health
+assert hm.alerts, "injected norm explosion raised no health alert"
+lag = min(a.round for a in hm.alerts) - (50 // 5 + 1)
+assert 0 <= lag <= 5, f"first alert {lag} rounds after injection (>5)"
+report = postmortem_report(flight)
+assert "black box" in report and "alert" in report, "postmortem empty"
+tel.close()
+print(f"health smoke OK ({len(recs)} healthy events silent, "
+      f"{len(hm.alerts)} alerts on chaos, lag={lag} rounds, "
+      f"postmortem {len(report.splitlines())} lines)")
+EOF
+  rm -rf "$HEALTHDIR"
 
   echo "== smoke: hierarchical aggregation plane =="
   # 2-tier, 200 clients: segment-kernel exactness + trigger parity vs

@@ -391,6 +391,10 @@ class SAFLEngine:
                 n_stale=m.n_stale, mean_staleness=m.mean_staleness,
                 quadrant_counts=dict(qc),
             ))
+            if self.telemetry.health is not None:
+                self.telemetry.health.observe_metrics(
+                    t=float(vt), round=m.round, loss=m.loss,
+                    accuracy=m.accuracy, quadrant_counts=qc)
         return m
 
     # ---------------------------------------------------------------- driver

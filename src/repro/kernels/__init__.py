@@ -8,6 +8,9 @@
 * ``ingest_agg``        — fused ingestion: int8 dequantize + Eq. §3.4
   staleness-decay weight fold + Σw·x in one pass (``repro.serve``),
   with an ``ingest_segment_agg`` variant for hierarchical edges;
+* ``stats_agg``         — ``ingest_agg`` dense variant that also emits
+  per-update squared norms + the weight column in the same VMEM sweep
+  (the training-health plane's stability vector, ``telemetry.health``);
 * ``similarity``        — Mod-1 fused <a,b>/|a|^2/|b|^2 one-pass statistics;
 * ``window_attention``  — sliding-window decode attention (long_500k path).
 
@@ -27,6 +30,8 @@ from .ops import (
     segment_agg_auto_op,
     segment_agg_op,
     similarity_stats_op,
+    stats_agg_auto_op,
+    stats_agg_op,
     weighted_agg_auto_op,
     weighted_agg_op,
     window_decode_attention_op,
@@ -44,6 +49,8 @@ __all__ = [
     "segment_agg_auto_op",
     "segment_agg_op",
     "similarity_stats_op",
+    "stats_agg_auto_op",
+    "stats_agg_op",
     "weighted_agg_auto_op",
     "weighted_agg_op",
     "window_decode_attention_op",

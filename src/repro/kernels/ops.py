@@ -20,6 +20,7 @@ from .autotune import get_config
 from .dequant_agg import dequant_agg
 from .ingest_agg import ingest_agg, ingest_segment_agg
 from .segment_agg import segment_agg
+from .stats_agg import stats_agg
 from .similarity import cosine_from_stats, fused_similarity_stats
 from .weighted_agg import weighted_agg
 from .window_attention import window_decode_attention
@@ -111,6 +112,31 @@ def ingest_agg_auto_op(q, scales, n_samples, F, G, fb, k=None, cf=None, *,
                                n_clients=n_clients, normalize=normalize)
 
 
+def stats_agg_op(x, n_samples, F, G, fb, k=None, cf=None, *, n_clients,
+                 normalize=True):
+    """Fused ingestion + stats reduce, interpret-mode (validation)."""
+    if _FORCE_REF:
+        return _ref.stats_agg_ref(x, n_samples, F, G, fb, k, cf,
+                                  n_clients=n_clients, normalize=normalize)
+    return stats_agg(x, n_samples, F, G, fb, k, cf, n_clients=n_clients,
+                     normalize=normalize, interpret=_INTERPRET)
+
+
+def stats_agg_auto_op(x, n_samples, F, G, fb, k=None, cf=None, *, n_clients,
+                      normalize=True):
+    """Throughput dispatch for the health-instrumented serve ingestion
+    path: compiled kernel on TPU (autotuned block), jitted oracle
+    elsewhere.  The aggregate output is bit-identical to
+    ``ingest_agg_auto_op`` either way; ``row_sq`` bits follow the
+    winning tiling (health detectors threshold, never compare bits)."""
+    if _ON_TPU and not _FORCE_REF:
+        return stats_agg(x, n_samples, F, G, fb, k, cf, n_clients=n_clients,
+                         normalize=normalize,
+                         block_d=_tuned_block("stats_agg", x.shape, x.dtype))
+    return _ref.stats_agg_ref(x, n_samples, F, G, fb, k, cf,
+                              n_clients=n_clients, normalize=normalize)
+
+
 def ingest_segment_agg_op(q, scales, seg, n_samples, F, G, fb, k=None,
                           cf=None, *, num_segments, chunk=0, n_clients,
                           normalize=False):
@@ -186,6 +212,8 @@ segment_agg_op = _hooked(segment_agg_op, auto=False)
 segment_agg_auto_op = _hooked(segment_agg_auto_op, auto=True)
 ingest_agg_op = _hooked(ingest_agg_op, auto=False)
 ingest_agg_auto_op = _hooked(ingest_agg_auto_op, auto=True)
+stats_agg_op = _hooked(stats_agg_op, auto=False)
+stats_agg_auto_op = _hooked(stats_agg_auto_op, auto=True)
 ingest_segment_agg_op = _hooked(ingest_segment_agg_op, auto=False)
 ingest_segment_agg_auto_op = _hooked(ingest_segment_agg_auto_op, auto=True)
 similarity_stats_op = _hooked(similarity_stats_op, auto=False)

@@ -124,6 +124,40 @@ def ingest_agg_ref(q: jax.Array, scales, n_samples, F, G, fb, k=None,
 
 
 @functools.partial(jax.jit,
+                   static_argnames=("n_clients", "normalize", "block_d"))
+def stats_agg_ref(x: jax.Array, n_samples, F, G, fb, k=None, cf=None, *,
+                  n_clients: int, normalize: bool = True,
+                  block_d: int = 4096):
+    """Oracle for the fused stats kernel: same weight fold and Σw·x as
+    ``ingest_agg_ref`` plus per-row squared norms and the weight column
+    — ``(agg [D], row_sq [K], w [K])`` f32.
+
+    ``row_sq`` in the kernel accumulates per-VMEM-block partials
+    sequentially across grid steps, so its bits depend on the tiling.
+    The oracle mirrors that exact order: per-block ``Σx²`` partials over
+    ``block_d``-wide slices (default matches ``stats_agg.BLOCK_D``),
+    added left to right.  Pass the kernel's ``block_d`` to compare
+    against a non-default tiling.
+    """
+    K, D = x.shape
+    col = lambda v: jnp.asarray(v, jnp.float32).reshape(K, 1)
+    k = jnp.float32(K) if k is None else jnp.asarray(k, jnp.float32)
+    cf_col = jnp.ones((K, 1), jnp.float32) if cf is None else col(cf)
+    p = ingest_weights(col(n_samples), col(F), col(G), col(fb), k,
+                       n_clients=n_clients, normalize=normalize, cf=cf_col)
+    xf = x.astype(jnp.float32)
+    agg = jnp.dot(p.T, xf, preferred_element_type=jnp.float32)[0]
+    pad = (-D) % block_d
+    xb = jnp.pad(xf, ((0, 0), (0, pad))) if pad else xf
+    acc = None
+    for j in range((D + pad) // block_d):
+        xj = xb[:, j * block_d:(j + 1) * block_d]
+        part = jnp.sum(xj * xj, axis=1, keepdims=True)
+        acc = part if acc is None else acc + part
+    return agg, acc[:, 0], p[:, 0]
+
+
+@functools.partial(jax.jit,
                    static_argnames=("num_segments", "n_clients", "normalize"))
 def ingest_segment_agg_ref(q: jax.Array, scales, seg, n_samples, F, G, fb,
                            k=None, cf=None, *, num_segments: int,

@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: the fused ingestion pass WITH on-kernel update
+statistics — Σw·x plus the per-round stability vector, in one sweep.
+
+    agg[d]    = Σ_k p[k] · x[k,d]          (identical to ``ingest_agg``)
+    row_sq[k] = Σ_d x[k,d]²                (per-update squared norm)
+    w[k]      = p[k]                       (the §3.4 fold, exported)
+
+The training-health plane (docs/OBSERVABILITY.md) needs, every round,
+the weighted dispersion E_w‖x−μ‖² — FedQS's fluctuation quantity — and
+per-update norms to catch explosions.  Computing them host-side would
+re-stream the whole [K, D] payload from HBM; here the squares ride the
+same VMEM tiles the reduction already pays for, so the marginal cost is
+one K×blk elementwise multiply-add per grid step.
+
+``row_sq`` accumulates across grid steps into a [K, 1] output block
+with a constant index map (resident in VMEM the whole launch):
+initialized on step 0, added to afterwards.  That makes the reduction
+order *tiling-dependent* — per-block partials summed left-to-right —
+so the oracle (``ref.stats_agg_ref``) mirrors the same blocked
+accumulation to stay bit-exact (unlike ``agg``, where each out[d] is a
+single K-length dot regardless of block size).
+
+``round_stats`` assembles the stability vector from the three outputs;
+the weight algebra is shared verbatim with ``ingest_agg`` via
+``_fold``/``ingest_weights``, so the aggregate output is bit-identical
+to the stats-free kernel (gated by ``tests/test_health.py`` and the
+``serve_health_overhead`` benchmark).
+
+Dense f32 rows only: the compressed (int8) serving path keeps the plain
+``ingest_agg`` kernel and skips stats for that round.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ingest_agg import BLOCK_D, _fold, _meta_cols
+
+#: Order of the entries ``round_stats`` packs (the stats-vector schema
+#: in docs/OBSERVABILITY.md; ``telemetry.health`` consumes by name).
+STATS_FIELDS = ("sum_w", "wnorm2", "dispersion", "max_sq", "mean_sq")
+
+
+def _stats_dense_kernel(k_ref, n_ref, F_ref, G_ref, fb_ref, cf_ref, x_ref,
+                        o_ref, sq_ref, w_ref, *, n_clients, normalize):
+    p = _fold(k_ref, n_ref, F_ref, G_ref, fb_ref, cf_ref,
+              n_clients=n_clients, normalize=normalize)
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.dot(p.T, x, preferred_element_type=jnp.float32)
+    blk_sq = jnp.sum(x * x, axis=1, keepdims=True)
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sq_ref[...] = blk_sq
+        w_ref[...] = p
+
+    @pl.when(i > 0)
+    def _accumulate():
+        sq_ref[...] = sq_ref[...] + blk_sq
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_clients", "normalize", "block_d", "interpret"))
+def stats_agg(x: jax.Array, n_samples, F, G, fb, k=None, cf=None, *,
+              n_clients: int, normalize: bool = True,
+              block_d: int = BLOCK_D, interpret: bool = False):
+    """Fused ingestion reduce + statistics → ``(agg [D], row_sq [K],
+    w [K])`` f32 (see module docstring).
+
+    Same metadata contract as the dense path of ``ingest_agg``: ``x`` is
+    [K, D] dense rows, ``n_samples``/``F``/``G``/``fb`` [K] f32 columns,
+    ``k`` the logical member count (row-axis padding rows carry
+    ``n = fb = 0`` and weigh exactly 0 — their ``row_sq`` is 0 too when
+    the padding payload is zeros, which the serving path guarantees).
+    """
+    K, D = x.shape
+    kcol, ncol, Fcol, Gcol, fbcol, cfcol = _meta_cols(
+        x, n_samples, F, G, fb, k, cf)
+    meta_specs = [pl.BlockSpec((1, 1), lambda i: (0, 0))] + [
+        pl.BlockSpec((K, 1), lambda i: (0, 0)) for _ in range(5)
+    ]
+    blk = block_d
+    pad = (-D) % blk
+    xp = jnp.pad(x, ((0, 0), (0, pad))) if pad else x
+    agg, row_sq, w = pl.pallas_call(
+        functools.partial(_stats_dense_kernel, n_clients=n_clients,
+                          normalize=normalize),
+        grid=((D + pad) // blk,),
+        in_specs=meta_specs + [pl.BlockSpec((K, blk), lambda i: (0, i))],
+        out_specs=(
+            pl.BlockSpec((1, blk), lambda i: (0, i)),
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((1, D + pad), jnp.float32),
+            jax.ShapeDtypeStruct((K, 1), jnp.float32),
+            jax.ShapeDtypeStruct((K, 1), jnp.float32),
+        ),
+        interpret=interpret,
+    )(kcol, ncol, Fcol, Gcol, fbcol, cfcol, xp.astype(jnp.float32))
+    return agg[0, :D], row_sq[:, 0], w[:, 0]
+
+
+def round_stats(agg: jax.Array, row_sq: jax.Array, w: jax.Array,
+                k=None) -> jax.Array:
+    """Pack the kernel outputs into the [5] stability vector
+    (``STATS_FIELDS`` order).  Pure jnp — traced inside the caller's jit.
+
+    * ``sum_w``      — Σw (≈1 on the normalized serve path; the raw
+      mass on tier edges);
+    * ``wnorm2``     — Σw·‖x‖², the weighted second moment;
+    * ``dispersion`` — E_w‖x−μ‖² = Σw‖x‖²/Σw − ‖μ‖² with μ = Σw·x/Σw,
+      clamped at 0 against fp cancellation: the paper's fluctuation
+      quantity;
+    * ``max_sq``     — max_k ‖x_k‖² (update-norm explosion signal);
+    * ``mean_sq``    — Σ‖x_k‖²/k, unweighted (padding rows contribute
+      0 to the numerator and are excluded from ``k``).
+    """
+    k = (jnp.float32(row_sq.shape[0]) if k is None
+         else jnp.asarray(k, jnp.float32))
+    sum_w = jnp.sum(w)
+    wnorm2 = jnp.sum(w * row_sq)
+    mu_sq = jnp.sum(agg * agg) / jnp.maximum(sum_w * sum_w, 1e-24)
+    dispersion = jnp.maximum(wnorm2 / jnp.maximum(sum_w, 1e-12) - mu_sq, 0.0)
+    max_sq = jnp.max(row_sq)
+    mean_sq = jnp.sum(row_sq) / jnp.maximum(k, 1.0)
+    return jnp.stack([sum_w, wnorm2, dispersion, max_sq, mean_sq])

@@ -11,6 +11,11 @@ Two analysis surfaces live here:
 
       PYTHONPATH=src python -m repro.launch.analysis --events run.jsonl --out report.md
 
+  With ``--postmortem`` the input is read as a flight-recorder dump
+  (``repro.telemetry.flightrec``): malformed trailing lines are
+  tolerated, the dump's own metadata (reason, round, ring occupancy)
+  heads the report, and the recorded window is rendered below it.
+
 * **Compiled-artifact analysis** — cost, memory, and collective-byte
   parsing for the roofline report (system prompt §ROOFLINE).
 
@@ -321,6 +326,7 @@ def roofline_terms(flops: float, hlo_bytes: float, coll_bytes: float,
 from repro.telemetry.report import (  # noqa: E402
     experiment_report,
     load_events,
+    postmortem_report,
     report_from_jsonl,
 )
 
@@ -362,9 +368,17 @@ def main(argv=None) -> None:
     ap.add_argument("--out", default=None,
                     help="write the report here (default: stdout)")
     ap.add_argument("--title", default=None)
+    ap.add_argument("--postmortem", action="store_true",
+                    help="treat --events as a flight-recorder dump "
+                         "(possibly truncated mid-write) and render the "
+                         "crash-context postmortem instead of the full "
+                         "experiment report")
     args = ap.parse_args(argv)
 
-    report = report_from_jsonl(args.events, title=args.title)
+    if args.postmortem:
+        report = postmortem_report(args.events, title=args.title)
+    else:
+        report = report_from_jsonl(args.events, title=args.title)
     if args.out:
         with open(args.out, "w", encoding="utf-8") as fh:
             fh.write(report)

@@ -1,0 +1,289 @@
+"""Live training-health monitor: tail a telemetry JSONL log in a terminal.
+
+The monitor is the read side of the training-health plane
+(docs/OBSERVABILITY.md): point it at the JSONL file a running launcher
+is writing (``--telemetry`` on ``launch/serve`` / ``launch/train``) and
+it renders a compact dashboard — ingest rate, round progress, the
+staleness histogram, per-tier throughput, detector status, and any
+health alerts / flight dumps — either once (default) or continuously
+with ``--follow``::
+
+    PYTHONPATH=src python -m repro.launch.monitor --events run.jsonl
+    PYTHONPATH=src python -m repro.launch.monitor --events run.jsonl --follow
+
+``--prom`` additionally renders the run's final metrics registry
+snapshot in Prometheus text exposition format (counters, gauges, and
+cumulative ``le`` histogram buckets under a ``repro_`` prefix), so the
+same numbers the Markdown report tabulates can be scraped by anything
+that speaks the format.
+
+Reading is tolerant by design: the file is being appended to while we
+read it, so a torn final line is expected — it is skipped this pass and
+picked up complete on the next one.  State accumulation is incremental
+(each line is consumed once, however long the run), which keeps a
+``--follow`` session O(new events) per refresh.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List, Optional
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text exposition
+# ---------------------------------------------------------------------------
+def _prom_name(name: str) -> str:
+    out = []
+    for ch in name:
+        out.append(ch if (ch.isalnum() or ch == "_") else "_")
+    s = "".join(out)
+    return "repro_" + s
+
+
+def _prom_num(v: float) -> str:
+    f = float(v)
+    if f == float("inf"):
+        return "+Inf"
+    if f == float("-inf"):
+        return "-Inf"
+    if f == int(f) and abs(f) < 1e15:
+        return str(int(f))
+    return repr(f)
+
+
+def prometheus_text(snapshot: Dict[str, dict]) -> str:
+    """Render a ``MetricsRegistry.snapshot()`` dict as Prometheus text
+    exposition (version 0.0.4): one ``# TYPE`` header per metric,
+    cumulative upper-bound-inclusive ``le`` buckets + ``+Inf`` +
+    ``_sum``/``_count`` for histograms — the same ``le`` semantics the
+    registry's ``bisect_left`` bucketing already implements."""
+    lines: List[str] = []
+    for name in sorted(snapshot):
+        m = snapshot[name]
+        pname = _prom_name(name)
+        mtype = m.get("type")
+        if mtype == "counter":
+            lines.append(f"# TYPE {pname} counter")
+            lines.append(f"{pname} {_prom_num(m.get('value', 0))}")
+        elif mtype == "gauge":
+            lines.append(f"# TYPE {pname} gauge")
+            lines.append(f"{pname} {_prom_num(m.get('value', 0.0))}")
+        elif mtype == "histogram":
+            lines.append(f"# TYPE {pname} histogram")
+            bounds = m.get("bounds") or []
+            counts = m.get("counts") or []
+            cum = 0
+            for b, c in zip(bounds, counts):
+                cum += int(c)
+                lines.append(f'{pname}_bucket{{le="{_prom_num(b)}"}} {cum}')
+            total = int(m.get("count", sum(int(c) for c in counts)))
+            lines.append(f'{pname}_bucket{{le="+Inf"}} {total}')
+            lines.append(f"{pname}_sum {_prom_num(m.get('sum', 0.0))}")
+            lines.append(f"{pname}_count {total}")
+        else:  # unknown metric type: expose nothing rather than guess
+            continue
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+# ---------------------------------------------------------------------------
+# incremental monitor state
+# ---------------------------------------------------------------------------
+class MonitorState:
+    """Everything the dashboard shows, folded incrementally from the
+    event stream — feed each JSONL record exactly once via ``ingest``."""
+
+    def __init__(self) -> None:
+        self.events = 0
+        self.skipped = 0
+        self.admitted = 0
+        self.rejected = 0
+        self.rounds = 0
+        self.last_round = -1
+        self.t_first: Optional[float] = None
+        self.t_last: Optional[float] = None
+        self.staleness: Dict[int, int] = {}
+        self.tier_fires: Dict[str, int] = {}
+        self.loss: Optional[float] = None
+        self.accuracy: Optional[float] = None
+        self.alerts: List[dict] = []
+        self.dumps: List[dict] = []
+        self.snapshot: Optional[dict] = None
+        self.agg_seconds = 0.0
+
+    def ingest(self, rec: dict) -> None:
+        self.events += 1
+        e = rec.get("e")
+        t = rec.get("t")
+        if isinstance(t, (int, float)):
+            if self.t_first is None:
+                self.t_first = float(t)
+            self.t_last = float(t)
+        if e == "update-admitted":
+            self.admitted += 1
+            tau = int(rec.get("staleness", 0))
+            self.staleness[tau] = self.staleness.get(tau, 0) + 1
+        elif e == "update-rejected":
+            self.rejected += 1
+        elif e == "round-fired":
+            self.rounds += 1
+            self.last_round = max(self.last_round, int(rec.get("round", -1)))
+            self.agg_seconds += float(rec.get("agg_seconds", 0.0))
+        elif e == "tier-merged":
+            tier = str(rec.get("tier", "?"))
+            self.tier_fires[tier] = self.tier_fires.get(tier, 0) + 1
+        elif e == "round-metrics":
+            self.loss = float(rec.get("loss", float("nan")))
+            self.accuracy = float(rec.get("accuracy", float("nan")))
+            self.last_round = max(self.last_round, int(rec.get("round", -1)))
+        elif e == "health-alert":
+            self.alerts.append(rec)
+        elif e == "flight-dump":
+            self.dumps.append(rec)
+        elif e == "metrics-snapshot":
+            self.snapshot = rec.get("metrics") or {}
+
+    # -- derived views ------------------------------------------------------
+    @property
+    def span(self) -> float:
+        if self.t_first is None or self.t_last is None:
+            return 0.0
+        return max(self.t_last - self.t_first, 0.0)
+
+    def health_line(self) -> str:
+        if not self.alerts:
+            return "OK — no alerts"
+        warn = sum(1 for a in self.alerts if a.get("severity") == "warn")
+        crit = len(self.alerts) - warn
+        last = self.alerts[-1]
+        sev = "CRITICAL" if crit else "WARN"
+        return (f"{sev} — {len(self.alerts)} alerts ({crit} critical, "
+                f"{warn} warn); last: {last.get('detector')} "
+                f"z={float(last.get('zscore', 0.0)):.1f} "
+                f"@ round {last.get('round')}")
+
+
+def _bar(n: int, peak: int, width: int = 30) -> str:
+    if peak <= 0:
+        return ""
+    return "#" * max(1 if n else 0, round(n / peak * width))
+
+
+def render(state: MonitorState, *, path: str = "") -> str:
+    """One dashboard frame as plain text."""
+    s = state
+    rate = s.admitted / s.span if s.span > 0 else 0.0
+    lines = [
+        f"== repro monitor{' — ' + path if path else ''} ==",
+        f"events {s.events}  (torn/skipped this pass: {s.skipped})",
+        f"ingest: {s.admitted} admitted, {s.rejected} rejected  "
+        f"[{rate:.1f} updates/s stream-clock]",
+        f"rounds: {s.rounds} fired (last round {s.last_round}, "
+        f"{s.agg_seconds / max(s.rounds, 1) * 1e3:.2f} ms/round aggregation)",
+    ]
+    if s.loss is not None:
+        lines.append(f"metrics: loss={s.loss:.4f} accuracy={s.accuracy:.4f}")
+    if s.tier_fires:
+        tiers = "  ".join(f"{k}:{v} fires"
+                          for k, v in sorted(s.tier_fires.items()))
+        lines.append(f"tiers: {tiers}")
+    if s.staleness:
+        lines.append("staleness (rounds @ admission):")
+        peak = max(s.staleness.values())
+        for tau in sorted(s.staleness):
+            n = s.staleness[tau]
+            lines.append(f"  tau={tau:>3} {n:>6}  {_bar(n, peak)}")
+    lines.append(f"health: {s.health_line()}")
+    for d in s.dumps[-3:]:
+        lines.append(f"  flight dump -> {d.get('path')} "
+                     f"({d.get('n_records')} records, {d.get('reason')})")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# tailing
+# ---------------------------------------------------------------------------
+def _drain(fh, state: MonitorState) -> int:
+    """Consume complete lines from the current position; a torn final
+    line (the writer is mid-append) is rewound and retried next pass."""
+    n = 0
+    state.skipped = 0
+    while True:
+        pos = fh.tell()
+        line = fh.readline()
+        if not line:
+            break
+        if not line.endswith("\n"):
+            fh.seek(pos)  # torn tail: retry once the writer finishes it
+            break
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError:
+            state.skipped += 1
+            continue
+        state.ingest(rec)
+        n += 1
+    return n
+
+
+def monitor(path: str, *, follow: bool = False, interval: float = 1.0,
+            out=None, max_frames: Optional[int] = None) -> MonitorState:
+    """Tail ``path`` and render dashboard frames to ``out`` (stdout).
+
+    ``max_frames`` bounds the number of --follow refreshes (tests)."""
+    out = out or sys.stdout
+    state = MonitorState()
+    frames = 0
+    with open(path, "r", encoding="utf-8") as fh:
+        while True:
+            _drain(fh, state)
+            frame = render(state, path=path)
+            if follow and out.isatty():
+                out.write("\x1b[2J\x1b[H")  # clear + home between frames
+            out.write(frame + "\n")
+            out.flush()
+            frames += 1
+            if not follow or (max_frames is not None and frames >= max_frames):
+                return state
+            time.sleep(interval)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Terminal dashboard over a telemetry JSONL log "
+                    "(docs/OBSERVABILITY.md).")
+    ap.add_argument("--events", required=True,
+                    help="JSONL event log a launcher is writing "
+                         "(--telemetry on launch/serve, launch/train)")
+    ap.add_argument("--follow", action="store_true",
+                    help="keep tailing and refresh the dashboard "
+                         "(default: render one frame and exit)")
+    ap.add_argument("--interval", type=float, default=1.0,
+                    help="refresh period in seconds with --follow")
+    ap.add_argument("--prom", default=None, metavar="PATH",
+                    help="write the final metrics-snapshot as Prometheus "
+                         "text exposition ('-' = stdout)")
+    args = ap.parse_args(argv)
+
+    state = monitor(args.events, follow=args.follow, interval=args.interval)
+    if args.prom:
+        if state.snapshot is None:
+            raise SystemExit("--prom: no metrics-snapshot event in the log "
+                             "yet (it is appended by Telemetry.close())")
+        text = prometheus_text(state.snapshot)
+        if args.prom == "-":
+            sys.stdout.write(text)
+        else:
+            with open(args.prom, "w", encoding="utf-8") as fh:
+                fh.write(text)
+            print(f"prometheus exposition ({len(text.splitlines())} lines) "
+                  f"-> {args.prom}")
+
+
+if __name__ == "__main__":
+    main()

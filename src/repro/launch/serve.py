@@ -56,12 +56,16 @@ def run_safl_stream(args):
     if args.telemetry:
         from repro.telemetry import Telemetry
 
-        telemetry = Telemetry.to_jsonl(args.telemetry, trace=bool(args.trace))
-    elif args.trace:
+        telemetry = Telemetry.to_jsonl(args.telemetry, trace=bool(args.trace),
+                                       health=args.health,
+                                       flightrec=args.flightrec)
+    elif args.trace or args.health or args.flightrec:
         from repro.telemetry import Telemetry
 
-        # --trace without --telemetry: spans only, events stay in memory
-        telemetry = Telemetry.in_memory(trace=True)
+        # spans/detectors without --telemetry: events stay in memory
+        telemetry = Telemetry.in_memory(trace=bool(args.trace),
+                                        health=args.health,
+                                        flightrec=args.flightrec)
 
     trigger = {
         "kbuffer": lambda: make_trigger("kbuffer", k=args.buffer_k),
@@ -156,6 +160,12 @@ def run_safl_stream(args):
     if args.ckpt:
         service.save(args.ckpt)
         print("checkpoint →", args.ckpt)
+    if telemetry is not None and telemetry.health is not None:
+        hm = telemetry.health
+        crit = sum(1 for a in hm.alerts if a.severity == "critical")
+        print(f"  health: {len(hm.alerts)} alerts "
+              f"({crit} critical) across {len(hm.detectors)} detectors"
+              + ("" if not hm.alerts else " — see health-alert events"))
     if telemetry is not None:
         if args.trace and telemetry.tracer is not None:
             from repro.launch.analysis import export_trace
@@ -219,6 +229,14 @@ def main():
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="record monotonic-clock spans and export a "
                          "Chrome/Perfetto trace JSON (docs/OBSERVABILITY.md)")
+    ap.add_argument("--health", action="store_true",
+                    help="run the streaming anomaly detectors over the "
+                         "round stream (health-alert events + on-kernel "
+                         "update statistics, docs/OBSERVABILITY.md)")
+    ap.add_argument("--flightrec", default=None, metavar="PATH",
+                    help="attach the flight recorder: a bounded black-box "
+                         "event ring dumped to PATH on alert/crash/exit "
+                         "(consumed by launch/analysis --postmortem)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 

@@ -41,7 +41,10 @@ import time
 
 def _make_telemetry(args):
     trace = bool(getattr(args, "trace", None))
-    if not getattr(args, "report", None) and not args.telemetry and not trace:
+    health = bool(getattr(args, "health", False))
+    flightrec = getattr(args, "flightrec", None)
+    if (not getattr(args, "report", None) and not args.telemetry
+            and not trace and not health and not flightrec):
         return None
     if args.report and not args.telemetry:
         raise SystemExit("--report needs --telemetry (the recorded JSONL "
@@ -49,9 +52,11 @@ def _make_telemetry(args):
     from repro.telemetry import Telemetry
 
     if args.telemetry:
-        return Telemetry.to_jsonl(args.telemetry, trace=trace)
-    # --trace without --telemetry: spans only, events stay in memory
-    return Telemetry.in_memory(trace=True)
+        return Telemetry.to_jsonl(args.telemetry, trace=trace,
+                                  health=health, flightrec=flightrec)
+    # --trace/--health without --telemetry: events stay in memory
+    return Telemetry.in_memory(trace=trace, health=health,
+                               flightrec=flightrec)
 
 
 def _trace_scope(args, telemetry):
@@ -67,6 +72,11 @@ def _trace_scope(args, telemetry):
 def _finish_telemetry(args, telemetry):
     if telemetry is None:
         return
+    if telemetry.health is not None:
+        hm = telemetry.health
+        crit = sum(1 for a in hm.alerts if a.severity == "critical")
+        print(f"health: {len(hm.alerts)} alerts ({crit} critical) "
+              f"across {len(hm.detectors)} detectors")
     trace_path = getattr(args, "trace", None)
     if trace_path and telemetry.tracer is not None:
         from repro.launch.analysis import export_trace
@@ -246,6 +256,14 @@ def main():
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="record monotonic-clock spans and export a "
                          "Chrome/Perfetto trace JSON (docs/OBSERVABILITY.md)")
+    ap.add_argument("--health", action="store_true",
+                    help="run the streaming anomaly detectors over "
+                         "loss/accuracy/round signals (health-alert "
+                         "events, docs/OBSERVABILITY.md)")
+    ap.add_argument("--flightrec", default=None, metavar="PATH",
+                    help="attach the flight recorder: a bounded black-box "
+                         "event ring dumped to PATH on alert/crash/exit "
+                         "(consumed by launch/analysis --postmortem)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--arch", default="gemma3-1b")

@@ -504,4 +504,8 @@ class CohortEngine:
                 n_stale=m.n_stale, mean_staleness=m.mean_staleness,
                 quadrant_counts=dict(qc),
             ))
+            if self.telemetry.health is not None:
+                self.telemetry.health.observe_metrics(
+                    t=float(vt), round=m.round, loss=m.loss,
+                    accuracy=m.accuracy, quadrant_counts=qc)
         return m

@@ -39,7 +39,9 @@ from repro.kernels import dequant_agg_auto_op, weighted_agg_auto_op
 from repro.kernels.autotune import get_config
 from repro.kernels.dequant_agg import dequant_agg
 from repro.kernels.ingest_agg import ingest_agg
-from repro.kernels.ref import dequant_agg_ref, ingest_agg_ref, weighted_agg_ref
+from repro.kernels.ref import (dequant_agg_ref, ingest_agg_ref,
+                               stats_agg_ref, weighted_agg_ref)
+from repro.kernels.stats_agg import round_stats, stats_agg
 from repro.kernels.weighted_agg import weighted_agg
 
 # unravel closures keyed by (treedef, leaf avals): the buffer carries the
@@ -257,6 +259,31 @@ def _fused_dense_round(x, counts, tsims, cids, sims, n, fb, cf, k, flat_g,
 
 
 @functools.partial(jax.jit, static_argnames=(
+    "n_clients", "grad", "mode", "block_d"))
+def _fused_dense_stats_round(x, counts, tsims, cids, sims, n, fb, cf, k,
+                             flat_g, eta_g, ratio_clip, *, n_clients, grad,
+                             mode="auto", block_d=0):
+    # the health-instrumented sibling of _fused_dense_round: same round
+    # algebra through the stats_agg kernel, which emits the per-round
+    # stability vector from the same VMEM sweep.  The aggregate (and so
+    # the returned flat global) is bit-identical to the stats-free round
+    # — gated by tests/test_health.py and benchmarks/bench_health.py.
+    F, G = _round_meta(counts, tsims, cids, sims, ratio_clip)
+    if mode == "kernel":  # interpret-mode kernel body (validation only)
+        agg, row_sq, w = stats_agg(x, n, F, G, fb, k, cf,
+                                   n_clients=n_clients,
+                                   interpret=jax.default_backend() != "tpu")
+    elif mode == "tpu":
+        agg, row_sq, w = stats_agg(x, n, F, G, fb, k, cf,
+                                   n_clients=n_clients,
+                                   **({"block_d": block_d} if block_d else {}))
+    else:
+        agg, row_sq, w = stats_agg_ref(x, n, F, G, fb, k, cf,
+                                       n_clients=n_clients)
+    return _finish(agg, flat_g, eta_g, grad), round_stats(agg, row_sq, w, k)
+
+
+@functools.partial(jax.jit, static_argnames=(
     "chunk", "d_out", "n_clients", "grad", "mode", "block_d"))
 def _fused_quant_round(q, scales, counts, tsims, cids, sims, n, fb, cf, k,
                        flat_g, eta_g, ratio_clip, *, chunk, d_out,
@@ -278,9 +305,11 @@ def _fused_quant_round(q, scales, counts, tsims, cids, sims, n, fb, cf, k,
 
 def fused_ingest_round(batch, table, flat_g, hp, n_clients: int,
                        strategy, *, mode: Optional[str] = None,
-                       tracer=None, span_round: int = -1):
+                       tracer=None, span_round: int = -1,
+                       stats: bool = False):
     """One fused FedQS round over a frozen buffer → (new flat global,
-    new table).
+    new table) — or (new flat global, new table, stats) when ``stats``
+    is requested.
 
     The whole Mod-3 pass — Eq. 1/2 table-derived F/G ratios, Eq. §3.4
     feedback weight fold, Σp·x, and the global step — runs as ONE jitted
@@ -299,6 +328,12 @@ def fused_ingest_round(batch, table, flat_g, hp, n_clients: int,
     host sub-stages are recorded as ``table``/``stack`` spans of that
     round so the critical-path analyzer can split dispatch wall time
     into host work vs the derived kernel remainder.
+
+    ``stats=True`` (the training-health plane) routes the dense path
+    through ``stats_agg`` and appends the [5] stability vector
+    (``repro.kernels.stats_agg.STATS_FIELDS``) to the return — ``None``
+    on the int8 fused path, which keeps the plain kernel (the stats
+    variant is dense-only).  The aggregate is bit-identical either way.
     """
     from repro.core.aggregation import update_table
 
@@ -355,7 +390,7 @@ def fused_ingest_round(batch, table, flat_g, hp, n_clients: int,
             meta["sims"], meta["n"], meta["fb"], meta["cf"], k, flat_g,
             eta_g, ratio_clip, chunk=payloads[0].chunk, d_out=payloads[0].d,
             n_clients=n_clients, grad=grad, mode=mode, block_d=block)
-        return new_flat, new_table
+        return (new_flat, new_table, None) if stats else (new_flat, new_table)
     if encoded:
         # raw-f32 top-k (or heterogeneous chunks): decode to dense rows
         x = jnp.stack([decode(e) for e in payloads])
@@ -366,6 +401,14 @@ def fused_ingest_round(batch, table, flat_g, hp, n_clients: int,
     if tracer is not None:
         tracer.record("stack", "serve", t_stk,
                       time.perf_counter() - t_stk, round=span_round)
+    if stats:
+        block = (get_config("stats_agg", x.shape, x.dtype).block_d
+                 if mode == "tpu" else 0)
+        new_flat, stats_vec = _fused_dense_stats_round(
+            x, new_table.counts, new_table.sims, meta["cids"], meta["sims"],
+            meta["n"], meta["fb"], meta["cf"], k, flat_g, eta_g, ratio_clip,
+            n_clients=n_clients, grad=grad, mode=mode, block_d=block)
+        return new_flat, new_table, stats_vec
     block = (get_config("ingest_agg", x.shape, x.dtype).block_d
              if mode == "tpu" else 0)
     new_flat = _fused_dense_round(

@@ -185,6 +185,13 @@ class StreamingAggregator:
         # the hub carries one; cached so every trace site is one `is None`
         # check (the serve_trace_overhead gate)
         self._tracer = telemetry.tracer if telemetry is not None else None
+        # health monitor (docs/OBSERVABILITY.md "Training health"): same
+        # zero-overhead contract — cached once, every observe site is one
+        # `is None` check.  When present, fused dense rounds route through
+        # the stats_agg kernel (bit-identical aggregate) so the detectors
+        # see the per-round stability vector.
+        self._health = telemetry.health if telemetry is not None else None
+        self._pending_stats = None  # handed from _fused_round to _aggregate
         self._last_tid = -1
         self._ingest_t: List = []  # (trace id, admit-exit perf_counter)
         self._span_round = -1      # round id sub-stage spans attach to
@@ -431,6 +438,12 @@ class StreamingAggregator:
                 members=[[int(u.cid), int(u.n_samples), int(u.stale_round)]
                          for u in members],
             ))
+        hm = self._health
+        if hm is not None:
+            stats_vec, self._pending_stats = self._pending_stats, None
+            hm.observe_round(t=float(now), round=self.round,
+                             mean_staleness=report.mean_staleness,
+                             stats=stats_vec)
         if self.on_round is not None:
             self.on_round(report)
         if tr is not None:
@@ -518,14 +531,19 @@ class StreamingAggregator:
             flat_g = self._flat_cache
         else:
             flat_g, _ = ravel_pytree(ctx.global_params)
+        want_stats = self._health is not None
         out = fused_ingest_round(
             batch, ctx.table, flat_g, self.hp, ctx.data.n_clients,
             self.algo.strategy, mode=self._fused_mode,
             tracer=self._tracer, span_round=self._span_round,
+            stats=want_stats,
         )
         if out is None:
             return None
-        new_flat, new_table = out
+        if want_stats:
+            new_flat, new_table, self._pending_stats = out
+        else:
+            new_flat, new_table = out
         self._pending_flat = new_flat
         return self._unravel()(new_flat), new_table
 

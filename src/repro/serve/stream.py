@@ -19,6 +19,8 @@ stream-vs-virtual-clock equivalence test.
 """
 from __future__ import annotations
 
+import dataclasses
+
 from dataclasses import dataclass, field
 from typing import Iterator, List, Optional, Tuple
 
@@ -94,6 +96,32 @@ def _noise_trees(params: Params, n: int, scale: float, seed: int):
         deltas.append(delta)
         models.append(jax.tree_util.tree_map(jnp.add, params, delta))
     return deltas, models
+
+
+def inject_norm_explosion(
+    stream: Iterator[Tuple[Update, float]],
+    *,
+    after: int,
+    scale: float = 100.0,
+    span: Optional[int] = None,
+) -> Iterator[Tuple[Update, float]]:
+    """Seeded chaos injection for the health-detector efficacy gates:
+    from the ``after``-th update on (for ``span`` updates, or forever),
+    every payload is multiplied by ``scale`` — a diverging client whose
+    gradients explode, exactly the excursion the ``update_norm`` /
+    ``dispersion`` detectors must catch within a few rounds
+    (``benchmarks/bench_health.py``, ``tests/test_health.py``).
+
+    Deterministic by construction: the underlying stream supplies all
+    randomness, this wrapper only rescales tensors at fixed positions.
+    """
+    blow = lambda tree: (None if tree is None else jax.tree_util.tree_map(
+        lambda l: l * jnp.float32(scale), tree))
+    for i, (u, t) in enumerate(stream):
+        if i >= after and (span is None or i < after + span):
+            u = dataclasses.replace(u, delta=blow(u.delta),
+                                    params=blow(u.params))
+        yield u, t
 
 
 def scenario_stream(

@@ -20,6 +20,8 @@ Record a run and render its experiment report::
 """
 from __future__ import annotations
 
+import threading
+
 from typing import List, Optional, Sequence
 
 from .events import (
@@ -29,6 +31,8 @@ from .events import (
     CodecEncoded,
     DeadlineAdapted,
     Event,
+    FlightDump,
+    HealthAlert,
     KernelProfile,
     MetricsSnapshot,
     PartialAdmitted,
@@ -39,6 +43,8 @@ from .events import (
     UpdateAdmitted,
     UpdateRejected,
 )
+from .flightrec import FlightRecorder
+from .health import DEFAULT_DETECTORS, DetectorConfig, EwmaDetector, HealthMonitor
 from .metrics import (
     BYTES_BUCKETS,
     SECONDS_BUCKETS,
@@ -64,29 +70,55 @@ class Telemetry:
 
     def __init__(self, sinks: Optional[Sequence[Sink]] = None,
                  registry: Optional[MetricsRegistry] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 health: Optional[HealthMonitor] = None,
+                 flightrec: Optional[FlightRecorder] = None):
         self.sinks: List[Sink] = list(sinks or [])
         self.metrics = registry or MetricsRegistry()
         self.tracer = tracer
+        # the flight recorder joins the sink fan-out LAST (so on close
+        # its final dump happens after the primary sinks flushed) and is
+        # bound before the health monitor, which picks it up for
+        # on-alert dumps
+        self.flightrec = flightrec
+        if flightrec is not None:
+            self.sinks.append(flightrec)
+            flightrec.bind(self)
+        self.health = health
+        if health is not None:
+            health.bind(self)
         self._closed = False
+        self._close_lock = threading.Lock()
 
     # ------------------------------------------------------------ factories
     @classmethod
     def to_jsonl(cls, path: str, *, ring: bool = False,
                  capacity: int = 65536, trace: bool = False,
-                 trace_capacity: int = 262144) -> "Telemetry":
-        """Record to a JSONL file (optionally tee into a ring buffer)."""
+                 trace_capacity: int = 262144, health: bool = False,
+                 flightrec: Optional[str] = None) -> "Telemetry":
+        """Record to a JSONL file (optionally tee into a ring buffer).
+
+        ``health=True`` attaches the default detector bank
+        (``repro.telemetry.health``); ``flightrec=<path>`` attaches a
+        flight recorder dumping its black box to that path."""
         sinks: List[Sink] = [JsonlSink(path)]
         if ring:
             sinks.append(RingSink(capacity))
-        return cls(sinks, tracer=Tracer(trace_capacity) if trace else None)
+        return cls(sinks, tracer=Tracer(trace_capacity) if trace else None,
+                   health=HealthMonitor() if health else None,
+                   flightrec=(FlightRecorder(flightrec)
+                              if flightrec else None))
 
     @classmethod
     def in_memory(cls, capacity: int = 65536, *, trace: bool = False,
-                  trace_capacity: int = 262144) -> "Telemetry":
+                  trace_capacity: int = 262144, health: bool = False,
+                  flightrec: Optional[str] = None) -> "Telemetry":
         """Ring-buffer-only hub (tests, benchmarks, live inspection)."""
         return cls([RingSink(capacity)],
-                   tracer=Tracer(trace_capacity) if trace else None)
+                   tracer=Tracer(trace_capacity) if trace else None,
+                   health=HealthMonitor() if health else None,
+                   flightrec=(FlightRecorder(flightrec)
+                              if flightrec else None))
 
     # -------------------------------------------------------------- surface
     @property
@@ -120,22 +152,30 @@ class Telemetry:
         Also surfaces lossiness before snapshotting: ring-sink evictions
         and tracer span drops land in the ``telemetry_events_dropped``
         counter, and a traced run gets its ``trace-summary`` record.
+
+        Idempotent and thread-safe: the whole teardown runs under one
+        lock with the flag flipped first, so concurrent closers (a
+        signal handler racing the main thread, a flushing sink racing
+        ``__exit__``) see exactly one trace-summary / snapshot and the
+        drop counter is bumped once — a bare boolean used to double-emit
+        both when two closers interleaved before the flag was set.
         """
-        if self._closed:
-            return
-        dropped = sum(getattr(s, "dropped", 0) for s in self.sinks)
-        if self.tracer is not None:
-            dropped += self.tracer.dropped
-        if dropped:
-            self.metrics.counter("telemetry_events_dropped",
-                                 layer="telemetry").inc(dropped)
-        summary = self.trace_summary(t)
-        if summary is not None:
-            self.emit(summary)
-        self.emit(MetricsSnapshot(t=t, metrics=self.metrics.snapshot()))
-        for sink in self.sinks:
-            sink.close()
-        self._closed = True
+        with self._close_lock:
+            if self._closed:
+                return
+            self._closed = True
+            dropped = sum(getattr(s, "dropped", 0) for s in self.sinks)
+            if self.tracer is not None:
+                dropped += self.tracer.dropped
+            if dropped:
+                self.metrics.counter("telemetry_events_dropped",
+                                     layer="telemetry").inc(dropped)
+            summary = self.trace_summary(t)
+            if summary is not None:
+                self.emit(summary)
+            self.emit(MetricsSnapshot(t=t, metrics=self.metrics.snapshot()))
+            for sink in self.sinks:
+                sink.close()
 
     def __enter__(self) -> "Telemetry":
         return self
@@ -148,9 +188,10 @@ __all__ = [
     "Telemetry",
     # events
     "EVENT_TYPES", "Event", "ClientClassified", "ClientDropped",
-    "CodecEncoded", "DeadlineAdapted", "KernelProfile", "MetricsSnapshot",
-    "PartialAdmitted", "RoundFired", "RoundMetricsEvent", "TierMerged",
-    "TraceSummary", "UpdateAdmitted", "UpdateRejected",
+    "CodecEncoded", "DeadlineAdapted", "FlightDump", "HealthAlert",
+    "KernelProfile", "MetricsSnapshot", "PartialAdmitted", "RoundFired",
+    "RoundMetricsEvent", "TierMerged", "TraceSummary", "UpdateAdmitted",
+    "UpdateRejected",
     # metrics
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "STALENESS_BUCKETS", "SECONDS_BUCKETS", "BYTES_BUCKETS",
@@ -158,4 +199,7 @@ __all__ = [
     "Sink", "JsonlSink", "RingSink",
     # tracing
     "Span", "SpanRing", "Tracer", "to_chrome_trace",
+    # health plane
+    "DEFAULT_DETECTORS", "DetectorConfig", "EwmaDetector", "FlightRecorder",
+    "HealthMonitor",
 ]

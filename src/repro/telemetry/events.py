@@ -191,6 +191,38 @@ class RoundMetricsEvent(Event):
 
 
 @dataclass(slots=True)
+class HealthAlert(Event):
+    """A streaming health detector crossed its z-score threshold
+    (``repro.telemetry.health``).  Debounced: one alert per detector per
+    cooldown window, so an alert storm cannot flood the sinks."""
+
+    name = "health-alert"
+
+    t: float
+    round: int
+    detector: str           # "loss" | "accuracy" | "update_norm" | ...
+    severity: str           # "warn" | "critical"
+    value: float            # the observation that tripped the detector
+    mean: float             # EWMA mean at the time of the observation
+    std: float              # EWMA std (floored) used for the z-score
+    zscore: float
+
+
+@dataclass(slots=True)
+class FlightDump(Event):
+    """The flight recorder persisted its black-box ring to disk
+    (on alert, crash, or atexit — ``repro.telemetry.flightrec``)."""
+
+    name = "flight-dump"
+
+    t: Optional[float]
+    round: int
+    path: str
+    n_records: int
+    reason: str             # "alert" | "crash" | "atexit" | "close"
+
+
+@dataclass(slots=True)
 class KernelProfile(Event):
     """Kernel-layer visibility record, emitted when a profiled scope
     closes (``repro.telemetry.profile``): resolved dispatch mode plus
@@ -242,7 +274,7 @@ EVENT_TYPES = {
     for cls in (
         UpdateAdmitted, UpdateRejected, RoundFired, TierMerged,
         CodecEncoded, ClientClassified, ClientDropped, PartialAdmitted,
-        DeadlineAdapted, RoundMetricsEvent, KernelProfile, TraceSummary,
-        MetricsSnapshot,
+        DeadlineAdapted, RoundMetricsEvent, HealthAlert, FlightDump,
+        KernelProfile, TraceSummary, MetricsSnapshot,
     )
 }

@@ -1,0 +1,117 @@
+"""Flight recorder: an always-on bounded black box for crashed runs.
+
+A 10k-client chaos run that dies two hours in leaves, today, whatever
+the JSONL sink flushed — everything since the last flush is gone, and
+an in-memory-only run leaves nothing.  The flight recorder is a small
+locked ring that rides the hub's sink fan-out (it implements the
+``Sink`` protocol), always holding the last ``capacity`` records, and
+persists them to disk when it matters:
+
+* **alert** — a health detector fired (``HealthMonitor`` calls
+  ``dump(reason="alert")``), so the window *around* the anomaly is
+  captured, not just the anomaly line itself;
+* **atexit** — interpreter shutdown, which also covers unhandled
+  exceptions (Python runs atexit hooks after the traceback), so a
+  crashed run still leaves its final window behind;
+* **close** — ``Telemetry.close()`` closes its sinks, giving every
+  clean run a final black box beside its artifacts.
+
+Each dump is a standalone JSONL file — the ring's records in order,
+then one trailing ``flight-dump`` meta record — readable by
+``launch/analysis.py --postmortem`` (which tolerates a torn tail: a
+dump racing a crash can end mid-line).  Successive dumps go to
+``<path>``, ``<path>.1``, ``<path>.2``, … so an alert dump is never
+overwritten by the atexit one.
+
+The ring drops its *oldest* records by design; that is normal
+operation, not lossiness, so the counter is named ``evicted`` — the
+``dropped`` attribute name would make ``Telemetry.close()`` count
+black-box turnover as telemetry loss and taint every report.
+"""
+from __future__ import annotations
+
+import atexit
+import json
+import threading
+from collections import deque
+from typing import Optional
+
+from .events import FlightDump
+
+
+class FlightRecorder:
+    """Bounded black-box ring sink (module docstring).
+
+    ``capacity`` trades retrospect depth against dump size; 4096 records
+    is a few hundred KB and covers hundreds of rounds of round-level
+    events (per-update events on a big stream shorten the window — raise
+    capacity for update-level forensics).
+    """
+
+    def __init__(self, path: str, capacity: int = 4096, *,
+                 auto_dump: bool = True):
+        self.path = str(path)
+        self._ring: deque = deque(maxlen=int(capacity))
+        self._lock = threading.Lock()
+        self.evicted = 0        # oldest-record turnover (normal, not loss)
+        self.dumps = 0          # files written so far
+        self._closed = False
+        self._telemetry = None
+        if auto_dump:
+            atexit.register(self._atexit_dump)
+
+    def bind(self, telemetry) -> None:
+        """Hub back-reference so dumps can emit ``flight-dump`` events
+        into the *other* sinks (the recorder itself sees them too)."""
+        self._telemetry = telemetry
+
+    # ------------------------------------------------------------ Sink API
+    def write(self, record: dict) -> None:
+        with self._lock:
+            if len(self._ring) == self._ring.maxlen:
+                self.evicted += 1
+            self._ring.append(record)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        # flip the flag FIRST: the close dump must not emit a
+        # flight-dump event back through the hub, whose other sinks are
+        # already closed by the time ours is
+        self._closed = True
+        self.dump(reason="close")
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    # --------------------------------------------------------------- dumps
+    def _dump_path(self) -> str:
+        return self.path if self.dumps == 0 else f"{self.path}.{self.dumps}"
+
+    def _atexit_dump(self) -> None:
+        # interpreter shutdown with the recorder still open = the run
+        # never reached Telemetry.close() — a crash or a kill
+        if not self._closed and len(self._ring):
+            self.dump(reason="atexit")
+
+    def dump(self, *, reason: str, round: int = -1,
+             t: Optional[float] = None) -> Optional[str]:
+        """Persist the current ring to the next dump file; returns the
+        path (``None`` when the ring is empty).  Thread-safe; the file
+        write happens outside the ring lock so a slow disk never stalls
+        emitters."""
+        with self._lock:
+            if not self._ring:
+                return None
+            records = list(self._ring)
+            path = self._dump_path()
+            self.dumps += 1
+        meta = FlightDump(t=t, round=int(round), path=path,
+                          n_records=len(records), reason=reason)
+        with open(path, "w") as fh:
+            for rec in records:
+                fh.write(json.dumps(rec) + "\n")
+            fh.write(json.dumps(meta.to_record()) + "\n")
+        if self._telemetry is not None and not self._closed:
+            self._telemetry.emit(meta)
+        return path

@@ -1,0 +1,222 @@
+"""Streaming training-health detectors (docs/OBSERVABILITY.md).
+
+FedQS's own framing — gradient-style aggregation converges fast but
+*fluctuates*, model-style is stable but slow — means a live run has a
+handful of scalar series whose excursions are the whole story: loss and
+accuracy, the per-round update-norm and weighted dispersion the fused
+``stats_agg`` kernel now emits for free, mean staleness, and the
+quadrant participation mix.  This module watches those series with
+EWMA+z-score monitors and emits debounced ``health-alert`` events when
+one leaves its own recent envelope.
+
+The detector is deliberately simple and O(1) per observation::
+
+    z      = (v − mean) / max(std, floor)     # BEFORE absorbing v
+    d      = v − mean
+    mean  += α·d
+    var    = (1 − α)·(var + α·d²)             # EW variance recurrence
+
+The z-score is computed against the *pre-update* envelope so a spike
+cannot mask itself; the std floor (``max(abs_floor, rel_floor·|mean|)``)
+keeps near-constant series (a converged loss, a zero-staleness stream)
+from alerting on fp noise.  ``warmup`` observations seed the envelope
+before any alert is possible, and ``cooldown`` debounces: at most one
+alert per detector per cooldown window, so a sustained divergence emits
+a few records, not thousands.
+
+Zero-overhead contract: components cache ``telemetry.health`` once in
+their constructor (``None`` when the plane is off) and guard each
+observe site with one ``is not None`` check — no tensors are ever
+touched, so aggregation stays bit-identical (the
+``serve_health_overhead`` gate in ``benchmarks/bench_health.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional
+
+from .events import HealthAlert
+
+#: ``stats_agg.round_stats`` vector order, re-declared here so the
+#: telemetry plane never imports the kernel package (which imports
+#: telemetry.profile — keep the dependency one-way).
+STATS_FIELDS = ("sum_w", "wnorm2", "dispersion", "max_sq", "mean_sq")
+
+
+@dataclass(frozen=True)
+class DetectorConfig:
+    """Tuning knobs of one EWMA+z-score detector (docs/OBSERVABILITY.md
+    lists the defaults per signal and when to move them)."""
+
+    alpha: float = 0.25      # EWMA smoothing (≈ last ~1/α rounds matter)
+    z_warn: float = 3.0      # |z| ≥ z_warn  → "warn"
+    z_crit: float = 6.0      # |z| ≥ z_crit → "critical"
+    warmup: int = 5          # observations before alerting is possible
+    cooldown: int = 5        # min observations between alerts
+    direction: str = "high"  # "high" | "low" | "both": which excursions alert
+    rel_floor: float = 0.05  # std floor as a fraction of |mean|
+    abs_floor: float = 1e-9  # absolute std floor
+
+
+#: Default detector set: signal name → config.  Directions follow the
+#: failure mode each signal encodes (a *drop* in accuracy is bad, a
+#: *rise* in everything else).  Staleness uses an absolute floor of one
+#: round so ordinary ±1 jitter on healthy streams never alerts.
+DEFAULT_DETECTORS: Dict[str, DetectorConfig] = {
+    "loss": DetectorConfig(direction="high"),
+    "accuracy": DetectorConfig(direction="low"),
+    "update_norm": DetectorConfig(direction="high", rel_floor=0.10),
+    "dispersion": DetectorConfig(direction="high", rel_floor=0.25),
+    "staleness": DetectorConfig(direction="high", rel_floor=0.25,
+                                abs_floor=1.0),
+    "quadrant_skew": DetectorConfig(direction="high", abs_floor=0.05),
+}
+
+
+class EwmaDetector:
+    """One streaming envelope over one scalar series (module docstring)."""
+
+    __slots__ = ("name", "cfg", "mean", "var", "count", "_last_alert")
+
+    def __init__(self, name: str, cfg: DetectorConfig):
+        self.name = name
+        self.cfg = cfg
+        self.mean = 0.0
+        self.var = 0.0
+        self.count = 0
+        self._last_alert = -1
+
+    def observe(self, value: float):
+        """Absorb one observation; returns ``(severity, z, mean, std)``
+        when it trips the (debounced) threshold, else ``None``."""
+        v = float(value)
+        cfg = self.cfg
+        alert = None
+        if self.count >= cfg.warmup:
+            std = max(self.var, 0.0) ** 0.5
+            std = max(std, cfg.abs_floor, cfg.rel_floor * abs(self.mean))
+            z = (v - self.mean) / std
+            signed = z if cfg.direction == "high" else (
+                -z if cfg.direction == "low" else abs(z))
+            if signed >= cfg.z_warn and (
+                    self._last_alert < 0
+                    or self.count - self._last_alert >= cfg.cooldown):
+                sev = "critical" if signed >= cfg.z_crit else "warn"
+                alert = (sev, z, self.mean, std)
+                self._last_alert = self.count
+        d = v - self.mean
+        self.mean += cfg.alpha * d
+        self.var = (1.0 - cfg.alpha) * (self.var + cfg.alpha * d * d)
+        self.count += 1
+        return alert
+
+
+def _gini(counts) -> float:
+    """Gini of a participation count vector (0 = uniform, →1 = skewed).
+    Same definition as ``telemetry.report.gini``; duplicated to keep the
+    hot path free of the report module."""
+    vals = sorted(float(c) for c in counts)
+    n = len(vals)
+    total = sum(vals)
+    if n == 0 or total <= 0.0:
+        return 0.0
+    cum = 0.0
+    for i, v in enumerate(vals, start=1):
+        cum += i * v
+    return (2.0 * cum) / (n * total) - (n + 1.0) / n
+
+
+class HealthMonitor:
+    """The per-run detector bank — one instance on the ``Telemetry``
+    hub, shared by every instrumented component of the run.
+
+    Components feed it from two places: services call ``observe_round``
+    with the kernel stats vector + staleness after each fire, engines
+    call ``observe_metrics`` with per-round evaluation metrics.  Either
+    call is a handful of float ops; an alert emits one ``health-alert``
+    event, bumps the severity counter, and (when a flight recorder is
+    attached) triggers a black-box dump.
+    """
+
+    def __init__(self, detectors: Optional[Dict[str, DetectorConfig]] = None,
+                 *, overrides: Optional[Dict[str, DetectorConfig]] = None):
+        cfgs = dict(DEFAULT_DETECTORS if detectors is None else detectors)
+        if overrides:
+            cfgs.update(overrides)
+        self.detectors = {n: EwmaDetector(n, c) for n, c in cfgs.items()}
+        self.alerts: List[HealthAlert] = []
+        self._telemetry = None
+        self._flightrec = None
+        self._warn = None
+        self._crit = None
+
+    def bind(self, telemetry) -> None:
+        """Attach to a hub: eager counter creation so even an alert-free
+        run's metrics-snapshot shows the plane was on (``health.*`` = 0),
+        and pick up the hub's flight recorder for on-alert dumps."""
+        self._telemetry = telemetry
+        self._flightrec = getattr(telemetry, "flightrec", None)
+        self._warn = telemetry.metrics.counter(
+            "health.alerts_warn", layer="health")
+        self._crit = telemetry.metrics.counter(
+            "health.alerts_critical", layer="health")
+
+    def configure(self, name: str, **kw) -> None:
+        """Re-tune one detector in place (e.g. ``configure("loss",
+        z_warn=4.0)``) — resets its envelope."""
+        det = self.detectors[name]
+        self.detectors[name] = EwmaDetector(name, replace(det.cfg, **kw))
+
+    # ------------------------------------------------------------- feeding
+    def observe(self, name: str, value: float, *, t: float = 0.0,
+                round: int = -1) -> Optional[HealthAlert]:
+        """Feed one scalar to one detector (unknown names are ignored so
+        callers never have to mirror the configured detector set)."""
+        det = self.detectors.get(name)
+        if det is None:
+            return None
+        hit = det.observe(value)
+        if hit is None:
+            return None
+        sev, z, mean, std = hit
+        alert = HealthAlert(t=float(t), round=int(round), detector=name,
+                            severity=sev, value=float(value),
+                            mean=float(mean), std=float(std),
+                            zscore=float(z))
+        self.alerts.append(alert)
+        if self._telemetry is not None:
+            (self._crit if sev == "critical" else self._warn).inc()
+            self._telemetry.emit(alert)
+        if self._flightrec is not None:
+            self._flightrec.dump(reason="alert", round=int(round), t=float(t))
+        return alert
+
+    def observe_round(self, *, t: float, round: int,
+                      mean_staleness: Optional[float] = None,
+                      stats=None) -> None:
+        """Per-fire service signals: mean staleness plus the fused
+        kernel's stability vector (``STATS_FIELDS`` order; ``None`` on
+        rounds the stats variant doesn't cover, e.g. int8 buffers)."""
+        if mean_staleness is not None:
+            self.observe("staleness", mean_staleness, t=t, round=round)
+        if stats is not None:
+            import numpy as np
+            vec = np.asarray(stats, dtype=np.float64)
+            s = dict(zip(STATS_FIELDS, vec.tolist()))
+            self.observe("update_norm", s["max_sq"] ** 0.5, t=t, round=round)
+            self.observe("dispersion", s["dispersion"], t=t, round=round)
+
+    def observe_metrics(self, *, t: float, round: int,
+                        loss: Optional[float] = None,
+                        accuracy: Optional[float] = None,
+                        quadrant_counts=None) -> None:
+        """Per-round engine signals (evaluation metrics + Mod-2 mix)."""
+        if loss is not None:
+            self.observe("loss", loss, t=t, round=round)
+        if accuracy is not None:
+            self.observe("accuracy", accuracy, t=t, round=round)
+        if quadrant_counts:
+            vals = (list(quadrant_counts.values())
+                    if hasattr(quadrant_counts, "values")
+                    else list(quadrant_counts))
+            self.observe("quadrant_skew", _gini(vals), t=t, round=round)

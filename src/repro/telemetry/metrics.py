@@ -110,6 +110,7 @@ class MetricsRegistry:
 
     def __init__(self):
         self._metrics: Dict[str, object] = {}
+        self._bounds: Dict[str, Tuple[float, ...]] = {}
 
     def _get_or_create(self, cls, name: str, *args, **kw):
         m = self._metrics.get(name)
@@ -128,8 +129,27 @@ class MetricsRegistry:
     def gauge(self, name: str, *, unit: str = "", layer: str = "") -> Gauge:
         return self._get_or_create(Gauge, name, unit, layer)
 
+    def configure_bounds(self, name: str, bounds: Sequence[float]) -> None:
+        """Override the bucket ladder a *future* ``histogram(name, ...)``
+        call will use — the per-metric escape hatch for defaults that
+        saturate (the hardcoded staleness ladder tops out at 34 rounds;
+        a straggler-heavy stream piles everything into its overflow
+        bucket, docs/OBSERVABILITY.md).  Must run before the metric is
+        first created: overriding an already-materialized histogram
+        would silently rebucket mid-run, so that raises instead."""
+        m = self._metrics.get(name)
+        if m is not None:
+            if isinstance(m, Histogram) and tuple(
+                    float(b) for b in bounds) == m.bounds:
+                return  # no-op re-assertion of the live ladder
+            raise ValueError(
+                f"metric {name!r} already materialized; configure_bounds "
+                "must run before the first histogram() call")
+        self._bounds[name] = tuple(float(b) for b in bounds)
+
     def histogram(self, name: str, bounds: Sequence[float], *,
                   unit: str = "", layer: str = "") -> Histogram:
+        bounds = self._bounds.get(name, bounds)
         return self._get_or_create(Histogram, name, bounds, unit, layer)
 
     def get(self, name: str) -> Optional[object]:

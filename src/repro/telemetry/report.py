@@ -37,6 +37,25 @@ def load_events(path: str) -> List[dict]:
     return records
 
 
+def load_events_tolerant(path: str):
+    """Parse a JSONL event log, skipping unparseable lines instead of
+    raising — the loader for flight-recorder dumps, whose tail can be
+    torn mid-line when a dump races a crash (docs/OBSERVABILITY.md).
+    Returns ``(records, skipped)`` so the postmortem can disclose how
+    much of the black box was unreadable."""
+    records, skipped = [], 0
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                records.append(json.loads(line))
+            except json.JSONDecodeError:
+                skipped += 1
+    return records, skipped
+
+
 def _by_name(records: Sequence[dict]) -> Dict[str, List[dict]]:
     out: Dict[str, List[dict]] = defaultdict(list)
     for rec in records:
@@ -146,6 +165,44 @@ def experiment_report(records: Sequence[dict], *,
                   "curves below undercount. Raise the ring/trace capacity "
                   "or record to JSONL (docs/OBSERVABILITY.md).", ""]
 
+    # ------------------------------------------------------- health / alerts
+    alerts = groups.get("health-alert", [])
+    dumps = groups.get("flight-dump", [])
+    health_on = bool(alerts or dumps)
+    if not health_on and snaps_:
+        # the monitor registers its counters eagerly at bind, so even an
+        # alert-free run's snapshot says whether the plane was watching
+        health_on = any(k.startswith("health.")
+                        for k in snaps_[-1].get("metrics", {}))
+    if health_on:
+        lines += ["## Health / alerts", ""]
+        if not alerts:
+            lines += ["Health plane enabled — **no alerts fired**.", ""]
+        else:
+            n_crit = sum(1 for a in alerts if a.get("severity") == "critical")
+            dets = sorted({str(a.get("detector")) for a in alerts})
+            lines += [f"**{len(alerts)} alert(s)** ({n_crit} critical) from "
+                      f"detector(s): {', '.join(f'`{d}`' for d in dets)}.", ""]
+            lines += ["| round | t | detector | severity | value | mean | z |",
+                      "|---|---|---|---|---|---|---|"]
+            for a in _sample(alerts, curve_rows):
+                lines.append(
+                    f"| {a.get('round', -1)} | {float(a.get('t', 0.0)):.1f} "
+                    f"| `{a.get('detector', '?')}` | {a.get('severity', '?')} "
+                    f"| {float(a.get('value', 0.0)):.4g} "
+                    f"| {float(a.get('mean', 0.0)):.4g} "
+                    f"| {float(a.get('zscore', 0.0)):.1f} |")
+            lines.append("")
+        if dumps:
+            lines += ["| flight dump | records | round | reason |",
+                      "|---|---|---|---|"]
+            for dmp in dumps:
+                lines.append(f"| `{dmp.get('path', '?')}` "
+                             f"| {dmp.get('n_records', 0)} "
+                             f"| {dmp.get('round', -1)} "
+                             f"| {dmp.get('reason', '?')} |")
+            lines.append("")
+
     # ------------------------------------------------- accuracy/loss curves
     rounds = groups.get("round-metrics", [])
     if rounds:
@@ -165,7 +222,15 @@ def experiment_report(records: Sequence[dict], *,
 
     # --------------------------------------------------- staleness histogram
     if fired:
-        counts, total = staleness_counts(fired)
+        # rebuild against the run's actual bucket ladder when the
+        # snapshot carries one (configure_bounds overrides the default
+        # STALENESS_BUCKETS for straggler-heavy streams)
+        bounds = tuple(STALENESS_BUCKETS)
+        if snaps_:
+            h = snaps_[-1].get("metrics", {}).get("serve.staleness")
+            if isinstance(h, dict) and h.get("bounds"):
+                bounds = tuple(h["bounds"])
+        counts, total = staleness_counts(fired, bounds)
         lines += ["## Staleness distribution (member-level, at fire)", ""]
         lines += ["| tau (rounds) | members | share | |", "|---|---|---|---|"]
         peak = max(counts) if counts else 0
@@ -173,8 +238,13 @@ def experiment_report(records: Sequence[dict], *,
             if c == 0:
                 continue
             lines.append(
-                f"| {_fmt_bucket(STALENESS_BUCKETS, i)} | {c} "
+                f"| {_fmt_bucket(bounds, i)} | {c} "
                 f"| {c / max(total, 1):.1%} | `{_bar(c, peak)}` |")
+        if counts[-1]:
+            lines += ["", f"**{counts[-1]} member(s) ({counts[-1] / max(total, 1):.1%}) "
+                          f"overflow the > {bounds[-1]:g} bucket** — widen the "
+                          "ladder via `MetricsRegistry.configure_bounds"
+                          "(\"serve.staleness\", ...)` to resolve the tail."]
         lines.append("")
 
     # ------------------------------------------------------ fairness summary
@@ -294,6 +364,10 @@ def experiment_report(records: Sequence[dict], *,
                     mean = m["sum"] / m["count"] if m["count"] else 0.0
                     value = (f"n={m['count']} mean={mean:.4g} "
                              f"min={m['min']} max={m['max']}")
+                    over = (m.get("counts") or [0])[-1]
+                    if over:
+                        # saturating ladders undercount quantiles — say so
+                        value += f" **overflow={over}**"
                 else:
                     value = f"{m['value']:g}"
                 lines.append(
@@ -308,3 +382,32 @@ def report_from_jsonl(path: str, *, title: Optional[str] = None) -> str:
     """One-call convenience: JSONL event log → Markdown report."""
     return experiment_report(load_events(path),
                              title=title or f"Experiment report — {path}")
+
+
+def postmortem_report(path: str, *, title: Optional[str] = None,
+                      curve_rows: int = 20) -> str:
+    """Render a flight-recorder dump (``repro.telemetry.flightrec``) as
+    a Markdown postmortem: a black-box preamble (dump reason/round, how
+    much of the tail was torn), then the standard experiment report over
+    the recorded window.  Tolerant by construction — a dump racing a
+    crash can end mid-line, and the report must still render."""
+    records, skipped = load_events_tolerant(path)
+    meta = next((r for r in reversed(records) if r.get("e") == "flight-dump"),
+                None)
+    lines: List[str] = [f"# {title or f'Postmortem — {path}'}", ""]
+    lines += ["> Reconstructed from a flight-recorder black box: a bounded "
+              "ring of the run's most recent records, so counts below cover "
+              "the final window only, not the whole run "
+              "(docs/OBSERVABILITY.md).", ""]
+    lines += ["| black box | value |", "|---|---|"]
+    lines.append(f"| records recovered | {len(records)} |")
+    if skipped:
+        lines.append(f"| unreadable lines (torn tail) | {skipped} |")
+    if meta is not None:
+        lines.append(f"| dump reason | {meta.get('reason', '?')} |")
+        lines.append(f"| dump round | {meta.get('round', -1)} |")
+        lines.append(f"| ring records at dump | {meta.get('n_records', 0)} |")
+    lines.append("")
+    body = experiment_report(records, title="Recorded window",
+                             curve_rows=curve_rows)
+    return "\n".join(lines) + "\n" + body

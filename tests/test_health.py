@@ -1,0 +1,433 @@
+"""Training-health plane: streaming detectors, on-kernel stats wiring,
+flight recorder, monitor/Prometheus exposition (docs/OBSERVABILITY.md)."""
+import json
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import FedQSHyperParams, make_algorithm
+from repro.models import make_mlp_spec
+from repro.serve import KBuffer, StreamingAggregator, replay, synthetic_stream
+from repro.serve.stream import inject_norm_explosion
+from repro.telemetry import (
+    DEFAULT_DETECTORS,
+    DetectorConfig,
+    EwmaDetector,
+    FlightRecorder,
+    HealthMonitor,
+    MetricsRegistry,
+    Telemetry,
+)
+from repro.telemetry.health import STATS_FIELDS, _gini
+
+
+@pytest.fixture(scope="module")
+def mlp_params():
+    return make_mlp_spec().init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def stream(mlp_params):
+    return list(synthetic_stream(mlp_params, 16, 120, seed=0))
+
+
+def _service(mlp_params, telemetry=None, *, batched=True, k=5):
+    hp = FedQSHyperParams(buffer_k=k)
+    return StreamingAggregator(
+        make_algorithm("fedqs-sgd", hp), hp, mlp_params, 16,
+        trigger=KBuffer(k), batched=batched, telemetry=telemetry)
+
+
+class TestEwmaDetector:
+    def test_silent_during_warmup(self):
+        det = EwmaDetector("x", DetectorConfig(warmup=5))
+        # a huge excursion inside the warmup window must not alert
+        assert all(det.observe(v) is None for v in [1, 1, 1, 1, 1e9])
+
+    def test_spike_alerts_after_warmup(self):
+        det = EwmaDetector("x", DetectorConfig())
+        for _ in range(10):
+            assert det.observe(1.0) is None
+        sev, z, mean, std = det.observe(100.0)
+        assert sev == "critical" and z > 6.0
+        assert mean == pytest.approx(1.0, abs=0.1)  # EWMA warming from 0
+
+    def test_warn_vs_critical_thresholds(self):
+        cfg = DetectorConfig(rel_floor=0.0, abs_floor=1.0, alpha=0.0)
+        det = EwmaDetector("x", cfg)
+        for _ in range(6):
+            det.observe(0.0)
+        sev, z, _, _ = det.observe(4.0)   # z = 4 with std floored at 1
+        assert sev == "warn" and z == pytest.approx(4.0)
+        det2 = EwmaDetector("x", cfg)
+        for _ in range(6):
+            det2.observe(0.0)
+        sev2, z2, _, _ = det2.observe(8.0)
+        assert sev2 == "critical" and z2 == pytest.approx(8.0)
+
+    def test_direction_low_alerts_on_drops_only(self):
+        det = EwmaDetector("acc", DetectorConfig(direction="low",
+                                                 abs_floor=0.01))
+        for _ in range(10):
+            det.observe(0.9)
+        assert det.observe(5.0) is None       # a rise is fine for "low"
+        det2 = EwmaDetector("acc", DetectorConfig(direction="low",
+                                                  abs_floor=0.01))
+        for _ in range(10):
+            det2.observe(0.9)
+        assert det2.observe(0.1) is not None  # a collapse is not
+
+    def test_cooldown_debounces(self):
+        det = EwmaDetector("x", DetectorConfig(cooldown=5, alpha=0.0,
+                                               rel_floor=0.0, abs_floor=1.0))
+        for _ in range(6):
+            det.observe(0.0)
+        hits = [det.observe(100.0) is not None for _ in range(5)]
+        # one alert, then the cooldown window swallows the rest
+        assert hits == [True, False, False, False, False]
+        assert det.observe(100.0) is not None  # window over → alert again
+
+    def test_constant_series_never_alerts(self):
+        det = EwmaDetector("x", DetectorConfig())
+        # fp-noise around a constant stays inside the rel_floor envelope
+        rng = np.random.default_rng(0)
+        vals = 5.0 + rng.normal(0.0, 1e-9, 200)
+        assert all(det.observe(v) is None for v in vals)
+
+    def test_gini(self):
+        assert _gini([5, 5, 5, 5]) == pytest.approx(0.0)
+        assert _gini([0, 0, 0, 100]) == pytest.approx(0.75)
+        assert _gini([]) == 0.0
+
+
+class TestHealthMonitor:
+    def test_unknown_signal_ignored(self):
+        hm = HealthMonitor()
+        assert hm.observe("not-a-detector", 1.0) is None
+        assert hm.alerts == []
+
+    def test_alert_emits_event_and_counters(self):
+        tel = Telemetry.in_memory(health=True)
+        hm = tel.health
+        for r in range(10):
+            hm.observe("loss", 1.0, t=float(r), round=r)
+        alert = hm.observe("loss", 50.0, t=10.0, round=10)
+        assert alert is not None and alert.severity == "critical"
+        recs = [r for r in tel.ring.records if r["e"] == "health-alert"]
+        assert len(recs) == 1 and recs[0]["detector"] == "loss"
+        assert tel.metrics.get("health.alerts_critical").value == 1
+        tel.close()
+
+    def test_configure_retunes_detector(self):
+        hm = HealthMonitor()
+        hm.configure("loss", z_warn=1e9, z_crit=1e12)
+        for r in range(10):
+            hm.observe("loss", 1.0, round=r)
+        assert hm.observe("loss", 1e6, round=10) is None
+
+    def test_observe_round_maps_stats_fields(self):
+        hm = HealthMonitor()
+        stats = dict(zip(STATS_FIELDS, [1.0, 2.0, 3.0, 16.0, 4.0]))
+        vec = [stats[f] for f in STATS_FIELDS]
+        hm.observe_round(t=0.0, round=0, mean_staleness=2.0, stats=vec)
+        assert hm.detectors["update_norm"].mean > 0   # fed sqrt(max_sq)=4
+        assert hm.detectors["dispersion"].count == 1
+        assert hm.detectors["staleness"].count == 1
+
+    def test_observe_metrics_quadrant_skew(self):
+        hm = HealthMonitor()
+        hm.observe_metrics(t=0.0, round=0, loss=1.0, accuracy=0.5,
+                           quadrant_counts={"0": 5, "1": 5, "2": 5, "3": 5})
+        assert hm.detectors["quadrant_skew"].count == 1
+        assert hm.detectors["loss"].count == 1
+        assert hm.detectors["accuracy"].count == 1
+
+    def test_default_detector_set_documented(self):
+        assert set(DEFAULT_DETECTORS) == {
+            "loss", "accuracy", "update_norm", "dispersion", "staleness",
+            "quadrant_skew"}
+
+
+class TestServiceWiring:
+    def test_health_service_bit_identical_and_silent(self, mlp_params,
+                                                     stream):
+        plain = _service(mlp_params)
+        tel = Telemetry.in_memory(health=True)
+        health = _service(mlp_params, tel)
+        replay(plain, stream)
+        replay(health, stream)
+        for a, b in zip(jax.tree_util.tree_leaves(plain.global_params),
+                        jax.tree_util.tree_leaves(health.global_params)):
+            assert jnp_equal(a, b)
+        assert tel.health.alerts == []
+        # the fused stats variant actually fed the detectors
+        assert tel.health.detectors["update_norm"].count == health.round
+        assert tel.health.detectors["dispersion"].count == health.round
+        assert tel.health.detectors["staleness"].count == health.round
+        tel.close()
+
+    def test_sequential_path_feeds_staleness_only(self, mlp_params, stream):
+        tel = Telemetry.in_memory(health=True)
+        svc = _service(mlp_params, tel, batched=False)
+        replay(svc, stream[:40])
+        assert tel.health.detectors["staleness"].count == svc.round
+        # no stats vector on the sequential path — and no crash either
+        assert tel.health.detectors["update_norm"].count == 0
+        tel.close()
+
+    def test_injected_explosion_alerts_within_five_rounds(self, mlp_params,
+                                                          tmp_path):
+        flight = str(tmp_path / "flight.jsonl")
+        tel = Telemetry.in_memory(health=True, flightrec=flight)
+        svc = _service(mlp_params, tel)
+        stream = list(inject_norm_explosion(
+            synthetic_stream(mlp_params, 16, 120, seed=0),
+            after=50, scale=100.0))
+        replay(svc, stream)
+        inj_round = 50 // 5 + 1
+        assert tel.health.alerts, "seeded divergence raised no alert"
+        first = min(a.round for a in tel.health.alerts)
+        assert 0 <= first - inj_round <= 5
+        # the alert triggered an on-the-spot black-box dump
+        dump = [json.loads(l) for l in open(flight) if l.strip()]
+        assert dump[-1]["e"] == "flight-dump"
+        assert dump[-1]["reason"] == "alert"
+        tel.close()
+
+
+def jnp_equal(a, b):
+    return bool(np.array_equal(np.asarray(a), np.asarray(b)))
+
+
+class TestFlightRecorder:
+    def test_ring_bounded_and_counts_evictions(self, tmp_path):
+        fr = FlightRecorder(str(tmp_path / "f.jsonl"), capacity=8,
+                            auto_dump=False)
+        for i in range(20):
+            fr.write({"e": "x", "i": i})
+        assert len(fr) == 8
+        assert fr.evicted == 12
+
+    def test_dump_round_trips_with_meta_record(self, tmp_path):
+        path = str(tmp_path / "f.jsonl")
+        fr = FlightRecorder(path, capacity=8, auto_dump=False)
+        for i in range(5):
+            fr.write({"e": "x", "i": i})
+        out = fr.dump(reason="alert", round=3, t=1.0)
+        assert out == path
+        recs = [json.loads(l) for l in open(path) if l.strip()]
+        assert [r.get("i") for r in recs[:-1]] == list(range(5))
+        meta = recs[-1]
+        assert meta["e"] == "flight-dump" and meta["reason"] == "alert"
+        assert meta["n_records"] == 5 and meta["round"] == 3
+
+    def test_successive_dumps_get_distinct_paths(self, tmp_path):
+        path = str(tmp_path / "f.jsonl")
+        fr = FlightRecorder(path, capacity=8, auto_dump=False)
+        fr.write({"e": "x"})
+        first = fr.dump(reason="alert")
+        second = fr.dump(reason="alert")
+        assert first == path and second == f"{path}.1"
+
+    def test_empty_ring_dump_is_noop(self, tmp_path):
+        fr = FlightRecorder(str(tmp_path / "f.jsonl"), auto_dump=False)
+        assert fr.dump(reason="alert") is None
+
+    def test_hub_close_dumps_once_and_is_idempotent(self, tmp_path):
+        path = str(tmp_path / "f.jsonl")
+        tel = Telemetry.in_memory(flightrec=path)
+        from repro.telemetry import RoundFired
+
+        tel.emit(RoundFired(t=0.0, round=1, n_updates=5, n_distinct=5,
+                            mean_staleness=0.0, max_staleness=0,
+                            dropped_since_last=0, trigger="kbuffer",
+                            agg_seconds=0.0))
+        tel.close()
+        tel.close()  # second close must be a no-op, not a second dump
+        recs = [json.loads(l) for l in open(path) if l.strip()]
+        assert recs[-1]["e"] == "flight-dump"
+        assert recs[-1]["reason"] == "close"
+        assert tel.flightrec.dumps == 1
+
+    def test_concurrent_close_is_safe(self, tmp_path):
+        tel = Telemetry.to_jsonl(str(tmp_path / "t.jsonl"),
+                                 flightrec=str(tmp_path / "f.jsonl"))
+        from repro.telemetry import RoundFired
+
+        for r in range(50):
+            tel.emit(RoundFired(t=float(r), round=r, n_updates=5,
+                                n_distinct=5, mean_staleness=0.0,
+                                max_staleness=0, dropped_since_last=0,
+                                trigger="kbuffer", agg_seconds=0.0))
+        errors = []
+
+        def close():
+            try:
+                tel.close()
+            except Exception as exc:  # pragma: no cover - the assertion
+                errors.append(exc)
+
+        threads = [threading.Thread(target=close) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        assert tel.flightrec.dumps == 1
+
+
+class TestConfigureBounds:
+    def test_override_before_creation_wins(self):
+        reg = MetricsRegistry()
+        reg.configure_bounds("serve.staleness", (0, 10, 100))
+        h = reg.histogram("serve.staleness", (0, 1, 2))
+        assert h.bounds == (0.0, 10.0, 100.0)
+
+    def test_after_materialization_raises(self):
+        reg = MetricsRegistry()
+        reg.histogram("h", (0, 1, 2))
+        with pytest.raises(ValueError):
+            reg.configure_bounds("h", (0, 10))
+
+    def test_same_bounds_reassertion_is_noop(self):
+        reg = MetricsRegistry()
+        reg.histogram("h", (0, 1, 2))
+        reg.configure_bounds("h", (0, 1, 2))  # must not raise
+
+    def test_overflow_bucket_counts(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("h", (0, 1, 2))
+        for v in (0, 1, 2, 50, 99):
+            h.observe(v)
+        assert h.counts[-1] == 2  # 50 and 99 overflow the ladder
+
+
+class TestMonitorAndProm:
+    def test_prometheus_text_shapes(self):
+        from repro.launch.monitor import prometheus_text
+
+        reg = MetricsRegistry()
+        reg.counter("serve.accepted").inc(7)
+        reg.gauge("buffer.depth").set(3.5)
+        h = reg.histogram("serve.staleness", (0, 1, 2))
+        for v in (0, 0, 1, 5):
+            h.observe(v)
+        text = prometheus_text(reg.snapshot())
+        assert "# TYPE repro_serve_accepted counter" in text
+        assert "repro_serve_accepted 7" in text
+        assert "repro_buffer_depth 3.5" in text
+        # cumulative le buckets + overflow-inclusive +Inf/_count
+        assert 'repro_serve_staleness_bucket{le="0"} 2' in text
+        assert 'repro_serve_staleness_bucket{le="1"} 3' in text
+        assert 'repro_serve_staleness_bucket{le="2"} 3' in text
+        assert 'repro_serve_staleness_bucket{le="+Inf"} 4' in text
+        assert "repro_serve_staleness_count 4" in text
+        assert "repro_serve_staleness_sum 6" in text
+
+    def test_monitor_state_folds_stream(self, tmp_path, mlp_params, stream):
+        from repro.launch.monitor import monitor, render
+
+        path = str(tmp_path / "run.jsonl")
+        tel = Telemetry.to_jsonl(path, health=True)
+        svc = _service(mlp_params, tel)
+        replay(svc, stream[:60])
+        tel.close()
+        state = monitor(path, out=open("/dev/null", "w"))
+        assert state.admitted == 60
+        assert state.rounds == svc.round
+        assert state.snapshot is not None
+        frame = render(state, path=path)
+        assert "OK — no alerts" in frame
+        assert "staleness" in frame
+
+    def test_monitor_tolerates_torn_tail(self, tmp_path):
+        from repro.launch.monitor import MonitorState, _drain
+
+        path = tmp_path / "run.jsonl"
+        path.write_text('{"e": "update-admitted", "t": 1.0, "staleness": 0}\n'
+                        '{"e": "round-fired", "t": 2.0, "round": 1')  # torn
+        state = MonitorState()
+        with open(path) as fh:
+            _drain(fh, state)
+            assert state.admitted == 1 and state.rounds == 0
+            # the writer finishes the line → the next pass picks it up
+            with open(path, "a") as app:
+                app.write(', "agg_seconds": 0.5}\n')
+            _drain(fh, state)
+        assert state.rounds == 1
+
+
+class TestHealthReport:
+    def _records(self, mlp_params, stream, *, inject=False, tmp_path=None):
+        tel = Telemetry.in_memory(health=True)
+        svc = _service(mlp_params, tel)
+        if inject:
+            stream = list(inject_norm_explosion(iter(stream), after=50,
+                                                scale=100.0))
+        replay(svc, stream)
+        records = list(tel.ring.records)
+        tel.close()
+        records.append(
+            {"e": "metrics-snapshot", "t": None,
+             "metrics": tel.metrics.snapshot()})
+        return records
+
+    def test_alert_free_run_renders_quiet_health_section(self, mlp_params,
+                                                         stream):
+        from repro.telemetry.report import experiment_report
+
+        report = experiment_report(self._records(mlp_params, stream))
+        assert "## Health / alerts" in report
+        assert "no alerts fired" in report
+
+    def test_alert_heavy_run_renders_alert_table(self, mlp_params, stream):
+        from repro.telemetry.report import experiment_report
+
+        report = experiment_report(
+            self._records(mlp_params, stream, inject=True))
+        assert "## Health / alerts" in report
+        assert "critical" in report
+        assert "`update_norm`" in report or "`dispersion`" in report
+
+    def test_health_section_absent_without_plane(self, mlp_params, stream):
+        from repro.telemetry.report import experiment_report
+
+        tel = Telemetry.in_memory()
+        svc = _service(mlp_params, tel)
+        replay(svc, stream[:30])
+        report = experiment_report(list(tel.ring.records))
+        tel.close()
+        assert "## Health / alerts" not in report
+
+    def test_tolerant_loader_skips_corrupt_tail(self, tmp_path):
+        from repro.telemetry.report import load_events, load_events_tolerant
+
+        path = tmp_path / "e.jsonl"
+        path.write_text('{"e": "round-fired", "round": 1}\n'
+                        'not json at all\n'
+                        '{"e": "round-f')  # torn mid-crash
+        records, skipped = load_events_tolerant(str(path))
+        assert len(records) == 1 and skipped == 2
+        with pytest.raises(ValueError):
+            load_events(str(path))  # the strict loader still rejects
+
+    def test_postmortem_from_truncated_dump(self, mlp_params, tmp_path):
+        from repro.telemetry.report import postmortem_report
+
+        flight = str(tmp_path / "flight.jsonl")
+        tel = Telemetry.in_memory(health=True, flightrec=flight)
+        svc = _service(mlp_params, tel)
+        stream = list(inject_norm_explosion(
+            synthetic_stream(mlp_params, 16, 80, seed=0),
+            after=30, scale=100.0))
+        replay(svc, stream)
+        tel.close()
+        # simulate a crash mid-write: chop the dump's final line in half
+        raw = open(flight, "rb").read()
+        open(flight, "wb").write(raw[: int(len(raw) * 0.98)])
+        report = postmortem_report(flight)
+        assert "black box" in report
+        assert "unreadable" in report or "records recovered" in report
+        assert "health-alert" in report or "Health / alerts" in report

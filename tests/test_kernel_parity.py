@@ -33,6 +33,7 @@ from repro.kernels.ops import (
     ingest_segment_agg_op,
     segment_agg_op,
     similarity_stats_op,
+    stats_agg_op,
     weighted_agg_op,
     window_decode_attention_op,
 )
@@ -160,6 +161,49 @@ class TestIngestAggFuzz:
         assert jnp.array_equal(got, want), (
             f"ingest_agg int8 diverged: K={K} nc={nc} chunk={chunk} "
             f"seed={seed} regime={regime}")
+
+
+class TestStatsAggFuzz:
+    """The fused stats variant (health plane, docs/OBSERVABILITY.md).
+
+    The load-bearing contract is that emitting statistics must not
+    perturb aggregation: the stats kernel's aggregate is BIT-IDENTICAL
+    to the plain ingestion kernel's on every input.  Against the jitted
+    oracle, ``row_sq`` and the fold weights are bit-exact; the aggregate
+    is bit-exact in the serving configuration (normalized weights) and
+    ulp-tight otherwise — raw extreme weights (~1e11 spread,
+    ``normalize=False``) shift the dot's contraction order by a last
+    ulp, a latitude the plain ingestion kernel shares."""
+
+    @given(KS, DS, SEEDS, WEIGHT_REGIMES, st.booleans(), st.booleans())
+    @settings(deadline=None)
+    def test_dense_parity(self, K, D, seed, regime, normalize, with_cf):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((K, D)).astype(np.float32))
+        n, F, G, fb = _meta(rng, K, regime)
+        cf = (jnp.asarray(rng.uniform(0.05, 1.0, K).astype(np.float32))
+              if with_cf else None)
+        meta = (jnp.asarray(n), jnp.asarray(F), jnp.asarray(G),
+                jnp.asarray(fb))
+        agg, row_sq, w = stats_agg_op(x, *meta, None, cf, n_clients=64,
+                                      normalize=normalize)
+        ragg, rrow_sq, rw = ref.stats_agg_ref(x, *meta, None, cf,
+                                              n_clients=64,
+                                              normalize=normalize)
+        label = (f"K={K} D={D} seed={seed} regime={regime} "
+                 f"normalize={normalize} cf={with_cf}")
+        assert row_sq.shape == (K,) and w.shape == (K,)
+        assert jnp.array_equal(row_sq, rrow_sq), f"row_sq diverged: {label}"
+        assert jnp.array_equal(w, rw), f"weights diverged: {label}"
+        scale = max(1.0, float(jnp.abs(ragg).max()))
+        assert float(jnp.abs(agg - ragg).max()) <= 1e-6 * scale, (
+            f"stats_agg aggregate left the oracle's ulp envelope: {label} "
+            f"max|Δ|={float(jnp.abs(agg - ragg).max()):.3e}")
+        # the hard gate: stats emission never changes the aggregate
+        plain = ingest_agg_op(x, None, *meta, None, cf, n_clients=64,
+                              normalize=normalize)
+        assert jnp.array_equal(agg, plain), (
+            f"stats variant perturbed the aggregate: {label}")
 
 
 class TestIngestSegmentAggFuzz:
