@@ -42,8 +42,11 @@ from repro.serve import (
     StalenessAdmission,
     StreamingAggregator,
     TimeWindow,
+    flatten_bursts,
     replay,
+    replay_bursts,
     synthetic_stream,
+    zipf_burst_stream,
 )
 
 
@@ -337,6 +340,89 @@ def bench_trace(params, args):
             f"{coverage:.1%} of round wall (outside [90%, 110%])")
 
 
+def bench_saturation(params, args):
+    """Overlapped-round saturation gate (docs/ARCHITECTURE.md
+    'Overlapped rounds'): a Zipf-popularity burst trace over a
+    million-client population replays through the synchronous per-update
+    service and the pipelined burst path.  Two hard gates:
+
+    1. **throughput** — the pipelined service must sustain **≥3×** the
+       synchronous updates/sec (vectorized admission verdicts plus the
+       device aggregation of round *r* overlapping the host ingestion of
+       round *r+1*);
+    2. **bit-identity** — overlap is a latency optimization, never a
+       semantics change: both services must land on bit-identical global
+       params and identical ``ServiceStats`` (wall time excluded).
+    """
+    import dataclasses
+
+    n_clients, n_updates, k, burst = ((120_000, 8_000, 1024, 1024)
+                                      if args.quick else
+                                      (1_000_000, 40_000, 2048, 2048))
+    hp = FedQSHyperParams(buffer_k=k)
+    bursts = list(zipf_burst_stream(params, n_clients, n_updates,
+                                    seed=args.seed, burst=burst,
+                                    stale_spread=3))
+    flat = flatten_bursts(bursts)
+    admission = StalenessAdmission(tau_max=2, mode="downweight")
+
+    def make(pipelined):
+        return StreamingAggregator(
+            make_algorithm("fedqs-sgd", hp), hp, params, n_clients,
+            trigger=KBuffer(k), admission=admission, batched=True,
+            pipeline=pipelined)
+
+    # compile warm-up: one full-K round plus the partial flush shape
+    replay(make(False), flat[: k + k // 2])
+
+    sync = make(False)
+    t0 = time.perf_counter()
+    replay(sync, flat)
+    dt_sync = time.perf_counter() - t0
+
+    pipe = make(True)
+    t0 = time.perf_counter()
+    replay_bursts(pipe, bursts)
+    dt_pipe = time.perf_counter() - t0
+    pipe.close()
+
+    gap = max(
+        float(np.abs(np.asarray(a) - np.asarray(b)).max())
+        for a, b in zip(jax.tree_util.tree_leaves(sync.global_params),
+                        jax.tree_util.tree_leaves(pipe.global_params))
+    )
+    stats = [dataclasses.asdict(s.stats) for s in (sync, pipe)]
+    for d in stats:
+        d.pop("agg_seconds")
+    same_stats = stats[0] == stats[1]
+    speedup = dt_sync / dt_pipe
+    emit(
+        "serve_saturation",
+        dt_pipe / max(n_updates, 1) * 1e6,
+        clients=n_clients,
+        sync_updates_per_sec=f"{n_updates / dt_sync:.1f}",
+        pipelined_updates_per_sec=f"{n_updates / dt_pipe:.1f}",
+        speedup=f"{speedup:.2f}",
+        rounds=sync.stats.rounds,
+        dropped=sync.stats.dropped,
+        bit_identical=(gap == 0.0 and same_stats),
+        gate=bool(speedup >= 3.0),
+    )
+    if gap != 0.0:
+        raise SystemExit(
+            f"saturation gate: pipelined params diverge from synchronous "
+            f"(max abs gap {gap:.3e})")
+    if not same_stats:
+        raise SystemExit(
+            f"saturation gate: ServiceStats diverge: sync={stats[0]} "
+            f"pipelined={stats[1]}")
+    if speedup < 3.0:
+        raise SystemExit(
+            f"saturation gate: pipelined speedup {speedup:.2f}x < 3x "
+            f"(sync={n_updates / dt_sync:.1f} up/s, "
+            f"pipelined={n_updates / dt_pipe:.1f} up/s)")
+
+
 def bench_straggler_adaptive(params, args):
     """Adaptive-deadline gate (docs/ROBUSTNESS.md): the same
     straggler-heavy stream replays through a fixed ``TimeWindow`` and an
@@ -414,6 +500,7 @@ def main(argv=None):
     bench_trigger("serve_kbuffer_batched", KBuffer(k), params, args, batched=True)
     bench_trigger("serve_kbuffer_admission", KBuffer(k), params, args,
                   admission=StalenessAdmission(tau_max=2, mode="drop"))
+    bench_saturation(params, args)
     bench_straggler_adaptive(params, args)
     bench_parity(args)
     bench_telemetry(params, args)

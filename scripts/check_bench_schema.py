@@ -67,6 +67,14 @@ def validate_payload(doc: object, path: str = "<doc>") -> List[str]:
             if not isinstance(v, str):
                 errors.append(f"{where}: derived[{k!r}] must be a string "
                               f"(emit() stringifies), got {type(v).__name__}")
+        # gate rows (serve_saturation, serve_straggler_adaptive, ...) abort
+        # their suite on breach, so a committed artifact must never carry a
+        # failed verdict — one that does means the artifact was hand-edited
+        # or the suite stopped enforcing its own gate
+        if derived.get("gate") not in (None, "True"):
+            errors.append(f"{where}: gate row {name!r} recorded "
+                          f"gate={derived['gate']!r}; a failing gate must "
+                          f"abort the suite, not land in the artifact")
     return errors
 
 

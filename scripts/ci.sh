@@ -39,12 +39,68 @@ else
   echo "is still pinned by tests/test_kernels.py grids in tier-1)"
 fi
 
+if [ -z "${CI_SKIP_STRESS:-}" ]; then
+  echo "== stress soak: overlapped-round pipeline =="
+  # the seeded Zipf-burst concurrency soak (tests/test_pipeline.py): a
+  # pipelined service hammered with bursts for REPRO_SOAK_SECONDS must
+  # not deadlock, drop rounds, or leak updates from the conservation
+  # ledger.  Excluded from tier-1 by the stress marker; a separate CI
+  # step because it budgets wall time by design (CI_SOAK_SECONDS trims
+  # it on constrained hosts, CI_SKIP_STRESS=1 skips)
+  if $PY -c "import hypothesis" 2>/dev/null; then
+    REPRO_SOAK_SECONDS="${CI_SOAK_SECONDS:-60}" \
+      $PY -m pytest tests/test_pipeline.py -m stress -q \
+          --hypothesis-profile stress
+  else
+    REPRO_SOAK_SECONDS="${CI_SOAK_SECONDS:-60}" \
+      $PY -m pytest tests/test_pipeline.py -m stress -q
+  fi
+fi
+
 if [ -z "${CI_SKIP_SMOKE:-}" ]; then
   echo "== smoke: quickstart =="
   $PY examples/quickstart.py --rounds 8 --clients 10
 
   echo "== smoke: streaming service =="
   $PY -m repro.launch.serve --safl-stream --updates 120 --trigger kbuffer
+
+  echo "== smoke: overlapped-round pipeline =="
+  # a 200-client burst through the pipelined service (the default) and
+  # the --no-pipeline escape hatch: every recorded event must parse
+  # against the documented taxonomy, and after stripping wall-time
+  # fields the two streams must be identical — the determinism contract
+  # of docs/ARCHITECTURE.md 'Overlapped rounds', end to end through the
+  # launcher and the async telemetry sink
+  PIPEDIR=$(mktemp -d)
+  $PY -m repro.launch.serve --safl-stream --clients 200 --updates 400 \
+      --batched --telemetry "$PIPEDIR/pipe.jsonl"
+  $PY -m repro.launch.serve --safl-stream --clients 200 --updates 400 \
+      --batched --no-pipeline --telemetry "$PIPEDIR/sync.jsonl"
+  $PY - "$PIPEDIR" <<'EOF'
+import json, sys, os
+d = sys.argv[1]
+sys.path.insert(0, "src")
+from repro.telemetry import EVENT_TYPES
+def norm(name):
+    recs = [json.loads(l) for l in open(os.path.join(d, name)) if l.strip()]
+    assert recs, f"{name}: pipeline smoke recorded no events"
+    unknown = {r["e"] for r in recs} - set(EVENT_TYPES)
+    assert not unknown, f"{name}: events outside the taxonomy: {unknown}"
+    out = []
+    for r in recs:
+        r.pop("agg_seconds", None)
+        if r.get("e") == "metrics-snapshot":
+            r["metrics"] = {k: v for k, v in r["metrics"].items()
+                            if "seconds" not in k and "agg_s" not in k}
+        out.append(r)
+    return out
+pipe, sync = norm("pipe.jsonl"), norm("sync.jsonl")
+assert pipe[-1]["e"] == "metrics-snapshot", "missing final metrics snapshot"
+assert pipe == sync, (f"pipelined and --no-pipeline event streams diverge "
+                      f"({len(pipe)} vs {len(sync)} events)")
+print(f"pipeline smoke OK ({len(pipe)} events identical across modes)")
+EOF
+  rm -rf "$PIPEDIR"
 
   echo "== smoke: telemetry record -> report =="
   # record a 50-client stream, assert every JSONL event parses against the

@@ -54,7 +54,7 @@ from repro.core.types import (
 from repro.kernels import weighted_agg_auto_op, weighted_agg_op
 from repro.kernels.ref import ingest_weights
 from repro.serve.batched import _round_meta, bucket_rows
-from repro.serve.service import RoundReport, StreamingAggregator, SubmitResult
+from repro.serve.service import RoundReport, StreamingAggregator
 from repro.serve.triggers import KBuffer, TriggerPolicy
 from repro.telemetry import Telemetry, TierMerged
 
@@ -119,6 +119,7 @@ class HierarchicalService(StreamingAggregator):
         fused: Optional[bool] = None,
         context=None,
         async_agg: bool = False,
+        pipeline: bool = False,
         on_round=None,
         speeds: Optional[np.ndarray] = None,
         clock: Callable[[], float] = _time.monotonic,
@@ -142,7 +143,7 @@ class HierarchicalService(StreamingAggregator):
             algo, hp, init_params, n_clients,
             trigger=trigger, admission=admission, context=context,
             batched=True, use_kernel=use_kernel, fused=fused,
-            async_agg=async_agg,
+            async_agg=async_agg, pipeline=pipeline,
             on_round=on_round, speeds=speeds, clock=clock,
             telemetry=telemetry,
         )
@@ -179,28 +180,25 @@ class HierarchicalService(StreamingAggregator):
                 unit="updates", layer="hier")
 
     # ------------------------------------------------------------- ingestion
-    def submit(self, update, now: Optional[float] = None) -> SubmitResult:
-        """Admit one client update and route it down its edge; partials
-        emitted by firing tiers bubble up to the global buffer, where the
-        global trigger sees the flat member count."""
-        now = self._clock() if now is None else now
-        update, verdict = self._admit(update, now)
-        if update is None:
-            return SubmitResult(False, False, self.round, verdict.reason)
+    # submit()/submit_burst() are inherited: the base service drives the
+    # shared admit → buffer → trigger → fire sequence and these two hooks
+    # swap the flat buffer for the tier topology, so every front-end mode
+    # (per-update, burst, pipelined) routes identically
+    def _buffer_admitted(self, update, now: float) -> None:
+        """Route one admitted update down its edge; partials emitted by
+        firing tiers bubble up to the global buffer, where the global
+        trigger sees the flat member count."""
         if self._tracer is not None:
             # residency spans measure admission → global fire, however
             # many tier hops the update's partial takes in between
             self._ingest_t.append((self._last_tid, _time.perf_counter()))
-
         edge = self.edges[self.topology.edge_of(update.cid)]
         partial = edge.submit(update, now)
         if partial is not None:
             self._forward(partial, now)
-        view = MemberView(self._ingest, n=self._ingest_members)
-        if self.trigger.should_fire(view, now):
-            report = self._fire(now)
-            return SubmitResult(True, True, self.round, verdict.reason, report)
-        return SubmitResult(True, False, self.round, verdict.reason)
+
+    def _trigger_view(self):
+        return MemberView(self._ingest, n=self._ingest_members)
 
     def _forward(self, partial: PartialAggregate, now: float) -> None:
         """One tier hop: edge partials go to their region (3-tier) or the
@@ -227,7 +225,7 @@ class HierarchicalService(StreamingAggregator):
         else:
             self._tm_region_fires.inc()
         self._tm_partial_members.observe(partial.n_members)
-        tel.emit(TierMerged(
+        self._emit_event(TierMerged(
             t=float(now), round=self.round, tier=partial.tier,
             node_id=int(partial.node_id), n_members=int(partial.n_members),
         ))
@@ -249,16 +247,17 @@ class HierarchicalService(StreamingAggregator):
     def flush(self, now: Optional[float] = None) -> Optional[RoundReport]:
         """Drain the whole plane: force-fire every edge, then every
         region, then the global tier (the flat flush semantics)."""
-        now = self._clock() if now is None else now
-        for edge in self.edges:
-            partial = edge.flush(now)
-            if partial is not None:
-                self._forward(partial, now)
-        for region in self.regions:
-            merged = region.flush(now)
-            if merged is not None:
-                self._forward(merged, now)
-        return super().flush(now=now)
+        with self._lock:
+            now = self._clock() if now is None else now
+            for edge in self.edges:
+                partial = edge.flush(now)
+                if partial is not None:
+                    self._forward(partial, now)
+            for region in self.regions:
+                merged = region.flush(now)
+                if merged is not None:
+                    self._forward(merged, now)
+            return super().flush(now=now)
 
     # ----------------------------------------------------------- aggregation
     def _dispatch(self, ctx, batch: List[PartialAggregate]):

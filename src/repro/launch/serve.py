@@ -56,9 +56,14 @@ def run_safl_stream(args):
     if args.telemetry:
         from repro.telemetry import Telemetry
 
+        # the pipelined service overlaps rounds with ingestion; writing the
+        # event log on the ingest thread would hand the stall right back,
+        # so the file sink goes non-blocking (AsyncSink) whenever the
+        # pipeline is on — close() drains, the on-disk stream is identical
         telemetry = Telemetry.to_jsonl(args.telemetry, trace=bool(args.trace),
                                        health=args.health,
-                                       flightrec=args.flightrec)
+                                       flightrec=args.flightrec,
+                                       async_io=args.pipeline)
     elif args.trace or args.health or args.flightrec:
         from repro.telemetry import Telemetry
 
@@ -89,12 +94,14 @@ def run_safl_stream(args):
             trigger=trigger, admission=admission,
             edge_trigger=(lambda e: KBuffer(args.edge_k)) if args.edge_k > 1
             else None,
+            pipeline=args.pipeline,
             telemetry=telemetry,
         )
     else:
         service = StreamingAggregator(
             algo, hp, params, args.clients,
             trigger=trigger, admission=admission, batched=args.batched,
+            pipeline=args.pipeline,
             telemetry=telemetry,
         )
     if args.scenario:
@@ -130,12 +137,13 @@ def run_safl_stream(args):
     with trace_scope:
         reports = replay(service, stream)
     dt = time.perf_counter() - t0
+    service.close()
     s = service.stats
     # the tiered plane always runs the batched stacked path
     batched_eff = True if args.topology else args.batched
     print(f"safl-stream: algo={args.algo} trigger={trigger.describe()} "
           f"admission={admission.describe()} batched={batched_eff} "
-          f"source={source}"
+          f"pipeline={args.pipeline} source={source}"
           + (f" topology={service.describe()}" if args.topology else "")
           + (f" compress={compressor.describe()}" if compressor else ""))
     if args.topology:
@@ -212,6 +220,14 @@ def main():
                     choices=["drop", "downweight"])
     ap.add_argument("--batched", action="store_true",
                     help="stacked [K,D] aggregation (Pallas kernel on TPU)")
+    ap.add_argument("--pipeline", dest="pipeline", action="store_true",
+                    default=True,
+                    help="overlap each round's device aggregation with the "
+                         "next round's ingestion (docs/ARCHITECTURE.md "
+                         "'Overlapped rounds'; default on)")
+    ap.add_argument("--no-pipeline", dest="pipeline", action="store_false",
+                    help="synchronous aggregation — the escape hatch; the "
+                         "output stream is bit-identical either way")
     ap.add_argument("--topology", default=None, metavar="SPEC",
                     help="tiered aggregation plane (docs/HIERARCHY.md), "
                          "e.g. 'hier:16' or 'hier:64x16'")

@@ -15,8 +15,22 @@ from .batched import (
     stack_trees,
     unravel_like,
 )
-from .service import RoundReport, ServiceStats, StreamingAggregator, SubmitResult
-from .stream import CaptureStream, replay, scenario_stream, synthetic_stream
+from .service import (
+    BurstResult,
+    RoundReport,
+    ServiceStats,
+    StreamingAggregator,
+    SubmitResult,
+)
+from .stream import (
+    CaptureStream,
+    flatten_bursts,
+    replay,
+    replay_bursts,
+    scenario_stream,
+    synthetic_stream,
+    zipf_burst_stream,
+)
 from .triggers import (
     AdaptiveTimeWindow,
     KBuffer,
@@ -30,8 +44,10 @@ __all__ = [
     "Admission", "AdmissionPolicy", "AdmitAll", "StalenessAdmission",
     "batched_weighted_sum", "compressed_weighted_sum", "make_tree_sum",
     "stack_encoded", "stack_trees", "unravel_like",
-    "RoundReport", "ServiceStats", "StreamingAggregator", "SubmitResult",
-    "CaptureStream", "replay", "scenario_stream", "synthetic_stream",
+    "BurstResult", "RoundReport", "ServiceStats", "StreamingAggregator",
+    "SubmitResult",
+    "CaptureStream", "flatten_bursts", "replay", "replay_bursts",
+    "scenario_stream", "synthetic_stream", "zipf_burst_stream",
     "AdaptiveTimeWindow", "KBuffer", "Quorum", "TimeWindow", "TriggerPolicy",
     "make_trigger",
 ]

@@ -16,6 +16,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, replace
 
+import numpy as np
+
 from repro.core.types import Update
 
 
@@ -32,6 +34,16 @@ class AdmissionPolicy:
     """Base policy: admit everything at full weight."""
 
     name = "admit-all"
+
+    # Vectorized verdict path for the service's burst admission
+    # (StreamingAggregator._burst_fast).  A policy whose verdict is a pure
+    # function of staleness may override with a method
+    # ``admit_mask(stale_rounds, current_round) -> (accept, weight_scale)``
+    # over numpy arrays; policies with richer verdicts (custom ``admit`` /
+    # ``apply`` overrides) leave it None and bursts fall back to the exact
+    # per-update path.  The cf ≤ 0 rejection and cf > 1 clamp stay with the
+    # caller — they are policy-independent invariants.
+    admit_mask = None
 
     def admit(self, update: Update, current_round: int) -> Admission:
         return Admission(True)
@@ -70,6 +82,10 @@ class AdmitAll(AdmissionPolicy):
     """Simulator default — the virtual-clock engine admits every update,
     matching the paper's server exactly."""
 
+    def admit_mask(self, stale_rounds: np.ndarray, current_round: int):
+        n = len(stale_rounds)
+        return np.ones(n, bool), np.ones(n)
+
 
 class StalenessAdmission(AdmissionPolicy):
     """Bounded-staleness admission: τ = round − stale_round vs ``tau_max``.
@@ -100,6 +116,18 @@ class StalenessAdmission(AdmissionPolicy):
             weight_scale=self.decay ** (tau - self.tau_max),
             reason=f"downweighted: tau={tau} > tau_max={self.tau_max}",
         )
+
+    def admit_mask(self, stale_rounds: np.ndarray, current_round: int):
+        """One-pass burst verdicts: same τ arithmetic as ``admit``, same
+        IEEE results (np.float64 ** int matches Python's float pow), so
+        the burst path is bit-identical to per-update admission."""
+        tau = np.maximum(0, current_round - stale_rounds)
+        over = tau > self.tau_max
+        if self.mode == "drop":
+            return ~over, np.ones(len(tau))
+        return (np.ones(len(tau), bool),
+                np.where(over, np.float64(self.decay) ** (tau - self.tau_max),
+                         1.0))
 
     def describe(self):
         return f"staleness(tau_max={self.tau_max},mode={self.mode})"

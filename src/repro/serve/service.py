@@ -17,7 +17,15 @@ real ingestion pipeline:
    so ingestion continues into a fresh buffer while the frozen batch
    aggregates (synchronously inline, or on a worker thread with
    ``async_agg=True``; rounds always serialize);
-5. **hooks** — per-round metrics via ``on_round`` and checkpoint/resume
+5. **overlapped rounds** — with ``pipeline=True`` the fused-kernel
+   dispatch of round r is handed to a single-worker executor while
+   ``submit``/``submit_burst`` keep admitting round r+1's arrivals; the
+   round is *resolved* (params installed, ``RoundReport`` emitted,
+   health/trace spans closed) at the next fire or an explicit
+   ``drain()``.  The determinism contract: the same stream produces
+   bit-identical params, stats, and telemetry event streams whether
+   pipelined or synchronous (pinned in tests/test_pipeline.py);
+6. **hooks** — per-round metrics via ``on_round`` and checkpoint/resume
    via ``save``/``restore`` (``repro.checkpoint.ckpt``).
 
 The virtual-clock engine (``repro.core.safl``) is one client of this
@@ -27,6 +35,7 @@ which keeps the stream path and the paper-faithful path one code path.
 """
 from __future__ import annotations
 
+import threading
 import time as _time
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field, replace
@@ -65,6 +74,12 @@ from repro.telemetry import (
 from .admission import AdmissionPolicy, AdmitAll
 from .batched import fused_ingest_round, make_tree_sum, unravel_like
 from .triggers import KBuffer, TriggerPolicy
+
+# lookahead of the vectorized burst-admission walk: verdicts for this many
+# updates are evaluated against one round snapshot; a mid-window fire
+# invalidates the remainder (the round advanced), so larger windows only
+# waste verdicts once rounds fire more often than every ~256 updates
+_BURST_WINDOW = 256
 
 
 @dataclass
@@ -110,6 +125,50 @@ class ServiceStats:
     rounds: int = 0
     agg_seconds: float = 0.0
 
+    def __post_init__(self):
+        # the pipelined service bumps counters from ingest threads and the
+        # round-resolve path concurrently; bare `+=` is read-modify-write
+        # and loses counts under contention (regression-pinned in
+        # tests/test_pipeline.py), so every increment goes through bump()
+        self._lock = threading.Lock()
+
+    def bump(self, **deltas) -> None:
+        """Atomically add ``deltas`` to the named counters."""
+        with self._lock:
+            for k, v in deltas.items():
+                setattr(self, k, getattr(self, k) + v)
+
+
+@dataclass
+class BurstResult:
+    """Aggregate outcome of one ``submit_burst`` call.  Per-update
+    ``SubmitResult`` objects are deliberately not materialized — dodging
+    that per-update allocation is half the point of the burst path; round
+    reports still arrive through ``on_round`` / ``flush`` / ``drain``."""
+
+    submitted: int = 0
+    accepted: int = 0
+    dropped: int = 0
+    fired: int = 0             # rounds fired while draining the burst
+
+
+@dataclass
+class _PendingRound:
+    """One fired-but-unresolved pipelined round.  Everything the resolve
+    step needs to emit exactly what the synchronous path would have is
+    captured at fire time — by resolution time the trigger has re-armed
+    and ``service.round`` has moved on."""
+
+    future: Optional[Future]
+    round: int                 # report.round (the round this fire produces)
+    now: float                 # fire-time stream clock
+    members: List
+    stale: List[int]
+    dropped: int
+    trigger_desc: str
+    adapted: Optional[tuple]   # consume_adaptation() captured at fire
+    pending_n: int             # len(_ingest) right after the swap
+
 
 class StreamingAggregator:
     """Ingestion front-end + buffered aggregation back-end for SAFL.
@@ -136,6 +195,7 @@ class StreamingAggregator:
         use_kernel: Optional[bool] = None,
         fused: Optional[bool] = None,
         async_agg: bool = False,
+        pipeline: bool = False,
         on_round: Optional[Callable[[RoundReport], None]] = None,
         speeds: Optional[np.ndarray] = None,
         clock: Callable[[], float] = _time.monotonic,
@@ -173,6 +233,38 @@ class StreamingAggregator:
         self._pending_flat = None # handed from _dispatch to _aggregate
         self._pool = ThreadPoolExecutor(max_workers=1) if async_agg else None
         self._inflight: Optional[Future] = None
+        # overlapped-round pipeline (docs/ARCHITECTURE.md "Overlapped
+        # rounds"): round r's device dispatch runs on a single-worker
+        # executor while ingestion admits round r+1 into the live buffer.
+        # Mutually exclusive with async_agg (which serializes rounds by
+        # joining *before* the next fire — a different overlap contract
+        # pinned by tests/test_serve.py) and with an engine context (the
+        # engine's virtual clock steps synchronously by construction).
+        if pipeline and async_agg:
+            raise ValueError(
+                "pipeline and async_agg are mutually exclusive round-overlap "
+                "modes: async_agg returns reports from the *firing* submit, "
+                "the pipeline resolves them at the next fire / drain()")
+        if pipeline and context is not None:
+            raise ValueError(
+                "pipeline=True serves live streams; an engine-embedded "
+                "service (context=...) aggregates synchronously")
+        self._pipeline = bool(pipeline)
+        self._pipe_pool = (
+            ThreadPoolExecutor(max_workers=1, thread_name_prefix="agg-pipe")
+            if pipeline else None
+        )
+        self._pending_round: Optional[_PendingRound] = None
+        # telemetry events held back while a round is in flight: the
+        # in-flight round's events must precede them in the output stream
+        # (flushed by _resolve_pending, preserving the synchronous order)
+        self._deferred: List = []
+        # guards the ingest plane (admission, buffer append, trigger check,
+        # buffer swap) against concurrent submitters.  Reentrant because a
+        # fire under the lock may join()/drain() and on_round hooks may call
+        # back into the service.  The aggregation worker never takes it —
+        # ingestion keeps admitting while the dispatch is in flight.
+        self._lock = threading.RLock()
         # optional ClientCompressor attached by whoever encodes the stream
         # (engine / cohort / launcher); checkpointed with the service state
         self.compressor = None
@@ -234,16 +326,140 @@ class StreamingAggregator:
         and aggregates the frozen batch.
         """
         now = self._clock() if now is None else now
-        update, verdict = self._admit(update, now)
-        if update is None:
-            return SubmitResult(False, False, self.round, verdict.reason)
+        with self._lock:
+            update, verdict = self._admit(update, now)
+            if update is None:
+                return SubmitResult(False, False, self.round, verdict.reason)
+            self._buffer_admitted(update, now)
+            if self.trigger.should_fire(self._trigger_view(), now):
+                report = self._fire(now)
+                return SubmitResult(True, True, self.round, verdict.reason,
+                                    report)
+            return SubmitResult(True, False, self.round, verdict.reason)
+
+    def submit_burst(self, updates: Sequence[Update],
+                     now: Optional[float] = None) -> BurstResult:
+        """Admit one arrival burst (updates sharing a delivery timestamp).
+
+        Semantically identical to calling ``submit`` per update in order —
+        the bit-identity pin in tests/test_pipeline.py — but when the
+        admission policy exposes a vectorized verdict (``admit_mask``) and
+        no telemetry/tracer demands per-update event objects, the
+        per-update Python prologue collapses into a few numpy passes per
+        lookahead window.  Combined with ``pipeline=True`` this is the
+        serve_saturation fast path (benchmarks/bench_serve.py).
+        """
+        now = self._clock() if now is None else now
+        updates = updates if isinstance(updates, list) else list(updates)
+        with self._lock:
+            if (self.telemetry is not None or self._tracer is not None
+                    or getattr(self.admission, "admit_mask", None) is None):
+                return self._burst_slow(updates, now)
+            return self._burst_fast(updates, now)
+
+    def _burst_slow(self, updates: List[Update], now: float) -> BurstResult:
+        """Reference burst path: the per-update pipeline, verbatim — taken
+        whenever an observer (telemetry/tracer) needs per-update events or
+        the admission policy has no batched verdict."""
+        res = BurstResult(submitted=len(updates))
+        for u in updates:
+            u2, _ = self._admit(u, now)
+            if u2 is None:
+                res.dropped += 1
+                continue
+            res.accepted += 1
+            self._buffer_admitted(u2, now)
+            if self.trigger.should_fire(self._trigger_view(), now):
+                self._fire(now)
+                res.fired += 1
+        return res
+
+    def _burst_fast(self, updates: List[Update], now: float) -> BurstResult:
+        """Vectorized burst admission (telemetry off).
+
+        Verdicts are evaluated for a whole lookahead window against the
+        *current* round in one ``admit_mask`` call; the walk then appends
+        admitted updates and consults the trigger per append, exactly as
+        the per-update path would.  A fire inside the window advances the
+        round, so the remaining updates are re-windowed and re-judged
+        fresh — staleness verdicts never go stale mid-burst.  Adaptive
+        triggers see every arrival through ``observe_batch`` in segments
+        that close *before* each re-arm, reproducing the per-update
+        observation history bit-for-bit.
+        """
+        res = BurstResult(submitted=len(updates))
+        trigger = self.trigger
+        observe = getattr(trigger, "observe", None)
+        observe_batch = getattr(trigger, "observe_batch", None)
+
+        def _observe_upto(hi: int, lo: int) -> int:
+            if observe is None or lo >= hi:
+                return hi
+            if observe_batch is not None:
+                observe_batch(updates[lo:hi], now)
+            else:
+                for uu in updates[lo:hi]:
+                    observe(uu, now)
+            return hi
+
+        n = len(updates)
+        i = 0        # next update to admit
+        obs_lo = 0   # arrivals not yet shown to the trigger's observer
+        acc = drp = dwn = par = 0
+        while i < n:
+            rnd = self.round
+            window = updates[i:i + _BURST_WINDOW]
+            cf = np.asarray([u.completed_fraction for u in window])
+            stale = np.asarray([u.stale_round for u in window], np.int64)
+            stale_c = np.minimum(stale, rnd)  # future-round clamp (cf _admit)
+            mask, scales = self.admission.admit_mask(stale_c, rnd)
+            keep = (cf > 0.0) & mask
+            for j, u in enumerate(window):
+                if not keep[j]:
+                    drp += 1
+                    self._dropped_since_fire += 1
+                    continue
+                changed = {}
+                if stale_c[j] != stale[j]:
+                    changed["stale_round"] = int(rnd)
+                if cf[j] > 1.0:
+                    changed["completed_fraction"] = 1.0
+                s = float(scales[j])
+                if s != 1.0:
+                    dwn += 1
+                    changed["n_samples"] = max(1, int(round(u.n_samples * s)))
+                if changed:
+                    u = replace(u, **changed)
+                if u.completed_fraction < 1.0:
+                    par += 1
+                acc += 1
+                self._buffer_admitted(u, now)
+                if trigger.should_fire(self._trigger_view(), now):
+                    obs_lo = _observe_upto(i + j + 1, obs_lo)
+                    self._fire(now)
+                    res.fired += 1
+                    i = i + j + 1
+                    break
+            else:
+                i += len(window)
+        _observe_upto(n, obs_lo)
+        self.stats.bump(submitted=len(updates), accepted=acc, dropped=drp,
+                        downweighted=dwn, partial=par)
+        res.accepted, res.dropped = acc, drp
+        return res
+
+    def _buffer_admitted(self, update: Update, now: float) -> None:
+        """Place one admitted update into the ingest plane (the
+        hierarchical service overrides this to route through its tier
+        topology instead of the flat buffer)."""
         self._ingest.append(update)
         if self._tracer is not None:
             self._ingest_t.append((self._last_tid, _time.perf_counter()))
-        if self.trigger.should_fire(self._ingest, now):
-            report = self._fire(now)
-            return SubmitResult(True, True, self.round, verdict.reason, report)
-        return SubmitResult(True, False, self.round, verdict.reason)
+
+    def _trigger_view(self):
+        """What the trigger policy inspects after each admit (the
+        hierarchical service shows a member-count view of partials)."""
+        return self._ingest
 
     def _admit(self, update, now: float):
         """The admission prologue every ingestion front-end shares (the
@@ -256,7 +472,6 @@ class StreamingAggregator:
         t0 = _time.perf_counter() if tel is not None else 0.0
         if tr is not None:
             self._last_tid = tr.new_trace()
-        self.stats.submitted += 1
         if update.stale_round > self.round:
             # no update can be trained on a future round — a live gateway
             # stamps τ against its own round registry, so clamp here
@@ -272,13 +487,13 @@ class StreamingAggregator:
             observe(update, now)
         admitted, verdict = self.admission.apply(update, self.round)
         if admitted is None:
-            self.stats.dropped += 1
+            self.stats.bump(submitted=1, dropped=1)
             self._dropped_since_fire += 1
             if tel is not None:
                 self._tm_submitted.inc()
                 self._tm_rejected.inc()
                 self._tm_admit_s.observe(_time.perf_counter() - t0)
-                tel.emit(UpdateRejected(
+                self._emit_event(UpdateRejected(
                     t=float(now), round=self.round, cid=int(update.cid),
                     stale_round=int(update.stale_round), staleness=int(tau),
                     reason=verdict.reason,
@@ -288,27 +503,24 @@ class StreamingAggregator:
                           _time.perf_counter() - t0, tid=self._last_tid)
             return None, verdict
         downweighted = verdict.weight_scale != 1.0
-        if downweighted:
-            self.stats.downweighted += 1
-        self.stats.accepted += 1
         cf = float(getattr(admitted, "completed_fraction", 1.0))
         partial = cf < 1.0
-        if partial:
-            self.stats.partial += 1
+        self.stats.bump(submitted=1, accepted=1,
+                        downweighted=int(downweighted), partial=int(partial))
         if tel is not None:
             self._tm_submitted.inc()
             self._tm_accepted.inc()
             if downweighted:
                 self._tm_downweighted.inc()
             self._tm_admit_s.observe(_time.perf_counter() - t0)
-            tel.emit(UpdateAdmitted(
+            self._emit_event(UpdateAdmitted(
                 t=float(now), round=self.round, cid=int(admitted.cid),
                 n_samples=int(admitted.n_samples),
                 stale_round=int(admitted.stale_round), staleness=int(tau),
                 downweighted=downweighted,
             ))
             if partial:
-                tel.emit(PartialAdmitted(
+                self._emit_event(PartialAdmitted(
                     t=float(now), round=self.round, cid=int(admitted.cid),
                     completed_fraction=cf,
                 ))
@@ -317,25 +529,55 @@ class StreamingAggregator:
                       tid=self._last_tid)
         return admitted, verdict
 
+    def _emit_event(self, event) -> None:
+        """Telemetry emit that respects the pipeline boundary: while a
+        round is in flight its events must come first in the output
+        stream, so ingest-side events are held back and flushed by
+        ``_resolve_pending`` — the emitted sequence reads exactly like the
+        synchronous service's.  With nothing in flight (always true off
+        the pipeline) this is a plain emit.  Only ever called under a
+        ``telemetry is not None`` guard."""
+        if self._pending_round is not None:
+            self._deferred.append(event)
+        else:
+            self.telemetry.emit(event)
+
     def flush(self, now: Optional[float] = None) -> Optional[RoundReport]:
         """Force-aggregate whatever is buffered (end of stream / sync mode
         with fewer live clients than K).  Returns None only for the
-        empty-buffer no-op — a flush is a barrier, so on an async service
-        it joins the dispatched round and returns its report."""
-        if not self._ingest:
-            return None
-        report = self._fire(self._clock() if now is None else now)
-        if report is None and self._inflight is not None:
-            report = self._inflight.result()
-            self._inflight = None
-        return report
+        empty-buffer no-op — a flush is a barrier, so an async service
+        joins the dispatched round and a pipelined service resolves the
+        flush-fired round; both return its report."""
+        with self._lock:
+            if not self._ingest:
+                if self._pipeline:
+                    return self._resolve_pending()
+                return None
+            report = self._fire(self._clock() if now is None else now)
+            if self._pipeline:
+                return self._resolve_pending()
+            if report is None and self._inflight is not None:
+                report = self._inflight.result()
+                self._inflight = None
+            return report
 
     @property
     def pending(self) -> int:
         return len(self._ingest)
 
+    def drain(self) -> Optional[RoundReport]:
+        """Resolve the in-flight pipelined round, if any: install its
+        params/table, emit its report/telemetry, and flush any deferred
+        ingest events.  Idempotent — with nothing in flight it is a no-op
+        returning None (tests/test_pipeline.py pins both)."""
+        with self._lock:
+            return self._resolve_pending()
+
     def join(self) -> None:
-        """Block until any in-flight async aggregation has completed."""
+        """Block until any in-flight aggregation has completed — the
+        async_agg worker round, or the pipelined round (which is fully
+        resolved, so post-join state is checkpoint-consistent)."""
+        self.drain()
         if self._inflight is not None:
             self._inflight.result()
             self._inflight = None
@@ -345,9 +587,18 @@ class StreamingAggregator:
         if self._pool is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
+        if self._pipe_pool is not None:
+            self._pipe_pool.shutdown(wait=True)
+            self._pipe_pool = None
 
     # ----------------------------------------------------------- aggregation
     def _fire(self, now: float) -> Optional[RoundReport]:
+        if self._pipeline:
+            # resolve round r before firing r+1: its report and events must
+            # precede the new batch's in the output stream, and its device
+            # results must be installed before the worker job that reads
+            # them (global_params / table / flat cache) is enqueued
+            self._resolve_pending()
         # double-buffer swap: new submissions land in a fresh list while
         # the frozen batch aggregates
         batch, self._ingest = self._ingest, []
@@ -356,12 +607,144 @@ class StreamingAggregator:
             batch_t, self._ingest_t = self._ingest_t, []
         self.trigger.arm(now)
         dropped, self._dropped_since_fire = self._dropped_since_fire, 0
+        if self._pipeline:
+            return self._fire_pipelined(batch, dropped, now, batch_t)
         if self._pool is None:
             return self._aggregate(batch, dropped, now, batch_t)
         self.join()  # rounds serialize: at most one aggregation in flight
         self._inflight = self._pool.submit(self._aggregate, batch, dropped,
                                            now, batch_t)
         return None
+
+    def _fire_pipelined(self, batch: List[Update], dropped: int, now: float,
+                        batch_t: Optional[List]) -> None:
+        """Stage-0 of the overlapped round: freeze everything the resolve
+        step will need (members, staleness, trigger description, deadline
+        adaptation — all judged against the *pre-arm, pre-next-round*
+        state the synchronous path would see), advance the round so
+        admission immediately runs against it, and hand the device work to
+        the single-worker executor.  Returns None — the report surfaces at
+        the next fire or ``drain()`` via ``on_round``."""
+        rnd = self.round + 1
+        tr = self._tracer
+        if tr is not None and batch_t:
+            fire_t = _time.perf_counter()
+            for tid, t_in in batch_t:
+                tr.record("buffer", "update", t_in, fire_t - t_in,
+                          round=rnd, tid=tid)
+        members = self._batch_members(batch)
+        stale = [self.round - u.stale_round for u in members]
+        # the round advances NOW: overlapped-window admissions must judge
+        # staleness against the round being produced, exactly as they
+        # would after a synchronous fire returned
+        self.round += 1
+        adapted = None
+        if self.telemetry is not None:
+            ca = getattr(self.trigger, "consume_adaptation", None)
+            if ca is not None:
+                adapted = ca()
+        pend = _PendingRound(
+            future=None, round=rnd, now=now, members=members, stale=stale,
+            dropped=dropped, trigger_desc=self.trigger.describe(),
+            adapted=adapted, pending_n=len(self._ingest),
+        )
+        pend.future = self._pipe_pool.submit(self._compute_round, batch, rnd)
+        self._pending_round = pend
+        return None
+
+    def _compute_round(self, batch: List[Update], rnd: int):
+        """Stage-1, on the worker: dispatch the round and block for the
+        device.  Runs WITHOUT the service lock — that is the tentpole:
+        ingestion keeps admitting while this blocks.  The worker only
+        reads server state (global_params/table/flat cache) installed by
+        the resolve step *before* this job was enqueued, so the executor
+        queue provides the happens-before edge; the §3.4 handshake state
+        (_pending_flat/_pending_stats) is produced and consumed entirely
+        on this thread."""
+        t0 = _time.perf_counter()
+        self._span_round = rnd
+        new_global, new_table = self._dispatch(self, batch)
+        jax.block_until_ready(jax.tree_util.tree_leaves(new_global))
+        dt = _time.perf_counter() - t0
+        if self._tracer is not None:
+            self._tracer.record("dispatch", "serve", t0, dt, round=rnd)
+        stats_vec, self._pending_stats = self._pending_stats, None
+        pflat, self._pending_flat = self._pending_flat, None
+        return new_global, new_table, dt, stats_vec, pflat, t0
+
+    def _resolve_pending(self) -> Optional[RoundReport]:
+        """Stage-2, back under the lock: install the worker's results and
+        emit everything the synchronous path would have emitted at this
+        round's finalize — then release the deferred ingest events that
+        arrived while the round was in flight."""
+        pend = self._pending_round
+        if pend is None:
+            return None
+        new_global, new_table, dt, stats_vec, pflat, t0 = pend.future.result()
+        self._pending_round = None
+        tr = self._tracer
+        f0 = _time.perf_counter() if tr is not None else 0.0
+        self.global_params = new_global
+        self.table = new_table
+        if pflat is not None:
+            self._flat_cache, self._flat_src = pflat, new_global
+        self.stats.bump(rounds=1, agg_seconds=dt)
+        report = RoundReport(
+            round=pend.round,
+            n_updates=len(pend.members),
+            n_distinct=len({u.cid for u in pend.members}),
+            mean_staleness=float(np.mean(pend.stale)) if pend.stale else 0.0,
+            max_staleness=int(max(pend.stale)) if pend.stale else 0,
+            dropped_since_last=pend.dropped,
+            trigger=pend.trigger_desc,
+            agg_seconds=dt,
+            buffer=pend.members,
+        )
+        tel = self.telemetry
+        if tel is not None:
+            if pend.adapted is not None:
+                old_w, new_w, q_lat = pend.adapted
+                tel.emit(DeadlineAdapted(
+                    t=float(pend.now), round=pend.round,
+                    old_window=float(old_w), new_window=float(new_w),
+                    quantile_latency=float(q_lat),
+                ))
+            self._tm_rounds.inc()
+            self._tm_agg_s.observe(dt)
+            for s in pend.stale:
+                self._tm_staleness.observe(s)
+            self._tm_round.set(pend.round)
+            self._tm_pending.set(pend.pending_n)
+            tel.emit(RoundFired(
+                t=float(pend.now), round=pend.round,
+                n_updates=report.n_updates, n_distinct=report.n_distinct,
+                mean_staleness=report.mean_staleness,
+                max_staleness=report.max_staleness,
+                dropped_since_last=pend.dropped, trigger=report.trigger,
+                agg_seconds=dt,
+                members=[[int(u.cid), int(u.n_samples), int(u.stale_round)]
+                         for u in pend.members],
+            ))
+        hm = self._health
+        if hm is not None:
+            hm.observe_round(t=float(pend.now), round=pend.round,
+                             mean_staleness=report.mean_staleness,
+                             stats=stats_vec)
+        if self.on_round is not None:
+            self.on_round(report)
+        if tr is not None:
+            end = _time.perf_counter()
+            tr.record("finalize", "serve", f0, end - f0, round=pend.round)
+            # the pipelined round span sums its *active* stages — dispatch
+            # on the worker plus finalize here; the wall gap between them
+            # is overlap with ingestion, not round work, so critical-path
+            # coverage stays 1.0 (docs/OBSERVABILITY.md "Overlapped rounds")
+            tr.record("round", "serve", t0, dt + (end - f0), round=pend.round)
+        if self._deferred:
+            for ev in self._deferred:
+                tel.emit(ev)
+            self._deferred.clear()
+        return report
 
     def _aggregate(self, batch: List[Update], dropped: int,
                    now: float = 0.0,
@@ -398,8 +781,7 @@ class StreamingAggregator:
             self._flat_cache, self._flat_src = self._pending_flat, new_global
             self._pending_flat = None
         self.round += 1
-        self.stats.rounds += 1
-        self.stats.agg_seconds += dt
+        self.stats.bump(rounds=1, agg_seconds=dt)
         report = RoundReport(
             round=self.round,
             n_updates=len(members),

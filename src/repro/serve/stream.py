@@ -98,6 +98,79 @@ def _noise_trees(params: Params, n: int, scale: float, seed: int):
     return deltas, models
 
 
+def zipf_burst_stream(
+    params: Params,
+    n_clients: int,
+    n_updates: int,
+    *,
+    seed: int = 0,
+    burst: int = 256,
+    zipf_a: float = 1.2,
+    delta_scale: float = 1e-3,
+    distinct_deltas: int = 8,
+    rounds_per_burst: int = 1,
+    stale_spread: int = 4,
+    dt: float = 1.0,
+) -> Iterator[Tuple[List[Update], float]]:
+    """Yield ``(updates, arrival_time)`` *bursts* of SAFL traffic with a
+    heavy-tailed Zipf(``zipf_a``) client popularity over an arbitrarily
+    large population — the serve_saturation trace (1M clients).
+
+    Per-burst attributes are drawn as vectors, so generation stays O(burst)
+    however big ``n_clients`` is: client ranks come from a Zipf draw folded
+    into the population (a handful of hot clients dominate, the long tail
+    trickles), ``stale_round`` lags a virtual round counter by a seeded
+    spread (so staleness admission has real work), and ``sent_at`` is
+    stamped before the arrival time (so adaptive deadlines have latencies
+    to learn from).  Payloads cycle ``distinct_deltas`` pre-generated noise
+    pytrees, like ``synthetic_stream``.  Fully deterministic per seed.
+    """
+    rng = np.random.default_rng(seed)
+    deltas, models = _noise_trees(params, distinct_deltas, delta_scale, seed)
+
+    virtual_round = 0
+    emitted = 0
+    b = 0
+    while emitted < n_updates:
+        k = min(burst, n_updates - emitted)
+        now = (b + 1) * dt
+        ranks = rng.zipf(zipf_a, size=k).astype(np.int64)
+        cids = (ranks - 1) % n_clients
+        lags = rng.integers(0, stale_spread + 1, k)
+        stale_rounds = np.maximum(0, virtual_round - lags)
+        ns = rng.integers(20, 200, k)
+        sims = rng.uniform(0.05, 1.0, k)
+        fb = rng.random(k) < 0.3
+        sent = now - rng.uniform(0.1, 2.0, k)
+        yield [
+            Update(
+                cid=int(cids[j]),
+                n_samples=int(ns[j]),
+                stale_round=int(stale_rounds[j]),
+                lr=0.1,
+                similarity=float(sims[j]),
+                feedback=bool(fb[j]),
+                speed_f=1.0,
+                delta=deltas[(emitted + j) % distinct_deltas],
+                params=models[(emitted + j) % distinct_deltas],
+                sent_at=float(sent[j]),
+            )
+            for j in range(k)
+        ], now
+        emitted += k
+        b += 1
+        virtual_round += rounds_per_burst
+
+
+def flatten_bursts(
+    bursts,
+) -> List[Tuple[Update, float]]:
+    """One ``(update, time)`` pair per burst member, in burst order — the
+    per-update view of a burst trace, for driving the synchronous service
+    over the identical arrival sequence (the bit-identity pins)."""
+    return [(u, now) for batch, now in bursts for u in batch]
+
+
 def inject_norm_explosion(
     stream: Iterator[Tuple[Update, float]],
     *,
@@ -296,6 +369,32 @@ class CaptureStream:
         return service
 
 
+class _ReportCollector:
+    """Temporarily chains onto ``service.on_round`` to collect every round
+    report delivered during a replay — the one delivery channel that works
+    for all three aggregation modes (sync fires return reports from
+    ``submit``, async_agg and the pipeline surface them via the hook)."""
+
+    def __init__(self, service: StreamingAggregator):
+        self.service = service
+        self.reports: List[RoundReport] = []
+
+    def __enter__(self):
+        self._prev = self.service.on_round
+
+        def hook(rep, _prev=self._prev):
+            self.reports.append(rep)
+            if _prev is not None:
+                _prev(rep)
+
+        self.service.on_round = hook
+        return self.reports
+
+    def __exit__(self, *exc):
+        self.service.on_round = self._prev
+        return False
+
+
 def replay(
     service: StreamingAggregator,
     stream,
@@ -303,17 +402,34 @@ def replay(
     flush: bool = True,
 ) -> List[RoundReport]:
     """Push an (update, time) sequence through ``service``; returns the
-    round reports of every fire (including the final flush if requested)."""
-    reports: List[RoundReport] = []
-    last = None
-    for update, now in stream:
-        last = now
-        res = service.submit(update, now=now)
-        if res.fired and res.report is not None:
-            reports.append(res.report)
-    if flush:
-        rep = service.flush(now=last)
-        if rep is not None:
-            reports.append(rep)
-    service.join()
+    round reports of every fire (including the final flush if requested),
+    collected via ``on_round`` so pipelined/async rounds are included."""
+    with _ReportCollector(service) as reports:
+        last = None
+        for update, now in stream:
+            last = now
+            service.submit(update, now=now)
+        if flush:
+            service.flush(now=last)
+        service.join()
+    return reports
+
+
+def replay_bursts(
+    service: StreamingAggregator,
+    bursts,
+    *,
+    flush: bool = True,
+) -> List[RoundReport]:
+    """Burst twin of ``replay``: pushes ``(updates, arrival_time)`` bursts
+    through ``submit_burst`` (the vectorized admission path when the
+    policy supports it) and collects every resolved round report."""
+    with _ReportCollector(service) as reports:
+        last = None
+        for batch, now in bursts:
+            last = now
+            service.submit_burst(batch, now=now)
+        if flush:
+            service.flush(now=last)
+        service.join()
     return reports

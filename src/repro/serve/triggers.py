@@ -127,6 +127,19 @@ class AdaptiveTimeWindow(TimeWindow):
         if sent >= 0.0 and now > sent:
             self._lats.append(now - sent)
 
+    def observe_batch(self, updates: Sequence[Update], now: float) -> None:
+        """Batched ``observe`` over one burst segment — the service's
+        vectorized burst path shows arrivals in segments that close before
+        each re-arm, so the latency history (and therefore every
+        re-planned deadline) is bit-identical to per-update observation:
+        ``now - sent`` is the same float expression, the deque's maxlen
+        trims the same way under extend as under repeated append."""
+        self._lats.extend(
+            now - sent
+            for sent in (float(getattr(u, "sent_at", -1.0)) for u in updates)
+            if sent >= 0.0 and now > sent
+        )
+
     def _quantile(self) -> float:
         # nearest-rank on the sorted history — tiny (≤ history) and only
         # run once per fire, so no numpy dependency needed here

@@ -54,7 +54,7 @@ from .metrics import (
     Histogram,
     MetricsRegistry,
 )
-from .sinks import JsonlSink, RingSink, Sink
+from .sinks import AsyncSink, JsonlSink, RingSink, Sink
 from .trace import Span, SpanRing, Tracer, to_chrome_trace
 
 
@@ -95,13 +95,22 @@ class Telemetry:
     def to_jsonl(cls, path: str, *, ring: bool = False,
                  capacity: int = 65536, trace: bool = False,
                  trace_capacity: int = 262144, health: bool = False,
-                 flightrec: Optional[str] = None) -> "Telemetry":
+                 flightrec: Optional[str] = None,
+                 async_io: bool = False) -> "Telemetry":
         """Record to a JSONL file (optionally tee into a ring buffer).
 
         ``health=True`` attaches the default detector bank
         (``repro.telemetry.health``); ``flightrec=<path>`` attaches a
-        flight recorder dumping its black box to that path."""
-        sinks: List[Sink] = [JsonlSink(path)]
+        flight recorder dumping its black box to that path.
+        ``async_io=True`` wraps the file sink in an ``AsyncSink`` so JSON
+        serialization and file writes happen on a writer thread instead
+        of the emitting (ingest) thread — what the pipelined launcher
+        uses; ``close()`` still drains every enqueued record first, so
+        the on-disk stream is identical."""
+        file_sink: Sink = JsonlSink(path)
+        if async_io:
+            file_sink = AsyncSink(file_sink, capacity=capacity)
+        sinks: List[Sink] = [file_sink]
         if ring:
             sinks.append(RingSink(capacity))
         return cls(sinks, tracer=Tracer(trace_capacity) if trace else None,
@@ -196,7 +205,7 @@ __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "STALENESS_BUCKETS", "SECONDS_BUCKETS", "BYTES_BUCKETS",
     # sinks
-    "Sink", "JsonlSink", "RingSink",
+    "Sink", "AsyncSink", "JsonlSink", "RingSink",
     # tracing
     "Span", "SpanRing", "Tracer", "to_chrome_trace",
     # health plane

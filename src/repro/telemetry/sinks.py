@@ -1,11 +1,14 @@
 """Event sinks: where emitted records go.
 
-Two shipped sinks cover the two consumption modes:
+Three shipped sinks cover the consumption modes:
 
 * ``JsonlSink`` — append one JSON object per line to a file; the durable
   record a report is generated from (``repro.launch.analysis``);
 * ``RingSink`` — a bounded in-memory deque; what tests, benchmarks, and
-  live dashboards read without touching the filesystem.
+  live dashboards read without touching the filesystem;
+* ``AsyncSink`` — a non-blocking decorator for any sink: ``write``
+  enqueues onto a bounded queue drained by a daemon writer thread, so
+  serialization/IO never stalls the ingest path of a pipelined service.
 
 A sink is anything with ``write(record: dict)`` and ``close()``; the
 ``Telemetry`` hub fans every event out to all of its sinks.
@@ -13,6 +16,7 @@ A sink is anything with ``write(record: dict)`` and ``close()``; the
 from __future__ import annotations
 
 import json
+import queue
 import threading
 from collections import deque
 from typing import IO, Iterator, List, Optional
@@ -105,3 +109,69 @@ class RingSink(Sink):
     def clear(self) -> None:
         self._ring.clear()
         self.dropped = 0
+
+
+class AsyncSink(Sink):
+    """Fully non-blocking decorator around another sink.
+
+    ``write`` is a bounded ``put_nowait`` — never blocks, never does IO on
+    the caller's thread; a single daemon writer thread drains the queue
+    into the wrapped sink, preserving emission order.  When the queue is
+    full the record is *dropped and counted* rather than applying
+    backpressure to the ingest path: ``dropped`` is surfaced by
+    ``Telemetry.close()`` as ``telemetry_events_dropped``, the same
+    truncation contract as ``RingSink`` eviction.  ``close()`` drains
+    everything already enqueued (so the final metrics-snapshot line always
+    lands) and then closes the inner sink.
+    """
+
+    _CLOSE = object()
+
+    def __init__(self, inner: Sink, capacity: int = 65536):
+        self.inner = inner
+        self.capacity = int(capacity)
+        self._q: queue.Queue = queue.Queue(maxsize=self.capacity)
+        self.dropped = 0
+        self._closed = False
+        self._thread = threading.Thread(
+            target=self._run, daemon=True, name="telemetry-writer")
+        self._thread.start()
+
+    def _run(self) -> None:
+        while True:
+            rec = self._q.get()
+            try:
+                if rec is self._CLOSE:
+                    return
+                try:
+                    self.inner.write(rec)
+                except Exception:
+                    # a dead inner sink must not kill the writer thread —
+                    # the record is accounted as dropped, like queue overflow
+                    self.dropped += 1
+            finally:
+                self._q.task_done()
+
+    def write(self, record: dict) -> None:
+        if self._closed:
+            raise ValueError("AsyncSink is closed")
+        try:
+            self._q.put_nowait(record)
+        except queue.Full:
+            self.dropped += 1
+
+    def flush(self) -> None:
+        """Barrier: wait until every record enqueued so far is written
+        through, then flush the inner sink (if it can)."""
+        self._q.join()
+        inner_flush = getattr(self.inner, "flush", None)
+        if inner_flush is not None:
+            inner_flush()
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._q.put(self._CLOSE)  # blocking: the sentinel must land
+        self._thread.join()
+        self.inner.close()

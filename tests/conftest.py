@@ -17,7 +17,32 @@ else:
     # an unlucky draw; sized to keep the interpret-mode sweep ~30 s
     settings.register_profile("kernel-ci", deadline=None, max_examples=20,
                               derandomize=True)
+    # the concurrency soak (scripts/ci.sh stress step): derandomized like
+    # kernel-ci so a red soak is a real regression, sized up because the
+    # stress plane budgets minutes, not seconds
+    settings.register_profile("stress", deadline=None, max_examples=50,
+                              derandomize=True)
     settings.load_profile("ci")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "stress: long-running concurrency soak — excluded from tier-1, "
+        "run explicitly with `-m stress` (scripts/ci.sh)")
+
+
+def pytest_collection_modifyitems(config, items):
+    # tier-1 (`pytest -x -q`, no -m) must stay fast and deterministic:
+    # soak tests only run when the stress plane is asked for by name
+    if "stress" in (config.getoption("-m") or ""):
+        return
+    import pytest
+
+    skip = pytest.mark.skip(reason="stress soak: run with -m stress")
+    for item in items:
+        if "stress" in item.keywords:
+            item.add_marker(skip)
 
 collect_ignore: list = []
 if settings is None:

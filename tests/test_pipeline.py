@@ -1,0 +1,410 @@
+"""Overlapped-round pipeline: pipelined-vs-synchronous bit-identity,
+vectorized burst admission parity, concurrency/conservation ledgers, and
+the checkpoint-mid-flight contract (docs/ARCHITECTURE.md 'Overlapped
+rounds').
+
+The headline contract under test: for the same arrival stream, a
+``pipeline=True`` service must produce **bit-identical** global params,
+server table, ``ServiceStats`` (minus wall time), and telemetry event
+taxonomy as the synchronous service — overlap is a latency optimization,
+never a semantics change.
+"""
+import dataclasses
+import os
+import threading
+import time
+from collections import Counter
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FedQSHyperParams, make_algorithm
+from repro.core.types import Update
+from repro.hier import HierarchicalService, parse_topology
+from repro.serve import (
+    AdmitAll,
+    KBuffer,
+    AdaptiveTimeWindow,
+    StalenessAdmission,
+    StreamingAggregator,
+    TimeWindow,
+    flatten_bursts,
+    replay,
+    replay_bursts,
+    zipf_burst_stream,
+)
+from repro.telemetry import Telemetry
+
+
+def _tiny_params(seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return {"w": jax.random.normal(k1, (7, 5)), "b": jax.random.normal(k2, (5,))}
+
+
+def _mk_update(cid=0, n_samples=50, stale_round=0, similarity=0.5, delta=None,
+               params=None, sent_at=-1.0):
+    return Update(cid=cid, n_samples=n_samples, stale_round=stale_round,
+                  lr=0.1, similarity=similarity, feedback=False, speed_f=0.1,
+                  delta=delta, params=params, sent_at=sent_at)
+
+
+def _stats_dict(svc):
+    """ServiceStats as a dict minus ``agg_seconds`` (host wall time is the
+    one legitimately nondeterministic field)."""
+    d = dataclasses.asdict(svc.stats)
+    d.pop("agg_seconds")
+    return d
+
+
+def _ring_events(tel):
+    """Ring records with wall-time fields stripped — the event-taxonomy
+    pin: same events, same order, same payloads."""
+    out = []
+    for rec in tel.ring.records:
+        rec = dict(rec)
+        rec.pop("agg_seconds", None)
+        out.append(rec)
+    return out
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _burst_trace(params, *, n_clients=64, n_updates=192, seed=7, burst=24):
+    return list(zipf_burst_stream(params, n_clients, n_updates, seed=seed,
+                                  burst=burst, stale_spread=3))
+
+
+TRIGGERS = {
+    "kbuffer": lambda: KBuffer(8),
+    "timewindow": lambda: TimeWindow(window=2.0, min_updates=1),
+    "adaptive": lambda: AdaptiveTimeWindow(2.0, min_updates=1, warmup=4),
+}
+
+
+# ---------------------------------------------------------------------------
+# pipelined ≡ synchronous (the determinism contract)
+# ---------------------------------------------------------------------------
+class TestPipelineBitIdentity:
+    @pytest.mark.parametrize("trig", sorted(TRIGGERS))
+    @pytest.mark.parametrize("algo", ["fedqs-sgd", "fedavg"])
+    def test_flat_service_bit_identical(self, trig, algo):
+        """Params, table, stats, and the full telemetry event stream must
+        match the synchronous service bit-for-bit under every trigger."""
+        hp = FedQSHyperParams(buffer_k=8)
+        params = _tiny_params()
+        bursts = _burst_trace(params)
+        stream = flatten_bursts(bursts)
+        admission = StalenessAdmission(tau_max=1, mode="downweight")
+
+        results = {}
+        for pipelined in (False, True):
+            tel = Telemetry.in_memory()
+            svc = StreamingAggregator(
+                make_algorithm(algo, hp), hp, params, 64,
+                trigger=TRIGGERS[trig](), admission=admission,
+                batched=True, pipeline=pipelined, telemetry=tel)
+            reports = replay(svc, stream)
+            svc.close()
+            results[pipelined] = (svc, reports, tel)
+
+        sync_svc, sync_reps, sync_tel = results[False]
+        pipe_svc, pipe_reps, pipe_tel = results[True]
+        assert pipe_svc.round == sync_svc.round >= 2
+        _assert_trees_equal(pipe_svc.global_params, sync_svc.global_params)
+        np.testing.assert_array_equal(np.asarray(pipe_svc.table.counts),
+                                      np.asarray(sync_svc.table.counts))
+        assert _stats_dict(pipe_svc) == _stats_dict(sync_svc)
+        assert _ring_events(pipe_tel) == _ring_events(sync_tel)
+        got = [(r.round, r.n_updates, r.trigger) for r in pipe_reps]
+        want = [(r.round, r.n_updates, r.trigger) for r in sync_reps]
+        assert got == want
+
+    def test_hier_service_bit_identical(self):
+        """The tiered global stage rides the same pipeline: edge/region
+        routing plus the fused global fire must stay bit-identical."""
+        hp = FedQSHyperParams(buffer_k=4)
+        params = _tiny_params()
+        topo = parse_topology("hier:4", 32)
+        bursts = _burst_trace(params, n_clients=32, n_updates=160, burst=20)
+        stream = flatten_bursts(bursts)
+
+        results = {}
+        for pipelined in (False, True):
+            tel = Telemetry.in_memory()
+            svc = HierarchicalService(
+                make_algorithm("fedqs-sgd", hp), hp, params, 32, topo,
+                trigger=KBuffer(4),
+                edge_trigger=lambda e: KBuffer(2),
+                pipeline=pipelined, telemetry=tel)
+            replay(svc, stream)
+            svc.close()
+            results[pipelined] = (svc, tel)
+
+        sync_svc, sync_tel = results[False]
+        pipe_svc, pipe_tel = results[True]
+        assert pipe_svc.round == sync_svc.round >= 2
+        _assert_trees_equal(pipe_svc.global_params, sync_svc.global_params)
+        np.testing.assert_array_equal(np.asarray(pipe_svc.table.counts),
+                                      np.asarray(sync_svc.table.counts))
+        assert _stats_dict(pipe_svc) == _stats_dict(sync_svc)
+        assert _ring_events(pipe_tel) == _ring_events(sync_tel)
+
+    def test_validates_exclusive_modes(self):
+        hp = FedQSHyperParams(buffer_k=4)
+        params = _tiny_params()
+        with pytest.raises(ValueError):
+            StreamingAggregator(make_algorithm("fedavg", hp), hp, params, 8,
+                                pipeline=True, async_agg=True)
+
+
+# ---------------------------------------------------------------------------
+# vectorized burst admission ≡ per-update admission
+# ---------------------------------------------------------------------------
+class TestBurstAdmission:
+    @pytest.mark.parametrize("mode", ["drop", "downweight"])
+    def test_fast_path_matches_per_update(self, mode):
+        """submit_burst's windowed numpy verdicts must reproduce the
+        per-update scalar path exactly: same params, same counters."""
+        hp = FedQSHyperParams(buffer_k=8)
+        params = _tiny_params()
+        bursts = _burst_trace(params, n_updates=256, burst=32)
+        admission = StalenessAdmission(tau_max=1, mode=mode)
+
+        slow = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp,
+                                   params, 64, trigger=KBuffer(8),
+                                   admission=admission, batched=True)
+        fast = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp,
+                                   params, 64, trigger=KBuffer(8),
+                                   admission=admission, batched=True,
+                                   pipeline=True)
+        replay(slow, flatten_bursts(bursts))
+        replay_bursts(fast, bursts)
+        fast.close()
+
+        assert fast.round == slow.round
+        _assert_trees_equal(fast.global_params, slow.global_params)
+        np.testing.assert_array_equal(np.asarray(fast.table.counts),
+                                      np.asarray(slow.table.counts))
+        assert _stats_dict(fast) == _stats_dict(slow)
+
+    def test_adaptive_observe_batch_matches_per_update(self):
+        """Segment-wise latency observation inside a burst must leave the
+        adaptive deadline bit-identical to the per-update path (the arm
+        segments close before each mid-burst fire)."""
+        hp = FedQSHyperParams(buffer_k=8)
+        params = _tiny_params()
+        bursts = _burst_trace(params, n_updates=256, burst=32)
+
+        svcs = {}
+        for tag, drive in (("slow", False), ("fast", True)):
+            svc = StreamingAggregator(
+                make_algorithm("fedavg", hp), hp, params, 64,
+                trigger=AdaptiveTimeWindow(2.0, min_updates=1, warmup=4),
+                batched=True, pipeline=drive)
+            if drive:
+                replay_bursts(svc, bursts)
+            else:
+                replay(svc, flatten_bursts(bursts))
+            svc.close()
+            svcs[tag] = svc
+        assert svcs["fast"].trigger.describe() == svcs["slow"].trigger.describe()
+        _assert_trees_equal(svcs["fast"].global_params,
+                            svcs["slow"].global_params)
+        assert _stats_dict(svcs["fast"]) == _stats_dict(svcs["slow"])
+
+    def test_burst_result_counts(self):
+        hp = FedQSHyperParams(buffer_k=4)
+        params = _tiny_params()
+        svc = StreamingAggregator(make_algorithm("fedavg", hp), hp, params, 16,
+                                  trigger=KBuffer(4), admission=AdmitAll(),
+                                  batched=True, pipeline=True)
+        (batch, now), = _burst_trace(params, n_clients=16, n_updates=10,
+                                     burst=10)
+        res = svc.submit_burst(batch, now=now)
+        assert res.submitted == 10 and res.accepted == 10
+        assert res.dropped == 0 and res.fired == 2
+        assert svc.pending == 2  # 10 admitted - 2 fires * K=4
+        svc.close()
+        assert svc.stats.submitted == 10 and svc.stats.rounds == 2
+
+
+# ---------------------------------------------------------------------------
+# concurrency: ingestion under contention
+# ---------------------------------------------------------------------------
+class TestConcurrency:
+    N_THREADS = 8
+    PER_THREAD = 48
+
+    def _hammer(self, svc, deltas):
+        barrier = threading.Barrier(self.N_THREADS)
+
+        def worker(tid):
+            d = deltas[tid]
+            u = _mk_update(cid=tid, delta=d,
+                           params=jax.tree_util.tree_map(jnp.add,
+                                                         svc.global_params, d))
+            barrier.wait()
+            for i in range(self.PER_THREAD):
+                svc.submit(replace(u, stale_round=svc.round), now=float(i))
+
+        threads = [threading.Thread(target=worker, args=(t,))
+                   for t in range(self.N_THREADS)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        svc.flush(now=float(self.PER_THREAD))
+        svc.join()
+
+    def test_threaded_submit_conservation(self):
+        """Hammer a pipelined service from many threads: every accepted
+        update must land in exactly one round's buffer (per-cid ledger)."""
+        hp = FedQSHyperParams(buffer_k=16)
+        params = _tiny_params()
+        reports = []
+        svc = StreamingAggregator(make_algorithm("fedavg", hp), hp, params,
+                                  self.N_THREADS, trigger=KBuffer(16),
+                                  admission=AdmitAll(), batched=True,
+                                  pipeline=True, on_round=reports.append)
+        key = jax.random.PRNGKey(5)
+        deltas = []
+        for _ in range(self.N_THREADS):
+            key, sub = jax.random.split(key)
+            deltas.append(jax.tree_util.tree_map(
+                lambda l, s=sub: 0.01 * jax.random.normal(s, l.shape), params))
+        self._hammer(svc, deltas)
+        svc.close()
+
+        total = self.N_THREADS * self.PER_THREAD
+        assert svc.stats.submitted == svc.stats.accepted == total
+        ledger = Counter()
+        for rep in reports:
+            for u in rep.buffer:
+                ledger[u.cid] += 1
+        assert sum(ledger.values()) == total  # nothing lost, nothing doubled
+        assert all(ledger[cid] == self.PER_THREAD
+                   for cid in range(self.N_THREADS))
+        rounds = [rep.round for rep in reports]
+        assert rounds == list(range(1, len(reports) + 1))  # monotone, gapless
+        assert svc.pending == 0
+
+    def test_stats_atomic_under_contention(self):
+        """ServiceStats.bump must not lose increments when admission mixes
+        accepts and drops across racing threads (the read-modify-write on
+        the dataclass counters used to be unguarded)."""
+        hp = FedQSHyperParams(buffer_k=16)
+        params = _tiny_params()
+        svc = StreamingAggregator(
+            make_algorithm("fedavg", hp), hp, params, self.N_THREADS,
+            trigger=KBuffer(16),
+            admission=StalenessAdmission(tau_max=0, mode="drop"),
+            batched=True, pipeline=True)
+        deltas = [jax.tree_util.tree_map(jnp.zeros_like, params)
+                  for _ in range(self.N_THREADS)]
+        self._hammer(svc, deltas)
+        svc.close()
+        s = svc.stats
+        total = self.N_THREADS * self.PER_THREAD
+        assert s.submitted == total
+        assert s.accepted + s.dropped == s.submitted
+
+    def test_drain_idempotent(self):
+        hp = FedQSHyperParams(buffer_k=4)
+        params = _tiny_params()
+        svc = StreamingAggregator(make_algorithm("fedavg", hp), hp, params, 8,
+                                  trigger=KBuffer(4), batched=True,
+                                  pipeline=True)
+        key = jax.random.PRNGKey(3)
+        for i in range(4):
+            key, sub = jax.random.split(key)
+            d = jax.tree_util.tree_map(
+                lambda l, s=sub: 0.01 * jax.random.normal(s, l.shape), params)
+            svc.submit(_mk_update(cid=i, delta=d,
+                                  params=jax.tree_util.tree_map(
+                                      jnp.add, params, d)), now=float(i))
+        rep = svc.drain()
+        assert rep is not None and rep.round == 1
+        assert svc.drain() is None  # nothing in flight: a no-op
+        assert svc.drain() is None
+        assert svc.stats.rounds == 1
+        svc.close()
+
+    def test_checkpoint_mid_flight(self, tmp_path):
+        """Saving while a round is in flight drains it first; the restored
+        service fed the identical suffix must land bit-exact."""
+        hp = FedQSHyperParams(buffer_k=8)
+        params = _tiny_params()
+        bursts = _burst_trace(params, n_updates=128, burst=16)
+        stream = flatten_bursts(bursts)
+        head, tail = stream[:64], stream[64:]
+
+        a = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp, params,
+                                64, trigger=KBuffer(8), batched=True,
+                                pipeline=True)
+        for u, now in head:
+            a.submit(u, now=now)
+        # the 64th submit fired round 8: its aggregation is (or was) in
+        # flight on the pipeline worker right now — save must drain it
+        a.save(str(tmp_path / "ck"))
+        assert a.round == 8 and a.stats.rounds == 8
+
+        b = StreamingAggregator(make_algorithm("fedqs-sgd", hp), hp, params,
+                                64, trigger=KBuffer(8), batched=True,
+                                pipeline=True)
+        b.restore(str(tmp_path / "ck"))
+        assert b.round == a.round
+        for u, now in tail:
+            a.submit(u, now=now)
+            b.submit(u, now=now)
+        a.join(), b.join()
+        _assert_trees_equal(a.global_params, b.global_params)
+        np.testing.assert_array_equal(np.asarray(a.table.counts),
+                                      np.asarray(b.table.counts))
+        a.close(), b.close()
+
+
+# ---------------------------------------------------------------------------
+# soak: seeded Zipf-burst stress (excluded from tier-1; scripts/ci.sh)
+# ---------------------------------------------------------------------------
+@pytest.mark.stress
+class TestSoak:
+    def test_zipf_burst_soak(self):
+        """Drive a pipelined service with seeded Zipf bursts for
+        ``REPRO_SOAK_SECONDS`` (default 60): no deadlock (the test
+        finishes), no dropped rounds (gapless monotone round ids), and the
+        conservation ledger balances at every cycle boundary."""
+        seconds = float(os.environ.get("REPRO_SOAK_SECONDS", "60"))
+        hp = FedQSHyperParams(buffer_k=32)
+        params = _tiny_params()
+        reports = []
+        svc = StreamingAggregator(
+            make_algorithm("fedqs-sgd", hp), hp, params, 100_000,
+            trigger=KBuffer(32),
+            admission=StalenessAdmission(tau_max=2, mode="downweight"),
+            batched=True, pipeline=True, on_round=reports.append)
+
+        deadline = time.monotonic() + seconds
+        cycle = 0
+        aggregated = 0
+        while time.monotonic() < deadline:
+            for batch, now in zipf_burst_stream(params, 100_000, 4096,
+                                                seed=cycle, burst=512,
+                                                stale_spread=3):
+                svc.submit_burst(batch, now=now)
+            svc.drain()
+            # ledger: every admitted update is either aggregated or pending
+            aggregated = sum(rep.n_updates for rep in reports)
+            assert aggregated + svc.pending == svc.stats.accepted
+            cycle += 1
+        svc.flush(now=float(cycle))
+        svc.close()
+        assert cycle >= 1 and svc.stats.rounds == len(reports) > 0
+        rounds = [rep.round for rep in reports]
+        assert rounds == list(range(1, len(reports) + 1))  # gapless, monotone
+        assert svc.stats.submitted == svc.stats.accepted + svc.stats.dropped
